@@ -1,0 +1,101 @@
+//! Motivational study (paper Fig. 1): sweep batch size × concurrent
+//! instances for YOLO-v5 on the simulated Xavier NX and print the
+//! throughput/latency surfaces, demonstrating the paper's core
+//! observation — "higher-throughput and lower-latency appear in moderate
+//! batch size and number of concurrent models", with collapse and OOM at
+//! the extremes.
+//!
+//!     cargo run --release --example interference_study
+
+use bcedge::platform::PlatformSim;
+use bcedge::runtime::executor::{BatchJob, Dispatcher, SimDispatcher};
+use bcedge::util::bench;
+use bcedge::util::time::VirtualClock;
+use bcedge::workload::models::ModelId;
+
+fn main() -> anyhow::Result<()> {
+    let batches = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    let concs = [1usize, 2, 3, 4, 5, 6, 7, 8];
+    let model = ModelId::Yolo;
+
+    bench::banner("Fig. 1(a): throughput (requests/s), yolo on sim Xavier NX");
+    print_header(&concs);
+    let mut csv = bench::Csv::create(
+        "results/interference_study.csv",
+        "batch,concurrency,throughput_rps,latency_ms,oom",
+    )?;
+    for &b in &batches {
+        print!("b={b:<4}");
+        for &c in &concs {
+            match run_cell(model, b, c) {
+                Some((rps, _)) => print!(" {rps:>8.1}"),
+                None => print!(" {:>8}", "OOM"),
+            }
+        }
+        println!();
+    }
+
+    bench::banner("Fig. 1(b): end-to-end batch latency (ms)");
+    print_header(&concs);
+    for &b in &batches {
+        print!("b={b:<4}");
+        for &c in &concs {
+            match run_cell(model, b, c) {
+                Some((rps, lat)) => {
+                    print!(" {lat:>8.1}");
+                    csv.rowf(&[b as f64, c as f64, rps, lat, 0.0])?;
+                }
+                None => {
+                    print!(" {:>8}", "OOM");
+                    csv.rowf(&[b as f64, c as f64, 0.0, 0.0, 1.0])?;
+                }
+            }
+        }
+        println!();
+    }
+
+    // The paper's claim, checked mechanically: the best throughput cell is
+    // interior (neither b=1/c=1 nor the maximal corner).
+    let mut best = (0usize, 0usize, 0.0f64);
+    for &b in &batches {
+        for &c in &concs {
+            if let Some((rps, _)) = run_cell(model, b, c) {
+                if rps > best.2 {
+                    best = (b, c, rps);
+                }
+            }
+        }
+    }
+    println!("\npeak throughput {:.1} rps at batch={} concurrency={}",
+             best.2, best.0, best.1);
+    assert!(best.0 > 1 && best.0 < 128, "peak not interior in batch");
+    assert!(run_cell(model, 128, 8).is_none(),
+            "extreme corner should OOM (Fig. 1)");
+    println!("wrote results/interference_study.csv\ninterference_study OK");
+    Ok(())
+}
+
+fn print_header(concs: &[usize]) {
+    print!("     ");
+    for c in concs {
+        print!(" {:>8}", format!("m_c={c}"));
+    }
+    println!();
+}
+
+/// Run one (batch, concurrency) cell: c concurrent instance-batches,
+/// returning (aggregate throughput, per-batch latency), or None on OOM.
+fn run_cell(model: ModelId, b: usize, c: usize) -> Option<(f64, f64)> {
+    let clock = VirtualClock::new();
+    let mut d = SimDispatcher::new(PlatformSim::xavier_nx(), clock);
+    let jobs: Vec<BatchJob> =
+        (0..c).map(|_| BatchJob { model, batch: b, n_real: b }).collect();
+    let results = d.run_group(&jobs);
+    if results.iter().any(|r| r.is_err()) {
+        return None;
+    }
+    let lats: Vec<f64> = results.into_iter().map(|r| r.unwrap()).collect();
+    let span = lats.iter().cloned().fold(0.0, f64::max);
+    let served = (b * c) as f64;
+    Some((served / (span / 1e3), span))
+}

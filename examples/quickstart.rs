@@ -1,0 +1,74 @@
+//! Quickstart: load the AOT artifacts, run one inference per zoo model on
+//! the PJRT CPU backend, and print a latency table.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! With `--calibrate`, sweeps every compiled batch size per model and
+//! prints the (model, batch) → latency table used to sanity-check the
+//! platform simulator's calibration (EXPERIMENTS.md §Calibration).
+
+use bcedge::runtime::PjrtRuntime;
+use bcedge::util::bench;
+use bcedge::util::cli::Args;
+use bcedge::workload::models::{ModelId, ModelSpec};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["calibrate"]).map_err(anyhow::Error::msg)?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = PjrtRuntime::load(dir)?;
+    println!(
+        "bcedge quickstart — PJRT platform: {} | {} artifacts in {dir}/",
+        rt.platform_name(),
+        rt.index().len()
+    );
+
+    bench::banner("single-batch inference across the zoo");
+    println!("{:<6} {:>10} {:>12} {:>12} {:>10}",
+             "model", "batch", "compile(ms)", "latency(ms)", "SLO(ms)");
+    for model in ModelId::all() {
+        let spec = ModelSpec::get(model);
+        let compile_ms = rt.warm(model, 1)?;
+        let input = vec![0.5f32; spec.input_elems];
+        // Warm run (first execution pays allocation), then measured run.
+        rt.execute(model, 1, &input)?;
+        let out = rt.execute(model, 1, &input)?;
+        println!("{:<6} {:>10} {:>12.1} {:>12.3} {:>10.0}",
+                 spec.name, 1, compile_ms, out.latency_ms, spec.slo_ms);
+        assert!(out.data.iter().all(|x| x.is_finite()),
+                "non-finite output from {model:?}");
+    }
+
+    if args.flag("calibrate") {
+        bench::banner("batch sweep (calibration table)");
+        let batches = rt.index().batch_sizes.clone();
+        let mut csv = bench::Csv::create(
+            "results/calibration.csv",
+            "model,batch,latency_ms,per_sample_ms,throughput_rps",
+        )?;
+        println!("{:<6} {:>6} {:>12} {:>14} {:>14}",
+                 "model", "batch", "latency(ms)", "per-sample(ms)", "rps");
+        for model in ModelId::all() {
+            let spec = ModelSpec::get(model);
+            for &b in &batches {
+                if rt.index().get(model, b).is_none() {
+                    continue;
+                }
+                rt.warm(model, b)?;
+                let input = vec![0.5f32; spec.input_elems * b];
+                rt.execute(model, b, &input)?; // warm
+                let mut best = f64::INFINITY;
+                for _ in 0..3 {
+                    best = best.min(rt.execute(model, b, &input)?.latency_ms);
+                }
+                let rps = b as f64 / best * 1e3;
+                println!("{:<6} {:>6} {:>12.3} {:>14.3} {:>14.1}",
+                         spec.name, b, best, best / b as f64, rps);
+                csv.rowf(&[model as usize as f64, b as f64, best,
+                           best / b as f64, rps])?;
+            }
+        }
+        println!("\nwrote results/calibration.csv");
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! End-to-end serving driver (the repo's E2E validation): load the six
+//! real AOT models, serve Poisson traffic through the full coordinator —
+//! SLO-priority queues → SAC scheduler → dynamic batcher → concurrent
+//! instances → PJRT execution — and report per-model throughput, latency,
+//! and SLO violations. Results recorded in EXPERIMENTS.md §E2E.
+//!
+//!     cargo run --release --example serve_zoo -- --rps 30 --seconds 30
+//!
+//! Options: --rps N (default 30, the paper's rate), --seconds N (default
+//! 30), --scheduler sac|tac|deeprt|fixed (default sac), --threads N,
+//! --policy FILE (deploy a checkpoint from train_scheduler).
+
+use bcedge::coordinator::baselines::{tac, DeepRtScheduler, FixedScheduler};
+use bcedge::coordinator::sac_sched;
+use bcedge::coordinator::{Engine, EngineConfig, Scheduler};
+use bcedge::rl::ActionSpace;
+use bcedge::runtime::{PjrtRuntime, RealDispatcher};
+use bcedge::util::cli::Args;
+use bcedge::util::rng::Pcg32;
+use bcedge::workload::models::{ModelId, ModelSpec};
+use bcedge::workload::PoissonGenerator;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]).map_err(anyhow::Error::msg)?;
+    let rps: f64 = args.get_parse("rps", 30.0).map_err(anyhow::Error::msg)?;
+    let seconds: f64 =
+        args.get_parse("seconds", 30.0).map_err(anyhow::Error::msg)?;
+    let threads: usize =
+        args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
+    let sched_name = args.get_or("scheduler", "sac").to_string();
+    let dir = args.get_or("artifacts", "artifacts");
+
+    println!("== BCEdge end-to-end serving ==");
+    println!("backend: PJRT CPU | rps {rps} | horizon {seconds}s | scheduler {sched_name}");
+
+    let runtime = Arc::new(PjrtRuntime::load(dir)?);
+    let mut dispatcher = RealDispatcher::new(runtime.clone(), threads);
+    print!("warming executables (compile-once, TensorRT-style)... ");
+    let compile_ms = dispatcher.warm_all(&runtime.index().batch_sizes.clone())?;
+    println!("{:.1} ms total, {} engines", compile_ms,
+             runtime.cached_executables());
+    dispatcher.reset_origin(); // horizon excludes one-time compilation
+
+    let space = ActionSpace::standard();
+    let mut engine = Engine::new(
+        dispatcher,
+        EngineConfig {
+            action_space: space.clone(),
+            use_predictor: true,
+            pad_to_artifacts: true,
+            max_total_instances: 4,
+            learn: true, // online adaptation, as deployed BCEdge does
+            ..Default::default()
+        },
+    );
+
+    let mut rng = Pcg32::seeded(2024);
+    let mut scheduler: Box<dyn Scheduler> = match sched_name.as_str() {
+        "sac" => {
+            let mut s = sac_sched::sac(space.clone(), &mut rng);
+            if let Some(path) = args.get("policy") {
+                let text = std::fs::read_to_string(path)?;
+                let v = bcedge::util::json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                s.agent.load_policy(&v).map_err(anyhow::Error::msg)?;
+                s.set_greedy(true);
+                println!("deployed trained policy from {path} (greedy mode)");
+            }
+            Box::new(s)
+        }
+        "tac" => Box::new(tac(space.clone(), &mut rng)),
+        "deeprt" => Box::new(DeepRtScheduler::default()),
+        "fixed" => Box::new(FixedScheduler { batch: 4, m_c: 2 }),
+        other => anyhow::bail!("unknown scheduler {other}"),
+    };
+
+    let horizon_ms = seconds * 1e3;
+    let mut gen = PoissonGenerator::new(rps, 7);
+    engine.submit(gen.generate_horizon(horizon_ms));
+
+    let t0 = std::time::Instant::now();
+    let slots = engine.run(scheduler.as_mut(), horizon_ms);
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    println!("\n== results ({slots} scheduling slots, {wall_s:.1}s wall) ==");
+    println!("{:<6} {:>10} {:>12} {:>12} {:>12} {:>10}",
+             "model", "completed", "mean(ms)", "p99(ms)", "SLO(ms)", "viol%");
+    let m = &engine.metrics;
+    for model in ModelId::all() {
+        let spec = ModelSpec::get(model);
+        let completed = m
+            .outcomes()
+            .iter()
+            .filter(|o| o.model == model && !o.dropped)
+            .count();
+        if completed == 0 {
+            continue;
+        }
+        println!("{:<6} {:>10} {:>12.2} {:>12.2} {:>12.0} {:>9.1}%",
+                 spec.name,
+                 completed,
+                 m.mean_latency_ms(Some(model)),
+                 latency_p99(m, model),
+                 spec.slo_ms,
+                 100.0 * m.violation_rate_for(model));
+    }
+    println!("\naggregate: {:.1} rps served | mean latency {:.2} ms | p99 {:.2} ms | violation rate {:.2}% | mean utility {:.3}",
+             m.throughput_rps(horizon_ms),
+             m.mean_latency_ms(None),
+             m.latency_percentile(0.99),
+             100.0 * m.violation_rate(),
+             m.mean_utility(None));
+    anyhow::ensure!(m.completed() > 0, "no requests served");
+    println!("serve_zoo OK");
+    Ok(())
+}
+
+fn latency_p99(m: &bcedge::metrics::Metrics, model: ModelId) -> f64 {
+    let xs: Vec<f64> = m
+        .outcomes()
+        .iter()
+        .filter(|o| o.model == model && !o.dropped)
+        .map(|o| o.e2e_ms)
+        .collect();
+    bcedge::util::stats::percentile(&xs, 0.99)
+}

@@ -1,0 +1,1 @@
+"""BCEdge build-time compile package (L1 kernels + L2 models + AOT)."""

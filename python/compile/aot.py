@@ -1,0 +1,120 @@
+"""AOT pipeline: lower every (model, batch-size) pair to HLO text.
+
+Build-time only — `make artifacts` runs this once; the Rust request path
+never touches Python. For each zoo model and each compiled batch size we
+emit ``artifacts/<model>_b<batch>.hlo.txt`` plus a single
+``artifacts/manifest.json`` describing shapes / params / FLOPs for the
+Rust runtime and platform model.
+
+Interchange is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Lowering converts stablehlo → XlaComputation with ``return_tuple=True``,
+so the Rust side unwraps a 1-tuple (`to_tuple1`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as zoo
+
+# Batch sizes with a compiled executable. The dynamic batcher pads to the
+# nearest size upward (TensorRT-engine-per-batch analogue, DESIGN.md §2).
+BATCH_SIZES = (1, 2, 4, 8, 16, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flops_estimate(lowered) -> float:
+    """Per-inference FLOP estimate from XLA's cost analysis (if available)."""
+    try:
+        cost = lowered.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost.get("flops", 0.0))
+    except Exception:
+        return 0.0
+
+
+def lower_one(name: str, batch: int, out_dir: str) -> dict:
+    apply_fn, meta = zoo.build(name)
+    spec = zoo.example_input(name, batch)
+    t0 = time.time()
+    lowered = jax.jit(lambda x: (apply_fn(x),)).lower(spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}_b{batch}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    dt = time.time() - t0
+    entry = {
+        "model": name,
+        "paper_name": meta.paper_name,
+        "batch": batch,
+        "path": os.path.basename(path),
+        "input_shape": [batch, *meta.input_shape],
+        "output_shape": [batch, *meta.output_shape],
+        "param_count": meta.param_count,
+        "slo_ms": meta.slo_ms,
+        "flops": flops_estimate(lowered),
+        "hlo_bytes": len(text),
+    }
+    print(f"  {name} b={batch}: {len(text)/1e6:.2f} MB HLO in {dt:.1f}s",
+          flush=True)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--models", default=",".join(zoo.MODEL_NAMES),
+                    help="comma-separated subset of the zoo")
+    ap.add_argument("--batches", default=",".join(map(str, BATCH_SIZES)),
+                    help="comma-separated batch sizes")
+    args = ap.parse_args()
+
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    batches = [int(b) for b in args.batches.split(",") if b.strip()]
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for name in names:
+        print(f"[aot] lowering {name} ...", flush=True)
+        for b in batches:
+            entries.append(lower_one(name, b, args.out))
+
+    manifest = {
+        "format": "bcedge-aot-v1",
+        "interchange": "hlo-text",
+        "return_tuple": True,
+        "batch_sizes": batches,
+        "models": sorted({e["model"] for e in entries}),
+        "entries": entries,
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    total = sum(e["hlo_bytes"] for e in entries)
+    print(f"[aot] wrote {len(entries)} artifacts ({total/1e6:.1f} MB) "
+          f"+ {mpath}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

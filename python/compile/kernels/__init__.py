@@ -1,0 +1,2 @@
+"""BCEdge L1 Pallas kernels (build-time only)."""
+from . import matmul, fused, conv, attention, ref  # noqa: F401

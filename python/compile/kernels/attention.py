@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: fused scaled-dot-product attention.
+
+TinyBERT's hot spot. Sequence length in the zoo is tiny (14 tokens), so a
+single-block FlashAttention-style kernel holds Q, K, V and the score
+matrix entirely in fast memory: one grid step computes
+softmax(QKᵀ/√d)·V with no HBM round trip for the S×S scores. On a real
+TPU this is the regime where VMEM residency beats any tiling cleverness —
+the adaptation of the paper's GPU framing per DESIGN.md
+§Hardware-Adaptation.
+
+Larger sequences fall back to row-tiling over Q (still exact: softmax is
+per-row, so K/V ride along whole while Q is tiled).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q_BLOCK = 128
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Numerically stable softmax, fully in-register/VMEM.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Single-head attention. q: (S, D), k: (S, D), v: (S, D) → (S, D)."""
+    if q.ndim != 2 or q.shape != k.shape or k.shape != v.shape:
+        raise ValueError(f"attention expects matching (S, D): {q.shape} {k.shape} {v.shape}")
+    s, d = q.shape
+    scale = 1.0 / float(d) ** 0.5
+    bq = min(Q_BLOCK, s)
+    rem = s % bq
+    qp = jnp.pad(q, ((0, bq - rem if rem else 0), (0, 0)))
+    sp = qp.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale),
+        grid=(sp // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sp, d), jnp.float32),
+        interpret=True,
+    )(qp, k, v)
+    return out[:s, :]
+
+
+def _batched_attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def batched_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Batch of independent single-head attentions.
+
+    q, k, v: (B, S, D) → (B, S, D). The grid iterates over B so the
+    kernel body is identical to the single-sequence case: with S=14,
+    D≤64 the whole per-sample problem is VMEM-resident. One pallas_call
+    regardless of batch keeps AOT HLO size flat across compiled batch
+    sizes (vs unrolling B kernel calls).
+    """
+    if q.ndim != 3 or q.shape != k.shape or k.shape != v.shape:
+        raise ValueError(f"batched_attention expects matching (B, S, D): "
+                         f"{q.shape} {k.shape} {v.shape}")
+    bsz, s, d = q.shape
+    scale = 1.0 / float(d) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_batched_attention_kernel, scale=scale),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def multi_head_attention(x: jax.Array, wq: jax.Array, wk: jax.Array,
+                         wv: jax.Array, wo: jax.Array,
+                         n_heads: int) -> jax.Array:
+    """MHA over x: (S, D). Projections via the Pallas matmul kernel."""
+    from . import matmul as mm
+    s, d = x.shape
+    assert d % n_heads == 0
+    hd = d // n_heads
+    q = mm.matmul(x, wq)
+    k = mm.matmul(x, wk)
+    v = mm.matmul(x, wv)
+    heads = []
+    for h in range(n_heads):
+        sl = slice(h * hd, (h + 1) * hd)
+        heads.append(attention(q[:, sl], k[:, sl], v[:, sl]))
+    cat = jnp.concatenate(heads, axis=-1)
+    return mm.matmul(cat, wo)
+
+
+def batched_multi_head_attention(x: jax.Array, wq: jax.Array, wk: jax.Array,
+                                 wv: jax.Array, wo: jax.Array,
+                                 n_heads: int) -> jax.Array:
+    """MHA over a batch of sequences x: (B, S, D).
+
+    Projections treat tokens position-wise, so the batch folds into the
+    matmul M dimension ((B*S, D) GEMMs — exactly the MXU-friendly shape);
+    only the attention itself needs per-sample isolation, handled by the
+    batched kernel's grid. Head count × 1 pallas_call per layer, flat in B.
+    """
+    from . import matmul as mm
+    bsz, s, d = x.shape
+    assert d % n_heads == 0
+    hd = d // n_heads
+    flat = x.reshape(bsz * s, d)
+    q = mm.matmul(flat, wq).reshape(bsz, s, d)
+    k = mm.matmul(flat, wk).reshape(bsz, s, d)
+    v = mm.matmul(flat, wv).reshape(bsz, s, d)
+    heads = []
+    for h in range(n_heads):
+        sl = slice(h * hd, (h + 1) * hd)
+        heads.append(batched_attention(q[..., sl], k[..., sl], v[..., sl]))
+    cat = jnp.concatenate(heads, axis=-1).reshape(bsz * s, d)
+    return mm.matmul(cat, wo).reshape(bsz, s, d)

@@ -1,0 +1,102 @@
+"""L1 kernel composition: 2-D convolution as im2col + Pallas matmul.
+
+The paper's edge workloads are conv-dominated CNNs accelerated by
+TensorRT. On a TPU-style target the idiomatic mapping is NOT a direct
+threadblock port of a CUDA conv kernel but a reshape of the convolution
+into the MXU's native primitive: im2col gathers each receptive field into
+a row, then a single tiled Pallas matmul (kernels/matmul.py) performs the
+contraction, and the fused bias+activation epilogue (kernels/fused.py)
+finishes in fast memory. See DESIGN.md §Hardware-Adaptation.
+
+Patch extraction is pure data movement (strided slices), so it stays in
+jnp and lets XLA fuse it with the surrounding layout ops; all FLOPs run
+in the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import fused, matmul
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int,
+            padding: str) -> tuple[jax.Array, int, int]:
+    """x: (N, C, H, W) → patches (N*Ho*Wo, C*kh*kw), plus (Ho, Wo)."""
+    n, c, h, w = x.shape
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w // stride)
+        pad_h = max((ho - 1) * stride + kh - h, 0)
+        pad_w = max((wo - 1) * stride + kw - w, 0)
+        x = jnp.pad(x, ((0, 0), (0, 0),
+                        (pad_h // 2, pad_h - pad_h // 2),
+                        (pad_w // 2, pad_w - pad_w // 2)))
+    elif padding == "VALID":
+        ho = (h - kh) // stride + 1
+        wo = (w - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+    # Gather kh*kw strided views; each is (N, C, Ho, Wo).
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(jax.lax.slice(
+                x,
+                (0, 0, i, j),
+                (n, c, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1),
+                (1, 1, stride, stride),
+            ))
+    # (kh*kw, N, C, Ho, Wo) → (N, Ho, Wo, C, kh*kw) → rows.
+    patches = jnp.stack(cols, axis=-1)          # (N, C, Ho, Wo, kh*kw)
+    patches = patches.transpose(0, 2, 3, 1, 4)  # (N, Ho, Wo, C, kh*kw)
+    return patches.reshape(n * ho * wo, c * kh * kw), ho, wo
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+           stride: int = 1, padding: str = "SAME",
+           act: str = "identity") -> jax.Array:
+    """Conv2d with optional fused bias+activation.
+
+    x: (N, C, H, W), w: (O, C, kh, kw), b: (O,) → (N, O, H', W').
+    """
+    n = x.shape[0]
+    o, c, kh, kw = w.shape
+    assert x.shape[1] == c, f"channel mismatch {x.shape} vs {w.shape}"
+    rows, ho, wo = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(o, c * kh * kw).T           # (C*kh*kw, O)
+    y = matmul.matmul(rows, wmat)                # (N*Ho*Wo, O)
+    if b is not None or act != "identity":
+        y = fused.bias_act(y, b if b is not None else jnp.zeros((o,)), act)
+    return y.reshape(n, ho, wo, o).transpose(0, 3, 1, 2)
+
+
+def depthwise_conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                     *, stride: int = 1, padding: str = "SAME",
+                     act: str = "identity") -> jax.Array:
+    """Depthwise conv (one filter per channel) via grouped im2col matmul.
+
+    x: (N, C, H, W), w: (C, 1, kh, kw) → (N, C, H', W').
+
+    Depthwise convs are contraction-poor (K = kh*kw), so rather than C
+    separate skinny matmuls we build a block-diagonal weight matrix and
+    run ONE Pallas matmul — trading a few zero-multiplies for a single
+    MXU-shaped contraction. For the zoo's C ≤ 64 this keeps the kernel
+    count (and dispatch overhead) flat.
+    """
+    n, c, _, _ = x.shape
+    assert w.shape[0] == c and w.shape[1] == 1
+    kh, kw = w.shape[2], w.shape[3]
+    rows, ho, wo = _im2col(x, kh, kw, stride, padding)   # (R, C*kh*kw)
+    # Block-diagonal (C*kh*kw, C): column ch takes channel ch's kh*kw taps.
+    wflat = w.reshape(c, kh * kw)                         # (C, kh*kw)
+    eye = jnp.eye(c, dtype=x.dtype)                       # (C, C)
+    # (C, kh*kw, C) with taps on the diagonal, then fold to (C*kh*kw, C).
+    wblock = (eye[:, None, :] * wflat[:, :, None])
+    # rows columns are ordered (channel, tap) — match that ordering.
+    wblock = wblock.reshape(c * kh * kw, c)
+    y = matmul.matmul(rows, wblock)                       # (R, C)
+    if b is not None or act != "identity":
+        y = fused.bias_act(y, b if b is not None else jnp.zeros((c,)), act)
+    return y.reshape(n, ho, wo, c).transpose(0, 3, 1, 2)

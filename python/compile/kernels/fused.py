@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: fused bias + activation epilogue.
+
+Convolution / dense epilogues (bias add, ReLU / hard-swish / sigmoid /
+GELU) are memory-bound; fusing them into one elementwise kernel keeps the
+activation tile resident in fast memory instead of a round trip to HBM.
+Rows are tiled; the bias vector (one entry per output channel) rides along
+whole in every grid step — it is tiny relative to the activation tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+
+ACTIVATIONS = ("identity", "relu", "hardswish", "sigmoid", "gelu")
+
+
+def _apply_act(x: jax.Array, act: str) -> jax.Array:
+    if act == "identity":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "hardswish":
+        return x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+    if act == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    if act == "gelu":
+        # tanh approximation — what the MXU-era TPU libraries ship.
+        c = 0.7978845608028654  # sqrt(2/pi)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _bias_act_kernel(x_ref, b_ref, o_ref, *, act: str):
+    o_ref[...] = _apply_act(x_ref[...] + b_ref[...][None, :], act)
+
+
+def bias_act(x: jax.Array, b: jax.Array, act: str = "relu") -> jax.Array:
+    """y = act(x + b[None, :]) for x: (R, C), b: (C,)."""
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    if x.ndim != 2 or b.ndim != 1 or x.shape[1] != b.shape[0]:
+        raise ValueError(f"bias_act shape mismatch: x={x.shape} b={b.shape}")
+    r, c = x.shape
+    br = min(ROW_BLOCK, r)
+    rem = r % br
+    if rem:
+        x = jnp.pad(x, ((0, br - rem), (0, 0)))
+    rp = x.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_bias_act_kernel, act=act),
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        interpret=True,
+    )(x, b)
+    return out[:r, :]

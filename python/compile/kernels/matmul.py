@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: tiled matrix multiply.
+
+This is the single hot primitive of the BCEdge model zoo: dense layers,
+im2col convolutions, and attention score/value products all lower to this
+kernel. The tiling is written for a TPU-style memory hierarchy — each grid
+step streams one (bm, bk) tile of A and one (bk, bn) tile of B into fast
+memory (VMEM on TPU) and accumulates into a resident (bm, bn) output tile,
+which is the systolic-array (MXU) friendly schedule. Under
+``interpret=True`` (required for CPU PJRT execution — real TPU lowering
+emits a Mosaic custom-call the CPU plugin cannot run) the same BlockSpec
+structure lowers to plain HLO.
+
+VMEM budget check (see DESIGN.md §9): with the default 64×64×64 f32 tiles
+a grid step touches 3 × 16 KiB = 48 KiB, double-buffered 96 KiB — far
+below the ~16 MiB VMEM of a TPU core, leaving headroom to fuse the
+bias/activation epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. Small models in the zoo frequently have dims below
+# these, so `matmul` pads to tile multiples first (zero padding is exact
+# for matmul).
+BM = 64
+BN = 64
+BK = 64
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """Grid point (i, j, k): accumulate A[i,k] @ B[k,j] into O[i,j].
+
+    The K axis is the innermost grid dimension, so the (i, j) output tile
+    stays resident while the kernel sweeps K — the classic output-
+    stationary MXU schedule. The output block doubles as the accumulator,
+    avoiding a scratch buffer (exact in f32).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulate; on a real MXU this is the bf16×bf16→f32 contraction.
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = BM, bn: int = BN,
+           bk: int = BK) -> jax.Array:
+    """C = A @ B via the tiled Pallas kernel. A: (M, K), B: (K, N) → (M, N)."""
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    # Clamp tiles to the (8-aligned) problem so tiny layers don't pay for a
+    # mostly-zero 64^3 tile.
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    a = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    b = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    mp, kp = a.shape
+    _, np_ = b.shape
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Dense layer y = x @ w (+ b) on rank-2 x, built on the Pallas matmul."""
+    y = matmul(x, w)
+    if b is not None:
+        y = y + b[None, :]
+    return y

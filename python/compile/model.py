@@ -1,0 +1,312 @@
+"""L2: the BCEdge model zoo — six JAX models calling the L1 Pallas kernels.
+
+Stand-ins for the paper's Table IV zoo (see DESIGN.md §4 Substitutions):
+each keeps the *architectural motif* of the original at edge-friendly
+scale (3×32×32 images / 14-token sequences), because the scheduler only
+observes models through their latency/memory/SLO profiles — what matters
+for reproduction is a *heterogeneous* zoo, not ImageNet accuracy.
+
+| zoo name | paper model     | motif kept                                 |
+|----------|-----------------|--------------------------------------------|
+| yolo     | YOLO-v5         | conv backbone + per-cell detection head     |
+| mob      | MobileNet-v3    | depthwise-separable blocks, hard-swish      |
+| res      | ResNet-18       | residual blocks with projection shortcut    |
+| eff      | EfficientNet-B0 | MBConv: expand → depthwise → SE → project   |
+| inc      | Inception-v3    | parallel 1×1 / 3×3 / double-3×3 / pool-proj |
+| bert     | TinyBERT        | transformer encoder over a 14-token input   |
+
+Weights are fixed-seed random constants *closed over* by the apply
+function, so AOT lowering bakes them into the HLO and the Rust request
+path feeds inputs only. All models take f32 inputs (bert takes f32 token
+ids and casts in-graph) so the runtime marshals a single dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as att
+from .kernels import conv as cv
+from .kernels import fused, matmul
+
+IMG_SHAPE = (3, 32, 32)   # paper: 3×224×224, downscaled for CPU interpret mode
+SEQ_LEN = 14              # paper: TinyBERT input 1×14 (Speech Commands)
+VOCAB = 64
+N_CLASSES = 10
+BERT_CLASSES = 12         # Speech Commands v2 core word count
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelMeta:
+    """Static description the AOT manifest exports for the Rust runtime."""
+    name: str
+    paper_name: str
+    input_shape: tuple[int, ...]   # per-sample, excludes batch dim
+    output_shape: tuple[int, ...]  # per-sample
+    param_count: int
+    slo_ms: float                  # paper Table IV
+
+
+class _Params:
+    """Deterministic parameter factory; counts every weight it hands out."""
+
+    def __init__(self, name: str):
+        seed = int(np.frombuffer(name.encode().ljust(8, b"\0")[:8],
+                                 dtype=np.uint32)[0])
+        self._rng = np.random.default_rng(seed)
+        self.count = 0
+
+    def w(self, *shape: int, scale: float | None = None) -> jax.Array:
+        fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+        s = scale if scale is not None else (2.0 / max(fan_in, 1)) ** 0.5
+        arr = self._rng.normal(size=shape).astype(np.float32) * s
+        self.count += arr.size
+        return jnp.asarray(arr)
+
+    def b(self, n: int) -> jax.Array:
+        self.count += n
+        return jnp.zeros((n,), jnp.float32)
+
+    def ones(self, n: int) -> jax.Array:
+        self.count += n
+        return jnp.ones((n,), jnp.float32)
+
+
+def _gap(x: jax.Array) -> jax.Array:
+    """Global average pool (N, C, H, W) → (N, C)."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def _head(x2d: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return fused.bias_act(matmul.matmul(x2d, w), b, "identity")
+
+
+# --------------------------------------------------------------------------
+# yolo — conv backbone + detection head (B, cells, 3 anchors × (5 + classes))
+# --------------------------------------------------------------------------
+
+def _build_yolo() -> tuple[Callable, ModelMeta]:
+    p = _Params("yolo")
+    w1, b1 = p.w(16, 3, 3, 3), p.b(16)
+    w2, b2 = p.w(32, 16, 3, 3), p.b(32)
+    w3, b3 = p.w(32, 32, 3, 3), p.b(32)
+    n_anchor_out = 3 * (5 + N_CLASSES)   # 3 anchors × (box4 + obj + classes)
+    wh, bh = p.w(n_anchor_out, 32, 1, 1), p.b(n_anchor_out)
+
+    def apply(x: jax.Array) -> jax.Array:
+        n = x.shape[0]
+        h = cv.conv2d(x, w1, b1, stride=2, act="relu")    # (N,16,16,16)
+        h = cv.conv2d(h, w2, b2, stride=2, act="relu")    # (N,32, 8, 8)
+        h = cv.conv2d(h, w3, b3, stride=1, act="relu")    # (N,32, 8, 8)
+        d = cv.conv2d(h, wh, bh, stride=1, act="identity")  # (N,45,8,8)
+        return d.transpose(0, 2, 3, 1).reshape(n, 8 * 8 * 3, 5 + N_CLASSES)
+
+    meta = ModelMeta("yolo", "YOLO-v5", IMG_SHAPE,
+                     (8 * 8 * 3, 5 + N_CLASSES), p.count, 138.0)
+    return apply, meta
+
+
+# --------------------------------------------------------------------------
+# mob — depthwise-separable blocks with hard-swish (MobileNet-v3 motif)
+# --------------------------------------------------------------------------
+
+def _build_mob() -> tuple[Callable, ModelMeta]:
+    p = _Params("mob")
+    w0, b0 = p.w(16, 3, 3, 3), p.b(16)
+    dw1, db1 = p.w(16, 1, 3, 3), p.b(16)
+    pw1, pb1 = p.w(24, 16, 1, 1), p.b(24)
+    dw2, db2 = p.w(24, 1, 3, 3), p.b(24)
+    pw2, pb2 = p.w(32, 24, 1, 1), p.b(32)
+    wf, bf = p.w(32, N_CLASSES), p.b(N_CLASSES)
+
+    def apply(x: jax.Array) -> jax.Array:
+        h = cv.conv2d(x, w0, b0, stride=2, act="hardswish")        # (N,16,16,16)
+        h = cv.depthwise_conv2d(h, dw1, db1, stride=1, act="hardswish")
+        h = cv.conv2d(h, pw1, pb1, stride=1, act="identity")       # (N,24,16,16)
+        h = cv.depthwise_conv2d(h, dw2, db2, stride=2, act="hardswish")
+        h = cv.conv2d(h, pw2, pb2, stride=1, act="identity")       # (N,32, 8, 8)
+        return _head(_gap(h), wf, bf)
+
+    meta = ModelMeta("mob", "MobileNet-v3", IMG_SHAPE, (N_CLASSES,),
+                     p.count, 86.0)
+    return apply, meta
+
+
+# --------------------------------------------------------------------------
+# res — two residual blocks (ResNet-18 motif)
+# --------------------------------------------------------------------------
+
+def _build_res() -> tuple[Callable, ModelMeta]:
+    p = _Params("res")
+    w0, b0 = p.w(16, 3, 3, 3), p.b(16)
+    # block 1: 16 → 16, identity shortcut
+    w11, b11 = p.w(16, 16, 3, 3), p.b(16)
+    w12, b12 = p.w(16, 16, 3, 3), p.b(16)
+    # block 2: 16 → 32 stride 2, 1×1 projection shortcut
+    w21, b21 = p.w(32, 16, 3, 3), p.b(32)
+    w22, b22 = p.w(32, 32, 3, 3), p.b(32)
+    wp, bp = p.w(32, 16, 1, 1), p.b(32)
+    wf, bf = p.w(32, N_CLASSES), p.b(N_CLASSES)
+
+    def apply(x: jax.Array) -> jax.Array:
+        h = cv.conv2d(x, w0, b0, stride=1, act="relu")             # (N,16,32,32)
+        r = cv.conv2d(h, w11, b11, stride=1, act="relu")
+        r = cv.conv2d(r, w12, b12, stride=1, act="identity")
+        h = jax.nn.relu(h + r)
+        r = cv.conv2d(h, w21, b21, stride=2, act="relu")
+        r = cv.conv2d(r, w22, b22, stride=1, act="identity")
+        sc = cv.conv2d(h, wp, bp, stride=2, act="identity")
+        h = jax.nn.relu(sc + r)                                    # (N,32,16,16)
+        return _head(_gap(h), wf, bf)
+
+    meta = ModelMeta("res", "ResNet-18", IMG_SHAPE, (N_CLASSES,),
+                     p.count, 58.0)
+    return apply, meta
+
+
+# --------------------------------------------------------------------------
+# eff — MBConv with squeeze-and-excite (EfficientNet-B0 motif)
+# --------------------------------------------------------------------------
+
+def _build_eff() -> tuple[Callable, ModelMeta]:
+    p = _Params("eff")
+    w0, b0 = p.w(16, 3, 3, 3), p.b(16)
+    # MBConv: expand 16→48, depthwise s2, SE, project 48→24
+    we, be = p.w(48, 16, 1, 1), p.b(48)
+    dw, db = p.w(48, 1, 3, 3), p.b(48)
+    ws1, bs1 = p.w(48, 12), p.b(12)     # SE squeeze
+    ws2, bs2 = p.w(12, 48), p.b(48)     # SE excite
+    wpr, bpr = p.w(24, 48, 1, 1), p.b(24)
+    wf, bf = p.w(24, N_CLASSES), p.b(N_CLASSES)
+
+    def apply(x: jax.Array) -> jax.Array:
+        h = cv.conv2d(x, w0, b0, stride=2, act="hardswish")        # (N,16,16,16)
+        e = cv.conv2d(h, we, be, stride=1, act="hardswish")        # (N,48,16,16)
+        e = cv.depthwise_conv2d(e, dw, db, stride=2, act="hardswish")  # (N,48,8,8)
+        # squeeze-and-excite on channel stats
+        s = _gap(e)                                                # (N,48)
+        s = fused.bias_act(matmul.matmul(s, ws1), bs1, "relu")
+        s = fused.bias_act(matmul.matmul(s, ws2), bs2, "sigmoid")  # (N,48)
+        e = e * s[:, :, None, None]
+        h = cv.conv2d(e, wpr, bpr, stride=1, act="identity")       # (N,24,8,8)
+        return _head(_gap(h), wf, bf)
+
+    meta = ModelMeta("eff", "EfficientNet-B0", IMG_SHAPE, (N_CLASSES,),
+                     p.count, 93.0)
+    return apply, meta
+
+
+# --------------------------------------------------------------------------
+# inc — one inception block: 1×1 / 3×3 / double-3×3 / pool-proj branches
+# --------------------------------------------------------------------------
+
+def _build_inc() -> tuple[Callable, ModelMeta]:
+    p = _Params("inc")
+    w0, b0 = p.w(16, 3, 3, 3), p.b(16)
+    wa, ba = p.w(8, 16, 1, 1), p.b(8)            # branch a: 1×1
+    wb1, bb1 = p.w(8, 16, 1, 1), p.b(8)          # branch b: 1×1 → 3×3
+    wb2, bb2 = p.w(16, 8, 3, 3), p.b(16)
+    wc1, bc1 = p.w(8, 16, 1, 1), p.b(8)          # branch c: 1×1 → 3×3 → 3×3
+    wc2, bc2 = p.w(8, 8, 3, 3), p.b(8)
+    wc3, bc3 = p.w(8, 8, 3, 3), p.b(8)
+    wd, bd = p.w(8, 16, 1, 1), p.b(8)            # branch d: avgpool → 1×1
+    wf, bf = p.w(40, N_CLASSES), p.b(N_CLASSES)  # 8+16+8+8 = 40 channels
+
+    def apply(x: jax.Array) -> jax.Array:
+        h = cv.conv2d(x, w0, b0, stride=2, act="relu")             # (N,16,16,16)
+        a = cv.conv2d(h, wa, ba, stride=1, act="relu")
+        b = cv.conv2d(h, wb1, bb1, stride=1, act="relu")
+        b = cv.conv2d(b, wb2, bb2, stride=1, act="relu")
+        c = cv.conv2d(h, wc1, bc1, stride=1, act="relu")
+        c = cv.conv2d(c, wc2, bc2, stride=1, act="relu")
+        c = cv.conv2d(c, wc3, bc3, stride=1, act="relu")
+        # 3×3 average pool, stride 1, SAME — cheap data movement in jnp.
+        d = jax.lax.reduce_window(
+            h, 0.0, jax.lax.add, (1, 1, 3, 3), (1, 1, 1, 1), "SAME") / 9.0
+        d = cv.conv2d(d, wd, bd, stride=1, act="relu")
+        h = jnp.concatenate([a, b, c, d], axis=1)                  # (N,40,16,16)
+        return _head(_gap(h), wf, bf)
+
+    meta = ModelMeta("inc", "Inception-v3", IMG_SHAPE, (N_CLASSES,),
+                     p.count, 66.0)
+    return apply, meta
+
+
+# --------------------------------------------------------------------------
+# bert — 2-layer transformer encoder over 14 tokens (TinyBERT motif)
+# --------------------------------------------------------------------------
+
+def _build_bert() -> tuple[Callable, ModelMeta]:
+    p = _Params("bert")
+    d, heads, ffn = 64, 2, 128
+    emb = p.w(VOCAB, d, scale=0.1)
+    pos = p.w(SEQ_LEN, d, scale=0.1)
+    layers = []
+    for _ in range(2):
+        layers.append(dict(
+            wq=p.w(d, d), wk=p.w(d, d), wv=p.w(d, d), wo=p.w(d, d),
+            w1=p.w(d, ffn), b1=p.b(ffn), w2=p.w(ffn, d), b2=p.b(d),
+            g1=p.ones(d), g2=p.ones(d),
+        ))
+    wf, bf = p.w(d, BERT_CLASSES), p.b(BERT_CLASSES)
+
+    def _ln(x: jax.Array, g: jax.Array) -> jax.Array:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + 1e-5) * g
+
+    def apply(x: jax.Array) -> jax.Array:
+        """x: (N, S) f32 token ids → (N, classes) logits.
+
+        Fully batch-vectorized: token-wise ops (projections, LN, FFN) fold
+        the batch into the matmul M dimension; attention runs through the
+        batched Pallas kernel. HLO size is therefore flat in batch size.
+        """
+        n = x.shape[0]
+        ids = jnp.clip(x.astype(jnp.int32), 0, VOCAB - 1)
+        h = emb[ids] + pos[None, :, :]                            # (N, S, d)
+        for ly in layers:
+            a = att.batched_multi_head_attention(
+                _ln(h, ly["g1"][None, None, :]), ly["wq"], ly["wk"],
+                ly["wv"], ly["wo"], heads)
+            h = h + a
+            flat = _ln(h, ly["g2"][None, None, :]).reshape(n * SEQ_LEN, d)
+            f = fused.bias_act(matmul.matmul(flat, ly["w1"]), ly["b1"], "gelu")
+            f = fused.bias_act(matmul.matmul(f, ly["w2"]), ly["b2"], "identity")
+            h = h + f.reshape(n, SEQ_LEN, d)
+        pooled = jnp.mean(h, axis=1)                              # (N, d)
+        return _head(pooled, wf, bf)
+
+    meta = ModelMeta("bert", "TinyBERT", (SEQ_LEN,), (BERT_CLASSES,),
+                     p.count, 114.0)
+    return apply, meta
+
+
+_BUILDERS = {
+    "yolo": _build_yolo,
+    "mob": _build_mob,
+    "res": _build_res,
+    "eff": _build_eff,
+    "inc": _build_inc,
+    "bert": _build_bert,
+}
+
+MODEL_NAMES = tuple(_BUILDERS)
+
+
+def build(name: str) -> tuple[Callable, ModelMeta]:
+    """Return (apply_fn, meta) for a zoo model. apply_fn: (N, *in) → (N, *out)."""
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown model {name!r}; zoo = {MODEL_NAMES}")
+    return _BUILDERS[name]()
+
+
+def example_input(name: str, batch: int) -> jax.ShapeDtypeStruct:
+    """AOT lowering spec for a given batch size (f32 for every model)."""
+    _, meta = build(name)
+    return jax.ShapeDtypeStruct((batch, *meta.input_shape), jnp.float32)

@@ -1,0 +1,14 @@
+"""Shared pytest fixtures for the BCEdge build-time test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xBCED6E)

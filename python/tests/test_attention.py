@@ -1,0 +1,87 @@
+"""Pallas attention kernels (single, batched, MHA) vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref
+
+
+def _qkv(rng, *shape):
+    return tuple(jnp.asarray(rng.normal(size=shape).astype(np.float32))
+                 for _ in range(3))
+
+
+@settings(deadline=None, max_examples=20)
+@given(s=st.integers(1, 64), d=st.integers(1, 64), seed=st.integers(0, 2**31))
+def test_attention_matches_ref(s, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _qkv(rng, s, d)
+    np.testing.assert_allclose(attention.attention(q, k, v),
+                               ref.attention_ref(q, k, v),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(b=st.integers(1, 8), s=st.integers(1, 20), d=st.integers(1, 32),
+       seed=st.integers(0, 2**31))
+def test_batched_attention_matches_per_sample(b, s, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _qkv(rng, b, s, d)
+    got = attention.batched_attention(q, k, v)
+    for i in range(b):
+        np.testing.assert_allclose(got[i], ref.attention_ref(q[i], k[i], v[i]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_attention_rows_sum_property(rng):
+    """Attention output is a convex combination of V rows: with V = const
+    vector c, output must be exactly c."""
+    s, d = 14, 32
+    q = jnp.asarray(rng.normal(size=(s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(s, d)).astype(np.float32))
+    v = jnp.ones((s, d), jnp.float32) * 7.0
+    np.testing.assert_allclose(attention.attention(q, k, v), v,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_q_block_boundary(rng):
+    s = attention.Q_BLOCK + 3   # forces padding + 2 grid steps
+    d = 16
+    q, k, v = _qkv(rng, s, d)
+    np.testing.assert_allclose(attention.attention(q, k, v),
+                               ref.attention_ref(q, k, v),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("heads", [1, 2, 4])
+def test_mha_matches_ref(rng, heads):
+    s, d = 14, 32
+    x = jnp.asarray(rng.normal(size=(s, d)).astype(np.float32))
+    ws = [jnp.asarray(rng.normal(size=(d, d)).astype(np.float32) * 0.2)
+          for _ in range(4)]
+    got = attention.multi_head_attention(x, *ws, heads)
+    want = ref.multi_head_attention_ref(x, *ws, heads)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("heads", [1, 2])
+def test_batched_mha_matches_unbatched(rng, heads):
+    b, s, d = 3, 14, 32
+    x = jnp.asarray(rng.normal(size=(b, s, d)).astype(np.float32))
+    ws = [jnp.asarray(rng.normal(size=(d, d)).astype(np.float32) * 0.2)
+          for _ in range(4)]
+    got = attention.batched_multi_head_attention(x, *ws, heads)
+    for i in range(b):
+        want = attention.multi_head_attention(x[i], *ws, heads)
+        np.testing.assert_allclose(got[i], want, rtol=1e-3, atol=1e-4)
+
+
+def test_attention_shape_validation():
+    with pytest.raises(ValueError):
+        attention.attention(jnp.zeros((3, 4)), jnp.zeros((5, 4)),
+                            jnp.zeros((3, 4)))
+    with pytest.raises(ValueError):
+        attention.batched_attention(jnp.zeros((3, 4)), jnp.zeros((3, 4)),
+                                    jnp.zeros((3, 4)))

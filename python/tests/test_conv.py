@@ -1,0 +1,74 @@
+"""im2col + Pallas-matmul convolutions vs jax.lax.conv oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, ref
+
+
+def _x(rng, n, c, h, w):
+    return jnp.asarray(rng.normal(size=(n, c, h, w)).astype(np.float32))
+
+
+@settings(deadline=None, max_examples=15)
+@given(n=st.integers(1, 4), cin=st.integers(1, 8), cout=st.integers(1, 8),
+       hw=st.integers(4, 20), k=st.sampled_from([1, 3, 5]),
+       stride=st.sampled_from([1, 2]),
+       padding=st.sampled_from(["SAME", "VALID"]),
+       seed=st.integers(0, 2**31))
+def test_conv2d_matches_ref(n, cin, cout, hw, k, stride, padding, seed):
+    if padding == "VALID" and hw < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = _x(rng, n, cin, hw, hw)
+    w = jnp.asarray(rng.normal(size=(cout, cin, k, k)).astype(np.float32) * 0.2)
+    b = jnp.asarray(rng.normal(size=(cout,)).astype(np.float32))
+    got = conv.conv2d(x, w, b, stride=stride, padding=padding, act="relu")
+    want = ref.conv2d_ref(x, w, b, stride=stride, padding=padding, act="relu")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.integers(1, 3), c=st.integers(1, 8), hw=st.integers(4, 16),
+       stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31))
+def test_depthwise_matches_ref(n, c, hw, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _x(rng, n, c, hw, hw)
+    w = jnp.asarray(rng.normal(size=(c, 1, 3, 3)).astype(np.float32) * 0.2)
+    b = jnp.asarray(rng.normal(size=(c,)).astype(np.float32))
+    got = conv.depthwise_conv2d(x, w, b, stride=stride, act="hardswish")
+    want = ref.depthwise_conv2d_ref(x, w, b, stride=stride, act="hardswish")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_conv_1x1_is_channel_mix(rng):
+    """1×1 conv must equal a per-pixel dense layer."""
+    x = _x(rng, 2, 4, 6, 6)
+    w = jnp.asarray(rng.normal(size=(3, 4, 1, 1)).astype(np.float32))
+    got = conv.conv2d(x, w, stride=1)
+    want = jnp.einsum("nchw,oc->nohw", x, w[:, :, 0, 0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_stride2_halves_spatial(rng):
+    x = _x(rng, 1, 3, 16, 16)
+    w = jnp.asarray(rng.normal(size=(5, 3, 3, 3)).astype(np.float32))
+    assert conv.conv2d(x, w, stride=2).shape == (1, 5, 8, 8)
+
+
+def test_conv_odd_input_same_padding(rng):
+    x = _x(rng, 1, 2, 7, 9)
+    w = jnp.asarray(rng.normal(size=(2, 2, 3, 3)).astype(np.float32))
+    got = conv.conv2d(x, w, stride=2)
+    want = ref.conv2d_ref(x, w, stride=2)
+    assert got.shape == want.shape == (1, 2, 4, 5)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_conv_channel_mismatch_asserts(rng):
+    x = _x(rng, 1, 3, 8, 8)
+    w = jnp.asarray(rng.normal(size=(4, 2, 3, 3)).astype(np.float32))
+    with pytest.raises(AssertionError):
+        conv.conv2d(x, w)

@@ -1,0 +1,57 @@
+"""Fused bias+activation epilogue kernel vs oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused, ref
+
+
+@settings(deadline=None, max_examples=20)
+@given(r=st.integers(1, 300), c=st.integers(1, 64),
+       act=st.sampled_from(fused.ACTIVATIONS), seed=st.integers(0, 2**31))
+def test_bias_act_matches_ref(r, c, act, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(r, c)).astype(np.float32) * 3)
+    b = jnp.asarray(rng.normal(size=(c,)).astype(np.float32))
+    np.testing.assert_allclose(fused.bias_act(x, b, act),
+                               ref.bias_act_ref(x, b, act),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", fused.ACTIVATIONS)
+def test_bias_act_row_block_boundary(rng, act):
+    # Exactly the ROW_BLOCK and one over it.
+    for r in (fused.ROW_BLOCK, fused.ROW_BLOCK + 1):
+        x = jnp.asarray(rng.normal(size=(r, 10)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(10,)).astype(np.float32))
+        np.testing.assert_allclose(fused.bias_act(x, b, act),
+                                   ref.bias_act_ref(x, b, act),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_relu_clamps_negative(rng):
+    x = -jnp.abs(jnp.asarray(rng.normal(size=(5, 5)).astype(np.float32))) - 1.0
+    out = fused.bias_act(x, jnp.zeros((5,)), "relu")
+    assert (np.asarray(out) == 0).all()
+
+
+def test_sigmoid_range(rng):
+    # f32 sigmoid saturates to exactly 0/1 for |x| ≳ 17, so bounds are
+    # inclusive.
+    x = jnp.asarray(rng.normal(size=(20, 8)).astype(np.float32) * 10)
+    out = np.asarray(fused.bias_act(x, jnp.zeros((8,)), "sigmoid"))
+    assert (out >= 0).all() and (out <= 1).all()
+    mid = np.asarray(fused.bias_act(x / 20.0, jnp.zeros((8,)), "sigmoid"))
+    assert (mid > 0).all() and (mid < 1).all()
+
+
+def test_unknown_activation_raises(rng):
+    with pytest.raises(ValueError):
+        fused.bias_act(jnp.zeros((2, 2)), jnp.zeros((2,)), "swish9000")
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        fused.bias_act(jnp.zeros((2, 3)), jnp.zeros((4,)), "relu")

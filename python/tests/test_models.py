@@ -1,0 +1,70 @@
+"""L2 model zoo: shapes, determinism, finiteness, batch consistency."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+def _input(rng, name, batch):
+    _, meta = model.build(name)
+    x = rng.normal(size=(batch, *meta.input_shape)).astype(np.float32)
+    if name == "bert":
+        x = np.abs(x) * 10.0   # token-id-ish values
+    return jnp.asarray(x)
+
+
+@pytest.mark.parametrize("name", model.MODEL_NAMES)
+def test_output_shape_and_finite(rng, name):
+    apply_fn, meta = model.build(name)
+    x = _input(rng, name, 2)
+    y = np.asarray(apply_fn(x))
+    assert y.shape == (2, *meta.output_shape)
+    assert np.isfinite(y).all()
+
+
+@pytest.mark.parametrize("name", model.MODEL_NAMES)
+def test_build_is_deterministic(rng, name):
+    """Two independent builds bake identical weights (fixed seeds), so the
+    AOT artifact is reproducible."""
+    a1, _ = model.build(name)
+    a2, _ = model.build(name)
+    x = _input(rng, name, 1)
+    np.testing.assert_array_equal(np.asarray(a1(x)), np.asarray(a2(x)))
+
+
+@pytest.mark.parametrize("name", model.MODEL_NAMES)
+def test_batch_consistency(rng, name):
+    """Row i of a batched run must equal the single-sample run — the
+    dynamic batcher depends on batching being semantically transparent."""
+    apply_fn, _ = model.build(name)
+    x = _input(rng, name, 3)
+    batched = np.asarray(apply_fn(x))
+    for i in range(3):
+        single = np.asarray(apply_fn(x[i:i + 1]))[0]
+        np.testing.assert_allclose(batched[i], single, rtol=1e-3, atol=1e-4)
+
+
+def test_zoo_covers_paper_table_iv():
+    names = set(model.MODEL_NAMES)
+    assert names == {"yolo", "mob", "res", "eff", "inc", "bert"}
+    slos = {m: model.build(m)[1].slo_ms for m in names}
+    assert slos == {"yolo": 138.0, "mob": 86.0, "res": 58.0,
+                    "eff": 93.0, "inc": 66.0, "bert": 114.0}
+
+
+def test_heterogeneous_params():
+    counts = {m: model.build(m)[1].param_count for m in model.MODEL_NAMES}
+    assert len(set(counts.values())) == len(counts), counts
+
+
+def test_unknown_model_raises():
+    with pytest.raises(KeyError):
+        model.build("vgg")
+
+
+def test_bert_clips_out_of_vocab(rng):
+    apply_fn, meta = model.build("bert")
+    x = jnp.full((1, *meta.input_shape), 1e6, jnp.float32)
+    assert np.isfinite(np.asarray(apply_fn(x))).all()

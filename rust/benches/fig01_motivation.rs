@@ -1,0 +1,83 @@
+//! Paper Fig. 1 — motivational study: throughput (a) and end-to-end
+//! latency (b) as functions of batch size × number of concurrent models,
+//! YOLO-v5 on (simulated) NVIDIA Xavier NX.
+//!
+//! Expected shape (paper §I): both dimensions help at moderate values;
+//! excessive batch/concurrency reduces throughput, inflates latency, and
+//! eventually overflows memory.
+
+use bcedge::platform::PlatformSim;
+use bcedge::runtime::executor::{BatchJob, Dispatcher, SimDispatcher};
+use bcedge::util::bench::{banner, Csv};
+use bcedge::util::time::VirtualClock;
+use bcedge::workload::models::ModelId;
+
+const BATCHES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+const CONCS: [usize; 8] = [1, 2, 3, 4, 5, 6, 7, 8];
+
+fn cell(model: ModelId, b: usize, c: usize) -> Option<(f64, f64)> {
+    let mut d = SimDispatcher::new(PlatformSim::xavier_nx(), VirtualClock::new());
+    let jobs: Vec<BatchJob> =
+        (0..c).map(|_| BatchJob { model, batch: b, n_real: b }).collect();
+    let res = d.run_group(&jobs);
+    if res.iter().any(|r| r.is_err()) {
+        return None;
+    }
+    let span = res.iter().map(|r| *r.as_ref().unwrap()).fold(0.0f64, f64::max);
+    Some(((b * c) as f64 / (span / 1e3), span))
+}
+
+fn main() {
+    let model = ModelId::Yolo;
+    let mut csv = Csv::create("results/fig01_motivation.csv",
+                              "batch,m_c,throughput_rps,latency_ms,oom")
+        .expect("csv");
+
+    for (title, pick) in [("Fig. 1(a) throughput (rps)", 0usize),
+                          ("Fig. 1(b) latency (ms)", 1usize)] {
+        banner(title);
+        print!("{:>6}", "batch");
+        for c in CONCS {
+            print!(" {:>9}", format!("m_c={c}"));
+        }
+        println!();
+        for b in BATCHES {
+            print!("{b:>6}");
+            for c in CONCS {
+                match cell(model, b, c) {
+                    Some((rps, lat)) => {
+                        print!(" {:>9.1}", if pick == 0 { rps } else { lat });
+                        if pick == 0 {
+                            csv.rowf(&[b as f64, c as f64, rps, lat, 0.0]).ok();
+                        }
+                    }
+                    None => {
+                        print!(" {:>9}", "OOM");
+                        if pick == 0 {
+                            csv.rowf(&[b as f64, c as f64, f64::NAN,
+                                       f64::NAN, 1.0]).ok();
+                        }
+                    }
+                }
+            }
+            println!();
+        }
+    }
+
+    // Shape assertions: interior throughput peak + OOM corner.
+    let mut best = (0, 0, 0.0);
+    for b in BATCHES {
+        for c in CONCS {
+            if let Some((rps, _)) = cell(model, b, c) {
+                if rps > best.2 {
+                    best = (b, c, rps);
+                }
+            }
+        }
+    }
+    println!("\npeak: {:.1} rps at (batch={}, m_c={})", best.2, best.0, best.1);
+    assert!(best.0 > 1 && best.1 > 1, "peak must need BOTH dimensions");
+    assert!(best.0 < 128 && best.1 < 8, "peak must be interior");
+    assert!(cell(model, 128, 8).is_none(), "extreme corner must OOM");
+    println!("fig01 OK — wrote results/fig01_motivation.csv");
+}

@@ -1,0 +1,55 @@
+//! Paper Fig. 7 — normalized utility of BCEdge vs TAC vs DeepRT across
+//! the six-model zoo at 30 rps on (simulated) Xavier NX.
+//!
+//! Expected shape: BCEdge highest for every model; paper reports +37 %
+//! over DeepRT and +25 % over TAC on average.
+
+use bcedge::coordinator::harness::{Experiment, SchedKind};
+use bcedge::util::bench::{banner, Csv};
+use bcedge::workload::models::ModelId;
+
+fn main() {
+    banner("Fig. 7 — normalized utility per model (30 rps, Xavier NX)");
+    let kinds = [SchedKind::Sac, SchedKind::Tac, SchedKind::DeepRt];
+    let mut utilities = vec![[0.0f64; 3]; 6];
+
+    for (ki, kind) in kinds.iter().enumerate() {
+        let mut e = Experiment::new(*kind);
+        e.horizon_s = 400.0;
+        let m = e.run();
+        for model in ModelId::all() {
+            let u = m.mean_utility(Some(model));
+            utilities[model as usize][ki] = if u.is_finite() { u } else { 0.0 };
+        }
+    }
+
+    // Normalize per model by the max across schedulers (paper's y-axis).
+    let mut csv = Csv::create("results/fig07_utility.csv",
+                              "model,bcedge,tac,deeprt").expect("csv");
+    println!("{:<6} {:>10} {:>10} {:>10}", "model", "BCEdge", "TAC", "DeepRT");
+    let mut mean = [0.0f64; 3];
+    for model in ModelId::all() {
+        let row = utilities[model as usize];
+        let max = row.iter().cloned().fold(f64::MIN, f64::max).max(1e-9);
+        let norm: Vec<f64> = row.iter().map(|u| u / max).collect();
+        println!("{:<6} {:>10.3} {:>10.3} {:>10.3}",
+                 model.name(), norm[0], norm[1], norm[2]);
+        csv.row(&[model.name().to_string(), format!("{:.4}", norm[0]),
+                  format!("{:.4}", norm[1]), format!("{:.4}", norm[2])]).ok();
+        for k in 0..3 {
+            mean[k] += norm[k] / 6.0;
+        }
+    }
+    println!("{:<6} {:>10.3} {:>10.3} {:>10.3}", "mean", mean[0], mean[1], mean[2]);
+    println!("\nBCEdge vs DeepRT: +{:.1}% | BCEdge vs TAC: +{:.1}%  (paper: +37%, +25%)",
+             100.0 * (mean[0] / mean[2] - 1.0),
+             100.0 * (mean[0] / mean[1] - 1.0));
+    // Shape assertions (see EXPERIMENTS.md for the honest deltas): BCEdge
+    // must strictly beat the concurrency-less DeepRT; against TAC our
+    // simulator reproduces parity-to-small-gains, not the paper's +25 %
+    // (both learners converge on this smoother reward surface), so the
+    // assert allows a statistical tie.
+    assert!(mean[0] > mean[2], "BCEdge must beat DeepRT: {mean:?}");
+    assert!(mean[0] >= 0.97 * mean[1], "BCEdge far behind TAC: {mean:?}");
+    println!("fig07 OK — wrote results/fig07_utility.csv");
+}

@@ -1,0 +1,140 @@
+//! Paper Fig. 10 — training convergence of the scheduling algorithms:
+//! SAC (ours) vs PPO vs DDQN (DRL) and GA (heuristic), all inside the
+//! BCEdge framework on the same scheduling environment.
+//!
+//! Expected shape: SAC reaches its asymptotic return fastest (paper:
+//! 1.8×–3.7× faster); GA converges slowest / prematurely.
+
+use bcedge::coordinator::sac_sched::SchedEnv;
+use bcedge::coordinator::STATE_DIM;
+use bcedge::platform::PlatformSpec;
+use bcedge::rl::ac::{AcConfig, ActorCritic};
+use bcedge::rl::ddqn::{Ddqn, DdqnConfig};
+use bcedge::rl::env::{train_episodes, Agent, Env};
+use bcedge::rl::ga::{Ga, GaConfig};
+use bcedge::rl::ppo::{Ppo, PpoConfig};
+use bcedge::rl::sac::{DiscreteSac, SacConfig};
+use bcedge::rl::ActionSpace;
+use bcedge::util::bench::{banner, Csv};
+use bcedge::util::rng::Pcg32;
+
+const EPISODES: usize = 60;
+const EP_LEN: usize = 64;
+
+fn fresh_env() -> SchedEnv {
+    // Moderate load (10 rps/model): the regime where scheduling decisions
+    // are state-dependent. At saturation every slot wants the max batch,
+    // which even a linear policy nails — no convergence signal.
+    let mut env = SchedEnv::new(ActionSpace::standard(), 10.0,
+                                PlatformSpec::xavier_nx());
+    env.episode_len = EP_LEN;
+    env
+}
+
+/// Train one agent; return per-episode mean returns.
+fn run_agent(agent: &mut dyn Agent, seed: u64) -> Vec<f32> {
+    let mut env = fresh_env();
+    let mut rng = Pcg32::seeded(seed);
+    train_episodes(&mut env, agent, EPISODES, EP_LEN, &mut rng)
+        .into_iter()
+        .map(|(ret, _)| ret)
+        .collect()
+}
+
+/// Final-plateau return (mean of the last 10 episodes).
+fn plateau(returns: &[f32]) -> f32 {
+    let tail = &returns[returns.len() - 10..];
+    tail.iter().sum::<f32>() / tail.len() as f32
+}
+
+/// Episodes until the 5-episode moving average reaches `target`.
+/// Measuring against a COMMON target (the best plateau across
+/// algorithms) is what penalizes premature convergence: an algorithm
+/// that plateaus low (the paper's GA critique) never reaches it.
+fn episodes_to_reach(returns: &[f32], target: f32) -> usize {
+    for i in 4..returns.len() {
+        let ma: f32 = returns[i - 4..=i].iter().sum::<f32>() / 5.0;
+        if ma >= target {
+            return i + 1;
+        }
+    }
+    returns.len() + 1 // never converged within budget
+}
+
+fn main() {
+    banner("Fig. 10 — convergence of SAC / PPO / DDQN / GA on the scheduling env");
+    let space = ActionSpace::standard();
+    let n_act = space.len();
+    let mut rng = Pcg32::seeded(1010);
+
+    let mut sac = DiscreteSac::new(
+        STATE_DIM, n_act,
+        // Offline training: gradient step every transition (the paper's
+        // Algorithm 1); the amortized update_every=4 is a serving-path
+        // optimization only.
+        SacConfig { warmup: 128, batch_size: 64, update_every: 1,
+                    ..Default::default() },
+        &mut rng);
+    let mut ppo = Ppo::new(STATE_DIM, n_act, PpoConfig::default(), &mut rng);
+    let mut ddqn = Ddqn::new(
+        STATE_DIM, n_act,
+        DdqnConfig { eps_decay_steps: 1500, ..Default::default() }, &mut rng);
+    let mut ac = ActorCritic::new(STATE_DIM, n_act, AcConfig::default(), &mut rng);
+
+    let sac_r = run_agent(&mut sac, 1);
+    let ppo_r = run_agent(&mut ppo, 2);
+    let ddqn_r = run_agent(&mut ddqn, 3);
+    let ac_r = run_agent(&mut ac, 4);
+
+    // GA: generation-wise evolution on the same env; sample its deployed
+    // policy's return per generation for a comparable curve.
+    let mut env = fresh_env();
+    let mut ga_rng = Pcg32::seeded(5);
+    let mut ga = Ga::new(STATE_DIM, n_act,
+                         GaConfig { max_steps: EP_LEN, ..Default::default() },
+                         &mut ga_rng);
+    let mut ga_r = Vec::with_capacity(EPISODES);
+    for _ in 0..EPISODES {
+        ga.evolve(&mut env, &mut ga_rng);
+        // Same metric as the DRL agents: ONE fresh evaluation episode of
+        // the deployed (best-genome) policy — not the max-so-far fitness,
+        // which inflates under evaluation noise.
+        let ret = train_episodes(&mut env, &mut ga, 1, EP_LEN, &mut ga_rng)[0].0;
+        ga_r.push(ret);
+    }
+
+    let mut csv = Csv::create("results/fig10_convergence.csv",
+                              "episode,sac,ppo,ddqn,tac,ga").expect("csv");
+    println!("{:>8} {:>10} {:>10} {:>10} {:>10} {:>10}",
+             "episode", "SAC", "PPO", "DDQN", "TAC", "GA");
+    for i in 0..EPISODES {
+        if i % 5 == 0 || i + 1 == EPISODES {
+            println!("{:>8} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
+                     i + 1, sac_r[i], ppo_r[i], ddqn_r[i], ac_r[i], ga_r[i]);
+        }
+        csv.rowf(&[(i + 1) as f64, sac_r[i] as f64, ppo_r[i] as f64,
+                   ddqn_r[i] as f64, ac_r[i] as f64, ga_r[i] as f64]).ok();
+    }
+
+    // Common convergence bar: 90 % of the best plateau achieved by any
+    // algorithm. Premature plateaus (GA) never reach it.
+    let best_plateau = [plateau(&sac_r), plateau(&ppo_r), plateau(&ddqn_r),
+                        plateau(&ac_r), plateau(&ga_r)]
+        .into_iter()
+        .fold(f32::MIN, f32::max);
+    let bar = 0.9 * best_plateau;
+    let conv = [("SAC", episodes_to_reach(&sac_r, bar), plateau(&sac_r)),
+                ("PPO", episodes_to_reach(&ppo_r, bar), plateau(&ppo_r)),
+                ("DDQN", episodes_to_reach(&ddqn_r, bar), plateau(&ddqn_r)),
+                ("TAC", episodes_to_reach(&ac_r, bar), plateau(&ac_r)),
+                ("GA", episodes_to_reach(&ga_r, bar), plateau(&ga_r))];
+    println!("\nepisodes to reach 90% of the best plateau ({bar:.0}):");
+    for (name, ep, pl) in conv {
+        let speedup = ep as f64 / conv[0].1 as f64;
+        let tag = if ep > EPISODES { "never".to_string() } else { format!("{ep}") };
+        println!("  {name:<5} {tag:>6}  ({speedup:.1}× vs SAC)  plateau {pl:.0}");
+    }
+    println!("(paper: SAC converges 1.8×–3.7× faster than baselines)");
+    assert!(conv[0].1 <= EPISODES, "SAC itself must converge");
+    println!("fig10 OK — wrote results/fig10_convergence.csv");
+}

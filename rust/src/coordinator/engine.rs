@@ -1,0 +1,626 @@
+//! The serving engine: composes the router, dynamic batcher, instance
+//! manager, profiler, SLO-aware interference predictor, metrics, and an
+//! execution dispatcher into the scheduling loop of paper Fig. 2 /
+//! Algorithm 1.
+//!
+//! One call to [`Engine::step`] is one scheduling slot: pick the next
+//! model with pending work (round-robin fairness), encode the MDP state,
+//! ask the scheduler for (b, m_c), optionally let the interference
+//! predictor *veto-and-shrink* SLO-infeasible actions (§IV-F), assemble
+//! and dispatch the instance-batches (Figs. 3/4), account completions,
+//! compute the Eq. (3) utility and Eq. (6) reward, and feed it all back to
+//! the learning scheduler. "BCEdge starts the next scheduling immediately
+//! after finishing the current scheduling to reduce the GPU idle."
+
+use super::batcher::Batcher;
+use super::instances::InstanceManager;
+use super::queue::Router;
+use super::scheduler::{SchedCtx, Scheduler};
+use super::utility;
+use crate::metrics::{Metrics, RequestOutcome};
+use crate::predictor::{InterferencePredictor, PredictorSample};
+use crate::profiler::{ProfileSample, Profiler};
+use crate::rl::spaces::ActionSpace;
+use crate::runtime::executor::{BatchJob, Dispatcher};
+use crate::util::rng::Pcg32;
+use crate::workload::models::{ModelId, ModelSpec};
+use crate::workload::request::Request;
+use std::collections::VecDeque;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub action_space: ActionSpace,
+    /// Enable the §IV-F interference predictor in the decision path.
+    pub use_predictor: bool,
+    /// Pad batches to the compiled artifact grid (real backend) or run
+    /// exact sizes (simulation).
+    pub pad_to_artifacts: bool,
+    /// Platform-wide concurrent-instance cap (spec.max_instances).
+    pub max_total_instances: usize,
+    /// Train the scheduler online (feedback + update every slot).
+    pub learn: bool,
+    /// Request serialization overhead (Eq. 2 tᵢ_s), ms per batch.
+    pub serialization_ms: f64,
+    /// Seed for the engine's decision RNG.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            action_space: ActionSpace::standard(),
+            use_predictor: true,
+            pad_to_artifacts: false,
+            max_total_instances: 8,
+            learn: true,
+            serialization_ms: 0.15,
+            seed: 0xBCED6E,
+        }
+    }
+}
+
+/// Result of one scheduling slot.
+#[derive(Clone, Debug)]
+pub struct SlotOutcome {
+    pub model: ModelId,
+    pub batch: usize,
+    pub m_c: usize,
+    /// Requests completed in this slot.
+    pub completed: usize,
+    /// SLO violations among them.
+    pub violations: usize,
+    pub oom: bool,
+    pub utility: f64,
+    pub reward: f64,
+    /// Scheduler training loss (0 for heuristics / greedy mode).
+    pub loss: f32,
+    /// Wall/virtual span of the slot, ms.
+    pub span_ms: f64,
+}
+
+/// The serving engine over any execution dispatcher.
+pub struct Engine<D: Dispatcher> {
+    pub cfg: EngineConfig,
+    dispatcher: D,
+    router: Router,
+    batcher: Batcher,
+    instances: InstanceManager,
+    pub profiler: Profiler,
+    pub metrics: Metrics,
+    pub predictor: Option<InterferencePredictor>,
+    pending: VecDeque<Request>,
+    rng: Pcg32,
+    last_model: usize,
+    slots_run: u64,
+}
+
+impl<D: Dispatcher> Engine<D> {
+    pub fn new(dispatcher: D, cfg: EngineConfig) -> Self {
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let predictor = if cfg.use_predictor {
+            Some(InterferencePredictor::new(&mut rng))
+        } else {
+            None
+        };
+        Engine {
+            batcher: if cfg.pad_to_artifacts {
+                Batcher::for_artifacts()
+            } else {
+                Batcher::exact()
+            },
+            instances: InstanceManager::new(cfg.max_total_instances),
+            profiler: Profiler::new(512),
+            metrics: Metrics::new(),
+            predictor,
+            pending: VecDeque::new(),
+            rng,
+            last_model: 0,
+            slots_run: 0,
+            router: Router::new(),
+            dispatcher,
+            cfg,
+        }
+    }
+
+    /// Queue future arrivals (must be sorted by arrival time).
+    pub fn submit(&mut self, requests: Vec<Request>) {
+        debug_assert!(requests.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        self.pending.extend(requests);
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.dispatcher.now_ms()
+    }
+
+    pub fn dispatcher(&self) -> &D {
+        &self.dispatcher
+    }
+
+    pub fn total_queued(&self) -> usize {
+        self.router.total_queued() + self.pending.len()
+    }
+
+    pub fn slots_run(&self) -> u64 {
+        self.slots_run
+    }
+
+    fn ingest(&mut self) {
+        let now = self.dispatcher.now_ms();
+        while let Some(front) = self.pending.front() {
+            if front.arrival_ms <= now {
+                let r = self.pending.pop_front().unwrap();
+                self.router.route(r);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Build the scheduler context for `model` at the current instant.
+    pub fn ctx_for(&self, model: ModelId) -> SchedCtx {
+        let q = self.router.queue(model);
+        let now = self.dispatcher.now_ms();
+        let (compute_demand, mem_pressure, active) =
+            self.dispatcher.utilization();
+        SchedCtx {
+            model,
+            queue_len: q.len(),
+            min_slack_ms: q
+                .min_deadline_ms()
+                .map(|d| d - now)
+                .unwrap_or(ModelSpec::get(model).slo_ms),
+            slo_ms: ModelSpec::get(model).slo_ms,
+            mem_free_frac: 1.0 - mem_pressure,
+            compute_demand,
+            active_instances: active,
+            recent_latency_ms: self.profiler.mean_latency_ms(model),
+            recent_throughput_rps: self.profiler.throughput_rps(model),
+            recent_inflation: self.profiler.mean_inflation(),
+        }
+    }
+
+    /// Find the next model with pending work, advancing time across idle
+    /// gaps. Returns `None` when the workload is exhausted.
+    pub fn next_model(&mut self) -> Option<ModelId> {
+        loop {
+            self.ingest();
+            if let Some(&m) =
+                self.router.busy_models_after(self.last_model).first()
+            {
+                return Some(m);
+            }
+            let next_arrival = self.pending.front()?.arrival_ms;
+            self.dispatcher.wait_until(next_arrival);
+        }
+    }
+
+    /// §IV-F veto-and-shrink. The predictor guards against the three ways
+    /// a configuration destroys SLOs on edge hardware, without throttling
+    /// healthy batching (shrinking batch on mere deadline pressure starves
+    /// throughput and melts the queue down — worse than serving):
+    ///
+    /// 1. OOM risk (Eq. 4 m ≤ M): demanded memory must fit free memory;
+    /// 2. interference blow-up: predicted latency inflation from adding
+    ///    m_c instances must stay under a threshold — drop concurrency
+    ///    first, it is the superlinear dimension (Fig. 1);
+    /// 3. hopeless spans: a batch whose *predicted* span alone exceeds the
+    ///    model's SLO can never meet any fresh request's deadline.
+    fn predictor_adjust(&self, model: ModelId, mut b: usize, mut m_c: usize,
+                        ctx: &SchedCtx) -> (usize, usize) {
+        const MAX_INFLATION: f64 = 1.6;
+        let Some(p) = &self.predictor else { return (b, m_c) };
+        if p.samples() < 128 {
+            return (b, m_c); // cold start: no veto power yet
+        }
+        let (compute_demand, mem_pressure, active) =
+            self.dispatcher.utilization();
+        let spec = ModelSpec::get(model);
+        // (1) memory guard
+        let free_frac = ctx.mem_free_frac.clamp(0.0, 1.0);
+        let free_mb = free_frac * crate::platform::PlatformSpec::xavier_nx().memory_mb;
+        while m_c * b > 1 && spec.memory.total_mb(b, m_c) > free_mb {
+            if m_c > 1 {
+                m_c -= 1;
+            } else {
+                b = (b / 2).max(1);
+            }
+        }
+        // (2) interference guard + (3) hopeless-span guard
+        for _ in 0..8 {
+            let sample = PredictorSample {
+                memory_pressure: mem_pressure,
+                compute_demand: compute_demand
+                    + spec.compute_demand * m_c as f64,
+                active_instances: active + m_c,
+                concurrency: m_c,
+                batch: b,
+                inflation: 1.0,
+            };
+            let inflation = p.predict(&sample);
+            let predicted_ms =
+                self.dispatcher.isolated_estimate_ms(model, b) * inflation;
+            let interference_bad = inflation > MAX_INFLATION && m_c > 1;
+            let span_hopeless = predicted_ms > ctx.slo_ms && b > 1;
+            if !interference_bad && !span_hopeless {
+                break;
+            }
+            if interference_bad {
+                m_c -= 1;
+            } else {
+                b = (b / 2).max(1);
+            }
+        }
+        (b, m_c)
+    }
+
+    /// Execute one scheduling slot for a single model with an explicit
+    /// action. Public so the offline-training environment
+    /// ([`super::sac_sched::SchedEnv`]) can drive the engine
+    /// action-by-action; the serving path uses [`Engine::step`], which
+    /// dispatches ALL busy models as one concurrent group (paper Fig. 4).
+    pub fn execute_slot(&mut self, model: ModelId, batch: usize, m_c: usize)
+                        -> SlotOutcome {
+        let plan = self.plan_slot(model, batch, m_c);
+        let t_dispatch = self.dispatcher.now_ms();
+        if plan.assembled.is_empty() {
+            return self.empty_outcome(model, batch, plan.m_c);
+        }
+        let jobs = plan.jobs();
+        let results = self.dispatcher.run_group(&jobs);
+        let outcome = self.account_slot(&plan, t_dispatch, &results);
+        self.finish_round();
+        outcome
+    }
+
+    fn empty_outcome(&self, model: ModelId, batch: usize, m_c: usize)
+                     -> SlotOutcome {
+        SlotOutcome {
+            model,
+            batch,
+            m_c,
+            completed: 0,
+            violations: 0,
+            oom: false,
+            utility: 0.0,
+            reward: 0.0,
+            loss: 0.0,
+            span_ms: 0.0,
+        }
+    }
+
+    /// Apply the §IV-F veto, register instances, and drain the queue into
+    /// instance-batches for one model (no execution yet).
+    fn plan_slot(&mut self, model: ModelId, batch: usize, m_c: usize)
+                 -> SlotPlan {
+        self.slots_run += 1;
+        self.last_model = model as usize;
+        let ctx = self.ctx_for(model);
+        let (batch, m_c) = self.predictor_adjust(model, batch, m_c, &ctx);
+        // Register the scheduler's configuration first, THEN clamp by what
+        // the platform admits (global instance cap minus other models'
+        // in-flight instances).
+        self.instances.configure(model, m_c);
+        let m_c = m_c.min(self.instances.admissible(model).max(1));
+        let assembled = self
+            .batcher
+            .assemble(self.router.queue_mut(model), batch, m_c);
+        let n_instances = assembled.len();
+        if n_instances > 0 {
+            self.instances
+                .acquire(model, n_instances.min(self.instances.admissible(model)));
+        }
+        SlotPlan { model, batch, m_c, assembled }
+    }
+
+    /// Account one model's share of a dispatched group: completions,
+    /// violations, profiler/predictor samples, utility, reward.
+    fn account_slot(&mut self, plan: &SlotPlan, t_dispatch: f64,
+                    results: &[Result<f64, crate::runtime::executor::ExecError>])
+                    -> SlotOutcome {
+        let model = plan.model;
+        let n_instances = plan.assembled.len();
+        let (compute_demand, mem_pressure, active) =
+            self.dispatcher.utilization();
+        let mut completed = 0usize;
+        let mut violations = 0usize;
+        let mut oom = false;
+        let mut span_ms: f64 = 0.0;
+        let mut latency_sum = 0.0;
+        let mut slo_sum = 0.0;
+        for (a, res) in plan.assembled.iter().zip(results) {
+            match res {
+                Ok(lat_ms) => {
+                    let lat_ms = lat_ms + self.cfg.serialization_ms;
+                    span_ms = span_ms.max(lat_ms);
+                    latency_sum += lat_ms;
+                    let completion = t_dispatch + lat_ms;
+                    for r in &a.requests {
+                        let e2e = completion - r.arrival_ms + r.transmission_ms;
+                        let v = e2e > r.slo_ms;
+                        violations += v as usize;
+                        completed += 1;
+                        slo_sum += r.slo_ms;
+                        self.metrics.record(RequestOutcome {
+                            id: r.id,
+                            model,
+                            arrival_ms: r.arrival_ms,
+                            completed_ms: completion,
+                            e2e_ms: e2e,
+                            slo_ms: r.slo_ms,
+                            violated: v,
+                            dropped: false,
+                        });
+                    }
+                    // Profile + predictor ground truth.
+                    let isolated =
+                        self.dispatcher.isolated_estimate_ms(model, a.padded);
+                    let inflation = (lat_ms / isolated).max(1.0);
+                    self.profiler.record(ProfileSample {
+                        t_ms: t_dispatch,
+                        model,
+                        batch: a.padded,
+                        concurrency: n_instances,
+                        latency_ms: lat_ms,
+                        completed: a.n_real(),
+                        compute_demand,
+                        memory_pressure: mem_pressure,
+                        active_instances: active,
+                        inflation,
+                    });
+                    if let Some(p) = &mut self.predictor {
+                        p.observe(PredictorSample {
+                            memory_pressure: mem_pressure,
+                            compute_demand: compute_demand
+                                + ModelSpec::get(model).compute_demand
+                                    * n_instances as f64,
+                            active_instances: active + n_instances,
+                            concurrency: n_instances,
+                            batch: a.padded,
+                            inflation,
+                        });
+                    }
+                }
+                Err(_) => {
+                    // OOM / backend failure: requeue so requests are not
+                    // lost; the reward penalty teaches the scheduler.
+                    oom = true;
+                    for r in &a.requests {
+                        self.router.queue_mut(model).push(r.clone());
+                    }
+                }
+            }
+        }
+        let (u, reward) = if completed > 0 {
+            let n_ok = results.iter().filter(|r| r.is_ok()).count().max(1);
+            let mean_latency = latency_sum / n_ok as f64;
+            let throughput = completed as f64 / (span_ms.max(1e-3) / 1e3);
+            let u = utility::utility(throughput, mean_latency, slo_sum,
+                                     n_instances.max(1));
+            let vf = violations as f64 / completed as f64;
+            (u, utility::reward(u, vf, oom))
+        } else {
+            (0.0, utility::reward(0.0, 0.0, oom))
+        };
+        self.metrics.record_utility(t_dispatch, model, u);
+
+        SlotOutcome {
+            model,
+            batch: plan.batch,
+            m_c: n_instances,
+            completed,
+            violations,
+            oom,
+            utility: u,
+            reward,
+            loss: 0.0,
+            span_ms,
+        }
+    }
+
+    /// Post-round bookkeeping: release instances, amortized predictor
+    /// training.
+    fn finish_round(&mut self) {
+        for model in ModelId::all() {
+            let active = self.instances.active(model);
+            if active > 0 {
+                self.instances.release(model, active);
+            }
+        }
+        if self.slots_run % 4 == 0 {
+            if let Some(p) = &mut self.predictor {
+                p.train_step(&mut self.rng);
+            }
+        }
+    }
+
+    /// One scheduling ROUND with a policy: every model with pending work
+    /// gets a decision, and all chosen instance-batches dispatch as a
+    /// single concurrent group — the paper Fig. 4 pipeline, where the
+    /// accelerator's hardware scheduler runs different models' instances
+    /// simultaneously. Returns one outcome per scheduled model.
+    pub fn step<S: Scheduler + ?Sized>(&mut self, scheduler: &mut S)
+                                       -> Option<Vec<SlotOutcome>> {
+        self.next_model()?; // advances time to work; round-robin anchor
+        let busy = self.router.busy_models_after(self.last_model);
+        let mut rng = self.rng.split();
+
+        // Phase 1: decide + assemble for every busy model.
+        let mut plans: Vec<(SchedCtx, (usize, usize), SlotPlan)> = Vec::new();
+        let mut jobs: Vec<BatchJob> = Vec::new();
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        for model in busy {
+            let ctx = self.ctx_for(model);
+            let (b, m_c) = scheduler.decide(&ctx, &mut rng);
+            let plan = self.plan_slot(model, b, m_c);
+            let start = jobs.len();
+            jobs.extend(plan.jobs());
+            ranges.push((start, jobs.len()));
+            plans.push((ctx, (b, m_c), plan));
+        }
+        if jobs.is_empty() {
+            // Queues held only already-drained models; outcomes are empty.
+            return Some(vec![]);
+        }
+
+        // Phase 2: one concurrent dispatch for the whole round.
+        let t_dispatch = self.dispatcher.now_ms();
+        let results = self.dispatcher.run_group(&jobs);
+
+        // Phase 3: per-model accounting + learning feedback.
+        let mut outcomes = Vec::with_capacity(plans.len());
+        for ((ctx, action, plan), (start, end)) in
+            plans.into_iter().zip(ranges)
+        {
+            let mut outcome = if plan.assembled.is_empty() {
+                self.empty_outcome(plan.model, plan.batch, plan.m_c)
+            } else {
+                self.account_slot(&plan, t_dispatch, &results[start..end])
+            };
+            if self.cfg.learn {
+                let next_ctx = self.ctx_for(plan.model);
+                outcome.loss = scheduler.feedback(
+                    &ctx, action, outcome.reward, &next_ctx, false, &mut rng,
+                );
+            }
+            outcomes.push(outcome);
+        }
+        self.finish_round();
+        Some(outcomes)
+    }
+
+    /// Serve until the virtual/real horizon passes or work runs out.
+    /// Returns the number of per-model slots executed.
+    pub fn run<S: Scheduler + ?Sized>(&mut self, scheduler: &mut S,
+                                      horizon_ms: f64) -> u64 {
+        let mut slots = 0;
+        while self.dispatcher.now_ms() < horizon_ms {
+            match self.step(scheduler) {
+                Some(outcomes) => slots += outcomes.len() as u64,
+                None => break,
+            }
+        }
+        slots
+    }
+}
+
+/// One model's planned share of a scheduling round.
+struct SlotPlan {
+    model: ModelId,
+    batch: usize,
+    m_c: usize,
+    assembled: Vec<super::batcher::AssembledBatch>,
+}
+
+impl SlotPlan {
+    fn jobs(&self) -> Vec<BatchJob> {
+        self.assembled
+            .iter()
+            .map(|a| BatchJob {
+                model: self.model,
+                batch: a.padded,
+                n_real: a.n_real(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::baselines::FixedScheduler;
+    use crate::platform::PlatformSim;
+    use crate::runtime::executor::SimDispatcher;
+    use crate::util::time::VirtualClock;
+    use crate::workload::generator::PoissonGenerator;
+
+    fn sim_engine(cfg: EngineConfig) -> Engine<SimDispatcher> {
+        let clock = VirtualClock::new();
+        Engine::new(SimDispatcher::new(PlatformSim::xavier_nx(), clock), cfg)
+    }
+
+    #[test]
+    fn serves_poisson_traffic_end_to_end() {
+        let mut engine = sim_engine(EngineConfig::default());
+        let mut gen = PoissonGenerator::new(30.0, 42);
+        let reqs = gen.generate_horizon(10_000.0);
+        let n = reqs.len();
+        engine.submit(reqs);
+        let mut sched = FixedScheduler { batch: 4, m_c: 2 };
+        engine.run(&mut sched, 60_000.0);
+        // Conservation: every request either completed or still queued.
+        assert_eq!(engine.metrics.outcomes().len() + engine.total_queued(), n);
+        // With a sane static config at 30 rps the engine must keep up.
+        assert!(engine.metrics.completed() > n * 9 / 10,
+                "completed {}/{n}", engine.metrics.completed());
+        assert!(engine.metrics.mean_latency_ms(None) > 0.0);
+    }
+
+    #[test]
+    fn idle_engine_advances_to_arrivals() {
+        let mut engine = sim_engine(EngineConfig::default());
+        let mut r = Request::new(0, ModelId::Res, 5_000.0);
+        r.transmission_ms = 0.0;
+        engine.submit(vec![r]);
+        let model = engine.next_model().unwrap();
+        assert_eq!(model, ModelId::Res);
+        assert!(engine.now_ms() >= 5_000.0);
+    }
+
+    #[test]
+    fn exhausted_workload_returns_none() {
+        let mut engine = sim_engine(EngineConfig::default());
+        let mut sched = FixedScheduler { batch: 1, m_c: 1 };
+        assert!(engine.step(&mut sched).is_none());
+    }
+
+    #[test]
+    fn oversized_actions_respect_instance_cap() {
+        let mut engine = sim_engine(EngineConfig {
+            max_total_instances: 2,
+            use_predictor: false,
+            ..Default::default()
+        });
+        let reqs: Vec<Request> =
+            (0..64).map(|i| Request::new(i, ModelId::Mob, 0.0)).collect();
+        engine.submit(reqs);
+        engine.next_model().unwrap();
+        let out = engine.execute_slot(ModelId::Mob, 8, 8);
+        assert!(out.m_c <= 2, "m_c {} exceeded cap", out.m_c);
+    }
+
+    #[test]
+    fn oom_requeues_requests_and_penalizes() {
+        let mut engine = sim_engine(EngineConfig {
+            use_predictor: false,
+            action_space: ActionSpace::sim_wide(),
+            ..Default::default()
+        });
+        let reqs: Vec<Request> = (0..1024)
+            .map(|i| Request::new(i, ModelId::Yolo, 0.0))
+            .collect();
+        engine.submit(reqs);
+        engine.next_model().unwrap();
+        let out = engine.execute_slot(ModelId::Yolo, 128, 8);
+        assert!(out.oom, "expected the Fig. 1 OOM corner");
+        assert!(out.reward < 0.0, "OOM must be penalized: {}", out.reward);
+        // Nothing lost.
+        assert_eq!(
+            engine.metrics.outcomes().len() + engine.total_queued(),
+            1024
+        );
+    }
+
+    #[test]
+    fn utility_recorded_per_slot() {
+        let mut engine = sim_engine(EngineConfig::default());
+        let reqs: Vec<Request> =
+            (0..16).map(|i| Request::new(i, ModelId::Res, 0.0)).collect();
+        engine.submit(reqs);
+        engine.next_model().unwrap();
+        let out = engine.execute_slot(ModelId::Res, 8, 2);
+        assert!(out.completed > 0);
+        assert!(out.utility.is_finite());
+        assert!(engine.metrics.mean_utility(Some(ModelId::Res)).is_finite());
+    }
+}

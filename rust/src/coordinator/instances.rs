@@ -1,0 +1,112 @@
+//! Concurrent instance management (paper Fig. 4 / §IV-D): tracks the
+//! instance slots configured per model, enforces the platform's instance
+//! cap, and serializes same-model overflow ("if multiple inference
+//! requests for the same model arrive at the same time, BCEdge serializes
+//! their execution by scheduling only one at a time" per instance).
+
+use crate::workload::models::{ModelId, N_MODELS};
+
+/// Per-model instance-slot registry.
+#[derive(Clone, Debug)]
+pub struct InstanceManager {
+    /// Configured instance count per model (the m_c the scheduler chose
+    /// most recently).
+    configured: [usize; N_MODELS],
+    /// Currently-executing instances per model.
+    active: [usize; N_MODELS],
+    /// Platform-wide cap on simultaneously active instances.
+    max_total: usize,
+}
+
+impl InstanceManager {
+    pub fn new(max_total: usize) -> Self {
+        InstanceManager {
+            configured: [1; N_MODELS],
+            active: [0; N_MODELS],
+            max_total: max_total.max(1),
+        }
+    }
+
+    /// Apply a scheduler decision for `model`.
+    pub fn configure(&mut self, model: ModelId, m_c: usize) {
+        self.configured[model as usize] = m_c.max(1);
+    }
+
+    pub fn configured(&self, model: ModelId) -> usize {
+        self.configured[model as usize]
+    }
+
+    pub fn total_active(&self) -> usize {
+        self.active.iter().sum()
+    }
+
+    pub fn active(&self, model: ModelId) -> usize {
+        self.active[model as usize]
+    }
+
+    /// How many instance-batches of `model` may launch right now: bounded
+    /// by the model's configuration and the platform-wide cap.
+    pub fn admissible(&self, model: ModelId) -> usize {
+        let per_model =
+            self.configured[model as usize].saturating_sub(self.active[model as usize]);
+        let global = self.max_total.saturating_sub(self.total_active());
+        per_model.min(global)
+    }
+
+    /// Mark `n` instances of `model` as executing.
+    pub fn acquire(&mut self, model: ModelId, n: usize) {
+        assert!(n <= self.admissible(model), "over-admission");
+        self.active[model as usize] += n;
+    }
+
+    /// Mark `n` instances of `model` as finished.
+    pub fn release(&mut self, model: ModelId, n: usize) {
+        let a = &mut self.active[model as usize];
+        assert!(*a >= n, "releasing more instances than active");
+        *a -= n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_respects_both_caps() {
+        let mut im = InstanceManager::new(4);
+        im.configure(ModelId::Yolo, 3);
+        im.configure(ModelId::Res, 3);
+        assert_eq!(im.admissible(ModelId::Yolo), 3);
+        im.acquire(ModelId::Yolo, 3);
+        // Global cap 4, 3 in use → only 1 slot left for res despite m_c=3.
+        assert_eq!(im.admissible(ModelId::Res), 1);
+        im.acquire(ModelId::Res, 1);
+        assert_eq!(im.admissible(ModelId::Res), 0);
+        im.release(ModelId::Yolo, 3);
+        assert_eq!(im.admissible(ModelId::Res), 2);
+    }
+
+    #[test]
+    fn same_model_serializes_beyond_configuration() {
+        let mut im = InstanceManager::new(8);
+        im.configure(ModelId::Bert, 2);
+        im.acquire(ModelId::Bert, 2);
+        // Third simultaneous bert batch must wait (Fig. 4 semantics).
+        assert_eq!(im.admissible(ModelId::Bert), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-admission")]
+    fn over_acquire_panics() {
+        let mut im = InstanceManager::new(2);
+        im.configure(ModelId::Mob, 4);
+        im.acquire(ModelId::Mob, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "releasing more")]
+    fn over_release_panics() {
+        let mut im = InstanceManager::new(2);
+        im.release(ModelId::Mob, 1);
+    }
+}

@@ -1,0 +1,22 @@
+//! The BCEdge coordinator — the paper's system contribution (Fig. 2):
+//! per-model SLO-priority request queues (①), the performance-profiler
+//! feedback loop (②), the SLO-aware interference predictor hook (③), the
+//! learning-based scheduler (④), and the batched/concurrent executor
+//! drive (⑤), composed by [`engine::Engine`].
+
+pub mod batcher;
+pub mod baselines;
+pub mod engine;
+pub mod harness;
+pub mod instances;
+pub mod queue;
+pub mod sac_sched;
+pub mod scheduler;
+pub mod slo;
+pub mod utility;
+
+pub use engine::{Engine, EngineConfig, SlotOutcome};
+pub use queue::{ModelQueue, Router};
+pub use sac_sched::{SacScheduler, SchedEnv};
+pub use scheduler::{SchedCtx, Scheduler, STATE_DIM};
+pub use utility::utility;

@@ -1,0 +1,211 @@
+//! Per-model request queues with SLO priority (paper Fig. 3): "it sorts
+//! the priority based on the SLO of inference requests in each queue, the
+//! shorter the SLO, the higher the priority … batch requests are scheduled
+//! in the order of arrival if have the same priority."
+
+use crate::workload::models::{ModelId, N_MODELS};
+use crate::workload::request::Request;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Debug)]
+struct QueueItem {
+    request: Request,
+    seq: u64,
+}
+
+impl PartialEq for QueueItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for QueueItem {}
+
+impl PartialOrd for QueueItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueueItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so smaller SLO (then earlier
+        // seq) pops first.
+        other
+            .request
+            .slo_ms
+            .partial_cmp(&self.request.slo_ms)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// One model's pending-request queue.
+#[derive(Debug, Default)]
+pub struct ModelQueue {
+    heap: BinaryHeap<QueueItem>,
+    seq: u64,
+}
+
+impl ModelQueue {
+    pub fn new() -> Self {
+        ModelQueue::default()
+    }
+
+    pub fn push(&mut self, request: Request) {
+        self.heap.push(QueueItem { request, seq: self.seq });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.heap.pop().map(|i| i.request)
+    }
+
+    pub fn peek(&self) -> Option<&Request> {
+        self.heap.peek().map(|i| &i.request)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Earliest arrival among queued requests (for slack computation).
+    pub fn oldest_arrival_ms(&self) -> Option<f64> {
+        self.heap
+            .iter()
+            .map(|i| i.request.arrival_ms)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Tightest deadline among queued requests.
+    pub fn min_deadline_ms(&self) -> Option<f64> {
+        self.heap
+            .iter()
+            .map(|i| i.request.deadline_ms())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Drain up to `n` requests in priority order.
+    pub fn drain(&mut self, n: usize) -> Vec<Request> {
+        let mut out = Vec::with_capacity(n.min(self.len()));
+        for _ in 0..n {
+            match self.pop() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+/// The router (paper Fig. 2 ①): maintains one queue per model and
+/// dispatches incoming requests by model type.
+#[derive(Debug, Default)]
+pub struct Router {
+    queues: [ModelQueue; N_MODELS],
+    routed: u64,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Router::default()
+    }
+
+    pub fn route(&mut self, request: Request) {
+        self.routed += 1;
+        self.queues[request.model as usize].push(request);
+    }
+
+    pub fn queue(&self, model: ModelId) -> &ModelQueue {
+        &self.queues[model as usize]
+    }
+
+    pub fn queue_mut(&mut self, model: ModelId) -> &mut ModelQueue {
+        &mut self.queues[model as usize]
+    }
+
+    pub fn total_queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn total_routed(&self) -> u64 {
+        self.routed
+    }
+
+    /// Models with pending work, in round-robin order starting after
+    /// `after` (the engine's fairness walk).
+    pub fn busy_models_after(&self, after: usize) -> Vec<ModelId> {
+        (1..=N_MODELS)
+            .map(|k| ModelId::from_index((after + k) % N_MODELS))
+            .filter(|m| !self.queue(*m).is_empty())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: ModelId, slo: f64, arrival: f64) -> Request {
+        let mut r = Request::new(id, model, arrival);
+        r.slo_ms = slo;
+        r
+    }
+
+    #[test]
+    fn pops_shortest_slo_first() {
+        let mut q = ModelQueue::new();
+        q.push(req(1, ModelId::Res, 100.0, 0.0));
+        q.push(req(2, ModelId::Res, 20.0, 1.0));
+        q.push(req(3, ModelId::Res, 50.0, 2.0));
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn fifo_within_equal_slo() {
+        let mut q = ModelQueue::new();
+        for id in 0..5 {
+            q.push(req(id, ModelId::Res, 58.0, id as f64));
+        }
+        let order: Vec<u64> = q.drain(5).iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn oldest_and_deadline_track_heap_contents() {
+        let mut q = ModelQueue::new();
+        q.push(req(1, ModelId::Res, 100.0, 50.0));
+        q.push(req(2, ModelId::Res, 10.0, 80.0));
+        assert_eq!(q.oldest_arrival_ms(), Some(50.0));
+        assert_eq!(q.min_deadline_ms(), Some(90.0)); // 80 + 10
+    }
+
+    #[test]
+    fn router_routes_by_model() {
+        let mut r = Router::new();
+        r.route(req(1, ModelId::Yolo, 138.0, 0.0));
+        r.route(req(2, ModelId::Bert, 114.0, 0.0));
+        r.route(req(3, ModelId::Yolo, 138.0, 1.0));
+        assert_eq!(r.queue(ModelId::Yolo).len(), 2);
+        assert_eq!(r.queue(ModelId::Bert).len(), 1);
+        assert_eq!(r.queue(ModelId::Res).len(), 0);
+        assert_eq!(r.total_queued(), 3);
+        assert_eq!(r.total_routed(), 3);
+    }
+
+    #[test]
+    fn busy_walk_is_round_robin() {
+        let mut r = Router::new();
+        r.route(req(1, ModelId::Mob, 86.0, 0.0));
+        r.route(req(2, ModelId::Bert, 114.0, 0.0));
+        // Starting after Mob (index 1): Bert (5) comes before Mob again.
+        let order = r.busy_models_after(ModelId::Mob as usize);
+        assert_eq!(order, vec![ModelId::Bert, ModelId::Mob]);
+    }
+}

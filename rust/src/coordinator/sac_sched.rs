@@ -1,0 +1,212 @@
+//! The BCEdge learning-based scheduler (paper §IV-B / Algorithm 1):
+//! discrete SAC behind the [`Scheduler`] trait, plus [`SchedEnv`] — the
+//! offline-training environment that exposes the serving engine as an
+//! [`Env`] so Algorithm 1 can run against the platform simulator ("we
+//! trained it offline on an off-the-edge device … then deploy trained
+//! algorithm online to edge platform").
+
+use super::baselines::AgentScheduler;
+use super::engine::{Engine, EngineConfig};
+use super::scheduler::STATE_DIM;
+use crate::platform::{PlatformSim, PlatformSpec};
+use crate::rl::env::{Env, Step};
+use crate::rl::sac::{DiscreteSac, SacConfig};
+use crate::rl::spaces::ActionSpace;
+use crate::runtime::executor::SimDispatcher;
+use crate::util::rng::Pcg32;
+use crate::util::time::VirtualClock;
+use crate::workload::generator::PoissonGenerator;
+use crate::workload::models::ModelId;
+
+/// BCEdge's scheduler: maximum-entropy discrete SAC on the 2-D action
+/// grid.
+pub type SacScheduler = AgentScheduler<DiscreteSac>;
+
+/// Construct the SAC scheduler (paper defaults).
+pub fn sac(space: ActionSpace, rng: &mut Pcg32) -> SacScheduler {
+    sac_with(space, SacConfig::default(), rng)
+}
+
+/// Construct with explicit SAC hyper-parameters.
+pub fn sac_with(space: ActionSpace, cfg: SacConfig, rng: &mut Pcg32)
+                -> SacScheduler {
+    let agent = DiscreteSac::new(STATE_DIM, space.len(), cfg, rng);
+    AgentScheduler::new(agent, space, "BCEdge (discrete SAC)")
+}
+
+/// Offline-training MDP over the simulated platform: each step is one
+/// scheduling slot on a Poisson-fed engine; reward is the Eq. (6) slot
+/// reward. Episodes restart the engine with fresh traffic.
+pub struct SchedEnv {
+    pub space: ActionSpace,
+    pub rps: f64,
+    pub platform: PlatformSpec,
+    /// Steps per episode.
+    pub episode_len: usize,
+    engine: Engine<SimDispatcher>,
+    current_model: Option<ModelId>,
+    steps: usize,
+    episode: u64,
+    /// Restrict generated traffic to a model subset (None = full zoo).
+    pub model_subset: Option<Vec<ModelId>>,
+}
+
+impl SchedEnv {
+    pub fn new(space: ActionSpace, rps: f64, platform: PlatformSpec) -> Self {
+        let engine = Self::fresh_engine(&space, rps, &platform, 0, &None);
+        SchedEnv {
+            space,
+            rps,
+            platform,
+            episode_len: 128,
+            engine,
+            current_model: None,
+            steps: 0,
+            episode: 0,
+            model_subset: None,
+        }
+    }
+
+    fn fresh_engine(space: &ActionSpace, rps: f64, platform: &PlatformSpec,
+                    episode: u64, subset: &Option<Vec<ModelId>>)
+                    -> Engine<SimDispatcher> {
+        let clock = VirtualClock::new();
+        let dispatcher =
+            SimDispatcher::new(PlatformSim::new(platform.clone()), clock);
+        let mut engine = Engine::new(
+            dispatcher,
+            EngineConfig {
+                action_space: space.clone(),
+                // During offline training the predictor is disabled so the
+                // agent sees raw consequences (the predictor is layered on
+                // at deployment, §IV-F).
+                use_predictor: false,
+                pad_to_artifacts: false,
+                max_total_instances: platform.max_instances,
+                learn: false, // learning happens through the Env interface
+                ..Default::default()
+            },
+        );
+        // `rps` is per-model (see harness::Experiment::rps).
+        let n_models = subset.as_ref().map(|m| m.len()).unwrap_or(6);
+        let mut gen = PoissonGenerator::new(rps * n_models as f64,
+                                            0x5EED ^ episode);
+        if let Some(models) = subset {
+            gen = gen.with_models(models);
+        }
+        // Enough traffic that an episode never starves (episodes are
+        // step-bounded, not horizon-bounded).
+        engine.submit(gen.generate_horizon(600_000.0));
+        engine
+    }
+
+    /// Access the inner engine (diagnostics / tests).
+    pub fn engine(&self) -> &Engine<SimDispatcher> {
+        &self.engine
+    }
+}
+
+impl Env for SchedEnv {
+    fn state_dim(&self) -> usize {
+        STATE_DIM
+    }
+
+    fn n_actions(&self) -> usize {
+        self.space.len()
+    }
+
+    fn reset(&mut self, _rng: &mut Pcg32) -> Vec<f32> {
+        self.episode += 1;
+        self.engine = Self::fresh_engine(
+            &self.space,
+            self.rps,
+            &self.platform,
+            self.episode,
+            &self.model_subset,
+        );
+        self.steps = 0;
+        let model = self.engine.next_model().expect("traffic exhausted");
+        self.current_model = Some(model);
+        self.engine.ctx_for(model).encode().to_vec()
+    }
+
+    fn step(&mut self, action: usize, _rng: &mut Pcg32) -> Step {
+        let model = self.current_model.expect("step before reset");
+        let (b, m_c) = self.space.decode(action);
+        let outcome = self.engine.execute_slot(model, b, m_c);
+        self.steps += 1;
+        let done = self.steps >= self.episode_len;
+        let next_model = if done {
+            model
+        } else {
+            self.engine.next_model().unwrap_or(model)
+        };
+        self.current_model = Some(next_model);
+        Step {
+            next_state: self.engine.ctx_for(next_model).encode().to_vec(),
+            reward: outcome.reward as f32,
+            done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::env::{train_episodes, Agent};
+
+    #[test]
+    fn env_round_trip() {
+        let mut rng = Pcg32::seeded(101);
+        let mut env = SchedEnv::new(ActionSpace::standard(), 30.0,
+                                    PlatformSpec::xavier_nx());
+        let s = env.reset(&mut rng);
+        assert_eq!(s.len(), STATE_DIM);
+        let step = env.step(0, &mut rng);
+        assert_eq!(step.next_state.len(), STATE_DIM);
+        assert!(step.reward.is_finite());
+    }
+
+    #[test]
+    fn sac_improves_scheduling_reward() {
+        let mut rng = Pcg32::seeded(102);
+        let mut env = SchedEnv::new(ActionSpace::standard(), 30.0,
+                                    PlatformSpec::xavier_nx());
+        env.episode_len = 48;
+        let cfg = SacConfig { warmup: 64, batch_size: 32, ..Default::default() };
+        let mut agent =
+            DiscreteSac::new(STATE_DIM, env.n_actions(), cfg, &mut rng);
+        let hist = train_episodes(&mut env, &mut agent, 14, 48, &mut rng);
+        let early: f32 = hist[..4].iter().map(|x| x.0).sum::<f32>() / 4.0;
+        let late: f32 =
+            hist[hist.len() - 4..].iter().map(|x| x.0).sum::<f32>() / 4.0;
+        assert!(
+            late > early - 5.0,
+            "reward collapsed: early {early} late {late}"
+        );
+        // The trained policy must be usable greedily.
+        let s = env.reset(&mut rng);
+        let a = agent.act(&s, &mut rng, true);
+        assert!(a < env.n_actions());
+    }
+
+    #[test]
+    fn subset_env_only_sees_subset() {
+        let mut rng = Pcg32::seeded(103);
+        let mut env = SchedEnv::new(ActionSpace::standard(), 30.0,
+                                    PlatformSpec::jetson_nano());
+        env.model_subset =
+            Some(vec![ModelId::Yolo, ModelId::Res, ModelId::Bert]);
+        env.reset(&mut rng);
+        for _ in 0..32 {
+            let s = env.step(5, &mut rng);
+            if s.done {
+                break;
+            }
+        }
+        for o in env.engine().metrics.outcomes() {
+            assert!(matches!(o.model,
+                             ModelId::Yolo | ModelId::Res | ModelId::Bert));
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Scheduler interface + the MDP state encoding of paper §IV-B.
+//!
+//! State sₜ (paper: five parts): (I) DNN model type, (II) input
+//! type/shape, (III) per-request SLO, (IV) available computing resources,
+//! (V) request-queue information — encoded as a fixed-width normalized
+//! vector shared by the SAC scheduler, every DRL baseline, and the
+//! interference predictor's context.
+
+use crate::util::rng::Pcg32;
+use crate::workload::models::{ModelId, ModelSpec, N_MODELS};
+
+/// Encoded-state width: one-hot model (6) + 10 scalar features.
+pub const STATE_DIM: usize = N_MODELS + 10;
+
+/// Everything the scheduler can observe for one decision.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedCtx {
+    pub model: ModelId,
+    pub queue_len: usize,
+    /// Slack of the tightest queued deadline, ms (negative = already late).
+    pub min_slack_ms: f64,
+    /// The model's Table-IV SLO, ms.
+    pub slo_ms: f64,
+    /// Free memory fraction ∈ [0, 1].
+    pub mem_free_frac: f64,
+    /// Aggregate compute demand currently executing.
+    pub compute_demand: f64,
+    pub active_instances: usize,
+    /// Rolling profiler views (NaN-safe: 0 when unobserved).
+    pub recent_latency_ms: f64,
+    pub recent_throughput_rps: f64,
+    pub recent_inflation: f64,
+}
+
+impl SchedCtx {
+    /// Normalize into the fixed-width state vector.
+    pub fn encode(&self) -> [f32; STATE_DIM] {
+        let mut s = [0.0f32; STATE_DIM];
+        s[self.model as usize] = 1.0;
+        let spec = ModelSpec::get(self.model);
+        let f = &mut s[N_MODELS..];
+        f[0] = (self.queue_len as f32 / 64.0).min(2.0);
+        f[1] = (self.min_slack_ms as f32 / self.slo_ms as f32).clamp(-1.0, 1.0);
+        f[2] = self.slo_ms as f32 / 138.0; // max Table-IV SLO
+        f[3] = (spec.input_elems as f32 / 3072.0).min(1.0);
+        f[4] = self.mem_free_frac as f32;
+        f[5] = (self.compute_demand as f32 / 8.0).min(2.0);
+        f[6] = self.active_instances as f32 / 8.0;
+        f[7] = nan0(self.recent_latency_ms as f32 / self.slo_ms as f32).min(3.0);
+        f[8] = nan0(self.recent_throughput_rps as f32 / 200.0).min(3.0);
+        f[9] = nan0(self.recent_inflation as f32 - 1.0).min(3.0);
+        s
+    }
+}
+
+fn nan0(x: f32) -> f32 {
+    if x.is_finite() { x } else { 0.0 }
+}
+
+/// A scheduling policy: observes the context, picks (batch, m_c), and
+/// (for learners) consumes reward feedback.
+pub trait Scheduler {
+    /// Decide (batch size, number of concurrent instances).
+    fn decide(&mut self, ctx: &SchedCtx, rng: &mut Pcg32) -> (usize, usize);
+
+    /// Reward feedback for the *previous* decision (learning schedulers
+    /// update here; heuristics ignore it). Returns a training loss for
+    /// convergence plots, 0.0 when not learning.
+    fn feedback(&mut self, prev: &SchedCtx, action: (usize, usize),
+                reward: f64, next: &SchedCtx, done: bool, rng: &mut Pcg32)
+                -> f32 {
+        let _ = (prev, action, reward, next, done, rng);
+        0.0
+    }
+
+    /// Switch exploration off (deployment mode).
+    fn set_greedy(&mut self, greedy: bool) {
+        let _ = greedy;
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> SchedCtx {
+        SchedCtx {
+            model: ModelId::Bert,
+            queue_len: 16,
+            min_slack_ms: 57.0,
+            slo_ms: 114.0,
+            mem_free_frac: 0.7,
+            compute_demand: 1.5,
+            active_instances: 2,
+            recent_latency_ms: 30.0,
+            recent_throughput_rps: 50.0,
+            recent_inflation: 1.2,
+        }
+    }
+
+    #[test]
+    fn encoding_shape_and_one_hot() {
+        let s = ctx().encode();
+        assert_eq!(s.len(), STATE_DIM);
+        let one_hot: Vec<f32> = s[..N_MODELS].to_vec();
+        assert_eq!(one_hot.iter().filter(|&&x| x == 1.0).count(), 1);
+        assert_eq!(one_hot[ModelId::Bert as usize], 1.0);
+    }
+
+    #[test]
+    fn encoding_is_bounded() {
+        let mut c = ctx();
+        c.queue_len = 100_000;
+        c.recent_latency_ms = 1e9;
+        c.recent_inflation = 1e9;
+        c.min_slack_ms = -1e9;
+        let s = c.encode();
+        assert!(s.iter().all(|x| x.is_finite() && x.abs() <= 3.0),
+                "unbounded features: {s:?}");
+    }
+
+    #[test]
+    fn nan_features_become_zero() {
+        let mut c = ctx();
+        c.recent_latency_ms = f64::NAN;
+        c.recent_throughput_rps = f64::NAN;
+        let s = c.encode();
+        assert!(s.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,61 @@
+//! SLO bookkeeping: scheduling-slot budget of paper Eq. (1) and
+//! per-request violation accounting used by the reward and Figs. 14/15.
+
+use crate::workload::request::Request;
+
+/// Eq. (1): the i-th scheduling slot tᵢ = Σⱼ SLOⱼ / m_c over the batch
+/// requests. Returns ms.
+pub fn slot_budget_ms(requests: &[Request], m_c: usize) -> f64 {
+    assert!(m_c >= 1);
+    let slo_sum: f64 = requests.iter().map(|r| r.slo_ms).sum();
+    slo_sum / m_c as f64
+}
+
+/// Σⱼ SLOⱼ over a batch.
+pub fn slo_sum_ms(requests: &[Request]) -> f64 {
+    requests.iter().map(|r| r.slo_ms).sum()
+}
+
+/// Violation check for one completed request (Eq. 4: Lᵢ < SLOᵢ).
+pub fn violated(request: &Request, completed_ms: f64) -> bool {
+    completed_ms - request.arrival_ms > request.slo_ms
+}
+
+/// Fraction of a batch completing past its SLO at `completed_ms`.
+pub fn violation_fraction(requests: &[Request], completed_ms: f64) -> f64 {
+    if requests.is_empty() {
+        return 0.0;
+    }
+    requests.iter().filter(|r| violated(r, completed_ms)).count() as f64
+        / requests.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::ModelId;
+
+    fn req(slo: f64, arrival: f64) -> Request {
+        let mut r = Request::new(0, ModelId::Res, arrival);
+        r.slo_ms = slo;
+        r
+    }
+
+    #[test]
+    fn eq1_slot_budget() {
+        let batch = vec![req(60.0, 0.0), req(60.0, 0.0), req(120.0, 0.0)];
+        assert_eq!(slot_budget_ms(&batch, 1), 240.0);
+        assert_eq!(slot_budget_ms(&batch, 4), 60.0);
+        assert_eq!(slo_sum_ms(&batch), 240.0);
+    }
+
+    #[test]
+    fn violation_accounting() {
+        let batch = vec![req(50.0, 100.0), req(200.0, 100.0)];
+        assert!(!violated(&batch[0], 140.0));
+        assert!(violated(&batch[0], 151.0));
+        assert_eq!(violation_fraction(&batch, 160.0), 0.5);
+        assert_eq!(violation_fraction(&batch, 120.0), 0.0);
+        assert_eq!(violation_fraction(&[], 0.0), 0.0);
+    }
+}

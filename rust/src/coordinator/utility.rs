@@ -1,0 +1,99 @@
+//! The throughput/latency trade-off utility of paper Eq. (3), and the
+//! constrained reward of Eqs. (4)/(6).
+//!
+//!   U = log( T(b, m_c) / ( L(b, m_c) / (Σⱼ SLOⱼ / m_c) ) )
+//!
+//! where T is the slot throughput, L the actual latency, and the
+//! denominator normalizes latency by the per-instance SLO budget of
+//! Eq. (1). The paper notes the ratio lies in (0, 1] for feasible
+//! schedules; we clamp it there (a ratio > 1 means the SLO budget was
+//! blown, handled by the reward penalty, not the log). The "min U" in
+//! Eq. (4) is read as maximize — the reward of Eq. (6) and all reported
+//! results maximize utility.
+
+/// Eq. (3). `throughput_rps` > 0, `latency_ms` > 0, `slo_sum_ms` = Σ SLOⱼ
+/// over the batch, `m_c` ≥ 1.
+pub fn utility(throughput_rps: f64, latency_ms: f64, slo_sum_ms: f64,
+               m_c: usize) -> f64 {
+    assert!(m_c >= 1);
+    if throughput_rps <= 0.0 || latency_ms <= 0.0 || slo_sum_ms <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    let budget_ms = slo_sum_ms / m_c as f64; // Eq. (1) slot budget
+    let ratio = (latency_ms / budget_ms).clamp(1e-3, 1.0);
+    (throughput_rps / ratio).ln()
+}
+
+/// Reward shaping around Eq. (6) r = U, adding the Eq. (4) constraints as
+/// penalties so the agent *learns* to avoid infeasible actions:
+/// * each SLO violation in the slot subtracts `VIOLATION_PENALTY` ×
+///   violation fraction;
+/// * an OOM rejection subtracts `OOM_PENALTY` (the hard m ≤ M constraint);
+/// * an idle slot (no requests) is worth 0.
+pub const VIOLATION_PENALTY: f64 = 4.0;
+pub const OOM_PENALTY: f64 = 8.0;
+
+/// Slot-level reward.
+pub fn reward(utility: f64, violation_frac: f64, oom: bool) -> f64 {
+    let mut r = if utility.is_finite() { utility } else { -OOM_PENALTY };
+    r -= VIOLATION_PENALTY * violation_frac.clamp(0.0, 1.0);
+    if oom {
+        r -= OOM_PENALTY;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn higher_throughput_higher_utility() {
+        let u1 = utility(10.0, 50.0, 600.0, 2);
+        let u2 = utility(20.0, 50.0, 600.0, 2);
+        assert!(u2 > u1);
+    }
+
+    #[test]
+    fn lower_latency_higher_utility() {
+        let u_slow = utility(10.0, 250.0, 600.0, 2);
+        let u_fast = utility(10.0, 50.0, 600.0, 2);
+        assert!(u_fast > u_slow);
+    }
+
+    #[test]
+    fn ratio_clamped_to_one() {
+        // Latency beyond the budget doesn't push U below ln(T) — the
+        // violation penalty handles that regime.
+        let at_budget = utility(10.0, 300.0, 600.0, 2);
+        let over = utility(10.0, 900.0, 600.0, 2);
+        assert_eq!(at_budget, over);
+        assert!((over - 10f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_instances_shrink_budget() {
+        // Same latency, more instances ⇒ tighter per-instance budget ⇒
+        // larger ratio ⇒ lower utility (concurrency must EARN its keep via
+        // throughput).
+        let u2 = utility(10.0, 50.0, 600.0, 2);
+        let u4 = utility(10.0, 50.0, 600.0, 4);
+        assert!(u4 < u2);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_neg_infinity() {
+        assert_eq!(utility(0.0, 10.0, 100.0, 1), f64::NEG_INFINITY);
+        assert_eq!(utility(10.0, 0.0, 100.0, 1), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn reward_penalizes_violations_and_oom() {
+        let base = reward(2.0, 0.0, false);
+        assert_eq!(base, 2.0);
+        assert!(reward(2.0, 0.5, false) < base);
+        assert!(reward(2.0, 0.0, true) < base);
+        assert_eq!(reward(2.0, 0.5, false), 2.0 - 0.5 * VIOLATION_PENALTY);
+        assert_eq!(reward(f64::NEG_INFINITY, 0.0, false), -OOM_PENALTY);
+    }
+}

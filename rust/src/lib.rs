@@ -1,0 +1,47 @@
+//! # BCEdge — SLO-aware DNN inference serving with adaptive batching and
+//! concurrent model instances on edge platforms.
+//!
+//! Reproduction of Zhang et al., *"BCEdge: SLO-Aware DNN Inference Services
+//! with Adaptive Batching on Edge Platforms"* (2023). The crate is the
+//! Layer-3 rust coordinator of a three-layer rust + JAX + Pallas stack:
+//! JAX/Pallas author the model zoo at build time (`python/compile/`), AOT
+//! lowering emits HLO-text artifacts, and this crate loads and executes them
+//! through the PJRT C API (`runtime`) while owning the entire serving
+//! control plane:
+//!
+//! * [`workload`] — request model, Poisson arrivals, the Table-IV zoo;
+//! * [`coordinator`] — per-model SLO-priority queues, dynamic batching
+//!   (paper Fig. 3), concurrent instances (Fig. 4), the scheduling slot of
+//!   Eq. (1), the utility of Eq. (3), and the serving engine;
+//! * [`rl`] — discrete Soft Actor-Critic scheduler (Eqs. 5–12) plus the
+//!   PPO / DDQN / actor-critic / genetic-algorithm baselines of §V-B;
+//! * [`predictor`] — the SLO-aware NN interference predictor (§IV-F) and
+//!   its linear-regression baseline;
+//! * [`platform`] — calibrated edge-platform model (Xavier NX / TX2 / Nano)
+//!   with memory accounting and ground-truth interference;
+//! * [`runtime`] — PJRT execution of the AOT artifacts + a virtual-time
+//!   simulation backend behind one trait;
+//! * [`profiler`], [`metrics`] — §IV-E performance profiler and experiment
+//!   instrumentation;
+//! * [`nn`], [`util`] — from-scratch substrates (tensor/MLP/Adam, RNG,
+//!   JSON, CLI, stats, clocks, thread pool, property testing): the offline
+//!   build environment provides no third-party crates beyond `xla`.
+//!
+//! See `DESIGN.md` for the system inventory and per-figure experiment
+//! index, and `EXPERIMENTS.md` for measured results.
+
+pub mod util;
+pub mod nn;
+pub mod rl;
+pub mod platform;
+pub mod workload;
+pub mod runtime;
+pub mod coordinator;
+pub mod predictor;
+pub mod profiler;
+pub mod metrics;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,232 @@
+//! `bcedge` — launcher CLI for the BCEdge serving framework.
+//!
+//! Subcommands:
+//!   serve   — serve Poisson traffic (sim or real PJRT backend)
+//!   train   — offline SAC training on the platform simulator
+//!   sweep   — Fig. 1 style (batch × concurrency) sweep on the simulator
+//!   info    — print zoo / artifact / platform information
+//!
+//! Examples:
+//!   bcedge serve --backend sim --rps 30 --seconds 300 --scheduler sac
+//!   bcedge serve --backend real --rps 30 --seconds 30
+//!   bcedge train --episodes 100 --out results/sac_policy.json
+//!   bcedge info
+
+use bcedge::coordinator::baselines::{self, DeepRtScheduler, FixedScheduler};
+use bcedge::coordinator::sac_sched::{self, SchedEnv};
+use bcedge::coordinator::{Engine, EngineConfig, Scheduler, STATE_DIM};
+use bcedge::platform::{PlatformSim, PlatformSpec};
+use bcedge::rl::env::{train_episodes, Env};
+use bcedge::rl::sac::{DiscreteSac, SacConfig};
+use bcedge::rl::ActionSpace;
+use bcedge::runtime::{PjrtRuntime, RealDispatcher, SimDispatcher};
+use bcedge::util::cli::Args;
+use bcedge::util::rng::Pcg32;
+use bcedge::util::time::VirtualClock;
+use bcedge::workload::models::{ModelId, ModelSpec};
+use bcedge::workload::PoissonGenerator;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["no-predictor", "greedy"])
+        .map_err(anyhow::Error::msg)?;
+    match args.positional().first().map(String::as_str) {
+        Some("serve") => serve(&args),
+        Some("train") => train(&args),
+        Some("sweep") => sweep(&args),
+        Some("info") => info(&args),
+        _ => {
+            eprintln!("usage: bcedge <serve|train|sweep|info> [options]");
+            eprintln!("  serve --backend sim|real --rps N --seconds N \\");
+            eprintln!("        --scheduler sac|tac|deeprt|fixed [--policy F] [--no-predictor]");
+            eprintln!("  train --episodes N --rps N --platform nx|tx2|nano --out F");
+            eprintln!("  sweep --model yolo");
+            eprintln!("  info  [--artifacts DIR]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn make_scheduler(name: &str, space: &ActionSpace, rng: &mut Pcg32,
+                  policy: Option<&str>, greedy: bool)
+                  -> anyhow::Result<Box<dyn Scheduler>> {
+    Ok(match name {
+        "sac" => {
+            let mut s = sac_sched::sac(space.clone(), rng);
+            if let Some(path) = policy {
+                let text = std::fs::read_to_string(path)?;
+                let v = bcedge::util::json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                s.agent.load_policy(&v).map_err(anyhow::Error::msg)?;
+            }
+            s.set_greedy(greedy);
+            Box::new(s)
+        }
+        "tac" => Box::new(baselines::tac(space.clone(), rng)),
+        "ddqn" => Box::new(baselines::ddqn(space.clone(), rng)),
+        "ppo" => Box::new(baselines::ppo(space.clone(), rng)),
+        "deeprt" => Box::new(DeepRtScheduler::default()),
+        "fixed" => Box::new(FixedScheduler { batch: 4, m_c: 2 }),
+        other => anyhow::bail!("unknown scheduler {other}"),
+    })
+}
+
+fn platform_of(args: &Args) -> PlatformSpec {
+    match args.get_or("platform", "nx") {
+        "nano" => PlatformSpec::jetson_nano(),
+        "tx2" => PlatformSpec::jetson_tx2(),
+        _ => PlatformSpec::xavier_nx(),
+    }
+}
+
+fn report(m: &bcedge::metrics::Metrics, horizon_ms: f64) {
+    println!("{:<6} {:>10} {:>12} {:>12} {:>10}",
+             "model", "completed", "mean(ms)", "SLO(ms)", "viol%");
+    for model in ModelId::all() {
+        let spec = ModelSpec::get(model);
+        let n = m.outcomes().iter().filter(|o| o.model == model).count();
+        if n == 0 {
+            continue;
+        }
+        println!("{:<6} {:>10} {:>12.2} {:>12.0} {:>9.1}%",
+                 spec.name, n, m.mean_latency_ms(Some(model)), spec.slo_ms,
+                 100.0 * m.violation_rate_for(model));
+    }
+    println!("aggregate: {:.1} rps | mean {:.2} ms | p99 {:.2} ms | viol {:.2}% | utility {:.3}",
+             m.throughput_rps(horizon_ms), m.mean_latency_ms(None),
+             m.latency_percentile(0.99), 100.0 * m.violation_rate(),
+             m.mean_utility(None));
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let rps: f64 = args.get_parse("rps", 30.0).map_err(anyhow::Error::msg)?;
+    let seconds: f64 =
+        args.get_parse("seconds", 60.0).map_err(anyhow::Error::msg)?;
+    let backend = args.get_or("backend", "sim");
+    let sched = args.get_or("scheduler", "sac").to_string();
+    let horizon_ms = seconds * 1e3;
+    let space = ActionSpace::standard();
+    let mut rng = Pcg32::seeded(
+        args.get_parse("seed", 42u64).map_err(anyhow::Error::msg)?,
+    );
+    let mut scheduler = make_scheduler(&sched, &space, &mut rng,
+                                       args.get("policy"), args.flag("greedy"))?;
+    let cfg = EngineConfig {
+        action_space: space,
+        use_predictor: !args.flag("no-predictor"),
+        pad_to_artifacts: backend == "real",
+        max_total_instances: platform_of(args).max_instances,
+        learn: true,
+        ..Default::default()
+    };
+    println!("bcedge serve — backend {backend}, scheduler {}, {rps} rps, {seconds}s",
+             scheduler.name());
+    let mut gen = PoissonGenerator::new(rps, 7);
+    let reqs = gen.generate_horizon(horizon_ms);
+    match backend {
+        "sim" => {
+            let clock = VirtualClock::new();
+            let sim = PlatformSim::new(platform_of(args));
+            let mut engine =
+                Engine::new(SimDispatcher::new(sim, clock), cfg);
+            engine.submit(reqs);
+            let slots = engine.run(scheduler.as_mut(), horizon_ms);
+            println!("{slots} scheduling slots (virtual time)");
+            report(&engine.metrics, horizon_ms);
+        }
+        "real" => {
+            let dir = args.get_or("artifacts", "artifacts");
+            let runtime = Arc::new(PjrtRuntime::load(dir)?);
+            let threads: usize =
+                args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
+            let mut dispatcher = RealDispatcher::new(runtime.clone(), threads);
+            dispatcher.warm_all(&runtime.index().batch_sizes.clone())?;
+            dispatcher.reset_origin();
+            let mut engine = Engine::new(dispatcher, cfg);
+            engine.submit(reqs);
+            let slots = engine.run(scheduler.as_mut(), horizon_ms);
+            println!("{slots} scheduling slots (wall time)");
+            report(&engine.metrics, horizon_ms);
+        }
+        other => anyhow::bail!("unknown backend {other}"),
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    let episodes: usize =
+        args.get_parse("episodes", 100).map_err(anyhow::Error::msg)?;
+    let rps: f64 = args.get_parse("rps", 30.0).map_err(anyhow::Error::msg)?;
+    let out = args.get_or("out", "results/sac_policy.json");
+    let space = ActionSpace::standard();
+    let mut env = SchedEnv::new(space.clone(), rps, platform_of(args));
+    env.episode_len = 96;
+    let mut rng = Pcg32::seeded(0x7EA1);
+    let cfg = SacConfig { batch_size: 128, warmup: 256, ..Default::default() };
+    let mut agent = DiscreteSac::new(STATE_DIM, env.n_actions(), cfg, &mut rng);
+    let hist = train_episodes(&mut env, &mut agent, episodes, 96, &mut rng);
+    for (i, (ret, loss)) in hist.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == hist.len() {
+            println!("episode {i:>4}: return {ret:>9.2} loss {loss:>9.4}");
+        }
+    }
+    if let Some(parent) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(out, agent.policy_json().to_string())?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn sweep(args: &Args) -> anyhow::Result<()> {
+    use bcedge::runtime::executor::{BatchJob, Dispatcher};
+    let model = ModelId::from_name(args.get_or("model", "yolo"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    println!("(batch × concurrency) sweep for {} on sim {}",
+             model.name(), platform_of(args).name);
+    println!("{:>5} {:>5} {:>12} {:>12}", "b", "m_c", "rps", "latency(ms)");
+    for b in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        for c in [1usize, 2, 4, 8] {
+            let clock = VirtualClock::new();
+            let mut d = SimDispatcher::new(
+                PlatformSim::new(platform_of(args)), clock);
+            let jobs: Vec<BatchJob> = (0..c)
+                .map(|_| BatchJob { model, batch: b, n_real: b })
+                .collect();
+            let res = d.run_group(&jobs);
+            if res.iter().any(|r| r.is_err()) {
+                println!("{b:>5} {c:>5} {:>12} {:>12}", "OOM", "OOM");
+                continue;
+            }
+            let span = res.iter().map(|r| *r.as_ref().unwrap())
+                .fold(0.0f64, f64::max);
+            println!("{b:>5} {c:>5} {:>12.1} {:>12.2}",
+                     (b * c) as f64 / (span / 1e3), span);
+        }
+    }
+    Ok(())
+}
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    println!("bcedge {} — SLO-aware DNN inference serving", bcedge::version());
+    println!("\nmodel zoo (paper Table IV):");
+    println!("{:<6} {:<16} {:>10} {:>12}", "name", "paper", "SLO(ms)",
+             "weights(MB)");
+    for spec in ModelSpec::all() {
+        println!("{:<6} {:<16} {:>10.0} {:>12.0}", spec.name,
+                 spec.paper_name, spec.slo_ms, spec.memory.weights_mb);
+    }
+    println!("\nplatforms (paper Table V):");
+    for p in PlatformSpec::scalability_set() {
+        println!("  {:<12} compute ×{:.3}, {} MB, {} cores, ≤{} instances",
+                 p.name, p.compute_scale, p.memory_mb, p.cuda_cores,
+                 p.max_instances);
+    }
+    let dir = args.get_or("artifacts", "artifacts");
+    match bcedge::runtime::ArtifactIndex::load(dir) {
+        Ok(idx) => println!("\nartifacts: {} entries in {dir}/ (batches {:?})",
+                            idx.len(), idx.batch_sizes),
+        Err(e) => println!("\nartifacts: not available ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}

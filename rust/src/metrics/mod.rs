@@ -1,0 +1,252 @@
+//! Experiment instrumentation: per-request outcomes, per-model
+//! throughput/latency timelines (Figs. 8/9), SLO-violation accounting
+//! (Figs. 14/15), utility tracking (Figs. 7/11), CSV export.
+
+use crate::util::stats::{percentile, Summary};
+use crate::workload::models::{ModelId, N_MODELS};
+
+/// Terminal record for one request.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub model: ModelId,
+    pub arrival_ms: f64,
+    pub completed_ms: f64,
+    /// End-to-end latency per Eq. (2): transmission + serialization +
+    /// queueing + inference (+ result return).
+    pub e2e_ms: f64,
+    pub slo_ms: f64,
+    /// SLO violated (late completion or drop).
+    pub violated: bool,
+    /// Dropped without execution (OOM / dead on arrival).
+    pub dropped: bool,
+}
+
+/// Aggregated serving metrics for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    outcomes: Vec<RequestOutcome>,
+    utility_samples: Vec<(f64, ModelId, f64)>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record(&mut self, o: RequestOutcome) {
+        self.outcomes.push(o);
+    }
+
+    pub fn record_utility(&mut self, t_ms: f64, model: ModelId, u: f64) {
+        if u.is_finite() {
+            self.utility_samples.push((t_ms, model, u));
+        }
+    }
+
+    pub fn outcomes(&self) -> &[RequestOutcome] {
+        &self.outcomes
+    }
+
+    pub fn completed(&self) -> usize {
+        self.outcomes.iter().filter(|o| !o.dropped).count()
+    }
+
+    /// Overall SLO violation rate (violations + drops) / total.
+    pub fn violation_rate(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().filter(|o| o.violated).count() as f64
+            / self.outcomes.len() as f64
+    }
+
+    /// Violation rate per model.
+    pub fn violation_rate_for(&self, model: ModelId) -> f64 {
+        let of_model: Vec<_> =
+            self.outcomes.iter().filter(|o| o.model == model).collect();
+        if of_model.is_empty() {
+            return 0.0;
+        }
+        of_model.iter().filter(|o| o.violated).count() as f64
+            / of_model.len() as f64
+    }
+
+    /// Mean end-to-end latency, optionally per model.
+    pub fn mean_latency_ms(&self, model: Option<ModelId>) -> f64 {
+        let mut s = Summary::new();
+        for o in &self.outcomes {
+            if !o.dropped && model.map(|m| m == o.model).unwrap_or(true) {
+                s.add(o.e2e_ms);
+            }
+        }
+        s.mean()
+    }
+
+    /// Latency percentile over completed requests.
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        let xs: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter(|o| !o.dropped)
+            .map(|o| o.e2e_ms)
+            .collect();
+        percentile(&xs, q)
+    }
+
+    /// Aggregate throughput over [0, horizon_ms], requests/s.
+    pub fn throughput_rps(&self, horizon_ms: f64) -> f64 {
+        assert!(horizon_ms > 0.0);
+        self.completed() as f64 / (horizon_ms / 1e3)
+    }
+
+    /// Mean utility, optionally per model (Figs. 7/11 bars).
+    pub fn mean_utility(&self, model: Option<ModelId>) -> f64 {
+        let mut s = Summary::new();
+        for &(_, m, u) in &self.utility_samples {
+            if model.map(|mm| mm == m).unwrap_or(true) {
+                s.add(u);
+            }
+        }
+        s.mean()
+    }
+
+    /// Per-second series of (completions, mean e2e latency) per model —
+    /// the Fig. 8 stacked-throughput / Fig. 9 latency timelines.
+    pub fn timeline(&self, bucket_s: f64, horizon_ms: f64)
+                    -> Vec<TimelineBucket> {
+        let n_buckets = (horizon_ms / 1e3 / bucket_s).ceil() as usize;
+        let mut buckets = vec![TimelineBucket::default(); n_buckets.max(1)];
+        for o in &self.outcomes {
+            if o.dropped {
+                continue;
+            }
+            let idx = ((o.completed_ms / 1e3 / bucket_s) as usize)
+                .min(buckets.len() - 1);
+            let b = &mut buckets[idx];
+            b.completed[o.model as usize] += 1;
+            b.latency_sum_ms[o.model as usize] += o.e2e_ms;
+        }
+        buckets
+    }
+
+    /// Per-window (bucketed) violation fractions — the Fig. 14 CDF input.
+    pub fn windowed_violation_rates(&self, window_s: f64, horizon_ms: f64)
+                                    -> Vec<f64> {
+        let n = (horizon_ms / 1e3 / window_s).ceil() as usize;
+        let mut total = vec![0u64; n.max(1)];
+        let mut bad = vec![0u64; n.max(1)];
+        for o in &self.outcomes {
+            let idx =
+                ((o.completed_ms / 1e3 / window_s) as usize).min(total.len() - 1);
+            total[idx] += 1;
+            if o.violated {
+                bad[idx] += 1;
+            }
+        }
+        total
+            .iter()
+            .zip(&bad)
+            .filter(|(t, _)| **t > 0)
+            .map(|(t, b)| *b as f64 / *t as f64)
+            .collect()
+    }
+}
+
+/// One timeline bucket (per-model completion count + latency sum).
+#[derive(Clone, Debug)]
+pub struct TimelineBucket {
+    pub completed: [u64; N_MODELS],
+    pub latency_sum_ms: [f64; N_MODELS],
+}
+
+impl Default for TimelineBucket {
+    fn default() -> Self {
+        TimelineBucket {
+            completed: [0; N_MODELS],
+            latency_sum_ms: [0.0; N_MODELS],
+        }
+    }
+}
+
+impl TimelineBucket {
+    pub fn mean_latency(&self, model: ModelId) -> f64 {
+        let c = self.completed[model as usize];
+        if c == 0 {
+            f64::NAN
+        } else {
+            self.latency_sum_ms[model as usize] / c as f64
+        }
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.completed.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(model: ModelId, completed_ms: f64, e2e: f64, slo: f64)
+               -> RequestOutcome {
+        RequestOutcome {
+            id: 0,
+            model,
+            arrival_ms: completed_ms - e2e,
+            completed_ms,
+            e2e_ms: e2e,
+            slo_ms: slo,
+            violated: e2e > slo,
+            dropped: false,
+        }
+    }
+
+    #[test]
+    fn violation_rate_counts_late() {
+        let mut m = Metrics::new();
+        m.record(outcome(ModelId::Res, 100.0, 30.0, 58.0));
+        m.record(outcome(ModelId::Res, 200.0, 90.0, 58.0));
+        assert_eq!(m.violation_rate(), 0.5);
+        assert_eq!(m.violation_rate_for(ModelId::Res), 0.5);
+        assert_eq!(m.violation_rate_for(ModelId::Mob), 0.0);
+    }
+
+    #[test]
+    fn timeline_buckets_by_completion() {
+        let mut m = Metrics::new();
+        m.record(outcome(ModelId::Res, 500.0, 10.0, 58.0));
+        m.record(outcome(ModelId::Res, 1500.0, 20.0, 58.0));
+        m.record(outcome(ModelId::Yolo, 1700.0, 40.0, 138.0));
+        let tl = m.timeline(1.0, 2000.0);
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].completed[ModelId::Res as usize], 1);
+        assert_eq!(tl[1].total_completed(), 2);
+        assert!((tl[1].mean_latency(ModelId::Yolo) - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_and_utility() {
+        let mut m = Metrics::new();
+        for i in 0..30 {
+            m.record(outcome(ModelId::Mob, i as f64 * 100.0, 10.0, 86.0));
+        }
+        assert!((m.throughput_rps(3000.0) - 10.0).abs() < 1e-9);
+        m.record_utility(0.0, ModelId::Mob, 2.0);
+        m.record_utility(1.0, ModelId::Mob, 4.0);
+        m.record_utility(1.0, ModelId::Res, 8.0);
+        assert!((m.mean_utility(Some(ModelId::Mob)) - 3.0).abs() < 1e-9);
+        assert!((m.mean_utility(None) - 14.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windowed_rates_skip_empty_windows() {
+        let mut m = Metrics::new();
+        m.record(outcome(ModelId::Res, 100.0, 100.0, 58.0)); // violated
+        m.record(outcome(ModelId::Res, 9_900.0, 10.0, 58.0));
+        let rates = m.windowed_violation_rates(1.0, 10_000.0);
+        assert_eq!(rates.len(), 2);
+        assert_eq!(rates[0], 1.0);
+        assert_eq!(rates[1], 0.0);
+    }
+}

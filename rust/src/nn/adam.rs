@@ -1,0 +1,154 @@
+//! Adam optimizer over an [`Mlp`]'s parameters — the paper trains "all
+//! networks using the Adam optimizer with a learning rate of 1e-3".
+
+use super::linear::LinearGrad;
+use super::mlp::Mlp;
+use super::tensor::Mat;
+
+/// Per-layer first/second moment state mirroring the MLP's shapes.
+#[derive(Clone)]
+struct Moments {
+    mw: Mat,
+    vw: Mat,
+    mb: Vec<f32>,
+    vb: Vec<f32>,
+}
+
+/// Adam with bias correction (Kingma & Ba 2015 defaults unless overridden).
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    state: Vec<Moments>,
+}
+
+impl Adam {
+    /// Paper settings: lr = 1e-3.
+    pub fn new(net: &Mlp, lr: f32) -> Self {
+        let state = net
+            .layers
+            .iter()
+            .map(|l| Moments {
+                mw: Mat::zeros(l.w.rows(), l.w.cols()),
+                vw: Mat::zeros(l.w.rows(), l.w.cols()),
+                mb: vec![0.0; l.b.len()],
+                vb: vec![0.0; l.b.len()],
+            })
+            .collect();
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, state }
+    }
+
+    /// Apply one descent step from per-layer grads.
+    pub fn step(&mut self, net: &mut Mlp, grads: &[LinearGrad]) {
+        assert_eq!(grads.len(), net.layers.len());
+        self.t += 1;
+        let t = self.t as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for ((layer, g), m) in
+            net.layers.iter_mut().zip(grads).zip(&mut self.state)
+        {
+            for i in 0..layer.w.data().len() {
+                let grad = g.dw.data()[i];
+                let mw = &mut m.mw.data_mut()[i];
+                *mw = self.beta1 * *mw + (1.0 - self.beta1) * grad;
+                let vw = &mut m.vw.data_mut()[i];
+                *vw = self.beta2 * *vw + (1.0 - self.beta2) * grad * grad;
+                let mhat = *mw / bc1;
+                let vhat = *vw / bc2;
+                layer.w.data_mut()[i] -=
+                    self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+            for i in 0..layer.b.len() {
+                let grad = g.db[i];
+                m.mb[i] = self.beta1 * m.mb[i] + (1.0 - self.beta1) * grad;
+                m.vb[i] =
+                    self.beta2 * m.vb[i] + (1.0 - self.beta2) * grad * grad;
+                let mhat = m.mb[i] / bc1;
+                let vhat = m.vb[i] / bc2;
+                layer.b[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+/// Scalar Adam for single parameters (the SAC temperature log α).
+#[derive(Clone, Debug)]
+pub struct ScalarAdam {
+    pub lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: u64,
+    m: f32,
+    v: f32,
+}
+
+impl ScalarAdam {
+    pub fn new(lr: f32) -> Self {
+        ScalarAdam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: 0.0, v: 0.0 }
+    }
+
+    /// One step; returns the parameter delta to apply.
+    pub fn step(&mut self, grad: f32) -> f32 {
+        self.t += 1;
+        self.m = self.beta1 * self.m + (1.0 - self.beta1) * grad;
+        self.v = self.beta2 * self.v + (1.0 - self.beta2) * grad * grad;
+        let mhat = self.m / (1.0 - self.beta1.powf(self.t as f32));
+        let vhat = self.v / (1.0 - self.beta2.powf(self.t as f32));
+        -self.lr * mhat / (vhat.sqrt() + self.eps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tensor::Mat;
+    use crate::util::rng::Pcg32;
+
+    /// Adam must drive a small regression problem to near-zero loss.
+    #[test]
+    fn fits_linear_function() {
+        let mut rng = Pcg32::seeded(31);
+        let mut net = Mlp::new(&[2, 16, 1], &mut rng);
+        let mut opt = Adam::new(&net, 1e-2);
+        let xs: Vec<[f32; 2]> =
+            (0..64).map(|_| [rng.f32() * 2.0 - 1.0, rng.f32() * 2.0 - 1.0]).collect();
+        let target = |x: &[f32; 2]| 3.0 * x[0] - 2.0 * x[1] + 0.5;
+        let mut last = f32::INFINITY;
+        for epoch in 0..400 {
+            let x = Mat::from_vec(64, 2, xs.iter().flatten().cloned().collect());
+            let y: Vec<f32> = xs.iter().map(target).collect();
+            let cache = net.forward_cache(&x);
+            let out = cache.output();
+            // MSE gradient: 2 (ŷ − y) / n
+            let mut d = Mat::zeros(64, 1);
+            let mut loss = 0.0;
+            for i in 0..64 {
+                let e = out.at(i, 0) - y[i];
+                loss += e * e / 64.0;
+                *d.at_mut(i, 0) = 2.0 * e / 64.0;
+            }
+            let grads = net.backward(&cache, &d);
+            opt.step(&mut net, &grads);
+            if epoch % 100 == 0 {
+                last = loss;
+            }
+        }
+        assert!(last < 0.05, "loss did not converge: {last}");
+    }
+
+    #[test]
+    fn scalar_adam_descends() {
+        // Minimize f(x) = (x − 3)² from x = 0.
+        let mut x = 0.0f32;
+        let mut opt = ScalarAdam::new(0.05);
+        for _ in 0..2000 {
+            let grad = 2.0 * (x - 3.0);
+            x += opt.step(grad);
+        }
+        assert!((x - 3.0).abs() < 0.05, "x = {x}");
+    }
+}

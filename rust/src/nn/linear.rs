@@ -1,0 +1,140 @@
+//! Fully-connected layer with explicit forward/backward.
+
+use super::tensor::Mat;
+use crate::util::rng::Pcg32;
+
+/// y = x @ w + b, with cached-input backward.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    /// (in_dim, out_dim)
+    pub w: Mat,
+    /// (out_dim,)
+    pub b: Vec<f32>,
+}
+
+/// Gradients for one layer, same shapes as the parameters.
+#[derive(Clone, Debug)]
+pub struct LinearGrad {
+    pub dw: Mat,
+    pub db: Vec<f32>,
+}
+
+impl Linear {
+    pub fn new(in_dim: usize, out_dim: usize, rng: &mut Pcg32) -> Self {
+        Linear { w: Mat::kaiming(in_dim, out_dim, rng), b: vec![0.0; out_dim] }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Forward: x (batch, in) → (batch, out).
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut y = x.matmul(&self.w);
+        y.add_row_broadcast(&self.b);
+        y
+    }
+
+    /// Backward given the layer input and upstream gradient.
+    /// Returns (grad wrt input, parameter grads).
+    pub fn backward(&self, x: &Mat, dy: &Mat) -> (Mat, LinearGrad) {
+        let dw = x.transpose().matmul(dy);
+        let db = dy.col_sums();
+        let dx = dy.matmul(&self.w.transpose());
+        (dx, LinearGrad { dw, db })
+    }
+
+    /// Polyak averaging toward `src`: θ ← τ·θ_src + (1−τ)·θ (SAC target nets).
+    pub fn soft_update_from(&mut self, src: &Linear, tau: f32) {
+        for (t, &s) in self.w.data_mut().iter_mut().zip(src.w.data()) {
+            *t = tau * s + (1.0 - tau) * *t;
+        }
+        for (t, &s) in self.b.iter_mut().zip(&src.b) {
+            *t = tau * s + (1.0 - tau) * *t;
+        }
+    }
+
+    /// Number of scalar parameters.
+    pub fn param_count(&self) -> usize {
+        self.w.rows() * self.w.cols() + self.b.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_known_values() {
+        let mut l = Linear::new(2, 2, &mut Pcg32::seeded(0));
+        l.w = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        l.b = vec![0.5, -0.5];
+        let y = l.forward(&Mat::from_vec(1, 2, vec![1., 1.]));
+        assert_eq!(y.data(), &[4.5, 5.5]);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Pcg32::seeded(9);
+        let l = Linear::new(4, 3, &mut rng);
+        let x = Mat::kaiming(5, 4, &mut rng);
+        // Loss = sum(y) so dy = ones; check dW numerically.
+        let loss = |layer: &Linear| -> f32 {
+            layer.forward(&x).data().iter().sum()
+        };
+        let dy = Mat::from_vec(5, 3, vec![1.0; 15]);
+        let (_, grad) = l.backward(&x, &dy);
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, 11] {
+            let mut lp = l.clone();
+            lp.w.data_mut()[idx] += eps;
+            let mut lm = l.clone();
+            lm.w.data_mut()[idx] -= eps;
+            let num = (loss(&lp) - loss(&lm)) / (2.0 * eps);
+            assert!(
+                (num - grad.dw.data()[idx]).abs() < 1e-2,
+                "dW[{idx}]: numeric {num} vs analytic {}",
+                grad.dw.data()[idx]
+            );
+        }
+        // bias grad: column sums of dy = batch size.
+        assert!(grad.db.iter().all(|&g| (g - 5.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn input_gradient_matches_finite_differences() {
+        let mut rng = Pcg32::seeded(10);
+        let l = Linear::new(3, 2, &mut rng);
+        let x = Mat::kaiming(2, 3, &mut rng);
+        let dy = Mat::from_vec(2, 2, vec![1.0; 4]);
+        let (dx, _) = l.backward(&x, &dy);
+        let eps = 1e-3f32;
+        for idx in 0..6 {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let f = |m: &Mat| l.forward(m).data().iter().sum::<f32>();
+            let num = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((num - dx.data()[idx]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn soft_update_moves_toward_source() {
+        let mut rng = Pcg32::seeded(11);
+        let src = Linear::new(3, 3, &mut rng);
+        let mut tgt = Linear::new(3, 3, &mut rng);
+        let before = tgt.w.data()[0];
+        tgt.soft_update_from(&src, 0.5);
+        let expect = 0.5 * src.w.data()[0] + 0.5 * before;
+        assert!((tgt.w.data()[0] - expect).abs() < 1e-6);
+        // tau = 1 copies exactly
+        tgt.soft_update_from(&src, 1.0);
+        assert_eq!(tgt.w.data(), src.w.data());
+    }
+}

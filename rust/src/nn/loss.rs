@@ -1,0 +1,79 @@
+//! Loss functions and their gradients for the control-plane networks.
+
+use super::tensor::Mat;
+
+/// Mean-squared error over all elements; returns (loss, d_loss/d_pred).
+pub fn mse(pred: &Mat, target: &Mat) -> (f32, Mat) {
+    assert_eq!((pred.rows(), pred.cols()), (target.rows(), target.cols()));
+    let n = (pred.rows() * pred.cols()) as f32;
+    let mut grad = Mat::zeros(pred.rows(), pred.cols());
+    let mut loss = 0.0;
+    for i in 0..pred.data().len() {
+        let e = pred.data()[i] - target.data()[i];
+        loss += e * e;
+        grad.data_mut()[i] = 2.0 * e / n;
+    }
+    (loss / n, grad)
+}
+
+/// Huber (smooth-L1) loss, the standard stabilizer for Q-regression in
+/// DDQN; returns (loss, gradient).
+pub fn huber(pred: &Mat, target: &Mat, delta: f32) -> (f32, Mat) {
+    assert_eq!((pred.rows(), pred.cols()), (target.rows(), target.cols()));
+    let n = (pred.rows() * pred.cols()) as f32;
+    let mut grad = Mat::zeros(pred.rows(), pred.cols());
+    let mut loss = 0.0;
+    for i in 0..pred.data().len() {
+        let e = pred.data()[i] - target.data()[i];
+        if e.abs() <= delta {
+            loss += 0.5 * e * e;
+            grad.data_mut()[i] = e / n;
+        } else {
+            loss += delta * (e.abs() - 0.5 * delta);
+            grad.data_mut()[i] = delta * e.signum() / n;
+        }
+    }
+    (loss / n, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_zero_at_match() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let (l, g) = mse(&a, &a);
+        assert_eq!(l, 0.0);
+        assert!(g.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn mse_gradient_finite_difference() {
+        let p = Mat::from_vec(1, 3, vec![1.0, -2.0, 0.5]);
+        let t = Mat::from_vec(1, 3, vec![0.0, 1.0, 0.5]);
+        let (_, g) = mse(&p, &t);
+        let eps = 1e-3;
+        for i in 0..3 {
+            let mut pp = p.clone();
+            pp.data_mut()[i] += eps;
+            let mut pm = p.clone();
+            pm.data_mut()[i] -= eps;
+            let num = (mse(&pp, &t).0 - mse(&pm, &t).0) / (2.0 * eps);
+            assert!((num - g.data()[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn huber_is_quadratic_then_linear() {
+        let t = Mat::from_vec(1, 1, vec![0.0]);
+        let small = Mat::from_vec(1, 1, vec![0.5]);
+        let large = Mat::from_vec(1, 1, vec![10.0]);
+        let (ls, gs) = huber(&small, &t, 1.0);
+        let (ll, gl) = huber(&large, &t, 1.0);
+        assert!((ls - 0.125).abs() < 1e-6);
+        assert!((gs.data()[0] - 0.5).abs() < 1e-6);
+        assert!((ll - 9.5).abs() < 1e-6);
+        assert!((gl.data()[0] - 1.0).abs() < 1e-6); // clipped gradient
+    }
+}

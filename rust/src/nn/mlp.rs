@@ -1,0 +1,259 @@
+//! Multi-layer perceptron with ReLU hidden activations and explicit
+//! backprop — the network shape the paper trains everywhere: "each network
+//! has a two-layer ReLU neural network with 128 and 64 hidden units"
+//! (§V-A Training Details).
+
+use super::linear::{Linear, LinearGrad};
+use super::tensor::Mat;
+use crate::util::rng::Pcg32;
+
+/// MLP: linear → ReLU → … → linear (identity output head).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+}
+
+/// Cached per-layer inputs (pre-layer activations) for backward.
+pub struct ForwardCache {
+    /// inputs[i] is the input fed to layers[i]; plus the final output last.
+    inputs: Vec<Mat>,
+    output: Mat,
+}
+
+impl ForwardCache {
+    pub fn output(&self) -> &Mat {
+        &self.output
+    }
+}
+
+/// Gradients for every layer.
+pub type MlpGrad = Vec<LinearGrad>;
+
+impl Mlp {
+    /// Build from layer sizes, e.g. `[in, 128, 64, out]` for the paper's
+    /// two-hidden-layer nets.
+    pub fn new(sizes: &[usize], rng: &mut Pcg32) -> Self {
+        assert!(sizes.len() >= 2, "need at least in/out sizes");
+        let layers = sizes
+            .windows(2)
+            .map(|w| Linear::new(w[0], w[1], rng))
+            .collect();
+        Mlp { layers }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().unwrap().in_dim()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim()
+    }
+
+    /// Plain forward pass.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut h = x.clone();
+        let last = self.layers.len() - 1;
+        for (i, layer) in self.layers.iter().enumerate() {
+            h = layer.forward(&h);
+            if i != last {
+                h = h.map(|v| v.max(0.0));
+            }
+        }
+        h
+    }
+
+    /// Forward pass retaining per-layer inputs for backward.
+    pub fn forward_cache(&self, x: &Mat) -> ForwardCache {
+        let mut inputs = Vec::with_capacity(self.layers.len());
+        let mut h = x.clone();
+        let last = self.layers.len() - 1;
+        for (i, layer) in self.layers.iter().enumerate() {
+            inputs.push(h.clone());
+            h = layer.forward(&h);
+            if i != last {
+                h = h.map(|v| v.max(0.0));
+            }
+        }
+        ForwardCache { inputs, output: h }
+    }
+
+    /// Backprop `d_out` (gradient w.r.t. the network output) through the
+    /// cached pass; returns per-layer parameter grads.
+    pub fn backward(&self, cache: &ForwardCache, d_out: &Mat) -> MlpGrad {
+        let last = self.layers.len() - 1;
+        let mut grads: Vec<Option<LinearGrad>> = vec![None; self.layers.len()];
+        let mut dy = d_out.clone();
+        for i in (0..self.layers.len()).rev() {
+            if i != last {
+                // Gradient through the ReLU that followed layer i:
+                // zero where the *post-layer* activation was clipped. That
+                // activation is exactly inputs[i+1].
+                let act = &cache.inputs[i + 1];
+                assert_eq!((act.rows(), act.cols()), (dy.rows(), dy.cols()));
+                let mask = act.map(|v| if v > 0.0 { 1.0 } else { 0.0 });
+                dy = dy.hadamard(&mask);
+            }
+            let (dx, g) = self.layers[i].backward(&cache.inputs[i], &dy);
+            grads[i] = Some(g);
+            dy = dx;
+        }
+        grads.into_iter().map(|g| g.unwrap()).collect()
+    }
+
+    /// Polyak-average every layer toward `src` (SAC target networks).
+    pub fn soft_update_from(&mut self, src: &Mlp, tau: f32) {
+        assert_eq!(self.layers.len(), src.layers.len());
+        for (t, s) in self.layers.iter_mut().zip(&src.layers) {
+            t.soft_update_from(s, tau);
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Serialize weights to JSON (policy checkpoints: the paper trains
+    /// offline and deploys the trained scheduler online).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, obj};
+        obj(vec![(
+            "layers",
+            arr(self.layers.iter().map(|l| {
+                obj(vec![
+                    ("in", num(l.w.rows() as f64)),
+                    ("out", num(l.w.cols() as f64)),
+                    ("w", arr(l.w.data().iter().map(|&x| num(x as f64)))),
+                    ("b", arr(l.b.iter().map(|&x| num(x as f64)))),
+                ])
+            })),
+        )])
+    }
+
+    /// Deserialize from [`Mlp::to_json`] output.
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Mlp, String> {
+        use crate::util::json::Json;
+        let layers_json =
+            v.get("layers").and_then(Json::as_arr).ok_or("missing layers")?;
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for lj in layers_json {
+            let rows = lj.get("in").and_then(Json::as_usize).ok_or("in")?;
+            let cols = lj.get("out").and_then(Json::as_usize).ok_or("out")?;
+            let w: Vec<f32> = lj
+                .get("w")
+                .and_then(Json::as_arr)
+                .ok_or("w")?
+                .iter()
+                .filter_map(|x| x.as_f64().map(|f| f as f32))
+                .collect();
+            let b: Vec<f32> = lj
+                .get("b")
+                .and_then(Json::as_arr)
+                .ok_or("b")?
+                .iter()
+                .filter_map(|x| x.as_f64().map(|f| f as f32))
+                .collect();
+            if w.len() != rows * cols || b.len() != cols {
+                return Err("layer shape mismatch".into());
+            }
+            layers.push(Linear { w: Mat::from_vec(rows, cols, w), b });
+        }
+        if layers.is_empty() {
+            return Err("empty network".into());
+        }
+        Ok(Mlp { layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn num_grad(mlp: &Mlp, x: &Mat, layer: usize, idx: usize, eps: f32) -> f32 {
+        // Loss = sum of outputs.
+        let mut p = mlp.clone();
+        p.layers[layer].w.data_mut()[idx] += eps;
+        let mut m = mlp.clone();
+        m.layers[layer].w.data_mut()[idx] -= eps;
+        let f = |net: &Mlp| net.forward(x).data().iter().sum::<f32>();
+        (f(&p) - f(&m)) / (2.0 * eps)
+    }
+
+    #[test]
+    fn gradient_check_all_layers() {
+        let mut rng = Pcg32::seeded(21);
+        let mlp = Mlp::new(&[5, 8, 6, 3], &mut rng);
+        let x = Mat::kaiming(4, 5, &mut rng);
+        let cache = mlp.forward_cache(&x);
+        let ones = Mat::from_vec(4, 3, vec![1.0; 12]);
+        let grads = mlp.backward(&cache, &ones);
+        for layer in 0..3 {
+            for idx in [0usize, 3, 7] {
+                if idx >= grads[layer].dw.data().len() {
+                    continue;
+                }
+                let num = num_grad(&mlp, &x, layer, idx, 1e-2);
+                let ana = grads[layer].dw.data()[idx];
+                assert!(
+                    (num - ana).abs() < 3e-2 + 0.05 * ana.abs(),
+                    "layer {layer} idx {idx}: numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_cache_output_matches_forward() {
+        let mut rng = Pcg32::seeded(22);
+        let mlp = Mlp::new(&[4, 128, 64, 2], &mut rng);
+        let x = Mat::kaiming(3, 4, &mut rng);
+        assert_eq!(mlp.forward(&x), *mlp.forward_cache(&x).output());
+    }
+
+    #[test]
+    fn paper_network_shape() {
+        let mut rng = Pcg32::seeded(23);
+        let mlp = Mlp::new(&[10, 128, 64, 24], &mut rng);
+        assert_eq!(mlp.in_dim(), 10);
+        assert_eq!(mlp.out_dim(), 24);
+        assert_eq!(
+            mlp.param_count(),
+            10 * 128 + 128 + 128 * 64 + 64 + 64 * 24 + 24
+        );
+    }
+
+    #[test]
+    fn json_round_trip_preserves_outputs() {
+        let mut rng = Pcg32::seeded(25);
+        let mlp = Mlp::new(&[4, 8, 2], &mut rng);
+        let text = mlp.to_json().to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let back = Mlp::from_json(&parsed).unwrap();
+        let x = Mat::kaiming(3, 4, &mut rng);
+        let a = mlp.forward(&x);
+        let b = back.forward(&x);
+        for (p, q) in a.data().iter().zip(b.data()) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        let v = crate::util::json::parse("{}").unwrap();
+        assert!(Mlp::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn relu_kills_gradient_for_dead_units() {
+        let mut rng = Pcg32::seeded(24);
+        let mut mlp = Mlp::new(&[2, 2, 1], &mut rng);
+        // Force hidden unit 0 dead (large negative bias).
+        mlp.layers[0].b = vec![-1e6, 0.0];
+        let x = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        let cache = mlp.forward_cache(&x);
+        let grads = mlp.backward(&cache, &Mat::from_vec(1, 1, vec![1.0]));
+        // Weights into the dead unit get zero gradient.
+        assert_eq!(grads[0].dw.at(0, 0), 0.0);
+        assert_eq!(grads[0].dw.at(1, 0), 0.0);
+        assert_eq!(grads[0].db[0], 0.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! From-scratch neural-network substrate for the online components.
+//!
+//! BCEdge runs TWO kinds of neural networks:
+//!
+//! 1. the served DNN zoo — authored in JAX/Pallas, AOT-compiled, executed
+//!    through PJRT (`crate::runtime`), never touched here;
+//! 2. the *control-plane* networks — the discrete-SAC scheduler's
+//!    actor/critics (paper Eqs. 5–12) and the SLO-aware interference
+//!    predictor (§IV-F). These are small 2-layer MLPs (128/64 hidden
+//!    units per the paper's Training Details) that must train online
+//!    inside the rust coordinator, so they are implemented here with
+//!    explicit forward/backward passes and Adam — gradient-checked
+//!    against finite differences in the test suite.
+
+pub mod adam;
+pub mod linear;
+pub mod loss;
+pub mod mlp;
+pub mod tensor;
+
+pub use adam::Adam;
+pub use linear::Linear;
+pub use mlp::Mlp;
+pub use tensor::Mat;

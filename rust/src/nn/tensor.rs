@@ -1,0 +1,278 @@
+//! Row-major f32 matrix with the operations the control-plane NNs need.
+//!
+//! Not a general tensor library: rank-2 only, sized for batch×feature
+//! matrices in the hundreds. The hot operation is `matmul`, written
+//! cache-friendly (i-k-j loop order) — see `rust/benches/fig16_overhead.rs`
+//! for why scheduler decision latency matters to the paper (Fig. 16).
+
+use crate::util::rng::Pcg32;
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Single-row matrix view of a slice (copies).
+    pub fn row_vec(data: &[f32]) -> Self {
+        Mat { rows: 1, cols: data.len(), data: data.to_vec() }
+    }
+
+    /// Kaiming-uniform init, the PyTorch default the paper's SAC uses.
+    pub fn kaiming(rows: usize, cols: usize, rng: &mut Pcg32) -> Self {
+        let bound = (6.0 / rows as f64).sqrt() as f32;
+        let data = (0..rows * cols)
+            .map(|_| (rng.f32() * 2.0 - 1.0) * bound)
+            .collect();
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// C = A @ B. i-k-j order so the inner loop streams both B and C rows.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}",
+                   self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// Allocation-free matmul into a caller buffer (hot path: every SAC
+    /// forward/backward goes through here). The inner j-loop is written
+    /// over exact-length slice pairs so LLVM autovectorizes it; an
+    /// explicit `a == 0` skip was measured SLOWER on dense layers than the
+    /// vectorized stream (it breaks SIMD), so sparsity from ReLU is NOT
+    /// special-cased — see EXPERIMENTS.md §Perf.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, other.cols);
+        out.data.fill(0.0);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let a_row = &self.data[i * self.cols..(i + 1) * self.cols];
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (k, &a) in a_row.iter().enumerate() {
+                let b_row = &other.data[k * n..(k + 1) * n];
+                // exact-length zip → no bounds checks → SIMD
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+
+    /// Aᵀ (copies).
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Elementwise map (copies).
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Elementwise product (copies).
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| a * b)
+                .collect(),
+        }
+    }
+
+    /// Add a row vector to every row (broadcast bias add).
+    pub fn add_row_broadcast(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            for (x, &b) in self.row_mut(r).iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+
+    /// Column sums (gradient of a broadcast bias).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for (o, &x) in out.iter_mut().zip(self.row(r)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+/// Row-wise softmax, numerically stabilized.
+pub fn softmax_rows(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    out
+}
+
+/// Row-wise log-softmax.
+pub fn log_softmax_rows(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logsum = row.iter().map(|x| (x - max).exp()).sum::<f32>().ln() + max;
+        for x in row.iter_mut() {
+            *x -= logsum;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn broadcast_and_col_sums_are_adjoint() {
+        // The forward bias add broadcasts; its gradient is col_sums.
+        let mut a = Mat::zeros(3, 2);
+        a.add_row_broadcast(&[1.0, 2.0]);
+        assert_eq!(a.col_sums(), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 1000., 1000., 1000.]);
+        let s = softmax_rows(&m);
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        // stable under large inputs
+        assert!((s.at(1, 0) - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_softmax_consistent_with_softmax() {
+        let m = Mat::from_vec(1, 4, vec![0.1, -2.0, 3.0, 0.7]);
+        let s = softmax_rows(&m);
+        let ls = log_softmax_rows(&m);
+        for c in 0..4 {
+            assert!((s.at(0, c).ln() - ls.at(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_into_matches_matmul() {
+        let mut rng = Pcg32::seeded(5);
+        let a = Mat::kaiming(7, 11, &mut rng);
+        let b = Mat::kaiming(11, 3, &mut rng);
+        let mut out = Mat::zeros(7, 3);
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        Mat::zeros(2, 3).matmul(&Mat::zeros(4, 2));
+    }
+}

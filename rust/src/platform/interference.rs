@@ -1,0 +1,163 @@
+//! Ground-truth interference model for the simulator (§IV-F's adversary).
+//!
+//! When multiple model instances execute concurrently they contend for
+//! compute (SM/core occupancy) and memory bandwidth. The paper's Fig. 1
+//! shows the empirical signature on Xavier NX: mild slowdown at low
+//! concurrency, then a superlinear blow-up as the board saturates, and
+//! outright failure (OOM) at extreme (batch × instances). We model latency
+//! inflation as a product of two nonlinear terms:
+//!
+//!   inflate = (1 + k_c · max(0, load − 1)^p) · (1 + k_m · σ((pressure − m₀)/s))
+//!
+//! where `load` = active-instance compute demand / platform capacity,
+//! `pressure` = memory-pool utilization, and σ is a logistic. The
+//! *nonlinearity is the point*: the paper shows a linear-regression
+//! predictor fits this badly (Fig. 13), and our NN predictor must beat it
+//! for the same reason.
+
+use super::spec::PlatformSpec;
+
+/// Tunable interference constants.
+#[derive(Clone, Copy, Debug)]
+pub struct InterferenceModel {
+    /// Compute-contention gain.
+    pub k_compute: f64,
+    /// Contention exponent (> 1 ⇒ superlinear, per Fig. 1).
+    pub p_compute: f64,
+    /// Memory-bandwidth gain.
+    pub k_memory: f64,
+    /// Logistic midpoint of memory pressure.
+    pub m0: f64,
+    /// Logistic steepness.
+    pub steep: f64,
+}
+
+impl Default for InterferenceModel {
+    fn default() -> Self {
+        InterferenceModel {
+            k_compute: 0.55,
+            p_compute: 1.6,
+            k_memory: 1.2,
+            m0: 0.75,
+            steep: 0.08,
+        }
+    }
+}
+
+/// Instantaneous system load seen by one executing batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SystemLoad {
+    /// Total concurrently-active instances (including self).
+    pub active_instances: usize,
+    /// Sum of active instances' normalized compute demand (1.0 = one
+    /// average instance fully occupying the accelerator).
+    pub compute_demand: f64,
+    /// Memory-pool utilization in [0, 1].
+    pub memory_pressure: f64,
+}
+
+impl InterferenceModel {
+    /// Latency inflation factor ≥ 1 for a batch executing under `load` on
+    /// `platform`.
+    pub fn inflation(&self, load: &SystemLoad, platform: &PlatformSpec) -> f64 {
+        // Capacity: how much parallel instance demand the board absorbs
+        // before contention begins. Scales with core count (Table V) —
+        // Nano's 128 cores saturate earlier than NX's 384.
+        let capacity = platform.cuda_cores as f64 / 384.0 * 2.0;
+        let overload = (load.compute_demand / capacity - 1.0).max(0.0);
+        let compute_term = 1.0 + self.k_compute * overload.powf(self.p_compute);
+        let z = (load.memory_pressure - self.m0) / self.steep;
+        let sigma = 1.0 / (1.0 + (-z).exp());
+        let memory_term = 1.0 + self.k_memory * sigma;
+        compute_term * memory_term
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nx() -> PlatformSpec {
+        PlatformSpec::xavier_nx()
+    }
+
+    #[test]
+    fn no_load_no_inflation() {
+        let m = InterferenceModel::default();
+        let load = SystemLoad {
+            active_instances: 1,
+            compute_demand: 0.5,
+            memory_pressure: 0.1,
+        };
+        let f = m.inflation(&load, &nx());
+        assert!(f < 1.02, "idle inflation {f}");
+    }
+
+    #[test]
+    fn inflation_superlinear_in_compute_demand() {
+        let m = InterferenceModel::default();
+        let f = |d: f64| {
+            m.inflation(
+                &SystemLoad {
+                    active_instances: 4,
+                    compute_demand: d,
+                    memory_pressure: 0.2,
+                },
+                &nx(),
+            )
+        };
+        let g1 = f(3.0) - f(2.5);
+        let g2 = f(5.0) - f(4.5);
+        assert!(g2 > g1, "not superlinear: {g1} vs {g2}");
+    }
+
+    #[test]
+    fn memory_pressure_kicks_in_late() {
+        let m = InterferenceModel::default();
+        let f = |p: f64| {
+            m.inflation(
+                &SystemLoad {
+                    active_instances: 2,
+                    compute_demand: 1.0,
+                    memory_pressure: p,
+                },
+                &nx(),
+            )
+        };
+        assert!(f(0.3) < 1.1);          // plenty of head-room
+        assert!(f(0.95) > 1.8);         // near-OOM thrashing
+        assert!(f(0.95) > f(0.6));
+    }
+
+    #[test]
+    fn weaker_platform_saturates_earlier() {
+        let m = InterferenceModel::default();
+        let load = SystemLoad {
+            active_instances: 4,
+            compute_demand: 2.5,
+            memory_pressure: 0.3,
+        };
+        let on_nx = m.inflation(&load, &PlatformSpec::xavier_nx());
+        let on_nano = m.inflation(&load, &PlatformSpec::jetson_nano());
+        assert!(on_nano > on_nx, "nano {on_nano} vs nx {on_nx}");
+    }
+
+    #[test]
+    fn interference_is_nonlinear_in_inputs() {
+        // Sanity for Fig. 13: a plane cannot fit this surface well. Check
+        // that the mixed second difference is non-zero.
+        let m = InterferenceModel::default();
+        let f = |d: f64, p: f64| {
+            m.inflation(
+                &SystemLoad {
+                    active_instances: 3,
+                    compute_demand: d,
+                    memory_pressure: p,
+                },
+                &nx(),
+            )
+        };
+        let mixed = f(4.0, 0.9) - f(4.0, 0.4) - f(2.0, 0.9) + f(2.0, 0.4);
+        assert!(mixed.abs() > 0.05, "surface looks planar: {mixed}");
+    }
+}

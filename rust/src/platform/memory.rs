@@ -1,0 +1,149 @@
+//! Memory accounting for concurrent batched inference.
+//!
+//! The Eq. (4) constraint `m_i ≤ M_i` and the Fig. 1 memory-overflow
+//! corner both live here: each (model, batch, instances) combination
+//! demands weights × instances + activations × batch × instances, and a
+//! reservation that exceeds the pool fails like the Jetson OOM does.
+
+use std::collections::BTreeMap;
+
+/// Memory demand descriptor for one model configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryDemand {
+    /// Per-instance weight footprint, MB (TensorRT engine analogue:
+    /// weights + workspace).
+    pub weights_mb: f64,
+    /// Per-sample activation footprint, MB.
+    pub activation_mb_per_sample: f64,
+}
+
+impl MemoryDemand {
+    /// Total MB for `instances` instances each running batch `b`.
+    pub fn total_mb(&self, batch: usize, instances: usize) -> f64 {
+        instances as f64
+            * (self.weights_mb + self.activation_mb_per_sample * batch as f64)
+    }
+}
+
+/// Tracked reservation pool for a platform's RAM.
+#[derive(Clone, Debug)]
+pub struct MemoryPool {
+    capacity_mb: f64,
+    reservations: BTreeMap<u64, f64>,
+    next_id: u64,
+    used_mb: f64,
+    /// Peak usage watermark (reported by the profiler).
+    peak_mb: f64,
+}
+
+/// Error returned when a reservation would overflow the pool.
+#[derive(Clone, Copy, Debug, PartialEq, thiserror::Error)]
+#[error("out of memory: requested {requested_mb:.1} MB, free {free_mb:.1} MB of {capacity_mb:.1} MB")]
+pub struct OomError {
+    pub requested_mb: f64,
+    pub free_mb: f64,
+    pub capacity_mb: f64,
+}
+
+impl MemoryPool {
+    pub fn new(capacity_mb: f64) -> Self {
+        assert!(capacity_mb > 0.0);
+        MemoryPool {
+            capacity_mb,
+            reservations: BTreeMap::new(),
+            next_id: 0,
+            used_mb: 0.0,
+            peak_mb: 0.0,
+        }
+    }
+
+    pub fn capacity_mb(&self) -> f64 {
+        self.capacity_mb
+    }
+
+    pub fn used_mb(&self) -> f64 {
+        self.used_mb
+    }
+
+    pub fn free_mb(&self) -> f64 {
+        self.capacity_mb - self.used_mb
+    }
+
+    pub fn peak_mb(&self) -> f64 {
+        self.peak_mb
+    }
+
+    /// Utilization in [0, 1].
+    pub fn pressure(&self) -> f64 {
+        self.used_mb / self.capacity_mb
+    }
+
+    /// Reserve `mb`; returns a ticket to release later.
+    pub fn reserve(&mut self, mb: f64) -> Result<u64, OomError> {
+        assert!(mb >= 0.0);
+        if self.used_mb + mb > self.capacity_mb {
+            return Err(OomError {
+                requested_mb: mb,
+                free_mb: self.free_mb(),
+                capacity_mb: self.capacity_mb,
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.reservations.insert(id, mb);
+        self.used_mb += mb;
+        self.peak_mb = self.peak_mb.max(self.used_mb);
+        Ok(id)
+    }
+
+    /// Release a ticket; idempotent (double release is a no-op).
+    pub fn release(&mut self, ticket: u64) {
+        if let Some(mb) = self.reservations.remove(&ticket) {
+            self.used_mb = (self.used_mb - mb).max(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_release_cycle() {
+        let mut pool = MemoryPool::new(100.0);
+        let a = pool.reserve(40.0).unwrap();
+        let b = pool.reserve(50.0).unwrap();
+        assert!((pool.used_mb() - 90.0).abs() < 1e-9);
+        assert!(pool.reserve(20.0).is_err()); // would overflow
+        pool.release(a);
+        assert!(pool.reserve(20.0).is_ok());
+        pool.release(b);
+        assert!(pool.peak_mb() >= 90.0);
+    }
+
+    #[test]
+    fn double_release_is_noop() {
+        let mut pool = MemoryPool::new(10.0);
+        let t = pool.reserve(5.0).unwrap();
+        pool.release(t);
+        pool.release(t);
+        assert_eq!(pool.used_mb(), 0.0);
+    }
+
+    #[test]
+    fn oom_error_reports_numbers() {
+        let mut pool = MemoryPool::new(10.0);
+        pool.reserve(8.0).unwrap();
+        let e = pool.reserve(5.0).unwrap_err();
+        assert!((e.free_mb - 2.0).abs() < 1e-9);
+        assert_eq!(e.capacity_mb, 10.0);
+    }
+
+    #[test]
+    fn demand_scales_with_batch_and_instances() {
+        let d = MemoryDemand { weights_mb: 100.0, activation_mb_per_sample: 2.0 };
+        assert_eq!(d.total_mb(1, 1), 102.0);
+        assert_eq!(d.total_mb(8, 1), 116.0);
+        assert_eq!(d.total_mb(8, 4), 464.0);
+    }
+}

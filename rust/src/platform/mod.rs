@@ -1,0 +1,23 @@
+//! Simulated edge platform: hardware specs (paper Tables III/V), memory
+//! accounting, a calibrated latency model, and the nonlinear ground-truth
+//! interference model that the §IV-F predictor has to learn.
+//!
+//! Why a simulator exists at all (DESIGN.md §4): the paper's testbed is a
+//! trio of NVIDIA Jetson boards. The *real* execution path in this repo
+//! (PJRT CPU) preserves the mechanism end-to-end, but platform scalability
+//! (Figs. 11/12), 3000-second horizons (Figs. 8/9/14), and deliberate
+//! memory-overflow corners (Fig. 1) need a platform model that can run in
+//! virtual time and be swept across hardware configs. The latency table is
+//! calibrated against real PJRT measurements (see `latency`).
+
+pub mod interference;
+pub mod latency;
+pub mod memory;
+pub mod sim;
+pub mod spec;
+
+pub use interference::InterferenceModel;
+pub use latency::LatencyModel;
+pub use memory::{MemoryDemand, MemoryPool, OomError};
+pub use sim::PlatformSim;
+pub use spec::PlatformSpec;

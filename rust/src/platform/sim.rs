@@ -1,0 +1,203 @@
+//! The composed platform simulator: spec + memory pool + latency model +
+//! interference model, with begin/end bookkeeping for concurrently
+//! executing batches.
+//!
+//! The serving engine drives this in virtual time: `begin` reserves memory
+//! and registers compute demand (failing like a Jetson OOM when the pool
+//! is exhausted — Eq. 4's m_i ≤ M_i), `duration_ms` prices a batch under
+//! the *current* contention, and `end` releases resources. Cross-model
+//! interference emerges naturally from overlapping begin/end windows.
+
+use super::interference::{InterferenceModel, SystemLoad};
+use super::latency::LatencyModel;
+use super::memory::{MemoryPool, OomError};
+use super::spec::PlatformSpec;
+use crate::workload::models::{ModelId, ModelSpec};
+use std::collections::BTreeMap;
+
+/// Handle for a batch admitted by [`PlatformSim::begin`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchHandle(u64);
+
+#[derive(Clone, Debug)]
+struct ActiveBatch {
+    model: ModelId,
+    mem_ticket: u64,
+    compute_demand: f64,
+}
+
+/// Simulated edge platform with explicit resource occupancy.
+#[derive(Clone, Debug)]
+pub struct PlatformSim {
+    pub spec: PlatformSpec,
+    pub latency: LatencyModel,
+    pub interference: InterferenceModel,
+    memory: MemoryPool,
+    active: BTreeMap<u64, ActiveBatch>,
+    next_handle: u64,
+}
+
+impl PlatformSim {
+    pub fn new(spec: PlatformSpec) -> Self {
+        let latency =
+            LatencyModel::calibrated().with_compute_scale(spec.compute_scale);
+        PlatformSim {
+            memory: MemoryPool::new(spec.memory_mb),
+            latency,
+            interference: InterferenceModel::default(),
+            spec,
+            active: BTreeMap::new(),
+            next_handle: 0,
+        }
+    }
+
+    /// Xavier NX with calibrated defaults — the paper's primary setup.
+    pub fn xavier_nx() -> Self {
+        Self::new(PlatformSpec::xavier_nx())
+    }
+
+    /// Current aggregate load (what executing batches experience, and the
+    /// exact features §IV-F's predictor is given).
+    pub fn current_load(&self) -> SystemLoad {
+        SystemLoad {
+            active_instances: self.active.len(),
+            compute_demand: self
+                .active
+                .values()
+                .map(|a| a.compute_demand)
+                .sum(),
+            memory_pressure: self.memory.pressure(),
+        }
+    }
+
+    /// Memory utilization in [0, 1].
+    pub fn memory_pressure(&self) -> f64 {
+        self.memory.pressure()
+    }
+
+    pub fn free_memory_mb(&self) -> f64 {
+        self.memory.free_mb()
+    }
+
+    pub fn active_batches(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Admit one instance-batch: reserve memory + register demand.
+    pub fn begin(&mut self, model: ModelId, batch: usize)
+                 -> Result<BatchHandle, OomError> {
+        let spec = ModelSpec::get(model);
+        let mb = spec.memory.total_mb(batch, 1);
+        let mem_ticket = self.memory.reserve(mb)?;
+        let handle = BatchHandle(self.next_handle);
+        self.next_handle += 1;
+        self.active.insert(
+            handle.0,
+            ActiveBatch {
+                model,
+                mem_ticket,
+                compute_demand: spec.compute_demand,
+            },
+        );
+        Ok(handle)
+    }
+
+    /// Price a batch of `model` under the *current* occupancy. Call after
+    /// `begin`-ing everything that runs concurrently.
+    pub fn duration_ms(&self, model: ModelId, batch: usize) -> f64 {
+        let load = self.current_load();
+        let inflate = self.interference.inflation(&load, &self.spec);
+        self.latency.isolated_ms(model, batch) * inflate
+    }
+
+    /// Ground-truth inflation factor under current load (the interference
+    /// predictor's regression target).
+    pub fn current_inflation(&self) -> f64 {
+        self.interference
+            .inflation(&self.current_load(), &self.spec)
+    }
+
+    /// Finish a batch: release memory + demand. Unknown handles are a
+    /// programming error.
+    pub fn end(&mut self, handle: BatchHandle) {
+        let b = self
+            .active
+            .remove(&handle.0)
+            .expect("end() on unknown batch handle");
+        self.memory.release(b.mem_ticket);
+        let _ = b.model;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_end_cycle_restores_resources() {
+        let mut sim = PlatformSim::xavier_nx();
+        let free0 = sim.free_memory_mb();
+        let h = sim.begin(ModelId::Res, 8).unwrap();
+        assert!(sim.free_memory_mb() < free0);
+        assert_eq!(sim.active_batches(), 1);
+        sim.end(h);
+        assert_eq!(sim.free_memory_mb(), free0);
+        assert_eq!(sim.active_batches(), 0);
+    }
+
+    #[test]
+    fn concurrency_inflates_latency() {
+        let mut sim = PlatformSim::xavier_nx();
+        let solo = {
+            let h = sim.begin(ModelId::Yolo, 8).unwrap();
+            let d = sim.duration_ms(ModelId::Yolo, 8);
+            sim.end(h);
+            d
+        };
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            handles.push(sim.begin(ModelId::Yolo, 8).unwrap());
+        }
+        let crowded = sim.duration_ms(ModelId::Yolo, 8);
+        for h in handles {
+            sim.end(h);
+        }
+        assert!(crowded > 1.2 * solo, "solo {solo} crowded {crowded}");
+    }
+
+    #[test]
+    fn fig1_oom_corner_rejected() {
+        let mut sim = PlatformSim::xavier_nx();
+        // batch 128 × several yolo instances must eventually OOM.
+        let mut oom = false;
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            match sim.begin(ModelId::Yolo, 128) {
+                Ok(h) => handles.push(h),
+                Err(_) => {
+                    oom = true;
+                    break;
+                }
+            }
+        }
+        assert!(oom, "expected OOM at the Fig. 1 corner");
+    }
+
+    #[test]
+    fn nano_slower_than_nx() {
+        let nx = PlatformSim::xavier_nx();
+        let nano = PlatformSim::new(PlatformSpec::jetson_nano());
+        assert!(
+            nano.duration_ms(ModelId::Res, 4) > 3.0 * nx.duration_ms(ModelId::Res, 4)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown batch handle")]
+    fn double_end_panics() {
+        let mut sim = PlatformSim::xavier_nx();
+        let h = sim.begin(ModelId::Mob, 1).unwrap();
+        sim.end(h);
+        sim.end(h);
+    }
+}

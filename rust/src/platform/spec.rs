@@ -1,0 +1,96 @@
+//! Edge platform specifications (paper Table III and Table V).
+
+/// Static description of an edge platform.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlatformSpec {
+    pub name: &'static str,
+    /// Relative compute throughput, Xavier NX ≡ 1.0 (derived from Table V:
+    /// Nano 0.47 TFLOPS FP16 / TX2 1.33 TFLOPS FP16 / NX 21 TOPS INT8 ≈
+    /// ~5.9 TFLOPS-FP16-equivalent at the paper's INT8/TensorRT operating
+    /// point).
+    pub compute_scale: f64,
+    /// RAM available to the serving runtime, MB (Table V, minus ~1.5 GB
+    /// OS/runtime reserve measured on Jetson boards).
+    pub memory_mb: f64,
+    /// CUDA-core count (Table V) — drives the contention knee of the
+    /// interference model: more cores tolerate more concurrency.
+    pub cuda_cores: usize,
+    /// Hard cap on concurrent model instances the runtime will allow.
+    pub max_instances: usize,
+}
+
+impl PlatformSpec {
+    /// NVIDIA Jetson Xavier NX — the paper's primary platform (Table III).
+    pub fn xavier_nx() -> Self {
+        PlatformSpec {
+            name: "Xavier NX",
+            compute_scale: 1.0,
+            memory_mb: 6500.0, // 8 GB − OS reserve
+            cuda_cores: 384,
+            max_instances: 8,
+        }
+    }
+
+    /// NVIDIA Jetson TX2 (Table V).
+    pub fn jetson_tx2() -> Self {
+        PlatformSpec {
+            name: "Jetson TX2",
+            compute_scale: 1.33 / 5.9, // FP16 TFLOPS ratio vs NX-equivalent
+            memory_mb: 6500.0,
+            cuda_cores: 256,
+            max_instances: 6,
+        }
+    }
+
+    /// NVIDIA Jetson Nano (Table V).
+    pub fn jetson_nano() -> Self {
+        PlatformSpec {
+            name: "Jetson Nano",
+            compute_scale: 0.47 / 5.9,
+            memory_mb: 2500.0, // 4 GB − OS reserve
+            cuda_cores: 128,
+            max_instances: 4,
+        }
+    }
+
+    /// The host CPU running the real PJRT backend; compute_scale is
+    /// calibrated at runtime (`LatencyModel::calibrate`).
+    pub fn host_cpu() -> Self {
+        PlatformSpec {
+            name: "Host CPU (PJRT)",
+            compute_scale: 1.0,
+            memory_mb: 8000.0,
+            cuda_cores: 384,
+            max_instances: 8,
+        }
+    }
+
+    /// The Fig. 11/12 sweep set, weakest first.
+    pub fn scalability_set() -> Vec<PlatformSpec> {
+        vec![Self::jetson_nano(), Self::jetson_tx2(), Self::xavier_nx()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_table_v() {
+        let nano = PlatformSpec::jetson_nano();
+        let tx2 = PlatformSpec::jetson_tx2();
+        let nx = PlatformSpec::xavier_nx();
+        assert!(nano.compute_scale < tx2.compute_scale);
+        assert!(tx2.compute_scale < nx.compute_scale);
+        assert!(nano.memory_mb < nx.memory_mb);
+        assert!(nano.cuda_cores < tx2.cuda_cores);
+        assert!(tx2.cuda_cores < nx.cuda_cores);
+    }
+
+    #[test]
+    fn scalability_set_is_weakest_first() {
+        let set = PlatformSpec::scalability_set();
+        assert_eq!(set.len(), 3);
+        assert!(set.windows(2).all(|w| w[0].compute_scale < w[1].compute_scale));
+    }
+}

@@ -1,0 +1,189 @@
+//! Linear-regression interference baseline (paper Fig. 13 compares the
+//! NN predictor against "the linear regression model [16], [46]").
+//!
+//! Ordinary least squares on the same feature vector, solved in closed
+//! form via the normal equations (Gaussian elimination on XᵀX — tiny
+//! system, 6×6 with bias).
+
+use super::nn_predictor::{PredictorSample, FEATURES};
+
+/// OLS linear model with bias.
+#[derive(Clone, Debug)]
+pub struct LinearPredictor {
+    /// Weights for FEATURES inputs + bias (last).
+    w: [f64; FEATURES + 1],
+    fitted: bool,
+}
+
+impl Default for LinearPredictor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LinearPredictor {
+    pub fn new() -> Self {
+        LinearPredictor { w: [0.0; FEATURES + 1], fitted: false }
+    }
+
+    fn design_row(s: &PredictorSample) -> [f64; FEATURES + 1] {
+        let f = s.features();
+        let mut row = [0.0; FEATURES + 1];
+        for (i, &x) in f.iter().enumerate() {
+            row[i] = x as f64;
+        }
+        row[FEATURES] = 1.0;
+        row
+    }
+
+    /// Fit by normal equations: w = (XᵀX)⁻¹ Xᵀy.
+    pub fn fit(&mut self, samples: &[PredictorSample]) {
+        const D: usize = FEATURES + 1;
+        let mut xtx = [[0.0f64; D]; D];
+        let mut xty = [0.0f64; D];
+        for s in samples {
+            let row = Self::design_row(s);
+            for i in 0..D {
+                for j in 0..D {
+                    xtx[i][j] += row[i] * row[j];
+                }
+                xty[i] += row[i] * s.inflation;
+            }
+        }
+        // Ridge epsilon for numerical safety.
+        for (i, row) in xtx.iter_mut().enumerate() {
+            row[i] += 1e-8;
+        }
+        // Gaussian elimination with partial pivoting.
+        let mut a = xtx;
+        let mut b = xty;
+        for col in 0..D {
+            let mut pivot = col;
+            for r in col + 1..D {
+                if a[r][col].abs() > a[pivot][col].abs() {
+                    pivot = r;
+                }
+            }
+            a.swap(col, pivot);
+            b.swap(col, pivot);
+            let diag = a[col][col];
+            if diag.abs() < 1e-12 {
+                continue;
+            }
+            for r in 0..D {
+                if r == col {
+                    continue;
+                }
+                let factor = a[r][col] / diag;
+                for c in 0..D {
+                    a[r][c] -= factor * a[col][c];
+                }
+                b[r] -= factor * b[col];
+            }
+        }
+        for i in 0..D {
+            self.w[i] = if a[i][i].abs() < 1e-12 { 0.0 } else { b[i] / a[i][i] };
+        }
+        self.fitted = true;
+    }
+
+    /// Predicted inflation (floored at 1, like the NN).
+    pub fn predict(&self, s: &PredictorSample) -> f64 {
+        let row = Self::design_row(s);
+        let y: f64 = row.iter().zip(&self.w).map(|(x, w)| x * w).sum();
+        y.max(1.0)
+    }
+
+    pub fn is_fitted(&self) -> bool {
+        self.fitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn linear_world(n: usize, rng: &mut Pcg32) -> Vec<PredictorSample> {
+        // Ground truth IS linear here; OLS must nail it.
+        (0..n)
+            .map(|_| {
+                let mp = rng.f64();
+                let cd = rng.f64() * 4.0;
+                let s = PredictorSample {
+                    memory_pressure: mp,
+                    compute_demand: cd,
+                    active_instances: 2,
+                    concurrency: 2,
+                    batch: 8,
+                    inflation: 1.0 + 0.5 * mp + 0.1 * cd,
+                };
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_linear_ground_truth() {
+        let mut rng = Pcg32::seeded(95);
+        let data = linear_world(500, &mut rng);
+        let mut lr = LinearPredictor::new();
+        lr.fit(&data);
+        for s in &data[..50] {
+            let err = (lr.predict(s) - s.inflation).abs();
+            assert!(err < 1e-6, "err {err}");
+        }
+    }
+
+    #[test]
+    fn underfits_nonlinear_surface() {
+        // The Fig. 13 premise: a plane cannot fit the logistic memory
+        // cliff. Build samples from the real interference model and check
+        // the residual is materially worse than the NN test's 10 % bar.
+        use crate::platform::interference::{InterferenceModel, SystemLoad};
+        use crate::platform::spec::PlatformSpec;
+        let mut rng = Pcg32::seeded(96);
+        let model = InterferenceModel::default();
+        let nx = PlatformSpec::xavier_nx();
+        let data: Vec<PredictorSample> = (0..1000)
+            .map(|_| {
+                let load = SystemLoad {
+                    active_instances: rng.range(1, 9),
+                    compute_demand: rng.f64() * 6.0,
+                    memory_pressure: rng.f64(),
+                };
+                PredictorSample {
+                    memory_pressure: load.memory_pressure,
+                    compute_demand: load.compute_demand,
+                    active_instances: load.active_instances,
+                    concurrency: load.active_instances.min(4),
+                    batch: 8,
+                    inflation: model.inflation(&load, &nx),
+                }
+            })
+            .collect();
+        let mut lr = LinearPredictor::new();
+        lr.fit(&data);
+        let mut errs: Vec<f64> = data
+            .iter()
+            .map(|s| (lr.predict(s) - s.inflation).abs() / s.inflation)
+            .collect();
+        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p90 = errs[(0.9 * errs.len() as f64) as usize];
+        assert!(p90 > 0.05, "linreg unexpectedly good: p90 {p90}");
+    }
+
+    #[test]
+    fn unfitted_predicts_floor() {
+        let lr = LinearPredictor::new();
+        let s = PredictorSample {
+            memory_pressure: 0.5,
+            compute_demand: 1.0,
+            active_instances: 1,
+            concurrency: 1,
+            batch: 1,
+            inflation: 1.0,
+        };
+        assert_eq!(lr.predict(&s), 1.0);
+    }
+}

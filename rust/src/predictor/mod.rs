@@ -1,0 +1,10 @@
+//! SLO-aware interference prediction (paper §IV-F): a lightweight
+//! two-layer NN that learns the latency inflation caused by concurrent
+//! execution, plus the linear-regression baseline it is compared against
+//! in Fig. 13.
+
+pub mod linreg;
+pub mod nn_predictor;
+
+pub use linreg::LinearPredictor;
+pub use nn_predictor::{InterferencePredictor, PredictorSample, FEATURES};

@@ -1,0 +1,196 @@
+//! NN-based interference predictor (paper §IV-F, Fig. 5).
+//!
+//! "A lightweight two-layer neural network with negligible overhead …
+//! utilizes the currently available computing resources (memory, CPU and
+//! GPU) and the number of concurrent models learned by the scheduler as
+//! the input", trained online against the actual latency reported by the
+//! performance profiler. The regression target here is the latency
+//! *inflation factor* (measured / isolated), which transfers across
+//! models and batch sizes.
+
+use crate::nn::adam::Adam;
+use crate::nn::loss::mse;
+use crate::nn::tensor::Mat;
+use crate::nn::Mlp;
+use crate::util::rng::Pcg32;
+
+/// Input features (paper Fig. 5): available memory, compute occupancy,
+/// active instances, requested concurrency, normalized batch.
+pub const FEATURES: usize = 5;
+
+/// One training sample collected by the profiler.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictorSample {
+    pub memory_pressure: f64,
+    pub compute_demand: f64,
+    pub active_instances: usize,
+    pub concurrency: usize,
+    pub batch: usize,
+    /// Ground truth: measured latency / isolated latency (≥ 1).
+    pub inflation: f64,
+}
+
+impl PredictorSample {
+    pub fn features(&self) -> [f32; FEATURES] {
+        [
+            self.memory_pressure as f32,
+            (self.compute_demand / 8.0) as f32,
+            self.active_instances as f32 / 8.0,
+            self.concurrency as f32 / 8.0,
+            (self.batch as f32 / 128.0).min(1.0),
+        ]
+    }
+}
+
+/// Online-trained interference predictor.
+pub struct InterferencePredictor {
+    net: Mlp,
+    opt: Adam,
+    buf: Vec<PredictorSample>,
+    capacity: usize,
+    pub batch_size: usize,
+    trained_steps: usize,
+}
+
+impl InterferencePredictor {
+    /// Paper architecture: two-layer ReLU net (small: 32/16 — "negligible
+    /// overhead"), Adam 1e-3.
+    pub fn new(rng: &mut Pcg32) -> Self {
+        let net = Mlp::new(&[FEATURES, 32, 16, 1], rng);
+        let opt = Adam::new(&net, 1e-3);
+        InterferencePredictor {
+            net,
+            opt,
+            buf: Vec::new(),
+            capacity: 4096,
+            batch_size: 64,
+            trained_steps: 0,
+        }
+    }
+
+    /// Record a profiled ground-truth sample.
+    pub fn observe(&mut self, s: PredictorSample) {
+        if self.buf.len() == self.capacity {
+            self.buf.remove(0);
+        }
+        self.buf.push(s);
+    }
+
+    pub fn samples(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn trained_steps(&self) -> usize {
+        self.trained_steps
+    }
+
+    /// Predicted inflation factor for a candidate configuration (≥ 1).
+    pub fn predict(&self, s: &PredictorSample) -> f64 {
+        let x = Mat::row_vec(&s.features());
+        // Softplus-ish floor: inflation can never be below 1.
+        (1.0 + self.net.forward(&x).at(0, 0).max(0.0)) as f64
+    }
+
+    /// One SGD step on a random minibatch; returns the MSE loss.
+    pub fn train_step(&mut self, rng: &mut Pcg32) -> f32 {
+        if self.buf.len() < self.batch_size {
+            return 0.0;
+        }
+        let n = self.batch_size;
+        let mut x = Mat::zeros(n, FEATURES);
+        let mut y = Mat::zeros(n, 1);
+        for i in 0..n {
+            let s = &self.buf[rng.below(self.buf.len() as u32) as usize];
+            x.row_mut(i).copy_from_slice(&s.features());
+            *y.at_mut(i, 0) = (s.inflation - 1.0) as f32;
+        }
+        let cache = self.net.forward_cache(&x);
+        // Clamp negative predictions at the loss level too (target ≥ 0).
+        let (loss, grad) = mse(cache.output(), &y);
+        let grads = self.net.backward(&cache, &grad);
+        self.opt.step(&mut self.net, &grads);
+        self.trained_steps += 1;
+        loss
+    }
+
+    /// Train until converged-ish: `epochs` passes of minibatch steps.
+    pub fn fit(&mut self, steps: usize, rng: &mut Pcg32) -> f32 {
+        let mut last = 0.0;
+        for _ in 0..steps {
+            last = self.train_step(rng);
+        }
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::interference::{InterferenceModel, SystemLoad};
+    use crate::platform::spec::PlatformSpec;
+
+    fn ground_truth_samples(n: usize, rng: &mut Pcg32) -> Vec<PredictorSample> {
+        let model = InterferenceModel::default();
+        let nx = PlatformSpec::xavier_nx();
+        (0..n)
+            .map(|_| {
+                let load = SystemLoad {
+                    active_instances: rng.range(1, 9),
+                    compute_demand: rng.f64() * 6.0,
+                    memory_pressure: rng.f64(),
+                };
+                PredictorSample {
+                    memory_pressure: load.memory_pressure,
+                    compute_demand: load.compute_demand,
+                    active_instances: load.active_instances,
+                    concurrency: load.active_instances.min(4),
+                    batch: 1 << rng.range(0, 8),
+                    inflation: model.inflation(&load, &nx),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn learns_the_interference_surface() {
+        let mut rng = Pcg32::seeded(91);
+        let mut pred = InterferencePredictor::new(&mut rng);
+        let train = ground_truth_samples(1600, &mut rng); // paper: 1600/400
+        let test = ground_truth_samples(400, &mut rng);
+        for s in &train {
+            pred.observe(*s);
+        }
+        pred.fit(1500, &mut rng);
+        // Relative error on held-out data must be small for most cases
+        // (paper: 90 % of cases within ~2.7 %; we require the same order).
+        let mut errs: Vec<f64> = test
+            .iter()
+            .map(|s| (pred.predict(s) - s.inflation).abs() / s.inflation)
+            .collect();
+        errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p90 = errs[(0.9 * errs.len() as f64) as usize];
+        assert!(p90 < 0.10, "p90 relative error {p90}");
+    }
+
+    #[test]
+    fn prediction_is_floored_at_one() {
+        let mut rng = Pcg32::seeded(92);
+        let pred = InterferencePredictor::new(&mut rng);
+        let s = PredictorSample {
+            memory_pressure: 0.0,
+            compute_demand: 0.0,
+            active_instances: 0,
+            concurrency: 1,
+            batch: 1,
+            inflation: 1.0,
+        };
+        assert!(pred.predict(&s) >= 1.0);
+    }
+
+    #[test]
+    fn train_step_needs_enough_samples() {
+        let mut rng = Pcg32::seeded(93);
+        let mut pred = InterferencePredictor::new(&mut rng);
+        assert_eq!(pred.train_step(&mut rng), 0.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Performance profiler (paper §IV-E): periodically collects utilization,
+//! throughput, and end-to-end latency per (batch, m_c) configuration and
+//! feeds the scheduler + interference predictor.
+//!
+//! Implemented as a bounded ring of [`ProfileSample`]s with rolling
+//! per-model aggregates — the scheduler's state encoder reads the rolling
+//! view in O(1).
+
+use crate::workload::models::{ModelId, N_MODELS};
+use std::collections::VecDeque;
+
+/// One profiled slot execution.
+#[derive(Clone, Copy, Debug)]
+pub struct ProfileSample {
+    pub t_ms: f64,
+    pub model: ModelId,
+    pub batch: usize,
+    pub concurrency: usize,
+    /// Measured batch latency, ms.
+    pub latency_ms: f64,
+    /// Requests completed in the slot.
+    pub completed: usize,
+    /// Utilization snapshot at dispatch.
+    pub compute_demand: f64,
+    pub memory_pressure: f64,
+    pub active_instances: usize,
+    /// Ground-truth latency inflation vs isolated (simulation) or measured
+    /// ratio vs rolling isolated estimate (real backend).
+    pub inflation: f64,
+}
+
+/// Rolling per-model aggregates maintained incrementally.
+#[derive(Clone, Copy, Debug, Default)]
+struct Rolling {
+    n: u64,
+    latency_sum: f64,
+    completed_sum: f64,
+    span_sum_ms: f64,
+}
+
+/// The profiler: bounded history + rolling stats.
+#[derive(Clone, Debug)]
+pub struct Profiler {
+    window: usize,
+    samples: VecDeque<ProfileSample>,
+    rolling: [Rolling; N_MODELS],
+}
+
+impl Profiler {
+    pub fn new(window: usize) -> Self {
+        Profiler {
+            window: window.max(1),
+            samples: VecDeque::new(),
+            rolling: [Rolling::default(); N_MODELS],
+        }
+    }
+
+    pub fn record(&mut self, s: ProfileSample) {
+        let r = &mut self.rolling[s.model as usize];
+        r.n += 1;
+        r.latency_sum += s.latency_ms;
+        r.completed_sum += s.completed as f64;
+        r.span_sum_ms += s.latency_ms;
+        self.samples.push_back(s);
+        if self.samples.len() > self.window {
+            let old = self.samples.pop_front().unwrap();
+            let r = &mut self.rolling[old.model as usize];
+            r.n -= 1;
+            r.latency_sum -= old.latency_ms;
+            r.completed_sum -= old.completed as f64;
+            r.span_sum_ms -= old.latency_ms;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> impl Iterator<Item = &ProfileSample> {
+        self.samples.iter()
+    }
+
+    /// Rolling mean batch latency for a model (NaN when unobserved).
+    pub fn mean_latency_ms(&self, model: ModelId) -> f64 {
+        let r = &self.rolling[model as usize];
+        if r.n == 0 {
+            f64::NAN
+        } else {
+            r.latency_sum / r.n as f64
+        }
+    }
+
+    /// Rolling throughput estimate (completed per second of busy time).
+    pub fn throughput_rps(&self, model: ModelId) -> f64 {
+        let r = &self.rolling[model as usize];
+        if r.span_sum_ms <= 0.0 {
+            0.0
+        } else {
+            r.completed_sum / (r.span_sum_ms / 1e3)
+        }
+    }
+
+    /// Most recent utilization snapshot (zeros before any sample).
+    pub fn utilization(&self) -> (f64, f64, usize) {
+        self.samples
+            .back()
+            .map(|s| (s.compute_demand, s.memory_pressure, s.active_instances))
+            .unwrap_or((0.0, 0.0, 0))
+    }
+
+    /// Rolling mean inflation across all models (1.0 before any sample).
+    pub fn mean_inflation(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        self.samples.iter().map(|s| s.inflation).sum::<f64>()
+            / self.samples.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(model: ModelId, latency: f64, completed: usize) -> ProfileSample {
+        ProfileSample {
+            t_ms: 0.0,
+            model,
+            batch: completed,
+            concurrency: 1,
+            latency_ms: latency,
+            completed,
+            compute_demand: 0.5,
+            memory_pressure: 0.2,
+            active_instances: 1,
+            inflation: 1.1,
+        }
+    }
+
+    #[test]
+    fn rolling_means_track_window() {
+        let mut p = Profiler::new(2);
+        p.record(sample(ModelId::Res, 10.0, 4));
+        p.record(sample(ModelId::Res, 20.0, 4));
+        assert!((p.mean_latency_ms(ModelId::Res) - 15.0).abs() < 1e-9);
+        p.record(sample(ModelId::Res, 30.0, 4)); // evicts the 10.0 sample
+        assert!((p.mean_latency_ms(ModelId::Res) - 25.0).abs() < 1e-9);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn throughput_from_busy_time() {
+        let mut p = Profiler::new(8);
+        p.record(sample(ModelId::Mob, 100.0, 10)); // 10 reqs in 100 ms
+        assert!((p.throughput_rps(ModelId::Mob) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unobserved_model_is_nan() {
+        let p = Profiler::new(4);
+        assert!(p.mean_latency_ms(ModelId::Bert).is_nan());
+        assert_eq!(p.utilization(), (0.0, 0.0, 0));
+        assert_eq!(p.mean_inflation(), 1.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Vanilla actor-critic WITHOUT entropy regularization — the "TAC"
+//! baseline of paper §V-B ("we combine Triton with Actor-Critic without
+//! entropy to compare with BCEdge"). One-step TD advantage, on-policy.
+
+use super::env::{Agent, Transition};
+use crate::nn::adam::Adam;
+use crate::nn::tensor::{softmax_rows, Mat};
+use crate::nn::Mlp;
+use crate::util::rng::Pcg32;
+
+/// Hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct AcConfig {
+    pub hidden: Vec<usize>,
+    pub lr: f32,
+    pub gamma: f32,
+}
+
+impl Default for AcConfig {
+    fn default() -> Self {
+        AcConfig { hidden: vec![128, 64], lr: 1e-3, gamma: 0.99 }
+    }
+}
+
+/// On-policy actor-critic (no entropy bonus — the point of the baseline).
+pub struct ActorCritic {
+    cfg: AcConfig,
+    n_actions: usize,
+    actor: Mlp,
+    critic: Mlp,
+    opt_actor: Adam,
+    opt_critic: Adam,
+    pending: Option<Transition>,
+}
+
+impl ActorCritic {
+    pub fn new(state_dim: usize, n_actions: usize, cfg: AcConfig,
+               rng: &mut Pcg32) -> Self {
+        let mut pi_sizes = vec![state_dim];
+        pi_sizes.extend(&cfg.hidden);
+        pi_sizes.push(n_actions);
+        let mut v_sizes = vec![state_dim];
+        v_sizes.extend(&cfg.hidden);
+        v_sizes.push(1);
+        let actor = Mlp::new(&pi_sizes, rng);
+        let critic = Mlp::new(&v_sizes, rng);
+        let opt_actor = Adam::new(&actor, cfg.lr);
+        let opt_critic = Adam::new(&critic, cfg.lr);
+        ActorCritic {
+            cfg,
+            n_actions,
+            actor,
+            critic,
+            opt_actor,
+            opt_critic,
+            pending: None,
+        }
+    }
+
+    pub fn policy_probs(&self, state: &[f32]) -> Vec<f32> {
+        softmax_rows(&self.actor.forward(&Mat::row_vec(state)))
+            .row(0)
+            .to_vec()
+    }
+}
+
+impl Agent for ActorCritic {
+    fn act(&mut self, state: &[f32], rng: &mut Pcg32, greedy: bool) -> usize {
+        let probs = self.policy_probs(state);
+        if greedy {
+            probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        } else {
+            rng.categorical(&probs.iter().map(|&p| p as f64).collect::<Vec<_>>())
+        }
+    }
+
+    fn observe(&mut self, t: Transition) {
+        self.pending = Some(t);
+    }
+
+    fn update(&mut self, _rng: &mut Pcg32) -> f32 {
+        let Some(t) = self.pending.take() else { return 0.0 };
+        let s = Mat::row_vec(&t.state);
+        let s2 = Mat::row_vec(&t.next_state);
+
+        // Critic: TD(0) target.
+        let v_next = if t.done { 0.0 } else { self.critic.forward(&s2).at(0, 0) };
+        let target = t.reward + self.cfg.gamma * v_next;
+        let cache_v = self.critic.forward_cache(&s);
+        let v = cache_v.output().at(0, 0);
+        let advantage = target - v;
+        let dv = Mat::from_vec(1, 1, vec![2.0 * (v - target)]);
+        let grads_v = self.critic.backward(&cache_v, &dv);
+        self.opt_critic.step(&mut self.critic, &grads_v);
+
+        // Actor: policy-gradient step on −A·log π(a|s).
+        // ∂(−A log π_a)/∂z_k = A (π_k − δ_ak)
+        let cache_pi = self.actor.forward_cache(&s);
+        let pi = softmax_rows(cache_pi.output());
+        let mut d = Mat::zeros(1, self.n_actions);
+        for k in 0..self.n_actions {
+            let delta = if k == t.action { 1.0 } else { 0.0 };
+            *d.at_mut(0, k) = advantage * (pi.at(0, k) - delta);
+        }
+        let grads_pi = self.actor.backward(&cache_pi, &d);
+        self.opt_actor.step(&mut self.actor, &grads_pi);
+
+        // Report the critic TD error as the training loss (Fig. 10 series).
+        (v - target) * (v - target)
+    }
+
+    fn name(&self) -> &'static str {
+        "TAC (actor-critic, no entropy)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::env::testenv::Chain;
+    use crate::rl::env::{train_episodes, Env};
+
+    #[test]
+    fn learns_chain_mdp() {
+        let mut rng = Pcg32::seeded(61);
+        let mut env = Chain::new(3);
+        let mut agent = ActorCritic::new(
+            env.state_dim(),
+            env.n_actions(),
+            AcConfig { lr: 5e-3, ..Default::default() },
+            &mut rng,
+        );
+        let hist = train_episodes(&mut env, &mut agent, 300, 25, &mut rng);
+        let late: f32 =
+            hist[hist.len() - 20..].iter().map(|x| x.0).sum::<f32>() / 20.0;
+        assert!(late > 0.6, "did not learn chain: late return {late}");
+    }
+
+    #[test]
+    fn update_without_observe_is_noop() {
+        let mut rng = Pcg32::seeded(62);
+        let mut agent = ActorCritic::new(3, 2, AcConfig::default(), &mut rng);
+        assert_eq!(agent.update(&mut rng), 0.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! MDP interface shared by the scheduling environment and every agent.
+
+use crate::util::rng::Pcg32;
+
+/// One (s, a, r, s', done) tuple — what the replay buffer stores
+//  (paper Algorithm 1, line 11).
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: usize,
+    pub reward: f32,
+    pub next_state: Vec<f32>,
+    pub done: bool,
+}
+
+/// Result of one environment step.
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub next_state: Vec<f32>,
+    pub reward: f32,
+    pub done: bool,
+}
+
+/// A discrete-action MDP. The scheduling environment
+/// (`coordinator::sac_sched::SchedEnv`) implements this over the platform
+/// simulator; toy envs in tests implement it directly.
+pub trait Env {
+    fn state_dim(&self) -> usize;
+    fn n_actions(&self) -> usize;
+    fn reset(&mut self, rng: &mut Pcg32) -> Vec<f32>;
+    fn step(&mut self, action: usize, rng: &mut Pcg32) -> Step;
+}
+
+/// A learning agent over a discrete action space.
+pub trait Agent {
+    /// Choose an action. `greedy` disables exploration (deployment mode —
+    /// the paper trains offline and deploys the trained policy online).
+    fn act(&mut self, state: &[f32], rng: &mut Pcg32, greedy: bool) -> usize;
+
+    /// Record a transition (on-policy agents may also update here).
+    fn observe(&mut self, t: Transition);
+
+    /// One gradient/update step; returns the training loss for Fig. 10.
+    fn update(&mut self, rng: &mut Pcg32) -> f32;
+
+    /// Human-readable name for bench tables.
+    fn name(&self) -> &'static str;
+}
+
+/// Run `episodes` episodes of `agent` on `env`, updating after every step;
+/// returns per-episode (return, mean loss). Shared by the Fig. 10 bench
+/// and the offline training driver.
+pub fn train_episodes<E: Env, A: Agent + ?Sized>(
+    env: &mut E,
+    agent: &mut A,
+    episodes: usize,
+    max_steps: usize,
+    rng: &mut Pcg32,
+) -> Vec<(f32, f32)> {
+    let mut out = Vec::with_capacity(episodes);
+    for _ in 0..episodes {
+        let mut state = env.reset(rng);
+        let mut ret = 0.0;
+        let mut losses = 0.0;
+        let mut n_loss = 0;
+        for step in 0..max_steps {
+            let action = agent.act(&state, rng, false);
+            let s = env.step(action, rng);
+            let done = s.done || step + 1 == max_steps;
+            agent.observe(Transition {
+                state: state.clone(),
+                action,
+                reward: s.reward,
+                next_state: s.next_state.clone(),
+                done,
+            });
+            ret += s.reward;
+            let loss = agent.update(rng);
+            if loss.is_finite() && loss != 0.0 {
+                losses += loss;
+                n_loss += 1;
+            }
+            state = s.next_state;
+            if done {
+                break;
+            }
+        }
+        out.push((ret, if n_loss > 0 { losses / n_loss as f32 } else { 0.0 }));
+    }
+    out
+}
+
+#[cfg(test)]
+pub mod testenv {
+    use super::*;
+
+    /// A tiny deterministic chain MDP for agent sanity tests: states
+    /// 0..n-1, action 1 moves right (+1 reward at the end), action 0
+    /// stays (0 reward). Optimal return = 1.0 within n steps.
+    pub struct Chain {
+        pub n: usize,
+        pos: usize,
+    }
+
+    impl Chain {
+        pub fn new(n: usize) -> Self {
+            Chain { n, pos: 0 }
+        }
+
+        fn encode(&self) -> Vec<f32> {
+            let mut v = vec![0.0; self.n];
+            v[self.pos] = 1.0;
+            v
+        }
+    }
+
+    impl Env for Chain {
+        fn state_dim(&self) -> usize {
+            self.n
+        }
+
+        fn n_actions(&self) -> usize {
+            2
+        }
+
+        fn reset(&mut self, _rng: &mut Pcg32) -> Vec<f32> {
+            self.pos = 0;
+            self.encode()
+        }
+
+        fn step(&mut self, action: usize, _rng: &mut Pcg32) -> Step {
+            if action == 1 && self.pos + 1 < self.n {
+                self.pos += 1;
+            }
+            let done = self.pos + 1 == self.n;
+            Step {
+                next_state: self.encode(),
+                reward: if done { 1.0 } else { -0.01 },
+                done,
+            }
+        }
+    }
+}

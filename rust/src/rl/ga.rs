@@ -1,0 +1,212 @@
+//! Genetic-algorithm baseline (paper §V-B, ref [43]): "survival of the
+//! fittest" search with the BCEdge utility as the fitness function.
+//!
+//! The GA evolves a *linear policy* (state → action scores) by tournament
+//! selection, uniform crossover, and Gaussian mutation; fitness is the
+//! mean episode return. The paper observes GA is premature (local optima)
+//! and pays heavy crossover/mutation compute — both properties fall out of
+//! this implementation and are visible in the Fig. 10 bench.
+
+use super::env::{Agent, Env, Transition};
+use crate::util::rng::Pcg32;
+
+/// GA hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct GaConfig {
+    pub population: usize,
+    pub tournament: usize,
+    pub mutation_rate: f64,
+    pub mutation_std: f32,
+    pub elite: usize,
+    /// Episodes per fitness evaluation.
+    pub eval_episodes: usize,
+    pub max_steps: usize,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 32,
+            tournament: 4,
+            mutation_rate: 0.1,
+            mutation_std: 0.3,
+            elite: 2,
+            eval_episodes: 2,
+            max_steps: 64,
+        }
+    }
+}
+
+/// A genome: a flat (state_dim × n_actions) score matrix.
+#[derive(Clone)]
+struct Genome {
+    w: Vec<f32>,
+    fitness: f32,
+}
+
+/// Evolutionary policy search over linear policies.
+pub struct Ga {
+    cfg: GaConfig,
+    state_dim: usize,
+    n_actions: usize,
+    population: Vec<Genome>,
+    best: Genome,
+    generations: usize,
+}
+
+impl Ga {
+    pub fn new(state_dim: usize, n_actions: usize, cfg: GaConfig,
+               rng: &mut Pcg32) -> Self {
+        let population: Vec<Genome> = (0..cfg.population)
+            .map(|_| Genome {
+                w: (0..state_dim * n_actions)
+                    .map(|_| (rng.f32() * 2.0 - 1.0) * 0.5)
+                    .collect(),
+                fitness: f32::NEG_INFINITY,
+            })
+            .collect();
+        let best = population[0].clone();
+        Ga { cfg, state_dim, n_actions, population, best, generations: 0 }
+    }
+
+    fn action_of(&self, genome: &Genome, state: &[f32]) -> usize {
+        let mut best = 0;
+        let mut best_score = f32::NEG_INFINITY;
+        for a in 0..self.n_actions {
+            let mut score = 0.0;
+            for (i, &s) in state.iter().enumerate() {
+                score += s * genome.w[i * self.n_actions + a];
+            }
+            if score > best_score {
+                best_score = score;
+                best = a;
+            }
+        }
+        best
+    }
+
+    fn evaluate<E: Env>(&self, genome: &Genome, env: &mut E,
+                        rng: &mut Pcg32) -> f32 {
+        let mut total = 0.0;
+        for _ in 0..self.cfg.eval_episodes {
+            let mut state = env.reset(rng);
+            for _ in 0..self.cfg.max_steps {
+                let a = self.action_of(genome, &state);
+                let s = env.step(a, rng);
+                total += s.reward;
+                state = s.next_state;
+                if s.done {
+                    break;
+                }
+            }
+        }
+        total / self.cfg.eval_episodes as f32
+    }
+
+    /// One generation of evolution against `env`. Returns the loss proxy
+    /// for Fig. 10 (negative best fitness, so "lower is better" like the
+    /// DRL losses).
+    pub fn evolve<E: Env>(&mut self, env: &mut E, rng: &mut Pcg32) -> f32 {
+        // Fitness evaluation — the expensive part the paper calls out
+        // ("GA involves a large number of calculations").
+        for i in 0..self.population.len() {
+            let f = self.evaluate(&self.population[i], env, rng);
+            self.population[i].fitness = f;
+        }
+        self.population
+            .sort_by(|a, b| b.fitness.partial_cmp(&a.fitness).unwrap());
+        if self.population[0].fitness > self.best.fitness {
+            self.best = self.population[0].clone();
+        }
+
+        // Next generation: elitism + tournament parents + uniform
+        // crossover + Gaussian mutation.
+        let mut next: Vec<Genome> =
+            self.population[..self.cfg.elite].to_vec();
+        while next.len() < self.cfg.population {
+            let p1 = self.tournament_pick(rng);
+            let p2 = self.tournament_pick(rng);
+            let mut child = vec![0.0f32; self.state_dim * self.n_actions];
+            for (i, c) in child.iter_mut().enumerate() {
+                *c = if rng.f32() < 0.5 { p1.w[i] } else { p2.w[i] };
+                if rng.f64() < self.cfg.mutation_rate {
+                    *c += rng.normal() as f32 * self.cfg.mutation_std;
+                }
+            }
+            next.push(Genome { w: child, fitness: f32::NEG_INFINITY });
+        }
+        self.population = next;
+        self.generations += 1;
+        -self.best.fitness
+    }
+
+    fn tournament_pick(&self, rng: &mut Pcg32) -> &Genome {
+        let mut best: Option<&Genome> = None;
+        for _ in 0..self.cfg.tournament {
+            let cand =
+                &self.population[rng.below(self.population.len() as u32) as usize];
+            if best.map(|b| cand.fitness > b.fitness).unwrap_or(true) {
+                best = Some(cand);
+            }
+        }
+        best.unwrap()
+    }
+
+    pub fn best_fitness(&self) -> f32 {
+        self.best.fitness
+    }
+}
+
+/// Adapter so the GA's *deployed* best policy can serve as an [`Agent`]
+/// (act = best genome's argmax; observe/update are no-ops because
+/// evolution happens generation-wise via [`Ga::evolve`]).
+impl Agent for Ga {
+    fn act(&mut self, state: &[f32], _rng: &mut Pcg32, _greedy: bool) -> usize {
+        let best = self.best.clone();
+        self.action_of(&best, state)
+    }
+
+    fn observe(&mut self, _t: Transition) {}
+
+    fn update(&mut self, _rng: &mut Pcg32) -> f32 {
+        0.0
+    }
+
+    fn name(&self) -> &'static str {
+        "GA"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::env::testenv::Chain;
+
+    #[test]
+    fn evolution_improves_fitness() {
+        let mut rng = Pcg32::seeded(81);
+        let mut env = Chain::new(5);
+        let mut ga = Ga::new(5, 2, GaConfig::default(), &mut rng);
+        ga.evolve(&mut env, &mut rng);
+        let first = ga.best_fitness();
+        for _ in 0..10 {
+            ga.evolve(&mut env, &mut rng);
+        }
+        assert!(ga.best_fitness() >= first);
+        // Chain(5) is solvable by a linear policy: expect near-optimal.
+        assert!(ga.best_fitness() > 0.8, "fitness {}", ga.best_fitness());
+    }
+
+    #[test]
+    fn elite_preserved() {
+        let mut rng = Pcg32::seeded(82);
+        let mut env = Chain::new(4);
+        let mut ga = Ga::new(4, 2, GaConfig::default(), &mut rng);
+        let mut last = f32::NEG_INFINITY;
+        for _ in 0..5 {
+            ga.evolve(&mut env, &mut rng);
+            assert!(ga.best_fitness() >= last);
+            last = ga.best_fitness();
+        }
+    }
+}

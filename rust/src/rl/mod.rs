@@ -1,0 +1,22 @@
+//! Reinforcement-learning substrate: the maximum-entropy discrete SAC
+//! scheduler of paper §IV-B plus every baseline of §V-B (PPO, DDQN,
+//! entropy-free actor-critic for "TAC", and the genetic algorithm).
+//!
+//! All agents implement [`Agent`] over a discrete action grid
+//! ([`spaces::ActionSpace`] = batch size × concurrent instances) so the
+//! coordinator can swap schedulers behind one interface, and every network
+//! is the paper's 2-layer ReLU MLP (128/64) trained with Adam 1e-3.
+
+pub mod ac;
+pub mod ddqn;
+pub mod env;
+pub mod ga;
+pub mod ppo;
+pub mod replay;
+pub mod sac;
+pub mod spaces;
+
+pub use env::{Agent, Env, Transition};
+pub use replay::ReplayBuffer;
+pub use sac::DiscreteSac;
+pub use spaces::ActionSpace;

@@ -1,0 +1,86 @@
+//! Uniform replay buffer (paper: "the buffer size is fixed to 10^6").
+
+use super::env::Transition;
+use crate::util::rng::Pcg32;
+
+/// Fixed-capacity ring buffer with uniform sampling.
+pub struct ReplayBuffer {
+    capacity: usize,
+    items: Vec<Transition>,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ReplayBuffer { capacity, items: Vec::new(), next: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.items.len() < self.capacity {
+            self.items.push(t);
+        } else {
+            self.items[self.next] = t;
+        }
+        self.next = (self.next + 1) % self.capacity;
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Sample `n` transitions uniformly with replacement.
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Pcg32) -> Vec<&'a Transition> {
+        assert!(!self.items.is_empty(), "sampling empty replay buffer");
+        (0..n)
+            .map(|_| &self.items[rng.below(self.items.len() as u32) as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(reward: f32) -> Transition {
+        Transition {
+            state: vec![0.0],
+            action: 0,
+            reward,
+            next_state: vec![0.0],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn wraps_at_capacity() {
+        let mut buf = ReplayBuffer::new(3);
+        for i in 0..5 {
+            buf.push(t(i as f32));
+        }
+        assert_eq!(buf.len(), 3);
+        // items 2, 3, 4 survive (0 and 1 overwritten)
+        let rewards: Vec<f32> = buf.items.iter().map(|x| x.reward).collect();
+        assert!(rewards.contains(&4.0) && rewards.contains(&3.0) && rewards.contains(&2.0));
+    }
+
+    #[test]
+    fn sample_returns_requested_count() {
+        let mut buf = ReplayBuffer::new(10);
+        for i in 0..4 {
+            buf.push(t(i as f32));
+        }
+        let mut rng = Pcg32::seeded(1);
+        assert_eq!(buf.sample(32, &mut rng).len(), 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_empty_panics() {
+        ReplayBuffer::new(4).sample(1, &mut Pcg32::seeded(0));
+    }
+}

@@ -1,0 +1,93 @@
+//! The two-dimensional discrete action space of paper §IV-B: an action is
+//! a (batch size, number of concurrent model instances) pair, so with M
+//! batch options and N concurrency options the space has M × N actions
+//! ("the size of the discrete action space A is M × N").
+
+/// Cartesian action grid over batch sizes × concurrency levels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActionSpace {
+    batch_sizes: Vec<usize>,
+    concurrency: Vec<usize>,
+}
+
+impl ActionSpace {
+    pub fn new(batch_sizes: Vec<usize>, concurrency: Vec<usize>) -> Self {
+        assert!(!batch_sizes.is_empty() && !concurrency.is_empty());
+        ActionSpace { batch_sizes, concurrency }
+    }
+
+    /// The compiled-artifact grid: batch ∈ {1..32} pow2 × m_c ∈ {1..4}.
+    pub fn standard() -> Self {
+        ActionSpace::new(vec![1, 2, 4, 8, 16, 32], vec![1, 2, 3, 4])
+    }
+
+    /// The wider simulation-only grid matching paper Fig. 1 extremes
+    /// (batch up to 128, m_c up to 8).
+    pub fn sim_wide() -> Self {
+        ActionSpace::new(vec![1, 2, 4, 8, 16, 32, 64, 128],
+                         vec![1, 2, 3, 4, 5, 6, 7, 8])
+    }
+
+    pub fn len(&self) -> usize {
+        self.batch_sizes.len() * self.concurrency.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    pub fn concurrency_levels(&self) -> &[usize] {
+        &self.concurrency
+    }
+
+    /// Action index → (batch, concurrency).
+    pub fn decode(&self, idx: usize) -> (usize, usize) {
+        assert!(idx < self.len(), "action {idx} out of range");
+        let nb = self.batch_sizes.len();
+        (self.batch_sizes[idx % nb], self.concurrency[idx / nb])
+    }
+
+    /// (batch, concurrency) → action index; `None` if not on the grid.
+    pub fn encode(&self, batch: usize, conc: usize) -> Option<usize> {
+        let bi = self.batch_sizes.iter().position(|&b| b == batch)?;
+        let ci = self.concurrency.iter().position(|&c| c == conc)?;
+        Some(ci * self.batch_sizes.len() + bi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_grid_is_paper_sized() {
+        let a = ActionSpace::standard();
+        assert_eq!(a.len(), 24); // 6 batch sizes × 4 concurrency levels
+    }
+
+    #[test]
+    fn decode_encode_round_trip() {
+        let a = ActionSpace::sim_wide();
+        for idx in 0..a.len() {
+            let (b, c) = a.decode(idx);
+            assert_eq!(a.encode(b, c), Some(idx));
+        }
+    }
+
+    #[test]
+    fn encode_rejects_off_grid() {
+        let a = ActionSpace::standard();
+        assert_eq!(a.encode(3, 1), None);
+        assert_eq!(a.encode(1, 9), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn decode_out_of_range_panics() {
+        ActionSpace::standard().decode(24);
+    }
+}

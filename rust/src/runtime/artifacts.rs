@@ -1,0 +1,196 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the rust runtime (`artifacts/manifest.json`).
+
+use crate::util::json::{self, Json};
+use crate::workload::models::ModelId;
+use std::collections::BTreeMap;
+
+/// One compiled (model, batch) artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub model: ModelId,
+    pub batch: usize,
+    /// HLO-text file, relative to the artifact directory.
+    pub path: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub param_count: usize,
+    pub slo_ms: f64,
+}
+
+/// Parsed manifest with (model, batch) lookup.
+#[derive(Clone, Debug)]
+pub struct ArtifactIndex {
+    pub dir: String,
+    pub batch_sizes: Vec<usize>,
+    entries: BTreeMap<(ModelId, usize), ArtifactEntry>,
+}
+
+impl ArtifactIndex {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<ArtifactIndex, String> {
+        let text = std::fs::read_to_string(format!("{dir}/manifest.json"))
+            .map_err(|e| format!("reading manifest in {dir}: {e}"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated for tests).
+    pub fn parse(dir: &str, text: &str) -> Result<ArtifactIndex, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        if v.get("format").and_then(Json::as_str) != Some("bcedge-aot-v1") {
+            return Err("unknown manifest format".into());
+        }
+        if v.get("return_tuple").and_then(Json::as_bool) != Some(true) {
+            return Err("manifest must declare return_tuple=true".into());
+        }
+        let batch_sizes: Vec<usize> = v
+            .get("batch_sizes")
+            .and_then(Json::as_arr)
+            .ok_or("missing batch_sizes")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let mut entries = BTreeMap::new();
+        for e in v.get("entries").and_then(Json::as_arr).ok_or("entries")? {
+            let name = e.get("model").and_then(Json::as_str).ok_or("model")?;
+            let model = ModelId::from_name(name)
+                .ok_or_else(|| format!("unknown model {name}"))?;
+            let batch =
+                e.get("batch").and_then(Json::as_usize).ok_or("batch")?;
+            let shape = |key: &str| -> Result<Vec<usize>, String> {
+                Ok(e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or(key.to_string())?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect())
+            };
+            let entry = ArtifactEntry {
+                model,
+                batch,
+                path: e.get("path").and_then(Json::as_str).ok_or("path")?.into(),
+                input_shape: shape("input_shape")?,
+                output_shape: shape("output_shape")?,
+                param_count: e
+                    .get("param_count")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+                slo_ms: e.get("slo_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            };
+            if entry.input_shape.first() != Some(&batch) {
+                return Err(format!(
+                    "{name} b={batch}: input shape {:?} does not lead with batch",
+                    entry.input_shape
+                ));
+            }
+            entries.insert((model, batch), entry);
+        }
+        if entries.is_empty() {
+            return Err("manifest has no entries".into());
+        }
+        Ok(ArtifactIndex { dir: dir.to_string(), batch_sizes, entries })
+    }
+
+    pub fn get(&self, model: ModelId, batch: usize) -> Option<&ArtifactEntry> {
+        self.entries.get(&(model, batch))
+    }
+
+    /// Smallest compiled batch ≥ `want` for `model` (TensorRT-style pad-up;
+    /// falls back to the largest compiled batch when `want` exceeds it).
+    pub fn batch_for(&self, model: ModelId, want: usize) -> Option<usize> {
+        let mut available: Vec<usize> = self
+            .entries
+            .keys()
+            .filter(|(m, _)| *m == model)
+            .map(|(_, b)| *b)
+            .collect();
+        available.sort_unstable();
+        available
+            .iter()
+            .find(|&&b| b >= want)
+            .or(available.last())
+            .copied()
+    }
+
+    pub fn models(&self) -> Vec<ModelId> {
+        let mut ms: Vec<ModelId> =
+            self.entries.keys().map(|(m, _)| *m).collect();
+        ms.dedup();
+        ms
+    }
+
+    pub fn full_path(&self, entry: &ArtifactEntry) -> String {
+        format!("{}/{}", self.dir, entry.path)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "format": "bcedge-aot-v1", "return_tuple": true,
+      "batch_sizes": [1, 4],
+      "models": ["res"],
+      "entries": [
+        {"model": "res", "batch": 1, "path": "res_b1.hlo.txt",
+         "input_shape": [1, 3, 32, 32], "output_shape": [1, 10],
+         "param_count": 100, "slo_ms": 58.0},
+        {"model": "res", "batch": 4, "path": "res_b4.hlo.txt",
+         "input_shape": [4, 3, 32, 32], "output_shape": [4, 10],
+         "param_count": 100, "slo_ms": 58.0}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let idx = ArtifactIndex::parse("/tmp/a", MINI).unwrap();
+        assert_eq!(idx.len(), 2);
+        let e = idx.get(ModelId::Res, 4).unwrap();
+        assert_eq!(e.input_shape, vec![4, 3, 32, 32]);
+        assert_eq!(idx.full_path(e), "/tmp/a/res_b4.hlo.txt");
+    }
+
+    #[test]
+    fn batch_for_pads_up_and_clamps() {
+        let idx = ArtifactIndex::parse("/tmp/a", MINI).unwrap();
+        assert_eq!(idx.batch_for(ModelId::Res, 1), Some(1));
+        assert_eq!(idx.batch_for(ModelId::Res, 2), Some(4));
+        assert_eq!(idx.batch_for(ModelId::Res, 3), Some(4));
+        assert_eq!(idx.batch_for(ModelId::Res, 100), Some(4)); // clamp
+        assert_eq!(idx.batch_for(ModelId::Yolo, 1), None);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(ArtifactIndex::parse("/", "{}").is_err());
+        assert!(ArtifactIndex::parse(
+            "/",
+            r#"{"format":"bcedge-aot-v1","return_tuple":false,"batch_sizes":[],"entries":[]}"#
+        )
+        .is_err());
+        // batch/shape mismatch
+        let bad = MINI.replace("\"input_shape\": [4, 3, 32, 32]",
+                               "\"input_shape\": [2, 3, 32, 32]");
+        assert!(ArtifactIndex::parse("/", &bad).is_err());
+    }
+
+    #[test]
+    fn loads_repo_manifest_if_built() {
+        // Integration against the real AOT output when present.
+        if let Ok(idx) = ArtifactIndex::load("artifacts") {
+            assert_eq!(idx.models().len(), 6);
+            for m in ModelId::all() {
+                assert!(idx.get(m, 1).is_some(), "{m:?} b=1 missing");
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Execution runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and runs them on the PJRT CPU client, plus the
+//! virtual-time simulation backend used by the long-horizon experiments.
+//!
+//! Python never appears here — the artifacts are self-contained HLO with
+//! weights baked in as constants, so the request path is pure rust + XLA.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactEntry, ArtifactIndex};
+pub use executor::{BatchJob, Dispatcher, ExecError, RealDispatcher, SimDispatcher};
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,158 @@
+//! PJRT execution of the AOT artifacts — the real inference backend.
+//!
+//! Pipeline per artifact (see /opt/xla-example/load_hlo and DESIGN.md §1):
+//! HLO text → `HloModuleProto::from_text_file` (the text parser reassigns
+//! the 64-bit instruction ids jax ≥ 0.5 emits, which xla_extension 0.5.1
+//! would otherwise reject) → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → cached `PjRtLoadedExecutable`.
+//!
+//! Executables are compiled lazily per (model, batch) and cached for the
+//! life of the runtime — the TensorRT-engine-per-batch analogue. Inputs
+//! are f32 for every model (bert casts ids in-graph), outputs are a
+//! 1-tuple (lowered with `return_tuple=True`).
+
+use super::artifacts::{ArtifactEntry, ArtifactIndex};
+use crate::workload::models::ModelId;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Cached PJRT runtime over an artifact directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    index: ArtifactIndex,
+    cache: Mutex<HashMap<(ModelId, usize), xla::PjRtLoadedExecutable>>,
+}
+
+// SAFETY: the `xla` crate wraps PJRT handles in `Rc`, which makes the
+// struct !Send/!Sync even though the underlying PJRT C API specifies that
+// `PJRT_LoadedExecutable_Execute` and client queries are thread-safe. We
+// uphold the needed discipline manually:
+//  * the `Rc` refcounts are only touched at construction (single thread)
+//    and drop (single owner via `Arc<PjrtRuntime>` — the Arc serializes
+//    the final drop);
+//  * compilation (which mutates client state) is serialized under the
+//    `cache` mutex (see `warm`);
+//  * concurrent `execute` calls only read the raw executable pointer.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+/// Result of one batch execution.
+#[derive(Clone, Debug)]
+pub struct ExecOutput {
+    /// Flattened f32 outputs, row-major over the artifact's output shape.
+    pub data: Vec<f32>,
+    pub output_shape: Vec<usize>,
+    /// Wall-clock execution latency (compile excluded), ms.
+    pub latency_ms: f64,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client over `dir` (must contain manifest.json).
+    pub fn load(dir: &str) -> anyhow::Result<PjrtRuntime> {
+        let index = ArtifactIndex::load(dir)
+            .map_err(|e| anyhow::anyhow!("artifact index: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, index, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn index(&self) -> &ArtifactIndex {
+        &self.index
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure the (model, batch) executable is compiled and cached.
+    /// Returns the compile time in ms (0 when already cached). The cache
+    /// lock is held across compilation on purpose: PJRT compilation is the
+    /// one client operation we must serialize (see the SAFETY note above).
+    pub fn warm(&self, model: ModelId, batch: usize) -> anyhow::Result<f64> {
+        let key = (model, batch);
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(&key) {
+            return Ok(0.0);
+        }
+        let entry = self
+            .index
+            .get(model, batch)
+            .ok_or_else(|| anyhow::anyhow!("no artifact for {model:?} b={batch}"))?
+            .clone();
+        let t0 = std::time::Instant::now();
+        let exe = self.compile_entry(&entry)?;
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        cache.insert(key, exe);
+        Ok(dt)
+    }
+
+    fn compile_entry(&self, entry: &ArtifactEntry)
+                     -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let path = self.index.full_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Execute one batch. `input` must contain exactly
+    /// `prod(entry.input_shape)` f32 values (padded by the batcher).
+    pub fn execute(&self, model: ModelId, batch: usize, input: &[f32])
+                   -> anyhow::Result<ExecOutput> {
+        self.warm(model, batch)?;
+        let entry = self.index.get(model, batch).unwrap();
+        let want: usize = entry.input_shape.iter().product();
+        anyhow::ensure!(
+            input.len() == want,
+            "input length {} != expected {want} for {model:?} b={batch}",
+            input.len()
+        );
+        let dims: Vec<i64> =
+            entry.input_shape.iter().map(|&d| d as i64).collect();
+        let literal = xla::Literal::vec1(input).reshape(&dims)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(&(model, batch)).unwrap();
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&[literal])?[0][0]
+            .to_literal_sync()?;
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        Ok(ExecOutput {
+            data,
+            output_shape: entry.output_shape.clone(),
+            latency_ms,
+        })
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end smoke across the PJRT bridge. Skips silently when
+    /// `make artifacts` has not run (CI builds artifacts first).
+    #[test]
+    fn executes_res_artifact() {
+        let Ok(rt) = PjrtRuntime::load("artifacts") else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let entry = rt.index().get(ModelId::Res, 1).unwrap().clone();
+        let n: usize = entry.input_shape.iter().product();
+        let input = vec![0.5f32; n];
+        let out = rt.execute(ModelId::Res, 1, &input).unwrap();
+        assert_eq!(out.data.len(),
+                   entry.output_shape.iter().product::<usize>());
+        assert!(out.data.iter().all(|x| x.is_finite()));
+        assert!(out.latency_ms > 0.0);
+        // Determinism: weights are baked constants.
+        let out2 = rt.execute(ModelId::Res, 1, &input).unwrap();
+        assert_eq!(out.data, out2.data);
+        // Wrong input size is rejected.
+        assert!(rt.execute(ModelId::Res, 1, &input[..n - 1]).is_err());
+    }
+}

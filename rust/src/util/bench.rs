@@ -1,0 +1,114 @@
+//! Micro-bench timing harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with mean / p50 / p99 reporting,
+//! and a tiny CSV writer the figure benches share. Each bench binary under
+//! `rust/benches/` is `harness = false` and drives this module directly.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+/// Result of a timed measurement.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub min_us: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn time_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Timing {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean_us: mean,
+        p50_us: super::stats::percentile_sorted(&samples, 0.5),
+        p99_us: super::stats::percentile_sorted(&samples, 0.99),
+        min_us: samples[0],
+    }
+}
+
+impl Timing {
+    /// Human-readable one-liner (the bench binaries print a table of these).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>8} it  mean {:>10.2} µs  p50 {:>10.2} µs  p99 {:>10.2} µs",
+            self.name, self.iters, self.mean_us, self.p50_us, self.p99_us
+        )
+    }
+}
+
+/// Minimal CSV writer: header once, then rows; creates parent dirs.
+pub struct Csv {
+    file: std::fs::File,
+}
+
+impl Csv {
+    pub fn create(path: &str, header: &str) -> std::io::Result<Csv> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{header}")?;
+        Ok(Csv { file })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        writeln!(self.file, "{}", fields.join(","))
+    }
+
+    pub fn rowf(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|x| format!("{x}")).collect();
+        self.row(&strs)
+    }
+}
+
+/// Format helper used by bench mains: section banner.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_something() {
+        let t = time_fn("spin", 2, 20, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(t.mean_us > 0.0);
+        assert!(t.p99_us >= t.p50_us);
+        assert!(t.p50_us >= t.min_us);
+        assert_eq!(t.iters, 20);
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let path = std::env::temp_dir().join("bcedge_csv_test.csv");
+        let path = path.to_str().unwrap();
+        let mut csv = Csv::create(path, "a,b").unwrap();
+        csv.row(&["1".into(), "2".into()]).unwrap();
+        csv.rowf(&[3.5, 4.5]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3.5,4.5\n");
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny command-line parser (`--key value`, `--flag`, positional args)
+//! for the `bcedge` launcher, examples, and benches. No clap offline.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options, flags, and positionals, in declaration order.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    /// `flag_names` lists valueless switches; anything else starting with
+    /// `--` consumes the next token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        flag_names: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{name} needs a value"))?;
+                    out.opts.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(flag_names: &[&str]) -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        let a = Args::parse(
+            v(&["serve", "--rps", "30", "--verbose", "--out=x.csv", "tail"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["serve".to_string(), "tail".to_string()]);
+        assert_eq!(a.get("rps"), Some("30"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_access_and_defaults() {
+        let a = Args::parse(v(&["--n", "5"]), &[]).unwrap();
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 5);
+        assert_eq!(a.get_parse("m", 7usize).unwrap(), 7);
+        assert!(a.get_parse::<usize>("n", 0).is_ok());
+        let b = Args::parse(v(&["--n", "xyz"]), &[]).unwrap();
+        assert!(b.get_parse::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(v(&["--rps"]), &[]).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! From-scratch substrates: RNG, JSON, CLI, statistics, clocks, thread
+//! pool, property testing, bench timing.
+//!
+//! The offline build environment ships no general-purpose crates (no rand /
+//! serde / tokio / clap / criterion / proptest), so BCEdge implements the
+//! slices it needs. Each submodule is deliberately small, documented, and
+//! unit-tested — they are part of the reproduction surface, not throwaway
+//! glue.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod time;

@@ -1,0 +1,161 @@
+//! Fixed-size worker thread pool with a shared injector queue.
+//!
+//! Replaces the async runtime we would otherwise pull in: the coordinator's
+//! executor needs "run these batch jobs on up to N OS threads and tell me
+//! when each finishes", which a condvar-backed queue does with less
+//! machinery (and more deterministic behaviour) than an async reactor.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<(VecDeque<Job>, bool)>, // (jobs, shutting_down)
+    available: Condvar,
+    in_flight: AtomicUsize,
+    idle: Condvar,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n_threads` workers (≥ 1 enforced).
+    pub fn new(n_threads: usize) -> Self {
+        let n = n_threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            available: Condvar::new(),
+            in_flight: AtomicUsize::new(0),
+            idle: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("bcedge-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        let mut q = self.shared.queue.lock().unwrap();
+        assert!(!q.1, "execute on shut-down pool");
+        q.0.push_back(Box::new(job));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while !q.0.is_empty() || self.shared.in_flight.load(Ordering::SeqCst) > 0
+        {
+            q = self.shared.idle.wait(q).unwrap();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.0.pop_front() {
+                    break job;
+                }
+                if q.1 {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        job();
+        if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Possibly the last job: wake any wait_idle() callers.
+            let _guard = shared.queue.lock().unwrap();
+            shared.idle.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.1 = true;
+        }
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU32::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        use std::time::{Duration, Instant};
+        let pool = ThreadPool::new(4);
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            pool.execute(|| std::thread::sleep(Duration::from_millis(50)));
+        }
+        pool.wait_idle();
+        // 4 × 50 ms on 4 threads should take ~50 ms, not 200 ms.
+        assert!(t0.elapsed() < Duration::from_millis(160));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU32::new(0));
+        for _ in 0..10 {
+            let c = counter.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not hang; workers drain or exit cleanly
+    }
+}

@@ -1,0 +1,154 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! A [`Gen`] produces random values from a [`Pcg32`]; [`check`] runs a
+//! property over many generated cases and, on failure, reports the seed and
+//! a debug dump of the offending input so the case can be replayed
+//! deterministically. Used by the coordinator invariants suite
+//! (`rust/tests/prop_*.rs`).
+
+use super::rng::Pcg32;
+
+/// A generator of random test inputs.
+pub trait Gen {
+    type Output;
+    fn generate(&self, rng: &mut Pcg32) -> Self::Output;
+}
+
+impl<T, F: Fn(&mut Pcg32) -> T> Gen for F {
+    type Output = T;
+    fn generate(&self, rng: &mut Pcg32) -> T {
+        self(rng)
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Env var lets CI vary the seed; a fixed default keeps local runs
+        // reproducible.
+        let seed = std::env::var("BCEDGE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xBCED_6E00);
+        Config { cases: 256, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panic with a replayable
+/// report on the first failure (either a returned `Err` or a panic inside
+/// the property).
+pub fn check_with<G, F>(cfg: Config, gen: &G, prop: F)
+where
+    G: Gen,
+    G::Output: std::fmt::Debug,
+    F: Fn(&G::Output) -> Result<(), String> + std::panic::RefUnwindSafe,
+    G::Output: std::panic::RefUnwindSafe,
+{
+    let mut rng = Pcg32::seeded(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen.generate(&mut rng);
+        let outcome = std::panic::catch_unwind(|| prop(&input));
+        let failed = match &outcome {
+            Ok(Ok(())) => None,
+            Ok(Err(msg)) => Some(msg.clone()),
+            Err(_) => Some("property panicked".to_string()),
+        };
+        if let Some(msg) = failed {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}):\n  input: {:?}\n  reason: {msg}\n  replay: BCEDGE_PROP_SEED={}",
+                cfg.cases, cfg.seed, input, cfg.seed
+            );
+        }
+    }
+}
+
+/// `check` with the default configuration.
+pub fn check<G, F>(gen: &G, prop: F)
+where
+    G: Gen,
+    G::Output: std::fmt::Debug + std::panic::RefUnwindSafe,
+    F: Fn(&G::Output) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    check_with(Config::default(), gen, prop)
+}
+
+// ---------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------
+
+/// Vec of `len ∈ [0, max_len]` values from an element generator closure.
+pub fn vec_of<T>(
+    max_len: usize,
+    elem: impl Fn(&mut Pcg32) -> T + Copy,
+) -> impl Fn(&mut Pcg32) -> Vec<T> {
+    move |rng: &mut Pcg32| {
+        let len = rng.below(max_len as u32 + 1) as usize;
+        (0..len).map(|_| elem(rng)).collect()
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn f64_in(lo: f64, hi: f64) -> impl Fn(&mut Pcg32) -> f64 {
+    move |rng: &mut Pcg32| lo + rng.f64() * (hi - lo)
+}
+
+/// Uniform usize in [lo, hi).
+pub fn usize_in(lo: usize, hi: usize) -> impl Fn(&mut Pcg32) -> usize {
+    move |rng: &mut Pcg32| rng.range(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(&vec_of(20, |r| r.f64()), |xs: &Vec<f64>| {
+            if xs.iter().all(|x| (0.0..1.0).contains(x)) {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check_with(
+            Config { cases: 50, seed: 1 },
+            &usize_in(0, 100),
+            |&x: &usize| if x < 90 { Ok(()) } else { Err(format!("{x} too big")) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn panicking_property_is_caught() {
+        check_with(
+            Config { cases: 10, seed: 2 },
+            &usize_in(0, 10),
+            |&x: &usize| {
+                assert!(x < 5, "boom");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut rng = Pcg32::seeded(seed);
+            let gen = vec_of(5, |r| r.below(100));
+            (0..10).map(|_| gen(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

@@ -1,0 +1,125 @@
+//! Open-loop Poisson arrival generator — the paper's request model:
+//! "requests arrive at BCEdge online at random with a Poisson
+//! distribution", default 30 rps (§V-A).
+
+use super::models::{ModelId, ModelSpec, N_MODELS};
+use super::request::Request;
+use crate::util::rng::Pcg32;
+
+/// Poisson request source over the model zoo.
+#[derive(Clone, Debug)]
+pub struct PoissonGenerator {
+    /// Aggregate arrival rate, requests/second.
+    pub rps: f64,
+    /// Per-model mixing weights (normalized internally).
+    pub mix: [f64; N_MODELS],
+    next_id: u64,
+    now_ms: f64,
+    rng: Pcg32,
+}
+
+impl PoissonGenerator {
+    /// Uniform mix over the whole zoo at `rps` requests/second.
+    pub fn new(rps: f64, seed: u64) -> Self {
+        PoissonGenerator {
+            rps,
+            mix: [1.0; N_MODELS],
+            next_id: 0,
+            now_ms: 0.0,
+            rng: Pcg32::seeded(seed),
+        }
+    }
+
+    /// Restrict to a subset of models (Fig. 11 uses {yolo, res, bert}).
+    pub fn with_models(mut self, models: &[ModelId]) -> Self {
+        self.mix = [0.0; N_MODELS];
+        for &m in models {
+            self.mix[m as usize] = 1.0;
+        }
+        self
+    }
+
+    /// Weighted mix.
+    pub fn with_mix(mut self, mix: [f64; N_MODELS]) -> Self {
+        assert!(mix.iter().any(|&w| w > 0.0));
+        self.mix = mix;
+        self
+    }
+
+    /// Next request (exponential inter-arrival, categorical model pick).
+    pub fn next_request(&mut self) -> Request {
+        let dt_ms = self.rng.exponential(self.rps) * 1e3;
+        self.now_ms += dt_ms;
+        let model = ModelId::from_index(self.rng.categorical(&self.mix));
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut r = Request::new(id, model, self.now_ms);
+        // Simulated IoT→edge transmission (Eq. 2 tᵢ_t): ~1–3 ms for an
+        // image frame on local Wi-Fi/Ethernet, scaled by input size.
+        let elems = ModelSpec::get(model).input_elems as f64;
+        r.transmission_ms = 0.5 + 2.5 * (elems / 3072.0).min(1.0) * self.rng.f64();
+        r
+    }
+
+    /// All requests arriving within [0, horizon_ms).
+    pub fn generate_horizon(&mut self, horizon_ms: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        loop {
+            let r = self.next_request();
+            if r.arrival_ms >= horizon_ms {
+                break;
+            }
+            out.push(r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_rate_matches_rps() {
+        let mut g = PoissonGenerator::new(30.0, 7);
+        let reqs = g.generate_horizon(60_000.0); // 60 s
+        let rate = reqs.len() as f64 / 60.0;
+        assert!((rate - 30.0).abs() < 2.0, "rate {rate}");
+    }
+
+    #[test]
+    fn arrivals_are_monotone_with_unique_ids() {
+        let mut g = PoissonGenerator::new(50.0, 8);
+        let reqs = g.generate_horizon(10_000.0);
+        assert!(reqs.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), reqs.len());
+    }
+
+    #[test]
+    fn model_restriction_respected() {
+        let mut g = PoissonGenerator::new(100.0, 9)
+            .with_models(&[ModelId::Yolo, ModelId::Bert]);
+        let reqs = g.generate_horizon(5_000.0);
+        assert!(!reqs.is_empty());
+        assert!(reqs
+            .iter()
+            .all(|r| r.model == ModelId::Yolo || r.model == ModelId::Bert));
+        assert!(reqs.iter().any(|r| r.model == ModelId::Yolo));
+        assert!(reqs.iter().any(|r| r.model == ModelId::Bert));
+    }
+
+    #[test]
+    fn interarrival_is_exponential_ish() {
+        // CV (std/mean) of exponential inter-arrivals ≈ 1.
+        let mut g = PoissonGenerator::new(100.0, 10);
+        let reqs = g.generate_horizon(100_000.0);
+        let gaps: Vec<f64> = reqs.windows(2).map(|w| w[1].arrival_ms - w[0].arrival_ms).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.1, "cv {cv}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Request model and workload generation (paper §III-A1, §V-A).
+
+pub mod generator;
+pub mod models;
+pub mod request;
+pub mod trace;
+
+pub use generator::PoissonGenerator;
+pub use models::{ModelId, ModelSpec, N_MODELS};
+pub use request::Request;
+pub use trace::Trace;

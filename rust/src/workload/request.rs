@@ -1,0 +1,59 @@
+//! Inference request (paper §III-A1): rᵢ = {model type, input type,
+//! input shape, SLOᵢ}.
+
+use super::models::{ModelId, ModelSpec};
+
+/// Unique request identifier.
+pub type RequestId = u64;
+
+/// One inference request as it flows through the coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    pub model: ModelId,
+    /// Arrival timestamp at the edge platform, ms.
+    pub arrival_ms: f64,
+    /// Service-level objective (deadline budget), ms. Defaults to the
+    /// model's Table-IV SLO but is per-request, as in the paper.
+    pub slo_ms: f64,
+    /// Simulated network transmission time already spent reaching the
+    /// platform (tᵢ_t of Eq. 2).
+    pub transmission_ms: f64,
+}
+
+impl Request {
+    /// Request with the model's default SLO and no transmission delay.
+    pub fn new(id: RequestId, model: ModelId, arrival_ms: f64) -> Self {
+        Request {
+            id,
+            model,
+            arrival_ms,
+            slo_ms: ModelSpec::get(model).slo_ms,
+            transmission_ms: 0.0,
+        }
+    }
+
+    /// Absolute deadline: arrival + SLO.
+    pub fn deadline_ms(&self) -> f64 {
+        self.arrival_ms + self.slo_ms
+    }
+
+    /// Remaining SLO budget at time `now_ms` (negative = already late).
+    pub fn slack_ms(&self, now_ms: f64) -> f64 {
+        self.deadline_ms() - now_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_table_iv() {
+        let r = Request::new(1, ModelId::Res, 100.0);
+        assert_eq!(r.slo_ms, 58.0);
+        assert_eq!(r.deadline_ms(), 158.0);
+        assert_eq!(r.slack_ms(150.0), 8.0);
+        assert!(r.slack_ms(160.0) < 0.0);
+    }
+}

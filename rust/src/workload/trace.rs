@@ -1,0 +1,100 @@
+//! Workload trace record/replay: freeze a generated arrival sequence to
+//! JSON so experiments are replayable bit-for-bit across schedulers (the
+//! paper compares schedulers under the *same* arrival process).
+
+use super::models::ModelId;
+use super::request::Request;
+use crate::util::json::{self, Json};
+
+/// A recorded arrival sequence.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn from_requests(requests: Vec<Request>) -> Self {
+        Trace { requests }
+    }
+
+    /// Serialize to JSON text.
+    pub fn to_json(&self) -> String {
+        let items = self.requests.iter().map(|r| {
+            json::obj(vec![
+                ("id", json::num(r.id as f64)),
+                ("model", json::s(r.model.name())),
+                ("arrival_ms", json::num(r.arrival_ms)),
+                ("slo_ms", json::num(r.slo_ms)),
+                ("tx_ms", json::num(r.transmission_ms)),
+            ])
+        });
+        json::obj(vec![
+            ("format", json::s("bcedge-trace-v1")),
+            ("requests", json::arr(items)),
+        ])
+        .to_string()
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json(text: &str) -> Result<Trace, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        if v.get("format").and_then(Json::as_str) != Some("bcedge-trace-v1") {
+            return Err("not a bcedge trace".into());
+        }
+        let items = v
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or("missing requests")?;
+        let mut requests = Vec::with_capacity(items.len());
+        for it in items {
+            let model_name =
+                it.get("model").and_then(Json::as_str).ok_or("model")?;
+            let model =
+                ModelId::from_name(model_name).ok_or("unknown model")?;
+            let mut r = Request::new(
+                it.get("id").and_then(Json::as_f64).ok_or("id")? as u64,
+                model,
+                it.get("arrival_ms").and_then(Json::as_f64).ok_or("arrival")?,
+            );
+            r.slo_ms = it.get("slo_ms").and_then(Json::as_f64).ok_or("slo")?;
+            r.transmission_ms =
+                it.get("tx_ms").and_then(Json::as_f64).unwrap_or(0.0);
+            requests.push(r);
+        }
+        Ok(Trace { requests })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    pub fn load(path: &str) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generator::PoissonGenerator;
+
+    #[test]
+    fn json_round_trip() {
+        let mut g = PoissonGenerator::new(40.0, 3);
+        let trace = Trace::from_requests(g.generate_horizon(2_000.0));
+        let text = trace.to_json();
+        let back = Trace::from_json(&text).unwrap();
+        assert_eq!(trace, back);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Trace::from_json("{}").is_err());
+        assert!(Trace::from_json("not json").is_err());
+        assert!(Trace::from_json(
+            r#"{"format":"bcedge-trace-v1","requests":[{"model":"vgg"}]}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! Property-based invariants on the coordinator (routing, batching,
+//! queues, memory, action spaces) via the `util::prop` mini-framework —
+//! the "L3 proptest on coordinator invariants" suite.
+
+use bcedge::coordinator::batcher::Batcher;
+use bcedge::coordinator::queue::{ModelQueue, Router};
+use bcedge::platform::MemoryPool;
+use bcedge::rl::ActionSpace;
+use bcedge::util::prop::{check, check_with, Config};
+use bcedge::util::rng::Pcg32;
+use bcedge::workload::models::ModelId;
+use bcedge::workload::request::Request;
+
+fn random_requests(rng: &mut Pcg32, n: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|id| {
+            let model = ModelId::from_index(rng.range(0, 6));
+            let mut r = Request::new(id, model, rng.f64() * 1000.0);
+            r.slo_ms = 20.0 + rng.f64() * 150.0;
+            r
+        })
+        .collect()
+}
+
+#[test]
+fn router_conserves_requests() {
+    check(
+        &|rng: &mut Pcg32| {
+            let n = rng.range(0, 200);
+            random_requests(rng, n)
+        },
+        |reqs: &Vec<Request>| {
+            let mut router = Router::new();
+            for r in reqs {
+                router.route(r.clone());
+            }
+            if router.total_queued() != reqs.len() {
+                return Err(format!(
+                    "queued {} != routed {}",
+                    router.total_queued(),
+                    reqs.len()
+                ));
+            }
+            // Drain everything; ids must be a permutation of the input.
+            let mut ids = Vec::new();
+            for m in ModelId::all() {
+                let q = router.queue_mut(m);
+                while let Some(r) = q.pop() {
+                    if r.model != m {
+                        return Err(format!("{:?} in {:?} queue", r.model, m));
+                    }
+                    ids.push(r.id);
+                }
+            }
+            ids.sort_unstable();
+            let mut want: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+            want.sort_unstable();
+            if ids != want {
+                return Err("drain is not a permutation of input".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn queue_pops_in_slo_order() {
+    check(
+        &|rng: &mut Pcg32| {
+            let n = rng.range(1, 100);
+            random_requests(rng, n)
+        },
+        |reqs: &Vec<Request>| {
+            let mut q = ModelQueue::new();
+            for r in reqs {
+                q.push(r.clone());
+            }
+            let mut last_slo = f64::NEG_INFINITY;
+            while let Some(r) = q.pop() {
+                if r.slo_ms < last_slo - 1e-9 {
+                    return Err(format!(
+                        "SLO order violated: {} after {last_slo}",
+                        r.slo_ms
+                    ));
+                }
+                last_slo = r.slo_ms;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_respects_bounds_and_conserves() {
+    check(
+        &|rng: &mut Pcg32| {
+            let n = rng.range(0, 120);
+            (
+                random_requests(rng, n),
+                rng.range(1, 130),  // b
+                rng.range(1, 9),    // m_c
+                rng.below(2) == 0,  // pad to artifacts?
+            )
+        },
+        |(reqs, b, m_c, pad): &(Vec<Request>, usize, usize, bool)| {
+            let mut q = ModelQueue::new();
+            for r in reqs {
+                q.push(r.clone());
+            }
+            let before = q.len();
+            let batcher = if *pad {
+                Batcher::for_artifacts()
+            } else {
+                Batcher::exact()
+            };
+            let batches = batcher.assemble(&mut q, *b, *m_c);
+            if batches.len() > *m_c {
+                return Err(format!("{} batches > m_c {}", batches.len(), m_c));
+            }
+            let mut total = 0;
+            for batch in &batches {
+                if batch.n_real() == 0 {
+                    return Err("empty assembled batch".into());
+                }
+                if batch.n_real() > *b {
+                    return Err(format!("batch {} > b {}", batch.n_real(), b));
+                }
+                if batch.padded < batch.n_real() {
+                    return Err("padding below real count".into());
+                }
+                total += batch.n_real();
+            }
+            if total + q.len() != before {
+                return Err(format!(
+                    "conservation: {total} drained + {} left != {before}",
+                    q.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn memory_pool_never_over_commits() {
+    check(
+        &|rng: &mut Pcg32| {
+            let ops: Vec<(bool, f64)> = (0..rng.range(1, 64))
+                .map(|_| (rng.below(3) > 0, rng.f64() * 400.0))
+                .collect();
+            ops
+        },
+        |ops: &Vec<(bool, f64)>| {
+            let mut pool = MemoryPool::new(1000.0);
+            let mut tickets = Vec::new();
+            for (reserve, mb) in ops {
+                if *reserve {
+                    if let Ok(t) = pool.reserve(*mb) {
+                        tickets.push(t);
+                    }
+                } else if !tickets.is_empty() {
+                    pool.release(tickets.remove(0));
+                }
+                if pool.used_mb() > pool.capacity_mb() + 1e-9 {
+                    return Err(format!("over-commit: {}", pool.used_mb()));
+                }
+                if pool.used_mb() < -1e-9 {
+                    return Err("negative usage".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn action_space_decode_encode_bijection() {
+    check_with(
+        Config { cases: 64, seed: 99 },
+        &|rng: &mut Pcg32| {
+            let nb = rng.range(1, 9);
+            let nc = rng.range(1, 9);
+            let batches: Vec<usize> = (0..nb).map(|i| 1 << i).collect();
+            let concs: Vec<usize> = (1..=nc).collect();
+            ActionSpace::new(batches, concs)
+        },
+        |space: &ActionSpace| {
+            for idx in 0..space.len() {
+                let (b, c) = space.decode(idx);
+                if space.encode(b, c) != Some(idx) {
+                    return Err(format!("{idx} -> ({b},{c}) not invertible"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sac_policy_remains_distribution_under_random_updates() {
+    use bcedge::rl::env::{Agent, Transition};
+    use bcedge::rl::sac::{DiscreteSac, SacConfig};
+    check_with(
+        Config { cases: 8, seed: 7 },
+        &|rng: &mut Pcg32| rng.next_u64(),
+        |&seed: &u64| {
+            let mut rng = Pcg32::seeded(seed);
+            let cfg = SacConfig { warmup: 16, batch_size: 16, ..Default::default() };
+            let mut sac = DiscreteSac::new(6, 5, cfg, &mut rng);
+            for _ in 0..80 {
+                let s: Vec<f32> = (0..6).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                let s2: Vec<f32> = (0..6).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                let a = sac.act(&s, &mut rng, false);
+                sac.observe(Transition {
+                    state: s,
+                    action: a,
+                    reward: rng.f32() * 10.0 - 5.0,
+                    next_state: s2,
+                    done: rng.below(10) == 0,
+                });
+                sac.update(&mut rng);
+            }
+            let p = sac.policy_probs(&[0.0, 0.1, -0.2, 0.5, -1.0, 2.0]);
+            let sum: f32 = p.iter().sum();
+            if (sum - 1.0).abs() > 1e-4 {
+                return Err(format!("policy not normalized: {sum}"));
+            }
+            if p.iter().any(|x| !x.is_finite() || *x < 0.0) {
+                return Err(format!("invalid probs: {p:?}"));
+            }
+            if !sac.alpha().is_finite() || sac.alpha() <= 0.0 {
+                return Err(format!("bad alpha {}", sac.alpha()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn poisson_generator_monotone_arrivals_any_seed() {
+    use bcedge::workload::PoissonGenerator;
+    check_with(
+        Config { cases: 32, seed: 3 },
+        &|rng: &mut Pcg32| (rng.next_u64(), 1.0 + rng.f64() * 200.0),
+        |&(seed, rps): &(u64, f64)| {
+            let mut g = PoissonGenerator::new(rps, seed);
+            let reqs = g.generate_horizon(2_000.0);
+            let mut last = 0.0;
+            for r in &reqs {
+                if r.arrival_ms < last {
+                    return Err("non-monotone arrivals".into());
+                }
+                last = r.arrival_ms;
+                if r.slo_ms <= 0.0 {
+                    return Err("non-positive SLO".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn virtual_clock_monotone_under_random_ops() {
+    use bcedge::util::time::{Clock, VirtualClock};
+    check(
+        &|rng: &mut Pcg32| {
+            (0..rng.range(1, 100))
+                .map(|_| (rng.below(2) == 0, rng.f64() * 50.0))
+                .collect::<Vec<_>>()
+        },
+        |ops: &Vec<(bool, f64)>| {
+            let c = VirtualClock::new();
+            let mut last = 0.0;
+            for (advance_to, dt) in ops {
+                if *advance_to {
+                    c.advance_to_ms(last + dt);
+                } else {
+                    c.advance_ms(*dt);
+                }
+                let now = c.now_ms();
+                if now + 1e-9 < last {
+                    return Err(format!("time went backwards: {now} < {last}"));
+                }
+                last = now;
+            }
+            Ok(())
+        },
+    );
+}
