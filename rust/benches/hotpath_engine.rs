@@ -1,0 +1,254 @@
+//! Hot-path benchmark for the scheduling engine (perf PR #1) — the
+//! trajectory anchor for every future perf PR.
+//!
+//! Three sections, all on the shared `util::bench` harness:
+//!
+//! 1. **sim serving** — rounds/sec and µs/decision for the full engine
+//!    loop (SAC learning on, predictor on) at three offered loads;
+//! 2. **component before/after** — the seed implementations survive as
+//!    public oracles/wrappers (`*_naive_ms`, `mean_inflation_naive`,
+//!    `forward_cache`/`backward`), so the allocating "before" path and
+//!    the buffer-reusing "after" path are measured side by side in the
+//!    same binary;
+//! 3. **SAC update step** — µs per `update_batch` on the paper's network
+//!    shape, plus the allocating fwd+bwd core it replaced.
+//!
+//! Writes `BENCH_hotpath.json` at the repo root (falling back to the
+//! crate root when run elsewhere). Compare across commits by re-running
+//! `cargo bench --bench hotpath_engine` on each.
+
+use bcedge::coordinator::queue::ModelQueue;
+use bcedge::coordinator::sac_sched;
+use bcedge::coordinator::{Engine, EngineConfig};
+use bcedge::nn::mlp::{BackwardScratch, ForwardCache};
+use bcedge::nn::tensor::Mat;
+use bcedge::nn::Mlp;
+use bcedge::platform::PlatformSim;
+use bcedge::profiler::{ProfileSample, Profiler};
+use bcedge::rl::env::{Agent, Transition};
+use bcedge::rl::sac::{DiscreteSac, SacConfig};
+use bcedge::rl::ActionSpace;
+use bcedge::runtime::executor::SimDispatcher;
+use bcedge::util::bench::{banner, time_fn};
+use bcedge::util::json::{arr, num, obj, s, Json};
+use bcedge::util::rng::Pcg32;
+use bcedge::util::time::VirtualClock;
+use bcedge::workload::models::ModelId;
+use bcedge::workload::request::Request;
+use bcedge::workload::PoissonGenerator;
+
+/// One serving run: SAC learning online, predictor on — the full
+/// decision + learning + dispatch + accounting path.
+fn serving_run(rps_per_model: f64, horizon_ms: f64) -> (u64, f64) {
+    let clock = VirtualClock::new();
+    let dispatcher = SimDispatcher::new(PlatformSim::xavier_nx(), clock);
+    let mut engine = Engine::new(dispatcher, EngineConfig::default());
+    let mut gen = PoissonGenerator::new(rps_per_model * 6.0, 0xBE);
+    engine.submit(gen.generate_horizon(horizon_ms));
+    let mut rng = Pcg32::seeded(0x5AC);
+    let mut sched = sac_sched::sac(ActionSpace::standard(), &mut rng);
+    let t0 = std::time::Instant::now();
+    let slots = engine.run(&mut sched, horizon_ms);
+    (slots, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    banner("hot-path engine benchmark (perf PR #1)");
+    let mut sections: Vec<(&str, Json)> = Vec::new();
+
+    // ---------------------------------------------------------------
+    // 1. Sim serving throughput at three load levels.
+    // ---------------------------------------------------------------
+    banner("sim serving (SAC + predictor, virtual horizon 120 s)");
+    let mut serving = Vec::new();
+    for rps in [10.0, 30.0, 90.0] {
+        let (slots, wall_s) = serving_run(rps, 120_000.0);
+        let slots_per_sec = slots as f64 / wall_s.max(1e-9);
+        let us_per_slot = wall_s * 1e6 / slots.max(1) as f64;
+        println!(
+            "{rps:>5.0} rps/model  {slots:>7} slots  {slots_per_sec:>12.0} slots/s  \
+             {us_per_slot:>8.2} µs/slot"
+        );
+        serving.push(obj(vec![
+            ("rps_per_model", num(rps)),
+            ("slots", num(slots as f64)),
+            ("slots_per_sec", num(slots_per_sec)),
+            ("us_per_slot", num(us_per_slot)),
+        ]));
+    }
+    sections.push(("sim_serving", arr(serving)));
+
+    // ---------------------------------------------------------------
+    // 2. Component before/after: queue + profiler aggregates.
+    // ---------------------------------------------------------------
+    banner("O(1) aggregates vs seed O(n) scans");
+    let mut q = ModelQueue::new();
+    let mut rng = Pcg32::seeded(7);
+    for id in 0..2048u64 {
+        let mut r = Request::new(id, ModelId::Res, rng.f64() * 1000.0);
+        r.slo_ms = 20.0 + rng.f64() * 150.0;
+        q.push(r);
+    }
+    let t_naive = time_fn("queue min_deadline naive (n=2048)", 100, 2000, || {
+        std::hint::black_box(q.min_deadline_naive_ms());
+    });
+    let t_roll = time_fn("queue min_deadline rolling", 100, 2000, || {
+        std::hint::black_box(q.min_deadline_ms());
+    });
+    println!("{}", t_naive.row());
+    println!("{}", t_roll.row());
+
+    let mut prof = Profiler::new(512);
+    for i in 0..512 {
+        prof.record(ProfileSample {
+            t_ms: i as f64,
+            model: ModelId::from_index(i % 6),
+            batch: 4,
+            concurrency: 2,
+            latency_ms: 25.0,
+            completed: 4,
+            compute_demand: 1.0,
+            memory_pressure: 0.4,
+            active_instances: 2,
+            inflation: 1.2,
+        });
+    }
+    let p_naive = time_fn("profiler mean_inflation naive (w=512)", 100, 2000,
+                          || {
+        std::hint::black_box(prof.mean_inflation_naive());
+    });
+    let p_roll = time_fn("profiler mean_inflation rolling", 100, 2000, || {
+        std::hint::black_box(prof.mean_inflation());
+    });
+    println!("{}", p_naive.row());
+    println!("{}", p_roll.row());
+    sections.push((
+        "aggregates",
+        obj(vec![
+            ("queue_naive_us", num(t_naive.mean_us)),
+            ("queue_rolling_us", num(t_roll.mean_us)),
+            ("queue_speedup", num(t_naive.mean_us / t_roll.mean_us.max(1e-9))),
+            ("profiler_naive_us", num(p_naive.mean_us)),
+            ("profiler_rolling_us", num(p_roll.mean_us)),
+            ("profiler_speedup",
+             num(p_naive.mean_us / p_roll.mean_us.max(1e-9))),
+        ]),
+    ));
+
+    // ---------------------------------------------------------------
+    // 3. NN core + SAC update: allocating seed path vs reused buffers.
+    // ---------------------------------------------------------------
+    banner("NN fwd+bwd: allocating (seed) vs buffer-reusing");
+    let mut rng = Pcg32::seeded(21);
+    // Paper shape: STATE_DIM-ish input, 128/64 hidden, action-grid output.
+    let net = Mlp::new(&[16, 128, 64, 24], &mut rng);
+    let x = Mat::kaiming(64, 16, &mut rng);
+    let d = Mat::kaiming(64, 24, &mut rng);
+    let t_alloc = time_fn("fwd_cache+bwd allocating (batch 64)", 20, 200, || {
+        let cache = net.forward_cache(&x);
+        std::hint::black_box(net.backward(&cache, &d));
+    });
+    let mut cache = ForwardCache::new();
+    let mut grads = Vec::new();
+    let mut scratch = BackwardScratch::new();
+    let t_into = time_fn("fwd_cache+bwd reused (batch 64)", 20, 200, || {
+        net.forward_cache_into(&x, &mut cache);
+        net.backward_into(&cache, &d, &mut grads, &mut scratch);
+        std::hint::black_box(&grads);
+    });
+    println!("{}", t_alloc.row());
+    println!("{}", t_into.row());
+
+    banner("full SAC update step: seed oracle vs scratch path");
+    let mk_sac = || {
+        let mut rng = Pcg32::seeded(33);
+        let cfg =
+            SacConfig { warmup: 64, batch_size: 64, ..Default::default() };
+        let mut sac = DiscreteSac::new(16, 24, cfg, &mut rng);
+        let mut feed = Pcg32::seeded(36);
+        for _ in 0..512 {
+            let st: Vec<f32> =
+                (0..16).map(|_| feed.f32() * 2.0 - 1.0).collect();
+            let nx: Vec<f32> =
+                (0..16).map(|_| feed.f32() * 2.0 - 1.0).collect();
+            let a = sac.act(&st, &mut feed, false);
+            sac.observe(Transition {
+                state: st,
+                action: a,
+                reward: feed.f32() * 2.0 - 1.0,
+                next_state: nx,
+                done: false,
+            });
+        }
+        sac
+    };
+    // The seed's allocating update survives as DiscreteSac::
+    // update_batch_alloc (bit-identical math, proven by the sac tests),
+    // so the >=2x acceptance target is measured directly here.
+    let mut sac_seed = mk_sac();
+    let mut rng_s = Pcg32::seeded(34);
+    let t_update_seed =
+        time_fn("sac update SEED alloc path (batch 64)", 20, 300, || {
+            std::hint::black_box(sac_seed.update_batch_alloc(&mut rng_s));
+        });
+    let mut sac = mk_sac();
+    let mut rng_u = Pcg32::seeded(34);
+    let t_update = time_fn("sac update scratch path (batch 64)", 20, 300, || {
+        std::hint::black_box(sac.update_batch(&mut rng_u));
+    });
+    println!("{}", t_update_seed.row());
+    println!("{}", t_update.row());
+    let mut rng_a = Pcg32::seeded(35);
+    let probe: Vec<f32> = (0..16).map(|_| rng_a.f32()).collect();
+    let t_act = time_fn("sac act (1 decision)", 100, 2000, || {
+        std::hint::black_box(sac.act(&probe, &mut rng_a, false));
+    });
+    println!("{}", t_act.row());
+    sections.push((
+        "nn_sac",
+        obj(vec![
+            ("fwd_bwd_alloc_us", num(t_alloc.mean_us)),
+            ("fwd_bwd_reused_us", num(t_into.mean_us)),
+            ("fwd_bwd_speedup",
+             num(t_alloc.mean_us / t_into.mean_us.max(1e-9))),
+            ("sac_update_seed_us", num(t_update_seed.mean_us)),
+            ("sac_update_us", num(t_update.mean_us)),
+            ("sac_update_speedup_vs_seed",
+             num(t_update_seed.mean_us / t_update.mean_us.max(1e-9))),
+            ("sac_act_us", num(t_act.mean_us)),
+        ]),
+    ));
+
+    // ---------------------------------------------------------------
+    // Emit BENCH_hotpath.json at the repo root.
+    // ---------------------------------------------------------------
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("bench", s("hotpath_engine")),
+        ("schema_version", num(1.0)),
+        ("note", s("regenerate with: cd rust && cargo bench --bench \
+                    hotpath_engine (release profile, lto=thin)")),
+        // Acceptance targets travel with every regeneration so re-runs
+        // never silently drop them. The serving ratio has no in-binary
+        // seed counterpart (the seed tree shipped no manifest and is
+        // unbuildable); it is proxied by the component speedups above,
+        // while the SAC ratio IS measured directly (update_batch_alloc
+        // is the seed path).
+        ("targets", obj(vec![
+            ("sac_update_step_speedup_vs_seed", num(2.0)),
+            ("sim_serving_slots_per_sec_speedup_vs_seed", num(1.5)),
+            ("sim_serving_measurement", s(
+                "proxy: seed tree unbuildable (no manifest); compare \
+                 aggregates.*_speedup + nn_sac.sac_update_speedup_vs_seed, \
+                 and track sim_serving.slots_per_sec across commits")),
+        ])),
+    ];
+    fields.extend(sections);
+    let json = obj(fields);
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_hotpath.json"
+    } else {
+        "BENCH_hotpath.json"
+    };
+    std::fs::write(path, json.to_string() + "\n").expect("write bench json");
+    println!("\nhotpath_engine OK — wrote {path}");
+}

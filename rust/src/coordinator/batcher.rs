@@ -56,8 +56,15 @@ impl Batcher {
     /// most `m_c` batches of at most `b` (paper Fig. 3: the dynamically
     /// created batches are distributed to all configured instances).
     /// Requests keep priority order: batch 0 gets the most urgent block.
-    pub fn assemble(&self, queue: &mut ModelQueue, b: usize, m_c: usize)
-                    -> Vec<AssembledBatch> {
+    ///
+    /// Writes into a caller-owned buffer, reusing both the
+    /// `AssembledBatch` entries and their inner request `Vec`s — the
+    /// engine recycles one buffer per model slot across rounds, so
+    /// steady-state assembly allocates nothing. Any pre-existing entries
+    /// in `out` must already be empty of requests (the engine clears them
+    /// on recycle).
+    pub fn assemble_into(&self, queue: &mut ModelQueue, b: usize,
+                         m_c: usize, out: &mut Vec<AssembledBatch>) {
         assert!(b > 0 && m_c > 0);
         // A chunk can never exceed the largest compiled engine — a
         // scheduler asking for more gets the engine ceiling (TensorRT
@@ -66,15 +73,34 @@ impl Batcher {
             None => b,
             Some(sizes) => b.min(*sizes.last().unwrap()),
         };
-        let take = (b * m_c).min(queue.len());
-        let drained = queue.drain(take);
-        drained
-            .chunks(b)
-            .map(|chunk| AssembledBatch {
-                requests: chunk.to_vec(),
-                padded: self.pad(chunk.len()),
-            })
-            .collect()
+        let mut remaining = (b * m_c).min(queue.len());
+        let mut used = 0;
+        while remaining > 0 {
+            let n = remaining.min(b);
+            if used == out.len() {
+                out.push(AssembledBatch {
+                    requests: Vec::with_capacity(n),
+                    padded: 0,
+                });
+            }
+            let batch = &mut out[used];
+            batch.requests.clear();
+            for _ in 0..n {
+                batch.requests.push(queue.pop().expect("queue under-count"));
+            }
+            batch.padded = self.pad(n);
+            used += 1;
+            remaining -= n;
+        }
+        out.truncate(used);
+    }
+
+    /// Allocating convenience wrapper over [`Batcher::assemble_into`].
+    pub fn assemble(&self, queue: &mut ModelQueue, b: usize, m_c: usize)
+                    -> Vec<AssembledBatch> {
+        let mut out = Vec::new();
+        self.assemble_into(queue, b, m_c, &mut out);
+        out
     }
 }
 
@@ -138,6 +164,27 @@ mod tests {
         ids.extend(q.drain(q.len()).iter().map(|r| r.id));
         ids.sort_unstable();
         assert_eq!(ids, (0..9).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn assemble_into_reuses_buffer_and_matches_assemble() {
+        let mut buf = Vec::new();
+        for round in 0..4 {
+            let mut q_into = filled_queue(9 + round);
+            let mut q_alloc = filled_queue(9 + round);
+            Batcher::exact().assemble_into(&mut q_into, 4, 3, &mut buf);
+            let fresh = Batcher::exact().assemble(&mut q_alloc, 4, 3);
+            assert_eq!(buf.len(), fresh.len());
+            for (a, b) in buf.iter().zip(&fresh) {
+                assert_eq!(a.padded, b.padded);
+                assert_eq!(a.requests, b.requests);
+            }
+            assert_eq!(q_into.len(), q_alloc.len());
+            // Recycle like the engine does: clear requests, keep buffers.
+            for b in buf.iter_mut() {
+                b.requests.clear();
+            }
+        }
     }
 
     #[test]

@@ -2,11 +2,19 @@
 //! the priority based on the SLO of inference requests in each queue, the
 //! shorter the SLO, the higher the priority … batch requests are scheduled
 //! in the order of arrival if have the same priority."
+//!
+//! The scheduler's state encoder reads the tightest deadline and oldest
+//! arrival on EVERY decision, so those aggregates are maintained as
+//! lazy-deletion min-heaps alongside the priority heap: `push`/`pop` stay
+//! O(log n) amortized and `min_deadline_ms`/`oldest_arrival_ms` are O(1)
+//! peeks instead of the O(n) scans the seed implementation used — decision
+//! cost no longer grows with queue depth (hot-path PR #1). The O(n) scans
+//! survive as `*_naive_ms` oracles for the equivalence tests.
 
 use crate::workload::models::{ModelId, N_MODELS};
 use crate::workload::request::Request;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 #[derive(Debug)]
 struct QueueItem {
@@ -40,11 +48,51 @@ impl Ord for QueueItem {
     }
 }
 
+/// Aggregate-heap entry: a (key, seq) pair ordered so the SMALLEST key is
+/// on top of the max-heap.
+#[derive(Debug)]
+struct KeyedEntry {
+    key: f64,
+    seq: u64,
+}
+
+impl PartialEq for KeyedEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for KeyedEntry {}
+
+impl PartialOrd for KeyedEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for KeyedEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .key
+            .partial_cmp(&self.key)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
 /// One model's pending-request queue.
+///
+/// Invariant: after every `push`/`pop`, the tops of `by_deadline` and
+/// `by_arrival` refer to live requests, so the O(1) aggregate reads never
+/// see a stale entry. Dead entries below the top are purged lazily as
+/// they surface.
 #[derive(Debug, Default)]
 pub struct ModelQueue {
     heap: BinaryHeap<QueueItem>,
     seq: u64,
+    by_deadline: BinaryHeap<KeyedEntry>,
+    by_arrival: BinaryHeap<KeyedEntry>,
+    dead_deadline: HashSet<u64>,
+    dead_arrival: HashSet<u64>,
 }
 
 impl ModelQueue {
@@ -53,12 +101,32 @@ impl ModelQueue {
     }
 
     pub fn push(&mut self, request: Request) {
-        self.heap.push(QueueItem { request, seq: self.seq });
+        let seq = self.seq;
         self.seq += 1;
+        self.by_deadline.push(KeyedEntry { key: request.deadline_ms(), seq });
+        self.by_arrival.push(KeyedEntry { key: request.arrival_ms, seq });
+        self.heap.push(QueueItem { request, seq });
     }
 
     pub fn pop(&mut self) -> Option<Request> {
-        self.heap.pop().map(|i| i.request)
+        let item = self.heap.pop()?;
+        self.dead_deadline.insert(item.seq);
+        self.dead_arrival.insert(item.seq);
+        Self::purge(&mut self.by_deadline, &mut self.dead_deadline);
+        Self::purge(&mut self.by_arrival, &mut self.dead_arrival);
+        Some(item.request)
+    }
+
+    /// Drop dead entries from the top of an aggregate heap so its peek is
+    /// always live.
+    fn purge(heap: &mut BinaryHeap<KeyedEntry>, dead: &mut HashSet<u64>) {
+        while let Some(top) = heap.peek() {
+            if dead.remove(&top.seq) {
+                heap.pop();
+            } else {
+                break;
+            }
+        }
     }
 
     pub fn peek(&self) -> Option<&Request> {
@@ -73,16 +141,34 @@ impl ModelQueue {
         self.heap.is_empty()
     }
 
+    /// Iterate queued requests in arbitrary (heap) order.
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.heap.iter().map(|i| &i.request)
+    }
+
     /// Earliest arrival among queued requests (for slack computation).
+    /// O(1): peek of the arrival aggregate heap.
     pub fn oldest_arrival_ms(&self) -> Option<f64> {
+        self.by_arrival.peek().map(|e| e.key)
+    }
+
+    /// Tightest deadline among queued requests. O(1).
+    pub fn min_deadline_ms(&self) -> Option<f64> {
+        self.by_deadline.peek().map(|e| e.key)
+    }
+
+    /// O(n) recomputation of [`ModelQueue::oldest_arrival_ms`] — the
+    /// seed implementation, kept as a test oracle.
+    pub fn oldest_arrival_naive_ms(&self) -> Option<f64> {
         self.heap
             .iter()
             .map(|i| i.request.arrival_ms)
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
-    /// Tightest deadline among queued requests.
-    pub fn min_deadline_ms(&self) -> Option<f64> {
+    /// O(n) recomputation of [`ModelQueue::min_deadline_ms`] — the seed
+    /// implementation, kept as a test oracle.
+    pub fn min_deadline_naive_ms(&self) -> Option<f64> {
         self.heap
             .iter()
             .map(|i| i.request.deadline_ms())
@@ -136,13 +222,31 @@ impl Router {
         self.routed
     }
 
-    /// Models with pending work, in round-robin order starting after
-    /// `after` (the engine's fairness walk).
-    pub fn busy_models_after(&self, after: usize) -> Vec<ModelId> {
+    /// First model with pending work after `after` in round-robin order —
+    /// the engine's fairness anchor, allocation-free.
+    pub fn first_busy_after(&self, after: usize) -> Option<ModelId> {
         (1..=N_MODELS)
             .map(|k| ModelId::from_index((after + k) % N_MODELS))
-            .filter(|m| !self.queue(*m).is_empty())
-            .collect()
+            .find(|m| !self.queue(*m).is_empty())
+    }
+
+    /// Models with pending work, in round-robin order starting after
+    /// `after`, written into a caller-owned buffer (hot path: the engine
+    /// reuses one buffer across rounds).
+    pub fn busy_models_into(&self, after: usize, out: &mut Vec<ModelId>) {
+        out.clear();
+        out.extend(
+            (1..=N_MODELS)
+                .map(|k| ModelId::from_index((after + k) % N_MODELS))
+                .filter(|m| !self.queue(*m).is_empty()),
+        );
+    }
+
+    /// Allocating convenience wrapper over [`Router::busy_models_into`].
+    pub fn busy_models_after(&self, after: usize) -> Vec<ModelId> {
+        let mut out = Vec::new();
+        self.busy_models_into(after, &mut out);
+        out
     }
 }
 
@@ -187,6 +291,48 @@ mod tests {
     }
 
     #[test]
+    fn rolling_aggregates_survive_pops() {
+        let mut q = ModelQueue::new();
+        // Pops come out in SLO order, which is neither deadline nor
+        // arrival order — exactly the interleaving that stresses the
+        // lazy-deletion heaps.
+        q.push(req(1, ModelId::Res, 100.0, 0.0)); // deadline 100
+        q.push(req(2, ModelId::Res, 20.0, 30.0)); // deadline 50 <- min
+        q.push(req(3, ModelId::Res, 60.0, 10.0)); // deadline 70
+        assert_eq!(q.min_deadline_ms(), Some(50.0));
+        assert_eq!(q.oldest_arrival_ms(), Some(0.0));
+        assert_eq!(q.pop().unwrap().id, 2); // removes the deadline min
+        assert_eq!(q.min_deadline_ms(), Some(70.0));
+        assert_eq!(q.oldest_arrival_ms(), Some(0.0));
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.min_deadline_ms(), Some(100.0));
+        assert_eq!(q.oldest_arrival_ms(), Some(0.0));
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.min_deadline_ms(), None);
+        assert_eq!(q.oldest_arrival_ms(), None);
+    }
+
+    #[test]
+    fn rolling_aggregates_match_naive_oracles() {
+        let mut rng = crate::util::rng::Pcg32::seeded(0xA66);
+        let mut q = ModelQueue::new();
+        for id in 0..400u64 {
+            if rng.below(3) > 0 || q.is_empty() {
+                q.push(req(id, ModelId::Res, 10.0 + rng.f64() * 150.0,
+                           rng.f64() * 1000.0));
+            } else {
+                q.pop();
+            }
+            assert_eq!(q.min_deadline_ms(), q.min_deadline_naive_ms());
+            assert_eq!(q.oldest_arrival_ms(), q.oldest_arrival_naive_ms());
+        }
+        while q.pop().is_some() {
+            assert_eq!(q.min_deadline_ms(), q.min_deadline_naive_ms());
+            assert_eq!(q.oldest_arrival_ms(), q.oldest_arrival_naive_ms());
+        }
+    }
+
+    #[test]
     fn router_routes_by_model() {
         let mut r = Router::new();
         r.route(req(1, ModelId::Yolo, 138.0, 0.0));
@@ -207,5 +353,9 @@ mod tests {
         // Starting after Mob (index 1): Bert (5) comes before Mob again.
         let order = r.busy_models_after(ModelId::Mob as usize);
         assert_eq!(order, vec![ModelId::Bert, ModelId::Mob]);
+        assert_eq!(r.first_busy_after(ModelId::Mob as usize),
+                   Some(ModelId::Bert));
+        let empty = Router::new();
+        assert_eq!(empty.first_busy_after(0), None);
     }
 }

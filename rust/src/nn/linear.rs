@@ -32,20 +32,37 @@ impl Linear {
         self.w.cols()
     }
 
+    /// Forward into a reused output buffer: x (batch, in) → (batch, out).
+    pub fn forward_into(&self, x: &Mat, out: &mut Mat) {
+        out.reset(x.rows(), self.w.cols());
+        x.matmul_into(&self.w, out);
+        out.add_row_broadcast(&self.b);
+    }
+
     /// Forward: x (batch, in) → (batch, out).
     pub fn forward(&self, x: &Mat) -> Mat {
-        let mut y = x.matmul(&self.w);
-        y.add_row_broadcast(&self.b);
+        let mut y = Mat::zeros(0, 0);
+        self.forward_into(x, &mut y);
         y
+    }
+
+    /// Backward into reused buffers — no transposes are materialized and
+    /// no gradient matrices are allocated in steady state. Values are
+    /// bit-identical to [`Linear::backward`].
+    pub fn backward_into(&self, x: &Mat, dy: &Mat, grad: &mut LinearGrad,
+                         dx: &mut Mat) {
+        x.matmul_tn_into(dy, &mut grad.dw);
+        dy.col_sums_into(&mut grad.db);
+        dy.matmul_nt_into(&self.w, dx);
     }
 
     /// Backward given the layer input and upstream gradient.
     /// Returns (grad wrt input, parameter grads).
     pub fn backward(&self, x: &Mat, dy: &Mat) -> (Mat, LinearGrad) {
-        let dw = x.transpose().matmul(dy);
-        let db = dy.col_sums();
-        let dx = dy.matmul(&self.w.transpose());
-        (dx, LinearGrad { dw, db })
+        let mut grad = LinearGrad { dw: Mat::zeros(0, 0), db: Vec::new() };
+        let mut dx = Mat::zeros(0, 0);
+        self.backward_into(x, dy, &mut grad, &mut dx);
+        (dx, grad)
     }
 
     /// Polyak averaging toward `src`: θ ← τ·θ_src + (1−τ)·θ (SAC target nets).
@@ -121,6 +138,27 @@ mod tests {
             let f = |m: &Mat| l.forward(m).data().iter().sum::<f32>();
             let num = (f(&xp) - f(&xm)) / (2.0 * eps);
             assert!((num - dx.data()[idx]).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn into_paths_match_allocating_paths() {
+        let mut rng = Pcg32::seeded(12);
+        let l = Linear::new(4, 3, &mut rng);
+        let x = Mat::kaiming(5, 4, &mut rng);
+        let dy = Mat::kaiming(5, 3, &mut rng);
+        let mut y = Mat::zeros(0, 0);
+        let mut grad = LinearGrad { dw: Mat::zeros(0, 0), db: Vec::new() };
+        let mut dx = Mat::zeros(0, 0);
+        // Run twice through the same buffers: reuse must not contaminate.
+        for _ in 0..2 {
+            l.forward_into(&x, &mut y);
+            assert_eq!(y, l.forward(&x));
+            l.backward_into(&x, &dy, &mut grad, &mut dx);
+            let (dx_ref, grad_ref) = l.backward(&x, &dy);
+            assert_eq!(dx, dx_ref);
+            assert_eq!(grad.dw, grad_ref.dw);
+            assert_eq!(grad.db, grad_ref.db);
         }
     }
 

@@ -14,15 +14,51 @@ pub struct Mlp {
 }
 
 /// Cached per-layer inputs (pre-layer activations) for backward.
+///
+/// Reusable: allocate once (`ForwardCache::new`) and refill every
+/// iteration with [`Mlp::forward_cache_into`] — after the first pass all
+/// the activation matrices are recycled, so the SAC update loop (which
+/// runs this thousands of times per training run) stops cloning every
+/// activation the way the seed did.
 pub struct ForwardCache {
     /// inputs[i] is the input fed to layers[i]; plus the final output last.
     inputs: Vec<Mat>,
     output: Mat,
 }
 
+impl Default for ForwardCache {
+    fn default() -> Self {
+        ForwardCache { inputs: Vec::new(), output: Mat::zeros(0, 0) }
+    }
+}
+
 impl ForwardCache {
+    pub fn new() -> Self {
+        ForwardCache::default()
+    }
+
     pub fn output(&self) -> &Mat {
         &self.output
+    }
+}
+
+/// Reused intermediates for [`Mlp::backward_into`]: the upstream
+/// gradient and the layer-input gradient ping-pong between these two
+/// buffers as backprop walks the layers.
+pub struct BackwardScratch {
+    dy: Mat,
+    dx: Mat,
+}
+
+impl Default for BackwardScratch {
+    fn default() -> Self {
+        BackwardScratch { dy: Mat::zeros(0, 0), dx: Mat::zeros(0, 0) }
+    }
+}
+
+impl BackwardScratch {
+    pub fn new() -> Self {
+        BackwardScratch::default()
     }
 }
 
@@ -49,55 +85,98 @@ impl Mlp {
         self.layers.last().unwrap().out_dim()
     }
 
+    /// Forward pass into reused buffers. `out` receives the network
+    /// output; `tmp` is ping-pong scratch for the hidden activations.
+    /// Zero allocations once the buffers have grown to the layer widths.
+    pub fn forward_into(&self, x: &Mat, out: &mut Mat, tmp: &mut Mat) {
+        let last = self.layers.len() - 1;
+        if last == 0 {
+            self.layers[0].forward_into(x, out);
+            return;
+        }
+        self.layers[0].forward_into(x, tmp);
+        tmp.relu_inplace();
+        for i in 1..last {
+            self.layers[i].forward_into(tmp, out);
+            out.relu_inplace();
+            std::mem::swap(tmp, out);
+        }
+        self.layers[last].forward_into(tmp, out);
+    }
+
     /// Plain forward pass.
     pub fn forward(&self, x: &Mat) -> Mat {
-        let mut h = x.clone();
-        let last = self.layers.len() - 1;
-        for (i, layer) in self.layers.iter().enumerate() {
-            h = layer.forward(&h);
-            if i != last {
-                h = h.map(|v| v.max(0.0));
+        let mut out = Mat::zeros(0, 0);
+        let mut tmp = Mat::zeros(0, 0);
+        self.forward_into(x, &mut out, &mut tmp);
+        out
+    }
+
+    /// Forward pass retaining per-layer inputs for backward, writing into
+    /// a reused cache: all activation matrices are recycled across calls.
+    pub fn forward_cache_into(&self, x: &Mat, cache: &mut ForwardCache) {
+        let n = self.layers.len();
+        while cache.inputs.len() < n {
+            cache.inputs.push(Mat::zeros(0, 0));
+        }
+        cache.inputs.truncate(n);
+        cache.inputs[0].copy_from(x);
+        let last = n - 1;
+        for i in 0..n {
+            if i < last {
+                // inputs[i] feeds layer i; its post-ReLU output is
+                // inputs[i+1]. split_at_mut to borrow both.
+                let (head, tail) = cache.inputs.split_at_mut(i + 1);
+                let dst = &mut tail[0];
+                self.layers[i].forward_into(&head[i], dst);
+                dst.relu_inplace();
+            } else {
+                self.layers[i].forward_into(&cache.inputs[i], &mut cache.output);
             }
         }
-        h
     }
 
     /// Forward pass retaining per-layer inputs for backward.
     pub fn forward_cache(&self, x: &Mat) -> ForwardCache {
-        let mut inputs = Vec::with_capacity(self.layers.len());
-        let mut h = x.clone();
-        let last = self.layers.len() - 1;
-        for (i, layer) in self.layers.iter().enumerate() {
-            inputs.push(h.clone());
-            h = layer.forward(&h);
-            if i != last {
-                h = h.map(|v| v.max(0.0));
-            }
+        let mut cache = ForwardCache::new();
+        self.forward_cache_into(x, &mut cache);
+        cache
+    }
+
+    /// Backprop `d_out` through the cached pass into reused gradient and
+    /// scratch buffers. The ReLU gate runs in place on the upstream
+    /// gradient (the seed allocated a mask matrix + a hadamard product
+    /// per layer) and the per-layer `dw`/`dx` matmuls write into recycled
+    /// matrices. Values are bit-identical to [`Mlp::backward`].
+    pub fn backward_into(&self, cache: &ForwardCache, d_out: &Mat,
+                         grads: &mut MlpGrad, scratch: &mut BackwardScratch) {
+        let n = self.layers.len();
+        while grads.len() < n {
+            grads.push(LinearGrad { dw: Mat::zeros(0, 0), db: Vec::new() });
         }
-        ForwardCache { inputs, output: h }
+        grads.truncate(n);
+        let last = n - 1;
+        scratch.dy.copy_from(d_out);
+        for i in (0..n).rev() {
+            if i != last {
+                // Gradient through the ReLU that followed layer i:
+                // zero where the *post-layer* activation was clipped. That
+                // activation is exactly inputs[i+1].
+                scratch.dy.relu_backward_inplace(&cache.inputs[i + 1]);
+            }
+            self.layers[i].backward_into(&cache.inputs[i], &scratch.dy,
+                                         &mut grads[i], &mut scratch.dx);
+            std::mem::swap(&mut scratch.dy, &mut scratch.dx);
+        }
     }
 
     /// Backprop `d_out` (gradient w.r.t. the network output) through the
     /// cached pass; returns per-layer parameter grads.
     pub fn backward(&self, cache: &ForwardCache, d_out: &Mat) -> MlpGrad {
-        let last = self.layers.len() - 1;
-        let mut grads: Vec<Option<LinearGrad>> = vec![None; self.layers.len()];
-        let mut dy = d_out.clone();
-        for i in (0..self.layers.len()).rev() {
-            if i != last {
-                // Gradient through the ReLU that followed layer i:
-                // zero where the *post-layer* activation was clipped. That
-                // activation is exactly inputs[i+1].
-                let act = &cache.inputs[i + 1];
-                assert_eq!((act.rows(), act.cols()), (dy.rows(), dy.cols()));
-                let mask = act.map(|v| if v > 0.0 { 1.0 } else { 0.0 });
-                dy = dy.hadamard(&mask);
-            }
-            let (dx, g) = self.layers[i].backward(&cache.inputs[i], &dy);
-            grads[i] = Some(g);
-            dy = dx;
-        }
-        grads.into_iter().map(|g| g.unwrap()).collect()
+        let mut grads = Vec::new();
+        let mut scratch = BackwardScratch::new();
+        self.backward_into(cache, d_out, &mut grads, &mut scratch);
+        grads
     }
 
     /// Polyak-average every layer toward `src` (SAC target networks).
@@ -207,6 +286,35 @@ mod tests {
         let mlp = Mlp::new(&[4, 128, 64, 2], &mut rng);
         let x = Mat::kaiming(3, 4, &mut rng);
         assert_eq!(mlp.forward(&x), *mlp.forward_cache(&x).output());
+    }
+
+    #[test]
+    fn reused_buffers_match_allocating_paths() {
+        let mut rng = Pcg32::seeded(26);
+        let mlp = Mlp::new(&[6, 16, 8, 3], &mut rng);
+        let mut cache = ForwardCache::new();
+        let mut grads: MlpGrad = Vec::new();
+        let mut scratch = BackwardScratch::new();
+        let (mut out, mut tmp) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        // Vary the batch size across iterations so shape resets are
+        // exercised along with allocation reuse.
+        for batch in [4usize, 7, 2, 7] {
+            let x = Mat::kaiming(batch, 6, &mut rng);
+            mlp.forward_into(&x, &mut out, &mut tmp);
+            assert_eq!(out, mlp.forward(&x));
+            mlp.forward_cache_into(&x, &mut cache);
+            let fresh = mlp.forward_cache(&x);
+            assert_eq!(cache.output(), fresh.output());
+            assert_eq!(*cache.output(), mlp.forward(&x));
+            let d = Mat::kaiming(batch, 3, &mut rng);
+            mlp.backward_into(&cache, &d, &mut grads, &mut scratch);
+            let fresh_grads = mlp.backward(&fresh, &d);
+            assert_eq!(grads.len(), fresh_grads.len());
+            for (a, b) in grads.iter().zip(&fresh_grads) {
+                assert_eq!(a.dw, b.dw);
+                assert_eq!(a.db, b.db);
+            }
+        }
     }
 
     #[test]

@@ -109,6 +109,68 @@ impl Mat {
         }
     }
 
+    /// Reshape in place, reusing the allocation. Contents are
+    /// UNSPECIFIED afterwards (stale values may remain) — callers must
+    /// overwrite every element, which all `*_into` consumers below do.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `src`, reusing the allocation.
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
+    }
+
+    /// C = AᵀB without materializing Aᵀ (the `dw = xᵀ·dy` of backprop).
+    /// Accumulates over the batch dimension in the same order as
+    /// `a.transpose().matmul(b)`, so results are bit-identical to the
+    /// allocating path.
+    pub fn matmul_tn_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.rows, other.rows, "matmul_tn {}x{} @ {}x{}",
+                   self.cols, self.rows, other.rows, other.cols);
+        out.reset(self.cols, other.cols);
+        out.data.fill(0.0);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let a_row = &self.data[i * self.cols..(i + 1) * self.cols];
+            let b_row = &other.data[i * n..(i + 1) * n];
+            for (k, &a) in a_row.iter().enumerate() {
+                let out_row = &mut out.data[k * n..(k + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+
+    /// C = ABᵀ without materializing Bᵀ (the `dx = dy·wᵀ` of backprop).
+    /// Each output element is a dot product of two contiguous rows —
+    /// prime autovectorization territory. Accumulation order matches
+    /// `a.matmul(&b.transpose())` bit-for-bit.
+    pub fn matmul_nt_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.cols, "matmul_nt {}x{} @ {}x{}",
+                   self.rows, self.cols, other.cols, other.rows);
+        out.reset(self.rows, other.rows);
+        let k = self.cols;
+        for i in 0..self.rows {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let out_row = &mut out.data[i * other.rows..(i + 1) * other.rows];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let b_row = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&a, &b) in a_row.iter().zip(b_row) {
+                    acc += a * b;
+                }
+                *o = acc;
+            }
+        }
+    }
+
     /// Aᵀ (copies).
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
@@ -126,6 +188,32 @@ impl Mat {
             rows: self.rows,
             cols: self.cols,
             data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise map in place (hot path: activations between layers).
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// In-place ReLU.
+    pub fn relu_inplace(&mut self) {
+        self.map_inplace(|v| v.max(0.0))
+    }
+
+    /// In-place ReLU gradient gate: zero `self` wherever the post-ReLU
+    /// activation `act` was clipped. Replaces the seed's mask-`map` +
+    /// `hadamard` pair (two full-matrix allocations per layer per
+    /// backward pass) with a single fused sweep; values are identical
+    /// (kept entries are untouched rather than multiplied by 1.0).
+    pub fn relu_backward_inplace(&mut self, act: &Mat) {
+        assert_eq!((self.rows, self.cols), (act.rows, act.cols));
+        for (d, &a) in self.data.iter_mut().zip(&act.data) {
+            if a <= 0.0 {
+                *d = 0.0;
+            }
         }
     }
 
@@ -162,14 +250,21 @@ impl Mat {
         }
     }
 
-    /// Column sums (gradient of a broadcast bias).
-    pub fn col_sums(&self) -> Vec<f32> {
-        let mut out = vec![0.0; self.cols];
+    /// Column sums into a reused buffer (gradient of a broadcast bias).
+    pub fn col_sums_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.cols, 0.0);
         for r in 0..self.rows {
             for (o, &x) in out.iter_mut().zip(self.row(r)) {
                 *o += x;
             }
         }
+    }
+
+    /// Column sums (gradient of a broadcast bias).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.col_sums_into(&mut out);
         out
     }
 
@@ -179,9 +274,9 @@ impl Mat {
     }
 }
 
-/// Row-wise softmax, numerically stabilized.
-pub fn softmax_rows(m: &Mat) -> Mat {
-    let mut out = m.clone();
+/// Row-wise softmax into a reused buffer, numerically stabilized.
+pub fn softmax_rows_into(m: &Mat, out: &mut Mat) {
+    out.copy_from(m);
     for r in 0..out.rows() {
         let row = out.row_mut(r);
         let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -194,12 +289,18 @@ pub fn softmax_rows(m: &Mat) -> Mat {
             *x /= sum;
         }
     }
+}
+
+/// Row-wise softmax, numerically stabilized.
+pub fn softmax_rows(m: &Mat) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    softmax_rows_into(m, &mut out);
     out
 }
 
-/// Row-wise log-softmax.
-pub fn log_softmax_rows(m: &Mat) -> Mat {
-    let mut out = m.clone();
+/// Row-wise log-softmax into a reused buffer.
+pub fn log_softmax_rows_into(m: &Mat, out: &mut Mat) {
+    out.copy_from(m);
     for r in 0..out.rows() {
         let row = out.row_mut(r);
         let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -208,6 +309,12 @@ pub fn log_softmax_rows(m: &Mat) -> Mat {
             *x -= logsum;
         }
     }
+}
+
+/// Row-wise log-softmax.
+pub fn log_softmax_rows(m: &Mat) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    log_softmax_rows_into(m, &mut out);
     out
 }
 
@@ -274,5 +381,73 @@ mod tests {
     #[should_panic]
     fn matmul_shape_mismatch_panics() {
         Mat::zeros(2, 3).matmul(&Mat::zeros(4, 2));
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose_matmul() {
+        let mut rng = Pcg32::seeded(6);
+        let x = Mat::kaiming(9, 5, &mut rng);
+        let dy = Mat::kaiming(9, 4, &mut rng);
+        let mut out = Mat::zeros(0, 0);
+        x.matmul_tn_into(&dy, &mut out);
+        assert_eq!(out, x.transpose().matmul(&dy));
+        // Reuse with a different shape.
+        let x2 = Mat::kaiming(3, 7, &mut rng);
+        let dy2 = Mat::kaiming(3, 2, &mut rng);
+        x2.matmul_tn_into(&dy2, &mut out);
+        assert_eq!(out, x2.transpose().matmul(&dy2));
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul_transpose() {
+        let mut rng = Pcg32::seeded(7);
+        let dy = Mat::kaiming(6, 4, &mut rng);
+        let w = Mat::kaiming(8, 4, &mut rng);
+        let mut out = Mat::zeros(0, 0);
+        dy.matmul_nt_into(&w, &mut out);
+        assert_eq!(out, dy.matmul(&w.transpose()));
+        let dy2 = Mat::kaiming(2, 3, &mut rng);
+        let w2 = Mat::kaiming(5, 3, &mut rng);
+        dy2.matmul_nt_into(&w2, &mut out);
+        assert_eq!(out, dy2.matmul(&w2.transpose()));
+    }
+
+    #[test]
+    fn inplace_ops_match_allocating_ops() {
+        let mut rng = Pcg32::seeded(8);
+        let m = Mat::kaiming(5, 6, &mut rng);
+        let mut relu = m.clone();
+        relu.relu_inplace();
+        assert_eq!(relu, m.map(|v| v.max(0.0)));
+        let mut gated = Mat::kaiming(5, 6, &mut rng);
+        let expect = gated
+            .hadamard(&relu.map(|v| if v > 0.0 { 1.0 } else { 0.0 }));
+        gated.relu_backward_inplace(&relu);
+        assert_eq!(gated, expect);
+        let mut sums = Vec::new();
+        m.col_sums_into(&mut sums);
+        assert_eq!(sums, m.col_sums());
+    }
+
+    #[test]
+    fn softmax_into_variants_match() {
+        let m = Mat::from_vec(2, 3, vec![0.5, -1.0, 2.0, 3.0, 3.0, 3.0]);
+        let mut s = Mat::zeros(9, 9); // stale shape must not leak through
+        softmax_rows_into(&m, &mut s);
+        assert_eq!(s, softmax_rows(&m));
+        let mut ls = Mat::zeros(1, 1);
+        log_softmax_rows_into(&m, &mut ls);
+        assert_eq!(ls, log_softmax_rows(&m));
+    }
+
+    #[test]
+    fn reset_and_copy_from_reuse_allocation() {
+        let mut m = Mat::zeros(4, 4);
+        m.reset(2, 3);
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert_eq!(m.data().len(), 6);
+        let src = Mat::from_vec(1, 2, vec![7.0, 8.0]);
+        m.copy_from(&src);
+        assert_eq!(m, src);
     }
 }

@@ -46,7 +46,17 @@ impl PredictorSample {
 pub struct InterferencePredictor {
     net: Mlp,
     opt: Adam,
+    /// Ring buffer of training samples: `next` is the overwrite cursor
+    /// once full. The seed used `Vec::remove(0)`, an O(capacity) memmove
+    /// on EVERY observed instance-batch once warm — a hot-path cost that
+    /// grew with the buffer, not the work. `train_step` samples indices
+    /// uniformly, so the retained MULTISET matches the seed exactly;
+    /// element order inside the vec does not (the ring rotates in place),
+    /// which makes minibatch draws equal only in distribution — runs that
+    /// wrap the ring (> capacity observations) are no longer bit-identical
+    /// to the seed, only statistically equivalent.
     buf: Vec<PredictorSample>,
+    next: usize,
     capacity: usize,
     pub batch_size: usize,
     trained_steps: usize,
@@ -62,18 +72,22 @@ impl InterferencePredictor {
             net,
             opt,
             buf: Vec::new(),
+            next: 0,
             capacity: 4096,
             batch_size: 64,
             trained_steps: 0,
         }
     }
 
-    /// Record a profiled ground-truth sample.
+    /// Record a profiled ground-truth sample. O(1): overwrites the oldest
+    /// slot once the ring is full.
     pub fn observe(&mut self, s: PredictorSample) {
-        if self.buf.len() == self.capacity {
-            self.buf.remove(0);
+        if self.buf.len() < self.capacity {
+            self.buf.push(s);
+        } else {
+            self.buf[self.next] = s;
+            self.next = (self.next + 1) % self.capacity;
         }
-        self.buf.push(s);
     }
 
     pub fn samples(&self) -> usize {

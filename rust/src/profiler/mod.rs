@@ -44,6 +44,13 @@ pub struct Profiler {
     window: usize,
     samples: VecDeque<ProfileSample>,
     rolling: [Rolling; N_MODELS],
+    /// Rolling Σ inflation over the window, so `mean_inflation` — read by
+    /// the state encoder on every decision — is O(1) instead of the O(n)
+    /// scan the seed used (`mean_inflation_naive` keeps the scan as a
+    /// test oracle). Maintained by add-on-record / subtract-on-evict;
+    /// drift stays bounded because the window is small (hundreds) and
+    /// inflation values are O(1).
+    inflation_sum: f64,
 }
 
 impl Profiler {
@@ -52,6 +59,7 @@ impl Profiler {
             window: window.max(1),
             samples: VecDeque::new(),
             rolling: [Rolling::default(); N_MODELS],
+            inflation_sum: 0.0,
         }
     }
 
@@ -61,6 +69,7 @@ impl Profiler {
         r.latency_sum += s.latency_ms;
         r.completed_sum += s.completed as f64;
         r.span_sum_ms += s.latency_ms;
+        self.inflation_sum += s.inflation;
         self.samples.push_back(s);
         if self.samples.len() > self.window {
             let old = self.samples.pop_front().unwrap();
@@ -69,6 +78,7 @@ impl Profiler {
             r.latency_sum -= old.latency_ms;
             r.completed_sum -= old.completed as f64;
             r.span_sum_ms -= old.latency_ms;
+            self.inflation_sum -= old.inflation;
         }
     }
 
@@ -113,7 +123,19 @@ impl Profiler {
     }
 
     /// Rolling mean inflation across all models (1.0 before any sample).
+    /// O(1): maintained sum over the window.
     pub fn mean_inflation(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        self.inflation_sum / self.samples.len() as f64
+    }
+
+    /// O(n) recomputation of [`Profiler::mean_inflation`] — the seed
+    /// implementation, kept as a test/bench oracle. Bit-identical to the
+    /// rolling value until the first eviction (both are the same
+    /// left-to-right sum); within float tolerance afterwards.
+    pub fn mean_inflation_naive(&self) -> f64 {
         if self.samples.is_empty() {
             return 1.0;
         }
@@ -165,5 +187,35 @@ mod tests {
         assert!(p.mean_latency_ms(ModelId::Bert).is_nan());
         assert_eq!(p.utilization(), (0.0, 0.0, 0));
         assert_eq!(p.mean_inflation(), 1.0);
+        assert_eq!(p.mean_inflation_naive(), 1.0);
+    }
+
+    #[test]
+    fn rolling_inflation_matches_naive_before_eviction() {
+        let mut p = Profiler::new(64);
+        let mut rng = crate::util::rng::Pcg32::seeded(0x1F);
+        for i in 0..64 {
+            let mut s = sample(ModelId::Res, 10.0 + i as f64, 4);
+            s.inflation = 1.0 + rng.f64();
+            p.record(s);
+            // Pre-eviction both are the same left-to-right sum.
+            assert_eq!(p.mean_inflation(), p.mean_inflation_naive());
+        }
+    }
+
+    #[test]
+    fn rolling_inflation_tracks_naive_through_evictions() {
+        let mut p = Profiler::new(32);
+        let mut rng = crate::util::rng::Pcg32::seeded(0x2F);
+        for i in 0..4096 {
+            let mut s = sample(ModelId::from_index(i % 6), 10.0, 2);
+            s.inflation = 1.0 + rng.f64() * 3.0;
+            p.record(s);
+            let (roll, naive) = (p.mean_inflation(), p.mean_inflation_naive());
+            assert!(
+                (roll - naive).abs() < 1e-9,
+                "drift at {i}: rolling {roll} naive {naive}"
+            );
+        }
     }
 }

@@ -33,6 +33,23 @@ impl ReplayBuffer {
         self.items.is_empty()
     }
 
+    /// Access a transition by index (for index-based minibatch sampling).
+    pub fn get(&self, i: usize) -> &Transition {
+        &self.items[i]
+    }
+
+    /// Sample `n` indices uniformly with replacement into a reused
+    /// buffer. Index-based sampling lets the SAC update loop keep its
+    /// minibatch buffer across steps instead of collecting a fresh
+    /// `Vec<&Transition>` every update; the RNG call sequence is
+    /// identical to [`ReplayBuffer::sample`].
+    pub fn sample_indices_into(&self, n: usize, rng: &mut Pcg32,
+                               out: &mut Vec<usize>) {
+        assert!(!self.items.is_empty(), "sampling empty replay buffer");
+        out.clear();
+        out.extend((0..n).map(|_| rng.below(self.items.len() as u32) as usize));
+    }
+
     /// Sample `n` transitions uniformly with replacement.
     pub fn sample<'a>(&'a self, n: usize, rng: &mut Pcg32) -> Vec<&'a Transition> {
         assert!(!self.items.is_empty(), "sampling empty replay buffer");
@@ -82,5 +99,22 @@ mod tests {
     #[should_panic]
     fn sample_empty_panics() {
         ReplayBuffer::new(4).sample(1, &mut Pcg32::seeded(0));
+    }
+
+    #[test]
+    fn index_sampling_matches_ref_sampling() {
+        let mut buf = ReplayBuffer::new(16);
+        for i in 0..9 {
+            buf.push(t(i as f32));
+        }
+        let mut r1 = Pcg32::seeded(42);
+        let mut r2 = Pcg32::seeded(42);
+        let refs = buf.sample(32, &mut r1);
+        let mut idx = Vec::new();
+        buf.sample_indices_into(32, &mut r2, &mut idx);
+        assert_eq!(idx.len(), 32);
+        for (r, &i) in refs.iter().zip(&idx) {
+            assert_eq!(r.reward, buf.get(i).reward);
+        }
     }
 }

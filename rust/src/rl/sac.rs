@@ -18,7 +18,11 @@
 use super::env::{Agent, Transition};
 use super::replay::ReplayBuffer;
 use crate::nn::adam::{Adam, ScalarAdam};
-use crate::nn::tensor::{log_softmax_rows, softmax_rows, Mat};
+use crate::nn::mlp::{BackwardScratch, ForwardCache, MlpGrad};
+use crate::nn::tensor::{
+    log_softmax_rows, log_softmax_rows_into, softmax_rows, softmax_rows_into,
+    Mat,
+};
 use crate::nn::Mlp;
 use crate::util::rng::Pcg32;
 
@@ -66,6 +70,78 @@ pub struct SacLosses {
     pub alpha: f32,
 }
 
+/// Reused buffers for the SAC action + update paths. The seed allocated
+/// ~30 matrices per `update_batch` (every forward activation, every
+/// gradient, the minibatch collection, masks, softmaxes) and two vectors
+/// per `act`; with this scratch both are allocation-free in steady
+/// state — the per-slot learning cost paper Fig. 16 measures and the
+/// fig10 convergence run pays thousands of times.
+struct SacScratch {
+    // minibatch
+    idx: Vec<usize>,
+    s: Mat,
+    s2: Mat,
+    // shared forward ping-pong buffer
+    tmp: Mat,
+    // soft Bellman target
+    logits2: Mat,
+    pi2: Mat,
+    logpi2: Mat,
+    q1t: Mat,
+    q2t: Mat,
+    y: Vec<f32>,
+    // critic update
+    cache_q: ForwardCache,
+    d: Mat,
+    grads: MlpGrad,
+    bwd: BackwardScratch,
+    // actor update
+    cache_pi: ForwardCache,
+    pi: Mat,
+    logpi: Mat,
+    q1d: Mat,
+    q2d: Mat,
+    dpi: Mat,
+    g: Vec<f32>,
+    // act() path
+    state_row: Mat,
+    logits_row: Mat,
+    probs_row: Mat,
+    weights: Vec<f64>,
+}
+
+impl SacScratch {
+    fn new() -> Self {
+        SacScratch {
+            idx: Vec::new(),
+            s: Mat::zeros(0, 0),
+            s2: Mat::zeros(0, 0),
+            tmp: Mat::zeros(0, 0),
+            logits2: Mat::zeros(0, 0),
+            pi2: Mat::zeros(0, 0),
+            logpi2: Mat::zeros(0, 0),
+            q1t: Mat::zeros(0, 0),
+            q2t: Mat::zeros(0, 0),
+            y: Vec::new(),
+            cache_q: ForwardCache::new(),
+            d: Mat::zeros(0, 0),
+            grads: Vec::new(),
+            bwd: BackwardScratch::new(),
+            cache_pi: ForwardCache::new(),
+            pi: Mat::zeros(0, 0),
+            logpi: Mat::zeros(0, 0),
+            q1d: Mat::zeros(0, 0),
+            q2d: Mat::zeros(0, 0),
+            dpi: Mat::zeros(0, 0),
+            g: Vec::new(),
+            state_row: Mat::zeros(0, 0),
+            logits_row: Mat::zeros(0, 0),
+            probs_row: Mat::zeros(0, 0),
+            weights: Vec::new(),
+        }
+    }
+}
+
 /// Discrete SAC agent.
 pub struct DiscreteSac {
     pub cfg: SacConfig,
@@ -84,6 +160,7 @@ pub struct DiscreteSac {
     replay: ReplayBuffer,
     steps: usize,
     pub last_losses: SacLosses,
+    scratch: SacScratch,
 }
 
 impl DiscreteSac {
@@ -120,6 +197,7 @@ impl DiscreteSac {
             replay,
             steps: 0,
             last_losses: SacLosses::default(),
+            scratch: SacScratch::new(),
         }
     }
 
@@ -139,18 +217,134 @@ impl DiscreteSac {
         argmax(&probs)
     }
 
-    fn states_mat(batch: &[&Transition], next: bool) -> Mat {
-        let dim = batch[0].state.len();
-        let mut m = Mat::zeros(batch.len(), dim);
-        for (i, t) in batch.iter().enumerate() {
-            let src = if next { &t.next_state } else { &t.state };
-            m.row_mut(i).copy_from_slice(src);
+    /// One SAC update on a replay minibatch. Allocation-free in steady
+    /// state: the minibatch indices, every state/activation matrix, and
+    /// every gradient buffer live in [`SacScratch`] and are recycled
+    /// across updates.
+    pub fn update_batch(&mut self, rng: &mut Pcg32) -> SacLosses {
+        if self.replay.len() < self.cfg.warmup.max(self.cfg.batch_size) {
+            return SacLosses::default();
         }
-        m
+        let n = self.cfg.batch_size;
+        let a = self.n_actions;
+        let alpha = self.alpha();
+        let sc = &mut self.scratch;
+        self.replay.sample_indices_into(n, rng, &mut sc.idx);
+
+        let dim = self.replay.get(sc.idx[0]).state.len();
+        sc.s.reset(n, dim);
+        sc.s2.reset(n, dim);
+        for (r, &i) in sc.idx.iter().enumerate() {
+            let t = self.replay.get(i);
+            sc.s.row_mut(r).copy_from_slice(&t.state);
+            sc.s2.row_mut(r).copy_from_slice(&t.next_state);
+        }
+
+        // --- Soft Bellman target (Eqs. 7–8) ------------------------------
+        // V(s') = π(s')ᵀ [min(Q̄₁, Q̄₂)(s') − α log π(s')]
+        self.policy.forward_into(&sc.s2, &mut sc.logits2, &mut sc.tmp);
+        softmax_rows_into(&sc.logits2, &mut sc.pi2);
+        log_softmax_rows_into(&sc.logits2, &mut sc.logpi2);
+        self.q1_target.forward_into(&sc.s2, &mut sc.q1t, &mut sc.tmp);
+        self.q2_target.forward_into(&sc.s2, &mut sc.q2t, &mut sc.tmp);
+        sc.y.clear();
+        for i in 0..n {
+            let mut v = 0.0;
+            for j in 0..a {
+                let qmin = sc.q1t.at(i, j).min(sc.q2t.at(i, j));
+                v += sc.pi2.at(i, j) * (qmin - alpha * sc.logpi2.at(i, j));
+            }
+            let t = self.replay.get(sc.idx[i]);
+            sc.y.push(t.reward
+                + self.cfg.gamma * if t.done { 0.0 } else { v });
+        }
+
+        // --- Critic update (Eq. 9): MSE on the taken action only ---------
+        let mut q_loss_total = 0.0;
+        for (qnet, opt) in [(&mut self.q1, &mut self.opt_q1),
+                            (&mut self.q2, &mut self.opt_q2)] {
+            qnet.forward_cache_into(&sc.s, &mut sc.cache_q);
+            sc.d.reset(n, a);
+            sc.d.data_mut().fill(0.0);
+            let mut loss = 0.0;
+            for i in 0..n {
+                let act = self.replay.get(sc.idx[i]).action;
+                let e = sc.cache_q.output().at(i, act) - sc.y[i];
+                loss += 0.5 * e * e / n as f32;
+                *sc.d.at_mut(i, act) = e / n as f32;
+            }
+            qnet.backward_into(&sc.cache_q, &sc.d, &mut sc.grads, &mut sc.bwd);
+            opt.step(qnet, &sc.grads);
+            q_loss_total += loss;
+        }
+
+        // --- Actor update (Eq. 11) ----------------------------------------
+        // J_π = E_s Σ_a π(a|s) [α log π(a|s) − min Q(s,a)]
+        // With z the logits, g_a = α log π_a − Q_a:
+        //   ∂J/∂z_k = π_k [ (g_k + α) − Σ_a π_a (g_a + α) ]
+        // (softmax Jacobian applied to ∂J/∂π_a = g_a + α).
+        self.policy.forward_cache_into(&sc.s, &mut sc.cache_pi);
+        softmax_rows_into(sc.cache_pi.output(), &mut sc.pi);
+        log_softmax_rows_into(sc.cache_pi.output(), &mut sc.logpi);
+        self.q1.forward_into(&sc.s, &mut sc.q1d, &mut sc.tmp);
+        self.q2.forward_into(&sc.s, &mut sc.q2d, &mut sc.tmp);
+        sc.dpi.reset(n, a);
+        sc.dpi.data_mut().fill(0.0);
+        sc.g.clear();
+        sc.g.resize(a, 0.0);
+        let mut pi_loss = 0.0;
+        let mut entropy_err_sum = 0.0;
+        for i in 0..n {
+            let mut mean_term = 0.0;
+            for j in 0..a {
+                let qmin = sc.q1d.at(i, j).min(sc.q2d.at(i, j));
+                sc.g[j] = alpha * sc.logpi.at(i, j) - qmin;
+                pi_loss += sc.pi.at(i, j) * sc.g[j] / n as f32;
+                mean_term += sc.pi.at(i, j) * (sc.g[j] + alpha);
+            }
+            for j in 0..a {
+                *sc.dpi.at_mut(i, j) =
+                    sc.pi.at(i, j) * (sc.g[j] + alpha - mean_term) / n as f32;
+            }
+            // Entropy error for the temperature update (Eq. 12):
+            // Σ_a π_a (log π_a + H̄)  — positive when entropy is too low.
+            for j in 0..a {
+                entropy_err_sum +=
+                    sc.pi.at(i, j) * (sc.logpi.at(i, j) + self.target_entropy);
+            }
+        }
+        self.policy.backward_into(&sc.cache_pi, &sc.dpi, &mut sc.grads,
+                                  &mut sc.bwd);
+        self.opt_pi.step(&mut self.policy, &sc.grads);
+
+        // --- Temperature update (Eq. 12) ----------------------------------
+        // J(α) = E[−α (log π + H̄)]; ∂J/∂(log α) = −α · E[log π + H̄].
+        // J(α) = −α·err ⇒ ∂J/∂α = −err ⇒ ∂J/∂(log α) = −α·err.
+        let entropy_err = entropy_err_sum / n as f32;
+        let alpha_grad = -alpha * entropy_err;
+        self.log_alpha += self.opt_alpha.step(alpha_grad);
+        self.log_alpha = self.log_alpha.clamp(-10.0, 2.0);
+        let alpha_loss = -self.alpha() * entropy_err;
+
+        // --- Polyak target update -----------------------------------------
+        self.q1_target.soft_update_from(&self.q1, self.cfg.tau);
+        self.q2_target.soft_update_from(&self.q2, self.cfg.tau);
+
+        let losses = SacLosses { q: q_loss_total, pi: pi_loss, alpha: alpha_loss };
+        self.last_losses = losses;
+        losses
     }
 
-    /// One SAC update on a replay minibatch.
-    pub fn update_batch(&mut self, rng: &mut Pcg32) -> SacLosses {
+    /// Faithful port of the SEED's allocating update step, kept as a
+    /// bench/test oracle (like `ModelQueue::*_naive_ms`): fresh
+    /// minibatch collection, fresh state matrices, allocating
+    /// forward/backward. Consumes the RNG identically to
+    /// [`DiscreteSac::update_batch`] and computes the same float
+    /// operations in the same order, so identically-seeded agents stay
+    /// bit-identical whichever path they take — proven by
+    /// `alloc_oracle_matches_scratch_update`. `benches/hotpath_engine.rs`
+    /// times both to report the update-step speedup.
+    pub fn update_batch_alloc(&mut self, rng: &mut Pcg32) -> SacLosses {
         if self.replay.len() < self.cfg.warmup.max(self.cfg.batch_size) {
             return SacLosses::default();
         }
@@ -159,11 +353,19 @@ impl DiscreteSac {
         let a = self.n_actions;
         let alpha = self.alpha();
 
-        let s = Self::states_mat(&batch, false);
-        let s2 = Self::states_mat(&batch, true);
+        fn states_mat(batch: &[&Transition], next: bool) -> Mat {
+            let dim = batch[0].state.len();
+            let mut m = Mat::zeros(batch.len(), dim);
+            for (i, t) in batch.iter().enumerate() {
+                let src = if next { &t.next_state } else { &t.state };
+                m.row_mut(i).copy_from_slice(src);
+            }
+            m
+        }
+        let s = states_mat(&batch, false);
+        let s2 = states_mat(&batch, true);
 
-        // --- Soft Bellman target (Eqs. 7–8) ------------------------------
-        // V(s') = π(s')ᵀ [min(Q̄₁, Q̄₂)(s') − α log π(s')]
+        // Soft Bellman target (Eqs. 7–8).
         let logits2 = self.policy.forward(&s2);
         let pi2 = softmax_rows(&logits2);
         let logpi2 = log_softmax_rows(&logits2);
@@ -181,7 +383,7 @@ impl DiscreteSac {
                 + self.cfg.gamma * if t.done { 0.0 } else { v };
         }
 
-        // --- Critic update (Eq. 9): MSE on the taken action only ---------
+        // Critic update (Eq. 9).
         let mut q_loss_total = 0.0;
         for (qnet, opt) in [(&mut self.q1, &mut self.opt_q1),
                             (&mut self.q2, &mut self.opt_q2)] {
@@ -200,11 +402,7 @@ impl DiscreteSac {
             q_loss_total += loss;
         }
 
-        // --- Actor update (Eq. 11) ----------------------------------------
-        // J_π = E_s Σ_a π(a|s) [α log π(a|s) − min Q(s,a)]
-        // With z the logits, g_a = α log π_a − Q_a:
-        //   ∂J/∂z_k = π_k [ (g_k + α) − Σ_a π_a (g_a + α) ]
-        // (softmax Jacobian applied to ∂J/∂π_a = g_a + α).
+        // Actor update (Eq. 11).
         let cache_pi = self.policy.forward_cache(&s);
         let logits = cache_pi.output();
         let pi = softmax_rows(logits);
@@ -227,8 +425,6 @@ impl DiscreteSac {
                 *dpi.at_mut(i, j) =
                     pi.at(i, j) * (g[j] + alpha - mean_term) / n as f32;
             }
-            // Entropy error for the temperature update (Eq. 12):
-            // Σ_a π_a (log π_a + H̄)  — positive when entropy is too low.
             for j in 0..a {
                 entropy_err_sum +=
                     pi.at(i, j) * (logpi.at(i, j) + self.target_entropy);
@@ -237,16 +433,14 @@ impl DiscreteSac {
         let grads_pi = self.policy.backward(&cache_pi, &dpi);
         self.opt_pi.step(&mut self.policy, &grads_pi);
 
-        // --- Temperature update (Eq. 12) ----------------------------------
-        // J(α) = E[−α (log π + H̄)]; ∂J/∂(log α) = −α · E[log π + H̄].
-        // J(α) = −α·err ⇒ ∂J/∂α = −err ⇒ ∂J/∂(log α) = −α·err.
+        // Temperature update (Eq. 12).
         let entropy_err = entropy_err_sum / n as f32;
         let alpha_grad = -alpha * entropy_err;
         self.log_alpha += self.opt_alpha.step(alpha_grad);
         self.log_alpha = self.log_alpha.clamp(-10.0, 2.0);
         let alpha_loss = -self.alpha() * entropy_err;
 
-        // --- Polyak target update -----------------------------------------
+        // Polyak target update.
         self.q1_target.soft_update_from(&self.q1, self.cfg.tau);
         self.q2_target.soft_update_from(&self.q2, self.cfg.tau);
 
@@ -294,13 +488,25 @@ fn argmax(xs: &[f32]) -> usize {
 }
 
 impl Agent for DiscreteSac {
+    /// Decision hot path (runs once per busy model per scheduling round):
+    /// the state row, forward activations, probabilities, and sampling
+    /// weights all live in the reused scratch — no allocation per
+    /// decision, unlike the allocating [`DiscreteSac::policy_probs`]
+    /// convenience path.
     fn act(&mut self, state: &[f32], rng: &mut Pcg32, greedy: bool) -> usize {
-        let probs = self.policy_probs(state);
+        let sc = &mut self.scratch;
+        sc.state_row.reset(1, state.len());
+        sc.state_row.row_mut(0).copy_from_slice(state);
+        self.policy.forward_into(&sc.state_row, &mut sc.logits_row,
+                                 &mut sc.tmp);
+        softmax_rows_into(&sc.logits_row, &mut sc.probs_row);
+        let probs = sc.probs_row.row(0);
         if greedy {
-            argmax(&probs)
+            argmax(probs)
         } else {
-            let w: Vec<f64> = probs.iter().map(|&p| p as f64).collect();
-            rng.categorical(&w)
+            sc.weights.clear();
+            sc.weights.extend(probs.iter().map(|&p| p as f64));
+            rng.categorical(&sc.weights)
         }
     }
 
@@ -384,6 +590,52 @@ mod tests {
                 "k={k}: numeric {num} analytic {ana}"
             );
         }
+    }
+
+    /// The scratch-based update must be bit-identical to the seed's
+    /// allocating oracle: same RNG consumption, same float-op order,
+    /// same resulting policy.
+    #[test]
+    fn alloc_oracle_matches_scratch_update() {
+        let mk = || {
+            let mut rng = Pcg32::seeded(0xD0E);
+            let cfg = SacConfig {
+                warmup: 32,
+                batch_size: 32,
+                ..Default::default()
+            };
+            let mut sac = DiscreteSac::new(5, 4, cfg, &mut rng);
+            let mut feed = Pcg32::seeded(0xFEED);
+            for _ in 0..64 {
+                let s: Vec<f32> =
+                    (0..5).map(|_| feed.f32() * 2.0 - 1.0).collect();
+                let s2: Vec<f32> =
+                    (0..5).map(|_| feed.f32() * 2.0 - 1.0).collect();
+                let a = sac.act(&s, &mut feed, false);
+                sac.observe(Transition {
+                    state: s,
+                    action: a,
+                    reward: feed.f32() * 4.0 - 2.0,
+                    next_state: s2,
+                    done: feed.below(10) == 0,
+                });
+            }
+            sac
+        };
+        let mut opt = mk();
+        let mut seed = mk();
+        let mut r1 = Pcg32::seeded(0x0B5);
+        let mut r2 = Pcg32::seeded(0x0B5);
+        for step in 0..5 {
+            let la = opt.update_batch(&mut r1);
+            let lb = seed.update_batch_alloc(&mut r2);
+            assert_eq!(la.q, lb.q, "q loss diverged at step {step}");
+            assert_eq!(la.pi, lb.pi, "pi loss diverged at step {step}");
+            assert_eq!(la.alpha, lb.alpha, "alpha loss diverged at {step}");
+        }
+        let probe = [0.3f32, -0.7, 0.1, 0.9, -0.2];
+        assert_eq!(opt.policy_probs(&probe), seed.policy_probs(&probe));
+        assert_eq!(opt.alpha(), seed.alpha());
     }
 
     #[test]

@@ -10,12 +10,17 @@
 //! * [`RealDispatcher`] runs each batch's AOT artifact on the PJRT CPU
 //!   client across a thread pool, so concurrent instances genuinely
 //!   contend for cores — used by the end-to-end examples.
+//!
+//! Hot path: the engine calls [`Dispatcher::run_group_into`] with a
+//! reused result buffer every round, so steady-state dispatch allocates
+//! nothing on either backend.
 
-use crate::platform::sim::PlatformSim;
+use crate::platform::sim::{BatchHandle, PlatformSim};
 use crate::platform::OomError;
 use crate::util::pool::ThreadPool;
 use crate::util::time::{Clock, VirtualClock};
 use crate::workload::models::{ModelId, ModelSpec};
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 /// One instance-batch to execute.
@@ -41,6 +46,16 @@ pub enum ExecError {
 /// latency in ms (queue-to-completion inside the backend).
 pub trait Dispatcher: Send {
     fn run_group(&mut self, jobs: &[BatchJob]) -> Vec<Result<f64, ExecError>>;
+
+    /// Like [`Dispatcher::run_group`], but writes into a caller-owned
+    /// buffer (cleared first) so the scheduling round loop can reuse one
+    /// allocation. Backends override this with their native path; the
+    /// default delegates for third-party implementations.
+    fn run_group_into(&mut self, jobs: &[BatchJob],
+                      out: &mut Vec<Result<f64, ExecError>>) {
+        out.clear();
+        out.extend(self.run_group(jobs));
+    }
 
     /// Observable utilization snapshot for the profiler:
     /// (compute demand, memory pressure ∈ [0,1], active instances).
@@ -70,43 +85,54 @@ pub struct SimDispatcher {
     /// Most recent ground-truth inflation (exported for predictor
     /// training / Fig. 13).
     pub last_inflation: f64,
+    /// Per-group admission scratch, reused across rounds.
+    handles: Vec<(usize, BatchHandle)>,
 }
 
 impl SimDispatcher {
     pub fn new(sim: PlatformSim, clock: VirtualClock) -> Self {
-        SimDispatcher { sim, clock, last_inflation: 1.0 }
+        SimDispatcher { sim, clock, last_inflation: 1.0, handles: Vec::new() }
     }
 }
 
 impl Dispatcher for SimDispatcher {
     fn run_group(&mut self, jobs: &[BatchJob]) -> Vec<Result<f64, ExecError>> {
+        let mut out = Vec::with_capacity(jobs.len());
+        self.run_group_into(jobs, &mut out);
+        out
+    }
+
+    fn run_group_into(&mut self, jobs: &[BatchJob],
+                      out: &mut Vec<Result<f64, ExecError>>) {
+        out.clear();
+        self.handles.clear();
         // Admit everything first so each job sees the group's full
         // contention (paper Fig. 4: the GPU hardware scheduler runs the
         // instances simultaneously).
-        let mut handles = Vec::with_capacity(jobs.len());
-        let mut results: Vec<Option<Result<f64, ExecError>>> =
-            (0..jobs.len()).map(|_| None).collect();
         for (i, job) in jobs.iter().enumerate() {
             match self.sim.begin(job.model, job.batch) {
-                Ok(h) => handles.push((i, h)),
-                Err(e) => results[i] = Some(Err(ExecError::Oom(e))),
+                Ok(h) => {
+                    self.handles.push((i, h));
+                    out.push(Ok(0.0)); // placeholder, priced below
+                }
+                Err(e) => out.push(Err(ExecError::Oom(e))),
             }
         }
         self.last_inflation = self.sim.current_inflation();
         let mut group_span: f64 = 0.0;
-        for &(i, _) in &handles {
+        for &(i, _) in &self.handles {
             let job = &jobs[i];
             let d = self.sim.duration_ms(job.model, job.batch);
             group_span = group_span.max(d);
-            results[i] = Some(Ok(d));
+            out[i] = Ok(d);
         }
-        for (_, h) in handles {
+        for &(_, h) in &self.handles {
             self.sim.end(h);
         }
+        self.handles.clear();
         // The slot occupies the platform until its slowest instance
         // finishes (instances run in parallel).
         self.clock.advance_ms(group_span);
-        results.into_iter().map(|r| r.unwrap()).collect()
     }
 
     fn utilization(&self) -> (f64, f64, usize) {
@@ -131,15 +157,41 @@ impl Dispatcher for SimDispatcher {
 // Real PJRT backend
 // ---------------------------------------------------------------------
 
+/// Synthetic marshaling buffers keyed by (model, batch).
+///
+/// The seed cached by buffer LENGTH, so two (model, batch) pairs whose
+/// element counts collide (e.g. mob b=2 and res b=2, both 2·3·32·32)
+/// aliased each other's entries, and every hit CLONED the whole buffer.
+/// Keying by (model, batch) fixes the alias; handing out `Arc<[f32]>`
+/// makes a hit a refcount bump instead of a memcpy.
+#[derive(Default)]
+struct InputCache {
+    map: HashMap<(ModelId, usize), Arc<[f32]>>,
+}
+
+impl InputCache {
+    fn get(&mut self, model: ModelId, batch: usize) -> Arc<[f32]> {
+        // Content-agnostic serving: shape matters, values do not (§III-A1).
+        let elems = ModelSpec::get(model).input_elems * batch;
+        self.map
+            .entry((model, batch))
+            .or_insert_with(|| vec![0.5f32; elems].into())
+            .clone()
+    }
+}
+
 /// Runs groups on the PJRT CPU client over a thread pool; real CPU
 /// contention between instances is the interference mechanism here.
 pub struct RealDispatcher {
     runtime: Arc<super::pjrt::PjrtRuntime>,
     pool: ThreadPool,
     origin: std::time::Instant,
-    /// Synthetic input reused per (model, batch) to avoid re-allocating
-    /// marshaling buffers in the hot loop.
-    input_cache: Vec<Vec<f32>>,
+    inputs: InputCache,
+    /// Per-job result slots shared with the workers. Grown on demand and
+    /// reused across rounds — the seed allocated an
+    /// `Arc<Mutex<Vec<Option<..>>>>` (one lock for the whole group, one
+    /// heap trip per round) on every dispatch.
+    slots: Arc<Vec<Mutex<Option<Result<f64, ExecError>>>>>,
 }
 
 impl RealDispatcher {
@@ -148,7 +200,8 @@ impl RealDispatcher {
             runtime,
             pool: ThreadPool::new(threads),
             origin: std::time::Instant::now(),
-            input_cache: Vec::new(),
+            inputs: InputCache::default(),
+            slots: Arc::new(Vec::new()),
         }
     }
 
@@ -172,44 +225,43 @@ impl RealDispatcher {
     pub fn reset_origin(&mut self) {
         self.origin = std::time::Instant::now();
     }
-
-    fn input_for(&mut self, model: ModelId, batch: usize) -> Vec<f32> {
-        // Content-agnostic serving: shape matters, values do not (§III-A1).
-        let elems = ModelSpec::get(model).input_elems * batch;
-        if let Some(buf) = self.input_cache.iter().find(|b| b.len() == elems) {
-            return buf.clone();
-        }
-        let buf = vec![0.5f32; elems];
-        self.input_cache.push(buf.clone());
-        buf
-    }
 }
 
 impl Dispatcher for RealDispatcher {
     fn run_group(&mut self, jobs: &[BatchJob]) -> Vec<Result<f64, ExecError>> {
-        let results: Arc<Mutex<Vec<Option<Result<f64, ExecError>>>>> =
-            Arc::new(Mutex::new((0..jobs.len()).map(|_| None).collect()));
+        let mut out = Vec::with_capacity(jobs.len());
+        self.run_group_into(jobs, &mut out);
+        out
+    }
+
+    fn run_group_into(&mut self, jobs: &[BatchJob],
+                      out: &mut Vec<Result<f64, ExecError>>) {
+        if self.slots.len() < jobs.len() {
+            // Workers from previous rounds have exited (wait_idle), so the
+            // old Arc dies with this replacement; allocation only on the
+            // largest group seen so far.
+            self.slots =
+                Arc::new((0..jobs.len()).map(|_| Mutex::new(None)).collect());
+        }
         for (i, job) in jobs.iter().enumerate() {
             let rt = self.runtime.clone();
-            let results = results.clone();
+            let slots = self.slots.clone();
             let job = *job;
-            let input = self.input_for(job.model, job.batch);
+            let input = self.inputs.get(job.model, job.batch);
             self.pool.execute(move || {
                 let t0 = std::time::Instant::now();
                 let r = rt
                     .execute(job.model, job.batch, &input)
                     .map(|_| t0.elapsed().as_secs_f64() * 1e3)
                     .map_err(|e| ExecError::Backend(e.to_string()));
-                results.lock().unwrap()[i] = Some(r);
+                *slots[i].lock().unwrap() = Some(r);
             });
         }
         self.pool.wait_idle();
-        Arc::try_unwrap(results)
-            .map(|m| m.into_inner().unwrap())
-            .unwrap_or_default()
-            .into_iter()
-            .map(|r| r.expect("job did not run"))
-            .collect()
+        out.clear();
+        for slot in self.slots.iter().take(jobs.len()) {
+            out.push(slot.lock().unwrap().take().expect("job did not run"));
+        }
     }
 
     fn utilization(&self) -> (f64, f64, usize) {
@@ -284,5 +336,43 @@ mod tests {
             .copied()
             .unwrap();
         assert!(crowd > solo, "solo {solo} crowd {crowd}");
+    }
+
+    #[test]
+    fn sim_run_group_into_reuses_buffer() {
+        let clock = VirtualClock::new();
+        let mut d = SimDispatcher::new(PlatformSim::xavier_nx(), clock);
+        let mut out = Vec::new();
+        d.run_group_into(&jobs(ModelId::Res, 4, 3), &mut out);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|r| r.is_ok()));
+        d.run_group_into(&jobs(ModelId::Mob, 2, 1), &mut out);
+        assert_eq!(out.len(), 1, "buffer must be cleared between groups");
+    }
+
+    #[test]
+    fn input_cache_keys_by_model_and_batch() {
+        let mut cache = InputCache::default();
+        // mob and res share input_elems, so a length-keyed cache (the
+        // seed bug) would alias these two entries.
+        assert_eq!(
+            ModelSpec::get(ModelId::Mob).input_elems,
+            ModelSpec::get(ModelId::Res).input_elems
+        );
+        let mob = cache.get(ModelId::Mob, 2);
+        let res = cache.get(ModelId::Res, 2);
+        assert_eq!(mob.len(), res.len());
+        assert!(
+            !Arc::ptr_eq(&mob, &res),
+            "distinct (model, batch) keys must not alias buffers"
+        );
+        // Same key twice is a refcount bump on the same allocation.
+        let mob2 = cache.get(ModelId::Mob, 2);
+        assert!(Arc::ptr_eq(&mob, &mob2));
+        assert_eq!(
+            mob.len(),
+            ModelSpec::get(ModelId::Mob).input_elems * 2
+        );
+        assert!(mob.iter().all(|&x| x == 0.5));
     }
 }

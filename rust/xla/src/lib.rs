@@ -1,0 +1,144 @@
+//! Offline stub of the `xla` (xla_extension) PJRT bindings.
+//!
+//! The build environment for this repository does not ship the real
+//! `xla_extension` shared library, so this crate provides just the API
+//! surface `bcedge::runtime::pjrt` compiles against. Constructors that
+//! would touch PJRT return [`Error`], which `PjrtRuntime::load` already
+//! treats as "real backend unavailable" — the simulation backend and the
+//! entire coordinator test surface are independent of it. Replacing this
+//! path dependency with the real bindings requires no source changes in
+//! `bcedge`.
+//!
+//! Type fidelity notes: the real crate wraps PJRT handles in `Rc`, which
+//! makes its types `!Send`/`!Sync`; the `_not_send` markers reproduce
+//! that so the `unsafe impl Send` reasoning in `runtime/pjrt.rs` stays
+//! honest against this stub too.
+
+use std::rc::Rc;
+
+/// Stub error: every PJRT entry point fails with this.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} is unavailable (offline stub build without xla_extension)"
+    )))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    /// The real binding creates a CPU PJRT client; the stub reports the
+    /// backend as unavailable so callers fall back to simulation.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _not_send: Rc<()>,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation {
+    _not_send: Rc<()>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _not_send: Rc::new(()) }
+    }
+}
+
+/// Host literal (stub): carries no data, only enough shape to type-check.
+pub struct Literal {
+    _not_send: Rc<()>,
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _not_send: Rc::new(()) }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _not_send: Rc::new(()) })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+pub struct PjRtBuffer {
+    _not_send: Rc<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable {
+    _not_send: Rc<()>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors the real signature shape: generic over the argument
+    /// literal type, returns per-device/per-output buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_shape_round_trip_is_inert() {
+        let l = Literal::vec1(&[1.0, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
