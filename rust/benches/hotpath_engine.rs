@@ -7,9 +7,11 @@
 //!    loop (SAC learning on, predictor on) at three offered loads;
 //! 2. **component before/after** — the seed implementations survive as
 //!    public oracles/wrappers (`*_naive_ms`, `mean_inflation_naive`,
-//!    `forward_cache`/`backward`), so the allocating "before" path and
-//!    the buffer-reusing "after" path are measured side by side in the
-//!    same binary;
+//!    `forward_cache`/`backward`, `step`, `predict_alloc`,
+//!    `train_step_alloc`), so the allocating "before" path and the
+//!    buffer-reusing "after" path are measured side by side in the same
+//!    binary — including the PR #2 finishes: `step_into`'s caller-owned
+//!    outcome buffer and the predictor's scratch predict/train paths;
 //! 3. **SAC update step** — µs per `update_batch` on the paper's network
 //!    shape, plus the allocating fwd+bwd core it replaced.
 //!
@@ -17,6 +19,7 @@
 //! crate root when run elsewhere). Compare across commits by re-running
 //! `cargo bench --bench hotpath_engine` on each.
 
+use bcedge::coordinator::baselines::FixedScheduler;
 use bcedge::coordinator::queue::ModelQueue;
 use bcedge::coordinator::sac_sched;
 use bcedge::coordinator::{Engine, EngineConfig};
@@ -24,6 +27,7 @@ use bcedge::nn::mlp::{BackwardScratch, ForwardCache};
 use bcedge::nn::tensor::Mat;
 use bcedge::nn::Mlp;
 use bcedge::platform::PlatformSim;
+use bcedge::predictor::{InterferencePredictor, PredictorSample};
 use bcedge::profiler::{ProfileSample, Profiler};
 use bcedge::rl::env::{Agent, Transition};
 use bcedge::rl::sac::{DiscreteSac, SacConfig};
@@ -132,6 +136,109 @@ fn main() {
             ("profiler_rolling_us", num(p_roll.mean_us)),
             ("profiler_speedup",
              num(p_naive.mean_us / p_roll.mean_us.max(1e-9))),
+        ]),
+    ));
+
+    // ---------------------------------------------------------------
+    // 2b. Round loop: caller-owned outcome buffer (step_into) vs the
+    //     allocating per-round outcome vec (step) — the last piece of
+    //     the zero-allocation story. Identical engines + workloads;
+    //     predictor on, so the alloc-free predict probes are included.
+    // ---------------------------------------------------------------
+    banner("engine round: step_into (reused buffer) vs step (allocating)");
+    let mk_engine = || {
+        let clock = VirtualClock::new();
+        let dispatcher = SimDispatcher::new(PlatformSim::xavier_nx(), clock);
+        let mut engine = Engine::new(
+            dispatcher,
+            EngineConfig { learn: false, ..Default::default() },
+        );
+        let mut gen = PoissonGenerator::new(180.0, 0xE2);
+        engine.submit(gen.generate_horizon(600_000.0));
+        engine
+    };
+    let mut e_into = mk_engine();
+    let mut s_into = FixedScheduler { batch: 4, m_c: 2 };
+    let mut outcome_buf = Vec::new();
+    let t_step_into = time_fn("engine step_into (reused outcomes)", 50, 1500,
+                              || {
+        std::hint::black_box(e_into.step_into(&mut s_into, &mut outcome_buf));
+    });
+    let mut e_alloc = mk_engine();
+    let mut s_alloc = FixedScheduler { batch: 4, m_c: 2 };
+    let t_step_alloc = time_fn("engine step (fresh outcome vec)", 50, 1500,
+                               || {
+        std::hint::black_box(e_alloc.step(&mut s_alloc));
+    });
+    println!("{}", t_step_into.row());
+    println!("{}", t_step_alloc.row());
+    assert!(e_into.total_queued() > 0 && e_alloc.total_queued() > 0,
+            "workload exhausted mid-measurement; lengthen the horizon");
+    sections.push((
+        "engine_step",
+        obj(vec![
+            ("step_into_us", num(t_step_into.mean_us)),
+            ("step_alloc_us", num(t_step_alloc.mean_us)),
+            ("step_speedup",
+             num(t_step_alloc.mean_us / t_step_into.mean_us.max(1e-9))),
+        ]),
+    ));
+
+    // ---------------------------------------------------------------
+    // 2c. Predictor veto probe + training step: scratch vs seed alloc
+    //     paths (both proven bit-identical by the predictor tests).
+    // ---------------------------------------------------------------
+    banner("interference predictor: scratch vs allocating oracles");
+    let mut prng = Pcg32::seeded(0xF1);
+    let mut pred = InterferencePredictor::new(&mut prng);
+    for i in 0..512 {
+        pred.observe(PredictorSample {
+            memory_pressure: 0.3 + 0.4 * ((i % 7) as f64 / 7.0),
+            compute_demand: 1.0 + (i % 5) as f64,
+            active_instances: 1 + i % 6,
+            concurrency: 1 + i % 4,
+            batch: 1 << (i % 6),
+            inflation: 1.0 + (i % 9) as f64 * 0.1,
+        });
+    }
+    pred.fit(100, &mut prng);
+    let probe = PredictorSample {
+        memory_pressure: 0.5,
+        compute_demand: 2.5,
+        active_instances: 3,
+        concurrency: 2,
+        batch: 8,
+        inflation: 1.0,
+    };
+    let t_pred = time_fn("predict scratch (veto probe)", 200, 4000, || {
+        std::hint::black_box(pred.predict(&probe));
+    });
+    let t_pred_alloc = time_fn("predict SEED alloc path", 200, 4000, || {
+        std::hint::black_box(pred.predict_alloc(&probe));
+    });
+    let mut train_rng = Pcg32::seeded(0xF2);
+    let t_train = time_fn("train_step scratch (batch 64)", 20, 300, || {
+        std::hint::black_box(pred.train_step(&mut train_rng));
+    });
+    let t_train_alloc =
+        time_fn("train_step SEED alloc path (batch 64)", 20, 300, || {
+            std::hint::black_box(pred.train_step_alloc(&mut train_rng));
+        });
+    println!("{}", t_pred.row());
+    println!("{}", t_pred_alloc.row());
+    println!("{}", t_train.row());
+    println!("{}", t_train_alloc.row());
+    sections.push((
+        "predictor",
+        obj(vec![
+            ("predict_us", num(t_pred.mean_us)),
+            ("predict_alloc_us", num(t_pred_alloc.mean_us)),
+            ("predict_speedup",
+             num(t_pred_alloc.mean_us / t_pred.mean_us.max(1e-9))),
+            ("train_step_us", num(t_train.mean_us)),
+            ("train_step_alloc_us", num(t_train_alloc.mean_us)),
+            ("train_step_speedup",
+             num(t_train_alloc.mean_us / t_train.mean_us.max(1e-9))),
         ]),
     ));
 

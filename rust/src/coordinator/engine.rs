@@ -12,21 +12,28 @@
 //! the learning scheduler. "BCEdge starts the next scheduling immediately
 //! after finishing the current scheduling to reduce the GPU idle."
 //!
-//! Hot-path discipline (PR #1): the round loop is allocation-free in
-//! steady state. All per-round buffers — the busy-model walk, per-model
-//! plans, the flattened job list, dispatch results, and the assembled
-//! batches with their request vectors — live in [`RoundScratch`] and are
-//! recycled between rounds; queue/profiler aggregate reads are O(1); and
-//! OOM'd requests are requeued by move instead of clone. The
-//! `seed_equivalence` test module proves the optimized loop emits a
-//! bit-identical [`SlotOutcome`] stream to the seed implementation.
+//! Hot-path discipline (PR #1, finished in PR #2): the round loop is
+//! allocation-free in steady state. All per-round buffers — the
+//! busy-model walk, per-model plans, the flattened job list, dispatch
+//! results, and the assembled batches with their request vectors — live
+//! in [`RoundScratch`] and are recycled between rounds; the outcome
+//! vector is caller-owned ([`Engine::step_into`]); queue/profiler
+//! aggregate reads are O(1); and OOM'd requests are requeued by move
+//! instead of clone. The `seed_equivalence` test module proves the
+//! optimized loop emits a bit-identical [`SlotOutcome`] stream to the
+//! seed implementation.
+//!
+//! Serving-runtime seam (PR #2): an optional [`IngressGate`] is consulted
+//! as arrivals move into the per-model queues, so the `serve` subsystem's
+//! SLO-aware admission controller can shed provably-late requests at
+//! ingress; with no gate installed the path is byte-identical to PR #1.
 
 use super::batcher::{AssembledBatch, Batcher};
 use super::instances::InstanceManager;
 use super::queue::Router;
 use super::scheduler::{SchedCtx, Scheduler};
 use super::utility;
-use crate::metrics::{Metrics, RequestOutcome};
+use crate::metrics::{Metrics, RequestOutcome, ShedReason};
 use crate::predictor::{InterferencePredictor, PredictorSample};
 use crate::profiler::{ProfileSample, Profiler};
 use crate::rl::spaces::ActionSpace;
@@ -67,6 +74,35 @@ impl Default for EngineConfig {
             seed: 0xBCED6E,
         }
     }
+}
+
+/// O(1) view of the state an ingress-time admission decision needs, all
+/// rolling aggregates the engine already maintains.
+#[derive(Clone, Copy, Debug)]
+pub struct IngressSnapshot {
+    pub now_ms: f64,
+    /// Depth of the request's model queue (requests already ahead of it).
+    pub queue_len: usize,
+    /// Rolling profiled mean batch latency for the model, ms (NaN before
+    /// the first observation).
+    pub mean_batch_ms: f64,
+    /// Isolated latency estimate at the gate's reference batch size, ms —
+    /// the optimistic cold-start fallback.
+    pub isolated_ref_ms: f64,
+}
+
+/// Admission hook consulted as requests move from arrivals into the
+/// per-model queues. `None` on the engine means every request is routed —
+/// byte-for-byte the pre-gate behaviour. The serving runtime installs
+/// [`crate::serve::AdmissionGate`] here; tests can install ad-hoc gates.
+pub trait IngressGate: Send {
+    /// Reference batch size for the snapshot's isolated-latency estimate.
+    fn ref_batch(&self) -> usize;
+
+    /// `Some(reason)` sheds the request at ingress (recorded in
+    /// [`Metrics`] as a shed, not a violation); `None` admits it.
+    fn decide(&mut self, r: &Request, snap: &IngressSnapshot)
+              -> Option<ShedReason>;
 }
 
 /// Result of one scheduling slot.
@@ -133,6 +169,7 @@ pub struct Engine<D: Dispatcher> {
     last_model: usize,
     slots_run: u64,
     scratch: RoundScratch,
+    gate: Option<Box<dyn IngressGate>>,
 }
 
 impl<D: Dispatcher> Engine<D> {
@@ -161,13 +198,30 @@ impl<D: Dispatcher> Engine<D> {
             dispatcher,
             cfg,
             scratch: RoundScratch::default(),
+            gate: None,
         }
+    }
+
+    /// Install (or clear) the ingress admission gate. With `None` —
+    /// the default — every arrival is routed, exactly as before the
+    /// serving runtime existed.
+    pub fn set_ingress_gate(&mut self, gate: Option<Box<dyn IngressGate>>) {
+        self.gate = gate;
     }
 
     /// Queue future arrivals (must be sorted by arrival time).
     pub fn submit(&mut self, requests: Vec<Request>) {
         debug_assert!(requests.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
         self.pending.extend(requests);
+    }
+
+    /// Queue a single live arrival. Unlike [`Engine::submit`] this does
+    /// not assert global arrival ordering: the serving runtime's workers
+    /// interleave several per-model ingress channels whose wall-clock
+    /// stamps may be microseconds out of order; every such request is
+    /// already due, so ordering slack is harmless.
+    pub fn push_request(&mut self, r: Request) {
+        self.pending.push_back(r);
     }
 
     pub fn now_ms(&self) -> f64 {
@@ -182,6 +236,11 @@ impl<D: Dispatcher> Engine<D> {
         self.router.total_queued() + self.pending.len()
     }
 
+    /// Depth of one model's routed queue (excludes not-yet-due arrivals).
+    pub fn queue_len(&self, model: ModelId) -> usize {
+        self.router.queue(model).len()
+    }
+
     pub fn slots_run(&self) -> u64 {
         self.slots_run
     }
@@ -189,11 +248,28 @@ impl<D: Dispatcher> Engine<D> {
     fn ingest(&mut self) {
         let now = self.dispatcher.now_ms();
         while let Some(front) = self.pending.front() {
-            if front.arrival_ms <= now {
-                let r = self.pending.pop_front().unwrap();
-                self.router.route(r);
-            } else {
+            if front.arrival_ms > now {
                 break;
+            }
+            let r = self.pending.pop_front().unwrap();
+            match &mut self.gate {
+                None => self.router.route(r),
+                Some(gate) => {
+                    let snap = IngressSnapshot {
+                        now_ms: now,
+                        queue_len: self.router.queue(r.model).len(),
+                        mean_batch_ms: self.profiler.mean_latency_ms(r.model),
+                        isolated_ref_ms: self
+                            .dispatcher
+                            .isolated_estimate_ms(r.model, gate.ref_batch()),
+                    };
+                    match gate.decide(&r, &snap) {
+                        Some(reason) => {
+                            self.metrics.record_shed(r.model, reason);
+                        }
+                        None => self.router.route(r),
+                    }
+                }
             }
         }
     }
@@ -509,13 +585,18 @@ impl<D: Dispatcher> Engine<D> {
     /// gets a decision, and all chosen instance-batches dispatch as a
     /// single concurrent group — the paper Fig. 4 pipeline, where the
     /// accelerator's hardware scheduler runs different models' instances
-    /// simultaneously. Returns one outcome per scheduled model.
+    /// simultaneously. Writes one outcome per scheduled model into the
+    /// caller-owned `outcomes` buffer (cleared first) and returns the
+    /// count, or `None` when the workload is exhausted.
     ///
     /// Every buffer below is moved out of `self.scratch`, used, cleared,
-    /// and moved back — zero steady-state allocation per round beyond the
-    /// returned outcome vector itself.
-    pub fn step<S: Scheduler + ?Sized>(&mut self, scheduler: &mut S)
-                                       -> Option<Vec<SlotOutcome>> {
+    /// and moved back, and the outcome vector is the caller's to recycle —
+    /// the round loop is now allocation-free end to end ([`Engine::step`]
+    /// keeps the seed's allocating signature as a convenience wrapper).
+    pub fn step_into<S: Scheduler + ?Sized>(
+        &mut self, scheduler: &mut S, outcomes: &mut Vec<SlotOutcome>,
+    ) -> Option<usize> {
+        outcomes.clear();
         self.next_model()?; // advances time to work; round-robin anchor
         let mut busy = std::mem::take(&mut self.scratch.busy);
         self.router.busy_models_into(self.last_model, &mut busy);
@@ -548,7 +629,7 @@ impl<D: Dispatcher> Engine<D> {
             self.scratch.entries = entries;
             self.scratch.jobs = jobs;
             self.scratch.ranges = ranges;
-            return Some(vec![]);
+            return Some(0);
         }
 
         // Phase 2: one concurrent dispatch for the whole round.
@@ -557,7 +638,6 @@ impl<D: Dispatcher> Engine<D> {
         self.dispatcher.run_group_into(&jobs, &mut results);
 
         // Phase 3: per-model accounting + learning feedback.
-        let mut outcomes = Vec::with_capacity(entries.len());
         for (mut e, (start, end)) in entries.drain(..).zip(ranges.iter().copied())
         {
             let mut outcome = if e.plan.assembled.is_empty() {
@@ -582,17 +662,28 @@ impl<D: Dispatcher> Engine<D> {
         self.scratch.ranges = ranges;
         self.scratch.results = results;
         self.finish_round();
-        Some(outcomes)
+        Some(outcomes.len())
+    }
+
+    /// Allocating wrapper over [`Engine::step_into`] — the seed's
+    /// signature, kept for callers that want an owned outcome vector
+    /// (and as the bench's "before" path).
+    pub fn step<S: Scheduler + ?Sized>(&mut self, scheduler: &mut S)
+                                       -> Option<Vec<SlotOutcome>> {
+        let mut outcomes = Vec::new();
+        self.step_into(scheduler, &mut outcomes).map(|_| outcomes)
     }
 
     /// Serve until the virtual/real horizon passes or work runs out.
-    /// Returns the number of per-model slots executed.
+    /// Returns the number of per-model slots executed. One outcome buffer
+    /// is recycled across every round.
     pub fn run<S: Scheduler + ?Sized>(&mut self, scheduler: &mut S,
                                       horizon_ms: f64) -> u64 {
+        let mut outcomes = Vec::new();
         let mut slots = 0;
         while self.dispatcher.now_ms() < horizon_ms {
-            match self.step(scheduler) {
-                Some(outcomes) => slots += outcomes.len() as u64,
+            match self.step_into(scheduler, &mut outcomes) {
+                Some(n) => slots += n as u64,
                 None => break,
             }
         }
@@ -708,6 +799,76 @@ mod tests {
         assert!(out.completed > 0);
         assert!(out.utility.is_finite());
         assert!(engine.metrics.mean_utility(Some(ModelId::Res)).is_finite());
+    }
+
+    #[test]
+    fn step_into_reuses_buffer_and_matches_step() {
+        let cfg = EngineConfig { learn: false, ..Default::default() };
+        let mut a = sim_engine(cfg.clone());
+        let mut b = sim_engine(cfg);
+        for e in [&mut a, &mut b] {
+            let mut gen = PoissonGenerator::new(60.0, 11);
+            e.submit(gen.generate_horizon(10_000.0));
+        }
+        let mut sa = FixedScheduler { batch: 4, m_c: 2 };
+        let mut sb = FixedScheduler { batch: 4, m_c: 2 };
+        let mut buf = Vec::new();
+        for _ in 0..30 {
+            let n = a.step_into(&mut sa, &mut buf);
+            let owned = b.step(&mut sb);
+            match (n, owned) {
+                (Some(n), Some(owned)) => {
+                    assert_eq!(n, buf.len());
+                    assert_eq!(buf, owned);
+                }
+                (None, None) => break,
+                (x, y) => panic!("paths diverged: {x:?} vs {:?}", y.map(|v| v.len())),
+            }
+        }
+    }
+
+    /// An ingress gate that sheds every request for one model and admits
+    /// the rest — pins the gate seam: sheds land in Metrics (not as
+    /// violations), admitted traffic is unaffected, nothing is lost.
+    struct BlockModel(ModelId);
+    impl crate::coordinator::engine::IngressGate for BlockModel {
+        fn ref_batch(&self) -> usize {
+            8
+        }
+        fn decide(&mut self, r: &Request, snap: &IngressSnapshot)
+                  -> Option<ShedReason> {
+            assert!(snap.isolated_ref_ms > 0.0);
+            assert!(snap.now_ms >= r.arrival_ms);
+            (r.model == self.0).then_some(ShedReason::DeadlineUnmeetable)
+        }
+    }
+
+    #[test]
+    fn ingress_gate_sheds_into_metrics_not_violations() {
+        let mut engine = sim_engine(EngineConfig {
+            learn: false,
+            ..Default::default()
+        });
+        engine.set_ingress_gate(Some(Box::new(BlockModel(ModelId::Yolo))));
+        let mut gen = PoissonGenerator::new(60.0, 5);
+        let reqs = gen.generate_horizon(10_000.0);
+        let n = reqs.len();
+        let n_yolo = reqs.iter().filter(|r| r.model == ModelId::Yolo).count();
+        assert!(n_yolo > 0, "trace must offer yolo traffic");
+        engine.submit(reqs);
+        let mut sched = FixedScheduler { batch: 4, m_c: 2 };
+        engine.run(&mut sched, 60_000.0);
+        let m = &engine.metrics;
+        assert_eq!(m.shed_total(), n_yolo as u64);
+        assert_eq!(m.shed_for(ModelId::Yolo), n_yolo as u64);
+        assert_eq!(m.shed_by_reason(ShedReason::DeadlineUnmeetable),
+                   n_yolo as u64);
+        // Shed requests never execute and never count as violations.
+        assert!(m.outcomes().iter().all(|o| o.model != ModelId::Yolo));
+        // Conservation: executed + still queued + shed == offered.
+        assert_eq!(m.outcomes().len() + engine.total_queued()
+                       + m.shed_total() as usize,
+                   n);
     }
 
     #[test]

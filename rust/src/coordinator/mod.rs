@@ -15,7 +15,8 @@ pub mod scheduler;
 pub mod slo;
 pub mod utility;
 
-pub use engine::{Engine, EngineConfig, SlotOutcome};
+pub use engine::{Engine, EngineConfig, IngressGate, IngressSnapshot,
+                 SlotOutcome};
 pub use queue::{ModelQueue, Router};
 pub use sac_sched::{SacScheduler, SchedEnv};
 pub use scheduler::{SchedCtx, Scheduler, STATE_DIM};

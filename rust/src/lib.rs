@@ -21,6 +21,10 @@
 //!   with memory accounting and ground-truth interference;
 //! * [`runtime`] — PJRT execution of the AOT artifacts + a virtual-time
 //!   simulation backend behind one trait;
+//! * [`serve`] — the concurrent serving runtime: bounded ingress with
+//!   SLO-aware admission control, a multi-worker engine pool (virtual or
+//!   wall clock), drain/shutdown, and the open/closed-loop load
+//!   generator behind `bcedge bench-serve`;
 //! * [`profiler`], [`metrics`] — §IV-E performance profiler and experiment
 //!   instrumentation;
 //! * [`nn`], [`util`] — from-scratch substrates (tensor/MLP/Adam, RNG,
@@ -40,6 +44,7 @@ pub mod coordinator;
 pub mod predictor;
 pub mod profiler;
 pub mod metrics;
+pub mod serve;
 
 /// Crate version (mirrors `Cargo.toml`).
 pub fn version() -> &'static str {

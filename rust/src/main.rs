@@ -1,14 +1,45 @@
 //! `bcedge` — launcher CLI for the BCEdge serving framework.
 //!
 //! Subcommands:
-//!   serve   — serve Poisson traffic (sim or real PJRT backend)
-//!   train   — offline SAC training on the platform simulator
-//!   sweep   — Fig. 1 style (batch × concurrency) sweep on the simulator
-//!   info    — print zoo / artifact / platform information
+//!   serve       — serve Poisson traffic (sim or real PJRT backend,
+//!                 single-threaded engine loop)
+//!   bench-serve — drive the CONCURRENT serving runtime with the built-in
+//!                 load generator: multi-worker engine pool behind a
+//!                 bounded ingress with SLO-aware admission control
+//!   train       — offline SAC training on the platform simulator
+//!   sweep       — Fig. 1 style (batch × concurrency) sweep on the simulator
+//!   info        — print zoo / artifact / platform information
+//!
+//! bench-serve options:
+//!   --workers N          worker threads, each owning a model shard (4)
+//!   --rps R              offered aggregate rate, requests/s (200)
+//!   --seconds S          serving horizon (10)
+//!   --clock virtual|wall virtual = deterministic discrete-event time per
+//!                        worker (CI-fast); wall = workers genuinely
+//!                        overlap in real time (virtual)
+//!   --mode open|closed   open-loop rate-driven vs closed-loop
+//!                        keep-K-in-flight clients; closed implies wall
+//!                        clock (open)
+//!   --concurrency K      in-flight requests for closed mode (16)
+//!   --envelope constant|bursty|diurnal
+//!                        arrival-rate envelope: stationary Poisson, MMPP
+//!                        on/off bursts, or a sinusoidal "day" (constant)
+//!   --scheduler sac|deeprt|fixed (sac)
+//!   --no-admission       disable the admission controller (every request
+//!                        queues; overload melts down — the baseline the
+//!                        admission stress test beats)
+//!   --queue-cap N        per-model ingress channel bound (256)
+//!   --seed S             trace + scheduler seed (7)
+//!
+//! Reported: achieved rps, p50/p99 end-to-end latency, SLO violation rate
+//! over accepted requests, and the admission shed rate with typed reasons.
 //!
 //! Examples:
 //!   bcedge serve --backend sim --rps 30 --seconds 300 --scheduler sac
 //!   bcedge serve --backend real --rps 30 --seconds 30
+//!   bcedge bench-serve --workers 4 --rps 200 --seconds 10
+//!   bcedge bench-serve --workers 4 --rps 300 --seconds 10 --envelope bursty
+//!   bcedge bench-serve --clock wall --mode closed --concurrency 32
 //!   bcedge train --episodes 100 --out results/sac_policy.json
 //!   bcedge info
 
@@ -28,17 +59,21 @@ use bcedge::workload::PoissonGenerator;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["no-predictor", "greedy"])
+    let args = Args::from_env(&["no-predictor", "greedy", "no-admission"])
         .map_err(anyhow::Error::msg)?;
     match args.positional().first().map(String::as_str) {
         Some("serve") => serve(&args),
+        Some("bench-serve") => bench_serve(&args),
         Some("train") => train(&args),
         Some("sweep") => sweep(&args),
         Some("info") => info(&args),
         _ => {
-            eprintln!("usage: bcedge <serve|train|sweep|info> [options]");
+            eprintln!("usage: bcedge <serve|bench-serve|train|sweep|info> [options]");
             eprintln!("  serve --backend sim|real --rps N --seconds N \\");
             eprintln!("        --scheduler sac|tac|deeprt|fixed [--policy F] [--no-predictor]");
+            eprintln!("  bench-serve --workers N --rps N --seconds N [--clock virtual|wall] \\");
+            eprintln!("        --mode open|closed [--concurrency K] --envelope constant|bursty|diurnal \\");
+            eprintln!("        --scheduler sac|deeprt|fixed [--no-admission] [--queue-cap N] [--seed S]");
             eprintln!("  train --episodes N --rps N --platform nx|tx2|nano --out F");
             eprintln!("  sweep --model yolo");
             eprintln!("  info  [--artifacts DIR]");
@@ -150,6 +185,78 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown backend {other}"),
     }
+    Ok(())
+}
+
+/// Drive the concurrent serving runtime with the built-in load generator.
+fn bench_serve(args: &Args) -> anyhow::Result<()> {
+    use bcedge::serve::{self, LoadGenConfig, LoadMode, SchedulerSpec,
+                        ServeConfig};
+    use bcedge::workload::RateEnvelope;
+
+    let workers: usize =
+        args.get_parse("workers", 4).map_err(anyhow::Error::msg)?;
+    let rps: f64 = args.get_parse("rps", 200.0).map_err(anyhow::Error::msg)?;
+    let seconds: f64 =
+        args.get_parse("seconds", 10.0).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_parse("seed", 7u64).map_err(anyhow::Error::msg)?;
+    let mode = match args.get_or("mode", "open") {
+        "open" => LoadMode::Open,
+        "closed" => LoadMode::Closed {
+            concurrency: args
+                .get_parse("concurrency", 16)
+                .map_err(anyhow::Error::msg)?,
+        },
+        other => anyhow::bail!("unknown mode {other}"),
+    };
+    let clock = match (args.get("clock"), mode) {
+        // Closed loop runs on real completions: wall unless overridden.
+        (None, LoadMode::Closed { .. }) => serve::ClockKind::Wall,
+        (None, LoadMode::Open) | (Some("virtual"), _) => {
+            serve::ClockKind::Virtual
+        }
+        (Some("wall"), _) => serve::ClockKind::Wall,
+        (Some(other), _) => anyhow::bail!("unknown clock {other}"),
+    };
+    let envelope = match args.get_or("envelope", "constant") {
+        "constant" => RateEnvelope::Constant,
+        "bursty" => RateEnvelope::bursty(),
+        "diurnal" => RateEnvelope::diurnal(),
+        other => anyhow::bail!("unknown envelope {other}"),
+    };
+    let scheduler = match args.get_or("scheduler", "sac") {
+        "sac" => SchedulerSpec::Sac { seed: seed ^ 0x5AC },
+        "deeprt" => SchedulerSpec::DeepRt,
+        "fixed" => SchedulerSpec::Fixed { batch: 4, m_c: 2 },
+        other => anyhow::bail!("unknown scheduler {other}"),
+    };
+    let serve_cfg = ServeConfig {
+        workers,
+        clock,
+        platform: platform_of(args),
+        scheduler,
+        admission: if args.flag("no-admission") {
+            None
+        } else {
+            Some(bcedge::serve::AdmissionConfig::default())
+        },
+        queue_capacity: args
+            .get_parse("queue-cap", 256)
+            .map_err(anyhow::Error::msg)?,
+        ..Default::default()
+    };
+    let load = LoadGenConfig { rps, seconds, seed, envelope, mode };
+    println!(
+        "bcedge bench-serve — {} workers, {:?} clock, {:?} mode, \
+         {rps} rps × {seconds}s, admission {}",
+        serve_cfg.workers,
+        clock,
+        mode,
+        if serve_cfg.admission.is_some() { "on" } else { "off" },
+    );
+    let report = serve::loadgen::run(&serve_cfg, &load)
+        .map_err(anyhow::Error::msg)?;
+    report.print();
     Ok(())
 }
 

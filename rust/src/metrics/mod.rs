@@ -5,8 +5,50 @@
 use crate::util::stats::{percentile, Summary};
 use crate::workload::models::{ModelId, N_MODELS};
 
+/// Why the admission controller refused a request (serving runtime).
+/// Typed so shed accounting is queryable per cause — a request shed at
+/// ingress is NOT an SLO violation and must never be folded into one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum ShedReason {
+    /// The model's bounded ingress queue was full (backpressure).
+    QueueFull = 0,
+    /// Queue depth × profiled batch latency already exceeds the request's
+    /// remaining slack: its deadline is provably unmeetable.
+    DeadlineUnmeetable = 1,
+    /// The server is draining; intake is closed.
+    Shutdown = 2,
+}
+
+/// Number of [`ShedReason`] variants (sizes the per-reason counters).
+pub const N_SHED_REASONS: usize = 3;
+
+impl ShedReason {
+    pub fn all() -> [ShedReason; N_SHED_REASONS] {
+        [
+            ShedReason::QueueFull,
+            ShedReason::DeadlineUnmeetable,
+            ShedReason::Shutdown,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::DeadlineUnmeetable => "deadline-unmeetable",
+            ShedReason::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
 /// Terminal record for one request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RequestOutcome {
     pub id: u64,
     pub model: ModelId,
@@ -27,6 +69,10 @@ pub struct RequestOutcome {
 pub struct Metrics {
     outcomes: Vec<RequestOutcome>,
     utility_samples: Vec<(f64, ModelId, f64)>,
+    /// Requests refused by admission control, per model × reason.
+    /// Separate from `outcomes`: sheds never execute, never violate, and
+    /// are reported as their own rate.
+    shed: [[u64; N_SHED_REASONS]; N_MODELS],
 }
 
 impl Metrics {
@@ -36,6 +82,55 @@ impl Metrics {
 
     pub fn record(&mut self, o: RequestOutcome) {
         self.outcomes.push(o);
+    }
+
+    /// Account one request shed by admission control.
+    pub fn record_shed(&mut self, model: ModelId, reason: ShedReason) {
+        self.record_shed_n(model, reason, 1);
+    }
+
+    /// Bulk shed accounting (folding ingress-side counters into a report).
+    pub fn record_shed_n(&mut self, model: ModelId, reason: ShedReason,
+                         n: u64) {
+        self.shed[model as usize][reason as usize] += n;
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().flatten().sum()
+    }
+
+    pub fn shed_for(&self, model: ModelId) -> u64 {
+        self.shed[model as usize].iter().sum()
+    }
+
+    pub fn shed_by_reason(&self, reason: ShedReason) -> u64 {
+        self.shed.iter().map(|per_model| per_model[reason as usize]).sum()
+    }
+
+    /// Total requests that reached the server: executed + shed.
+    pub fn offered(&self) -> u64 {
+        self.outcomes.len() as u64 + self.shed_total()
+    }
+
+    /// Fraction of offered requests shed by admission control.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.offered();
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed_total() as f64 / offered as f64
+        }
+    }
+
+    /// Fold another run's (or worker's) metrics into this one.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.outcomes.extend(other.outcomes.iter().cloned());
+        self.utility_samples.extend(other.utility_samples.iter().copied());
+        for (dst, src) in self.shed.iter_mut().zip(&other.shed) {
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
     }
 
     pub fn record_utility(&mut self, t_ms: f64, model: ModelId, u: f64) {
@@ -237,6 +332,45 @@ mod tests {
         m.record_utility(1.0, ModelId::Res, 8.0);
         assert!((m.mean_utility(Some(ModelId::Mob)) - 3.0).abs() < 1e-9);
         assert!((m.mean_utility(None) - 14.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sheds_are_separate_from_violations() {
+        let mut m = Metrics::new();
+        m.record(outcome(ModelId::Res, 100.0, 30.0, 58.0)); // on time
+        m.record_shed(ModelId::Res, ShedReason::DeadlineUnmeetable);
+        m.record_shed(ModelId::Res, ShedReason::QueueFull);
+        m.record_shed(ModelId::Yolo, ShedReason::DeadlineUnmeetable);
+        // Violation rate covers EXECUTED requests only.
+        assert_eq!(m.violation_rate(), 0.0);
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.shed_total(), 3);
+        assert_eq!(m.shed_for(ModelId::Res), 2);
+        assert_eq!(m.shed_for(ModelId::Yolo), 1);
+        assert_eq!(m.shed_by_reason(ShedReason::DeadlineUnmeetable), 2);
+        assert_eq!(m.shed_by_reason(ShedReason::Shutdown), 0);
+        assert_eq!(m.offered(), 4);
+        assert!((m.shed_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_combines_outcomes_utilities_and_sheds() {
+        let mut a = Metrics::new();
+        a.record(outcome(ModelId::Res, 100.0, 30.0, 58.0));
+        a.record_utility(0.0, ModelId::Res, 2.0);
+        a.record_shed(ModelId::Res, ShedReason::QueueFull);
+        let mut b = Metrics::new();
+        b.record(outcome(ModelId::Mob, 200.0, 90.0, 86.0)); // violated
+        b.record_utility(1.0, ModelId::Mob, 4.0);
+        b.record_shed_n(ModelId::Res, ShedReason::QueueFull, 2);
+        a.merge(&b);
+        assert_eq!(a.outcomes().len(), 2);
+        assert_eq!(a.completed(), 2);
+        assert_eq!(a.violation_rate(), 0.5);
+        assert_eq!(a.shed_total(), 3);
+        assert_eq!(a.shed_by_reason(ShedReason::QueueFull), 3);
+        assert!((a.mean_utility(None) - 3.0).abs() < 1e-12);
+        assert_eq!(a.offered(), 5);
     }
 
     #[test]

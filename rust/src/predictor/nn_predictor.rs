@@ -10,9 +10,11 @@
 
 use crate::nn::adam::Adam;
 use crate::nn::loss::mse;
+use crate::nn::mlp::{BackwardScratch, ForwardCache, MlpGrad};
 use crate::nn::tensor::Mat;
 use crate::nn::Mlp;
 use crate::util::rng::Pcg32;
+use std::cell::RefCell;
 
 /// Input features (paper Fig. 5): available memory, compute occupancy,
 /// active instances, requested concurrency, normalized batch.
@@ -60,6 +62,28 @@ pub struct InterferencePredictor {
     capacity: usize,
     pub batch_size: usize,
     trained_steps: usize,
+    /// Reused forward buffers for [`InterferencePredictor::predict`].
+    /// The engine probes the predictor up to 8× per model per round
+    /// through `&self`, so the scratch sits behind a `RefCell` —
+    /// single-threaded interior mutability, no lock. The seed allocated a
+    /// row matrix plus every hidden activation per probe
+    /// ([`InterferencePredictor::predict_alloc`] keeps that path as the
+    /// equivalence oracle).
+    predict_scratch: RefCell<PredictScratch>,
+    /// Reused minibatch + backprop buffers for
+    /// [`InterferencePredictor::train_step`] (the seed rebuilt x/y and
+    /// every activation/gradient matrix every 4 slots).
+    train_x: Mat,
+    train_y: Mat,
+    train_cache: ForwardCache,
+    train_grads: MlpGrad,
+    train_scratch: BackwardScratch,
+}
+
+struct PredictScratch {
+    x: Mat,
+    out: Mat,
+    tmp: Mat,
 }
 
 impl InterferencePredictor {
@@ -76,6 +100,16 @@ impl InterferencePredictor {
             capacity: 4096,
             batch_size: 64,
             trained_steps: 0,
+            predict_scratch: RefCell::new(PredictScratch {
+                x: Mat::zeros(1, FEATURES),
+                out: Mat::zeros(0, 0),
+                tmp: Mat::zeros(0, 0),
+            }),
+            train_x: Mat::zeros(0, 0),
+            train_y: Mat::zeros(0, 0),
+            train_cache: ForwardCache::new(),
+            train_grads: MlpGrad::new(),
+            train_scratch: BackwardScratch::new(),
         }
     }
 
@@ -99,14 +133,58 @@ impl InterferencePredictor {
     }
 
     /// Predicted inflation factor for a candidate configuration (≥ 1).
+    /// Allocation-free once warm: the probe row and hidden activations
+    /// live in the reused scratch. Bit-identical to
+    /// [`InterferencePredictor::predict_alloc`] (pinned by test).
     pub fn predict(&self, s: &PredictorSample) -> f64 {
-        let x = Mat::row_vec(&s.features());
+        let mut sc = self.predict_scratch.borrow_mut();
+        let sc = &mut *sc;
+        sc.x.row_mut(0).copy_from_slice(&s.features());
+        self.net.forward_into(&sc.x, &mut sc.out, &mut sc.tmp);
         // Softplus-ish floor: inflation can never be below 1.
+        (1.0 + sc.out.at(0, 0).max(0.0)) as f64
+    }
+
+    /// The seed's allocating prediction path, kept as the equivalence
+    /// oracle for [`InterferencePredictor::predict`] (and as the "before"
+    /// side of the hot-path bench).
+    pub fn predict_alloc(&self, s: &PredictorSample) -> f64 {
+        let x = Mat::row_vec(&s.features());
         (1.0 + self.net.forward(&x).at(0, 0).max(0.0)) as f64
     }
 
-    /// One SGD step on a random minibatch; returns the MSE loss.
+    /// One SGD step on a random minibatch; returns the MSE loss. The
+    /// minibatch matrices, activation cache, and gradient buffers are all
+    /// reused across calls — bit-identical math to
+    /// [`InterferencePredictor::train_step_alloc`].
     pub fn train_step(&mut self, rng: &mut Pcg32) -> f32 {
+        if self.buf.len() < self.batch_size {
+            return 0.0;
+        }
+        let n = self.batch_size;
+        if self.train_x.rows() != n {
+            self.train_x = Mat::zeros(n, FEATURES);
+            self.train_y = Mat::zeros(n, 1);
+        }
+        for i in 0..n {
+            let s = &self.buf[rng.below(self.buf.len() as u32) as usize];
+            self.train_x.row_mut(i).copy_from_slice(&s.features());
+            *self.train_y.at_mut(i, 0) = (s.inflation - 1.0) as f32;
+        }
+        self.net.forward_cache_into(&self.train_x, &mut self.train_cache);
+        // Clamp negative predictions at the loss level too (target ≥ 0).
+        let (loss, grad) = mse(self.train_cache.output(), &self.train_y);
+        self.net.backward_into(&self.train_cache, &grad,
+                               &mut self.train_grads,
+                               &mut self.train_scratch);
+        self.opt.step(&mut self.net, &self.train_grads);
+        self.trained_steps += 1;
+        loss
+    }
+
+    /// The seed's allocating training step — fresh minibatch matrices and
+    /// gradient buffers every call — kept as the equivalence oracle.
+    pub fn train_step_alloc(&mut self, rng: &mut Pcg32) -> f32 {
         if self.buf.len() < self.batch_size {
             return 0.0;
         }
@@ -119,7 +197,6 @@ impl InterferencePredictor {
             *y.at_mut(i, 0) = (s.inflation - 1.0) as f32;
         }
         let cache = self.net.forward_cache(&x);
-        // Clamp negative predictions at the loss level too (target ≥ 0).
         let (loss, grad) = mse(cache.output(), &y);
         let grads = self.net.backward(&cache, &grad);
         self.opt.step(&mut self.net, &grads);
@@ -206,5 +283,52 @@ mod tests {
         let mut rng = Pcg32::seeded(93);
         let mut pred = InterferencePredictor::new(&mut rng);
         assert_eq!(pred.train_step(&mut rng), 0.0);
+    }
+
+    /// The alloc-free probe path must be BIT-IDENTICAL to the seed's
+    /// allocating path — the engine's veto decisions (and therefore the
+    /// whole outcome stream) hang off these float values.
+    #[test]
+    fn predict_scratch_matches_alloc_oracle_bitwise() {
+        let mut rng = Pcg32::seeded(94);
+        let mut pred = InterferencePredictor::new(&mut rng);
+        for s in ground_truth_samples(256, &mut rng) {
+            pred.observe(s);
+        }
+        pred.fit(200, &mut rng); // non-trivial weights
+        for s in ground_truth_samples(512, &mut rng) {
+            let fast = pred.predict(&s);
+            let seed = pred.predict_alloc(&s);
+            assert!(fast == seed,
+                    "predict diverged from alloc oracle: {fast} vs {seed}");
+        }
+    }
+
+    /// Two predictors with identical init + data + RNG streams, one
+    /// trained on the scratch path and one on the seed's allocating path,
+    /// must end with identical losses and identical predictions.
+    #[test]
+    fn train_step_scratch_matches_alloc_oracle() {
+        let mut init_a = Pcg32::seeded(95);
+        let mut init_b = Pcg32::seeded(95);
+        let mut a = InterferencePredictor::new(&mut init_a);
+        let mut b = InterferencePredictor::new(&mut init_b);
+        let mut data_rng = Pcg32::seeded(96);
+        for s in ground_truth_samples(300, &mut data_rng) {
+            a.observe(s);
+            b.observe(s);
+        }
+        let mut ra = Pcg32::seeded(97);
+        let mut rb = Pcg32::seeded(97);
+        for step in 0..50 {
+            let la = a.train_step(&mut ra);
+            let lb = b.train_step_alloc(&mut rb);
+            assert!(la == lb, "loss diverged at step {step}: {la} vs {lb}");
+        }
+        assert_eq!(a.trained_steps(), b.trained_steps());
+        for s in ground_truth_samples(64, &mut data_rng) {
+            assert!(a.predict(&s) == b.predict_alloc(&s),
+                    "post-training predictions diverged");
+        }
     }
 }

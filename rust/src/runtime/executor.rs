@@ -18,7 +18,7 @@
 use crate::platform::sim::{BatchHandle, PlatformSim};
 use crate::platform::OomError;
 use crate::util::pool::ThreadPool;
-use crate::util::time::{Clock, VirtualClock};
+use crate::util::time::{Clock, ClockSource, VirtualClock};
 use crate::workload::models::{ModelId, ModelSpec};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -78,10 +78,14 @@ pub trait Dispatcher: Send {
 // Simulation backend
 // ---------------------------------------------------------------------
 
-/// Prices groups on the platform simulator in virtual time.
+/// Prices groups on the platform simulator against a [`ClockSource`]:
+/// virtual time for tests/benches (the clock jumps by each group's span),
+/// wall time for the serving runtime's workers (the dispatcher *sleeps*
+/// the span, so concurrent workers genuinely overlap in real time while
+/// the platform model prices their latencies).
 pub struct SimDispatcher {
     pub sim: PlatformSim,
-    pub clock: VirtualClock,
+    pub clock: ClockSource,
     /// Most recent ground-truth inflation (exported for predictor
     /// training / Fig. 13).
     pub last_inflation: f64,
@@ -91,6 +95,10 @@ pub struct SimDispatcher {
 
 impl SimDispatcher {
     pub fn new(sim: PlatformSim, clock: VirtualClock) -> Self {
+        Self::with_clock(sim, ClockSource::Virtual(clock))
+    }
+
+    pub fn with_clock(sim: PlatformSim, clock: ClockSource) -> Self {
         SimDispatcher { sim, clock, last_inflation: 1.0, handles: Vec::new() }
     }
 }

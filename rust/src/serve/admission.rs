@@ -1,0 +1,162 @@
+//! SLO-aware admission control: refuse requests whose deadline is
+//! provably unmeetable *before* they consume queue space and scheduler
+//! attention.
+//!
+//! The decision is the ISSUE's one-liner made precise: with `q` requests
+//! already queued for the model and a profiled per-batch latency `L`, a
+//! new request sits behind ⌈(q+1)/b_ref⌉ batches and completes no sooner
+//! than that many batch spans from now. If that optimistic bound already
+//! exceeds the request's remaining slack, no scheduler decision can save
+//! it — admitting it would only waste capacity and then count a
+//! violation. Rejections carry a typed [`ShedReason`] and are accounted
+//! in [`crate::metrics::Metrics`] separately from violations.
+//!
+//! The same pure decision function serves two stations:
+//!
+//! * the **ingress fast path** ([`super::ingress::Ingress::submit`]),
+//!   reading lock-free gauges the workers publish each round;
+//! * the **engine gate** ([`AdmissionGate`], installed via
+//!   [`crate::coordinator::Engine::set_ingress_gate`]), deciding with
+//!   exact queue depths as arrivals are routed — the station trace-mode
+//!   (virtual-clock) runs exercise.
+
+use crate::coordinator::engine::{IngressGate, IngressSnapshot};
+use crate::metrics::ShedReason;
+use crate::workload::request::Request;
+
+/// Tunables for the admission decision.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Reference batch size used to turn queue depth into "batches ahead"
+    /// and to price the cold-start latency estimate.
+    pub ref_batch: usize,
+    /// Multiplier on the service estimate. 1.0 sheds only provably-late
+    /// requests (optimistic bound); raise it to shed earlier under
+    /// overload at the cost of occasional false sheds.
+    pub safety: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { ref_batch: 8, safety: 1.0 }
+    }
+}
+
+impl AdmissionConfig {
+    /// Core decision: can a request with `slack_ms` of budget left still
+    /// make it, given `queue_len` requests ahead and a per-batch latency
+    /// estimate? `mean_batch_ms` is the profiled rolling mean (NaN before
+    /// the first observation); `isolated_ref_ms` is the optimistic
+    /// cold-start fallback.
+    pub fn decide(&self, queue_len: usize, mean_batch_ms: f64,
+                  isolated_ref_ms: f64, slack_ms: f64)
+                  -> Result<(), ShedReason> {
+        if slack_ms <= 0.0 {
+            // Dead on arrival (e.g. transmission ate the whole budget).
+            return Err(ShedReason::DeadlineUnmeetable);
+        }
+        let batch_ms = if mean_batch_ms.is_finite() && mean_batch_ms > 0.0 {
+            mean_batch_ms
+        } else {
+            isolated_ref_ms
+        };
+        let batches_ahead = queue_len / self.ref_batch.max(1) + 1;
+        let est_ms = batches_ahead as f64 * batch_ms * self.safety;
+        if est_ms > slack_ms {
+            Err(ShedReason::DeadlineUnmeetable)
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Remaining completion budget for `r` at decision time `now_ms`.
+    /// E2e latency is measured from arrival and includes the transmission
+    /// already spent (Eq. 2), so the budget shrinks by both.
+    pub fn slack_ms(r: &Request, now_ms: f64) -> f64 {
+        r.slo_ms - r.transmission_ms - (now_ms - r.arrival_ms)
+    }
+}
+
+/// [`IngressGate`] adapter: the admission controller as the engine's
+/// ingest-time hook, with exact queue state from the snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionGate {
+    pub cfg: AdmissionConfig,
+}
+
+impl AdmissionGate {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionGate { cfg }
+    }
+}
+
+impl IngressGate for AdmissionGate {
+    fn ref_batch(&self) -> usize {
+        self.cfg.ref_batch
+    }
+
+    fn decide(&mut self, r: &Request, snap: &IngressSnapshot)
+              -> Option<ShedReason> {
+        let slack = AdmissionConfig::slack_ms(r, snap.now_ms);
+        self.cfg
+            .decide(snap.queue_len, snap.mean_batch_ms, snap.isolated_ref_ms,
+                    slack)
+            .err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::ModelId;
+
+    #[test]
+    fn empty_queue_with_slack_admits() {
+        let cfg = AdmissionConfig::default();
+        assert!(cfg.decide(0, f64::NAN, 20.0, 100.0).is_ok());
+        assert!(cfg.decide(0, 15.0, 20.0, 100.0).is_ok());
+    }
+
+    #[test]
+    fn deep_queue_times_batch_latency_sheds() {
+        let cfg = AdmissionConfig { ref_batch: 8, safety: 1.0 };
+        // 40 queued → 6 batches ahead (incl. ours) × 25 ms = 150 ms > 100.
+        assert_eq!(cfg.decide(40, 25.0, 20.0, 100.0),
+                   Err(ShedReason::DeadlineUnmeetable));
+        // Same depth but fast batches fits: 6 × 12 = 72 ≤ 100.
+        assert!(cfg.decide(40, 12.0, 20.0, 100.0).is_ok());
+    }
+
+    #[test]
+    fn cold_start_falls_back_to_isolated_estimate() {
+        let cfg = AdmissionConfig { ref_batch: 8, safety: 1.0 };
+        // No profile yet: NaN mean → isolated 60 ms per batch, 2 batches.
+        assert_eq!(cfg.decide(8, f64::NAN, 60.0, 100.0),
+                   Err(ShedReason::DeadlineUnmeetable));
+        assert!(cfg.decide(8, f64::NAN, 40.0, 100.0).is_ok());
+    }
+
+    #[test]
+    fn non_positive_slack_is_dead_on_arrival() {
+        let cfg = AdmissionConfig::default();
+        assert!(cfg.decide(0, 1.0, 1.0, 0.0).is_err());
+        assert!(cfg.decide(0, 1.0, 1.0, -5.0).is_err());
+    }
+
+    #[test]
+    fn slack_accounts_for_transmission_and_waiting() {
+        let mut r = Request::new(1, ModelId::Res, 1_000.0); // slo 58 ms
+        r.transmission_ms = 3.0;
+        assert!((AdmissionConfig::slack_ms(&r, 1_000.0) - 55.0).abs() < 1e-12);
+        // 40 ms after arrival, only 15 ms of budget remains.
+        assert!((AdmissionConfig::slack_ms(&r, 1_040.0) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn safety_factor_sheds_earlier() {
+        let lax = AdmissionConfig { ref_batch: 8, safety: 1.0 };
+        let strict = AdmissionConfig { ref_batch: 8, safety: 2.0 };
+        assert!(lax.decide(8, 40.0, 40.0, 100.0).is_ok()); // 80 ≤ 100
+        assert!(strict.decide(8, 40.0, 40.0, 100.0).is_err()); // 160 > 100
+    }
+}

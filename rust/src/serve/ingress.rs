@@ -1,0 +1,316 @@
+//! Request ingress: per-model bounded MPSC channels in front of the
+//! worker pool, with the admission controller's fast path at the door.
+//!
+//! Live traffic enters here. Each model has a bounded
+//! [`std::sync::mpsc::sync_channel`]; the worker that owns the model's
+//! shard drains it. Submission is non-blocking: a full channel is
+//! backpressure and rejects with [`ShedReason::QueueFull`] rather than
+//! stalling the caller — an edge box that cannot keep up must say so
+//! immediately, not buffer unboundedly (SLICE-style ingress control).
+//!
+//! Workers publish per-model gauges (queue depth, rolling batch latency)
+//! after every scheduling round; [`Ingress::submit`] reads them lock-free
+//! to refuse provably-late requests before they ever cross a channel.
+//! Requests that pass the fast path are re-checked exactly at the
+//! engine's ingest gate, where queue depths are authoritative.
+
+use super::admission::AdmissionConfig;
+use crate::metrics::{Metrics, ShedReason, N_SHED_REASONS};
+use crate::workload::models::{ModelId, N_MODELS};
+use crate::workload::request::Request;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Lock-free per-model serving gauges, published by workers each round
+/// and read by the ingress fast path. Latencies travel as f64 bit
+/// patterns in an `AtomicU64`.
+pub struct SharedGauges {
+    queue_len: [AtomicUsize; N_MODELS],
+    batch_ms_bits: [AtomicU64; N_MODELS],
+}
+
+impl Default for SharedGauges {
+    fn default() -> Self {
+        SharedGauges {
+            queue_len: std::array::from_fn(|_| AtomicUsize::new(0)),
+            batch_ms_bits: std::array::from_fn(|_| {
+                AtomicU64::new(f64::NAN.to_bits())
+            }),
+        }
+    }
+}
+
+impl SharedGauges {
+    pub fn new() -> Self {
+        SharedGauges::default()
+    }
+
+    pub fn publish(&self, model: ModelId, queue_len: usize, batch_ms: f64) {
+        self.queue_len[model as usize].store(queue_len, Ordering::Relaxed);
+        self.batch_ms_bits[model as usize]
+            .store(batch_ms.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn queue_len(&self, model: ModelId) -> usize {
+        self.queue_len[model as usize].load(Ordering::Relaxed)
+    }
+
+    /// Rolling batch latency estimate, ms (NaN before any publish).
+    pub fn batch_ms(&self, model: ModelId) -> f64 {
+        f64::from_bits(self.batch_ms_bits[model as usize].load(Ordering::Relaxed))
+    }
+}
+
+/// One worker's parking spot: the ingress rings it after delivering a
+/// request so an idle worker wakes immediately instead of on its poll
+/// timeout. A missed wake is harmless (workers park with a timeout).
+pub struct WakeEvent {
+    signaled: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Default for WakeEvent {
+    fn default() -> Self {
+        WakeEvent { signaled: Mutex::new(false), cv: Condvar::new() }
+    }
+}
+
+impl WakeEvent {
+    pub fn new() -> Self {
+        WakeEvent::default()
+    }
+
+    pub fn notify(&self) {
+        *self.signaled.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    /// Park until notified or `timeout`, consuming the signal.
+    pub fn wait_timeout(&self, timeout: Duration) {
+        let mut signaled = self.signaled.lock().unwrap();
+        if !*signaled {
+            let (guard, _) = self.cv.wait_timeout(signaled, timeout).unwrap();
+            signaled = guard;
+        }
+        *signaled = false;
+    }
+}
+
+/// The ingress: admission fast path + per-model channel senders.
+pub struct Ingress {
+    senders: Vec<SyncSender<Request>>,
+    /// Owning worker's wake event, per model.
+    events: Vec<Arc<WakeEvent>>,
+    gauges: Arc<SharedGauges>,
+    admission: Option<AdmissionConfig>,
+    /// Isolated latency estimate at the admission reference batch, per
+    /// model (cold-start pricing before workers publish profiles).
+    isolated_ref_ms: [f64; N_MODELS],
+    accepting: AtomicBool,
+    next_id: AtomicU64,
+    /// Requests refused at the ingress itself (the engine gate accounts
+    /// its own sheds); folded into the final report's [`Metrics`].
+    sheds: [[AtomicU64; N_SHED_REASONS]; N_MODELS],
+}
+
+impl Ingress {
+    pub(crate) fn new(senders: Vec<SyncSender<Request>>,
+                      events: Vec<Arc<WakeEvent>>,
+                      gauges: Arc<SharedGauges>,
+                      admission: Option<AdmissionConfig>,
+                      isolated_ref_ms: [f64; N_MODELS]) -> Self {
+        assert_eq!(senders.len(), N_MODELS);
+        assert_eq!(events.len(), N_MODELS);
+        Ingress {
+            senders,
+            events,
+            gauges,
+            admission,
+            isolated_ref_ms,
+            accepting: AtomicBool::new(true),
+            next_id: AtomicU64::new(0),
+            sheds: std::array::from_fn(|_| {
+                std::array::from_fn(|_| AtomicU64::new(0))
+            }),
+        }
+    }
+
+    /// Submit a live request arriving NOW (`now_ms` from the server's
+    /// wall clock). Assigns the request id, stamps the arrival, runs the
+    /// admission fast path, and delivers into the model's channel.
+    pub fn submit(&self, model: ModelId, slo_ms: f64, transmission_ms: f64,
+                  now_ms: f64) -> Result<u64, ShedReason> {
+        if !self.accepting.load(Ordering::Acquire) {
+            self.count_shed(model, ShedReason::Shutdown);
+            return Err(ShedReason::Shutdown);
+        }
+        if let Some(cfg) = &self.admission {
+            // Fast path against published gauges: approximate (a round
+            // stale), so it only front-runs the authoritative engine-gate
+            // check — both use the same decision function.
+            let slack = slo_ms - transmission_ms;
+            if let Err(reason) = cfg.decide(
+                self.gauges.queue_len(model),
+                self.gauges.batch_ms(model),
+                self.isolated_ref_ms[model as usize],
+                slack,
+            ) {
+                self.count_shed(model, reason);
+                return Err(reason);
+            }
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut r = Request::new(id, model, now_ms);
+        r.slo_ms = slo_ms;
+        r.transmission_ms = transmission_ms;
+        match self.senders[model as usize].try_send(r) {
+            Ok(()) => {
+                self.events[model as usize].notify();
+                Ok(id)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.count_shed(model, ShedReason::QueueFull);
+                Err(ShedReason::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.count_shed(model, ShedReason::Shutdown);
+                Err(ShedReason::Shutdown)
+            }
+        }
+    }
+
+    pub fn is_accepting(&self) -> bool {
+        self.accepting.load(Ordering::Acquire)
+    }
+
+    /// Stop intake (drain phase 1): subsequent submits shed with
+    /// [`ShedReason::Shutdown`]. Dropping the ingress afterwards
+    /// disconnects the channels, which is the workers' exit signal.
+    pub fn close(&self) {
+        self.accepting.store(false, Ordering::Release);
+    }
+
+    /// Wake every worker (used at shutdown so parked workers notice the
+    /// disconnect immediately).
+    pub fn wake_all(&self) {
+        for e in &self.events {
+            e.notify();
+        }
+    }
+
+    /// Disconnect every channel (drain phase 2): receivers see
+    /// `Disconnected` once drained, which is the workers' exit signal.
+    /// Call [`Ingress::close`] first — submits after this would panic.
+    pub fn drop_senders(&mut self) {
+        self.senders.clear();
+    }
+
+    /// Fold the ingress-side shed counters into a report's metrics.
+    pub fn fold_sheds_into(&self, m: &mut Metrics) {
+        for model in ModelId::all() {
+            for reason in ShedReason::all() {
+                let n = self.sheds[model as usize][reason as usize]
+                    .load(Ordering::Relaxed);
+                if n > 0 {
+                    m.record_shed_n(model, reason, n);
+                }
+            }
+        }
+    }
+
+    fn count_shed(&self, model: ModelId, reason: ShedReason) {
+        self.sheds[model as usize][reason as usize]
+            .fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn test_ingress(cap: usize, admission: Option<AdmissionConfig>)
+                    -> (Ingress, Vec<std::sync::mpsc::Receiver<Request>>) {
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..N_MODELS {
+            let (tx, rx) = sync_channel(cap);
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let events: Vec<Arc<WakeEvent>> =
+            (0..N_MODELS).map(|_| Arc::new(WakeEvent::new())).collect();
+        let gauges = Arc::new(SharedGauges::new());
+        let ing = Ingress::new(senders, events, gauges, admission,
+                               [10.0; N_MODELS]);
+        (ing, receivers)
+    }
+
+    #[test]
+    fn submit_assigns_ids_and_delivers() {
+        let (ing, rx) = test_ingress(4, None);
+        let a = ing.submit(ModelId::Res, 58.0, 1.0, 100.0).unwrap();
+        let b = ing.submit(ModelId::Res, 58.0, 1.0, 101.0).unwrap();
+        assert_ne!(a, b);
+        let got = rx[ModelId::Res as usize].try_recv().unwrap();
+        assert_eq!(got.id, a);
+        assert_eq!(got.arrival_ms, 100.0);
+        assert_eq!(got.slo_ms, 58.0);
+    }
+
+    #[test]
+    fn full_channel_sheds_queue_full() {
+        let (ing, _rx) = test_ingress(2, None);
+        assert!(ing.submit(ModelId::Mob, 86.0, 0.0, 0.0).is_ok());
+        assert!(ing.submit(ModelId::Mob, 86.0, 0.0, 0.0).is_ok());
+        assert_eq!(ing.submit(ModelId::Mob, 86.0, 0.0, 0.0),
+                   Err(ShedReason::QueueFull));
+        let mut m = Metrics::new();
+        ing.fold_sheds_into(&mut m);
+        assert_eq!(m.shed_by_reason(ShedReason::QueueFull), 1);
+        assert_eq!(m.shed_for(ModelId::Mob), 1);
+    }
+
+    #[test]
+    fn closed_ingress_sheds_shutdown() {
+        let (ing, _rx) = test_ingress(4, None);
+        ing.close();
+        assert!(!ing.is_accepting());
+        assert_eq!(ing.submit(ModelId::Res, 58.0, 0.0, 0.0),
+                   Err(ShedReason::Shutdown));
+        let mut m = Metrics::new();
+        ing.fold_sheds_into(&mut m);
+        assert_eq!(m.shed_by_reason(ShedReason::Shutdown), 1);
+    }
+
+    #[test]
+    fn fast_path_sheds_on_published_backlog() {
+        let (ing, _rx) = test_ingress(64, Some(AdmissionConfig::default()));
+        // Workers report 80 queued at 30 ms/batch → 11 batches ≈ 330 ms,
+        // far beyond res's 58 ms SLO.
+        ing.gauges.publish(ModelId::Res, 80, 30.0);
+        assert_eq!(ing.submit(ModelId::Res, 58.0, 0.0, 0.0),
+                   Err(ShedReason::DeadlineUnmeetable));
+        // An idle model still admits.
+        assert!(ing.submit(ModelId::Bert, 114.0, 0.0, 0.0).is_ok());
+    }
+
+    #[test]
+    fn wake_event_roundtrip() {
+        let e = Arc::new(WakeEvent::new());
+        let e2 = e.clone();
+        let t = std::thread::spawn(move || {
+            e2.wait_timeout(Duration::from_secs(5));
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        e.notify();
+        t.join().unwrap(); // returns promptly — would time out otherwise
+        // Pre-signaled waits return immediately.
+        e.notify();
+        let t0 = std::time::Instant::now();
+        e.wait_timeout(Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,220 @@
+//! Built-in load generator: drive the serving runtime in-process at a
+//! target rate and report what the paper's serving experiments report —
+//! achieved rps, p50/p99 end-to-end latency, SLO violation rate, and
+//! admission shed rate.
+//!
+//! Two client models:
+//!
+//! * **open loop** — arrivals follow a rate envelope (constant Poisson,
+//!   MMPP bursts, or a diurnal swing) independent of server progress: the
+//!   honest way to measure an overloaded server. On a virtual clock the
+//!   trace is served through [`run_trace`] (deterministic, CI-fast); on
+//!   the wall clock arrivals are paced in real time through the live
+//!   ingress.
+//! * **closed loop** — `concurrency` clients each keep one request in
+//!   flight, submitting the next on completion (wall clock only: the
+//!   feedback loop needs real completions).
+
+use super::server::{ClockKind, ServeConfig, ServeReport, Server, run_trace};
+use crate::util::rng::Pcg32;
+use crate::workload::envelope::{RateEnvelope, ShapedGenerator};
+use crate::workload::models::{ModelId, ModelSpec, N_MODELS};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Client model for the load generator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadMode {
+    Open,
+    Closed { concurrency: usize },
+}
+
+/// Load-generation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenConfig {
+    /// Base offered rate, requests/second (aggregate over the zoo).
+    pub rps: f64,
+    /// Serving horizon, seconds.
+    pub seconds: f64,
+    pub seed: u64,
+    pub envelope: RateEnvelope,
+    pub mode: LoadMode,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            rps: 60.0,
+            seconds: 10.0,
+            seed: 7,
+            envelope: RateEnvelope::Constant,
+            mode: LoadMode::Open,
+        }
+    }
+}
+
+/// Run the load generator against a serving configuration.
+pub fn run(serve: &ServeConfig, load: &LoadGenConfig)
+           -> Result<ServeReport, String> {
+    let horizon_ms = load.seconds * 1e3;
+    match (load.mode, serve.clock) {
+        (LoadMode::Open, ClockKind::Virtual) => {
+            let mut gen =
+                ShapedGenerator::new(load.rps, load.envelope, load.seed);
+            let trace = gen.generate_horizon(horizon_ms);
+            Ok(run_trace(serve, trace, horizon_ms))
+        }
+        (LoadMode::Open, ClockKind::Wall) => Ok(open_loop_wall(
+            serve, load, horizon_ms,
+        )),
+        (LoadMode::Closed { concurrency }, ClockKind::Wall) => {
+            Ok(closed_loop_wall(serve, load, horizon_ms, concurrency.max(1)))
+        }
+        (LoadMode::Closed { .. }, ClockKind::Virtual) => Err(
+            "closed-loop load generation needs --clock wall (the feedback \
+             loop runs on real completions)"
+                .into(),
+        ),
+    }
+}
+
+/// Open loop on the wall clock: pre-draw the arrival process, then pace
+/// submissions against the server's clock. Late submission (the generator
+/// thread fell behind) degrades to submit-immediately, which only makes
+/// the offered load burstier — never lighter.
+fn open_loop_wall(serve: &ServeConfig, load: &LoadGenConfig,
+                  horizon_ms: f64) -> ServeReport {
+    let mut gen = ShapedGenerator::new(load.rps, load.envelope, load.seed);
+    let trace = gen.generate_horizon(horizon_ms);
+    let server = Server::start(serve, None);
+    for r in trace {
+        let wait_ms = r.arrival_ms - server.now_ms();
+        if wait_ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait_ms / 1e3));
+        }
+        // Rejections are accounted by the ingress; nothing to do here.
+        let _ = server.submit(r.model, r.slo_ms, r.transmission_ms);
+    }
+    server.shutdown()
+}
+
+/// Closed loop: keep `concurrency` requests in flight, launching the
+/// next the moment one terminates — completion OR engine-gate shed (a
+/// shed request never completes; not freeing its slot would starve the
+/// loop under exactly the overload it measures).
+fn closed_loop_wall(serve: &ServeConfig, load: &LoadGenConfig,
+                    horizon_ms: f64, concurrency: usize) -> ServeReport {
+    let (tx, rx) = mpsc::channel();
+    let server = Server::start(serve, Some(tx));
+    let mut rng = Pcg32::seeded(load.seed);
+    let mut rr = 0usize;
+    let launch = |server: &Server, rng: &mut Pcg32, rr: &mut usize| {
+        // Round-robin over the zoo; skip models the ingress refuses.
+        for _ in 0..N_MODELS {
+            let model = ModelId::from_index(*rr % N_MODELS);
+            *rr += 1;
+            let spec = ModelSpec::get(model);
+            let tx_ms = 0.5 + 2.5 * rng.f64();
+            if server.submit(model, spec.slo_ms, tx_ms).is_ok() {
+                return true;
+            }
+        }
+        false
+    };
+    let mut in_flight = 0usize;
+    for _ in 0..concurrency {
+        if launch(&server, &mut rng, &mut rr) {
+            in_flight += 1;
+        }
+    }
+    while server.now_ms() < horizon_ms {
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            // Completed and Shed both free an in-flight slot.
+            Ok(_terminal_event) => {
+                in_flight = in_flight.saturating_sub(1);
+                if launch(&server, &mut rng, &mut rr) {
+                    in_flight += 1;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // Top back up (e.g. every model was refusing earlier).
+                while in_flight < concurrency
+                    && launch(&server, &mut rng, &mut rr)
+                {
+                    in_flight += 1;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    server.shutdown()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::admission::AdmissionConfig;
+    use crate::serve::server::SchedulerSpec;
+
+    fn quick_serve(workers: usize) -> ServeConfig {
+        ServeConfig {
+            workers,
+            clock: ClockKind::Virtual,
+            scheduler: SchedulerSpec::Fixed { batch: 4, m_c: 2 },
+            admission: Some(AdmissionConfig::default()),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn open_loop_virtual_reports_end_to_end() {
+        let load = LoadGenConfig {
+            rps: 120.0,
+            seconds: 10.0,
+            ..Default::default()
+        };
+        let report = run(&quick_serve(4), &load).unwrap();
+        assert!(report.metrics.completed() > 0);
+        assert!(report.achieved_rps() > 0.0);
+        assert!(report.metrics.latency_percentile(0.99)
+                    >= report.metrics.latency_percentile(0.5));
+        assert!(report.metrics.violation_rate() <= 1.0);
+    }
+
+    #[test]
+    fn bursty_envelope_flows_through() {
+        let load = LoadGenConfig {
+            rps: 90.0,
+            seconds: 12.0,
+            envelope: RateEnvelope::bursty(),
+            ..Default::default()
+        };
+        let report = run(&quick_serve(2), &load).unwrap();
+        assert!(report.metrics.completed() > 0);
+    }
+
+    #[test]
+    fn closed_loop_on_virtual_clock_is_rejected() {
+        let load = LoadGenConfig {
+            mode: LoadMode::Closed { concurrency: 4 },
+            ..Default::default()
+        };
+        assert!(run(&quick_serve(2), &load).is_err());
+    }
+
+    #[test]
+    fn closed_loop_wall_keeps_requests_in_flight() {
+        let serve = ServeConfig {
+            clock: ClockKind::Wall,
+            ..quick_serve(2)
+        };
+        let load = LoadGenConfig {
+            seconds: 0.25,
+            mode: LoadMode::Closed { concurrency: 4 },
+            ..Default::default()
+        };
+        let report = run(&serve, &load).unwrap();
+        assert!(report.metrics.completed() > 0, "closed loop served nothing");
+        assert_eq!(report.leftover, 0);
+    }
+}

@@ -1,0 +1,36 @@
+//! The concurrent serving runtime — BCEdge's missing online layer.
+//!
+//! The paper's premise is requests arriving *online* at a platform that
+//! co-schedules batch size and concurrent instances; through PR #1 the
+//! repo only simulated that inside a single-threaded virtual-clock loop.
+//! This subsystem turns the engine into a real server:
+//!
+//! * [`ingress`] — per-model bounded MPSC channels with worker wakeups
+//!   and lock-free serving gauges;
+//! * [`admission`] — the SLO-aware admission controller: requests whose
+//!   deadline is provably unmeetable (queue depth × profiled batch
+//!   latency vs remaining slack) shed with typed reasons, at the ingress
+//!   fast path and again exactly at the engine's ingest gate;
+//! * [`worker`] — N OS threads, each owning an [`crate::coordinator::Engine`]
+//!   + scheduler and draining a shard of the model zoo: the paper's
+//!   concurrent instances as actual parallel execution. The engine code
+//!   is clock-generic: `VirtualClock` workers are deterministic
+//!   discrete-event sims (bit-identical to the bare engine at
+//!   `workers == 1`), wall-clock workers genuinely overlap;
+//! * [`server`] — composition + the drain/shutdown protocol (stop
+//!   intake → flush queues → join workers → merged [`crate::metrics::Metrics`]);
+//! * [`loadgen`] — open- and closed-loop load generation over constant /
+//!   MMPP-bursty / diurnal rate envelopes (`bcedge bench-serve`).
+
+pub mod admission;
+pub mod ingress;
+pub mod loadgen;
+pub mod server;
+pub mod worker;
+
+pub use admission::{AdmissionConfig, AdmissionGate};
+pub use ingress::{Ingress, SharedGauges};
+pub use loadgen::{LoadGenConfig, LoadMode};
+pub use server::{ClockKind, SchedulerSpec, ServeConfig, ServeReport, Server,
+                 run_trace};
+pub use worker::{CompletionEvent, ServeEvent};

@@ -1,0 +1,536 @@
+//! The concurrent serving runtime: ingress + admission + worker pool +
+//! drain protocol, composed behind two entry points:
+//!
+//! * [`run_trace`] — serve a pre-generated arrival trace across the
+//!   worker pool (virtual or wall clock). With `workers == 1`, a virtual
+//!   clock, and no admission, this reproduces the single-threaded
+//!   [`Engine`] run bit-for-bit (enforced by the seed-equivalence test
+//!   below) — the serving layer adds concurrency without forking the
+//!   engine's semantics.
+//! * [`Server::start`] / [`Server::shutdown`] — a live wall-clock server:
+//!   submit requests from any thread through the bounded ingress, workers
+//!   drain their shards in parallel, shutdown stops intake, flushes every
+//!   queue, joins the workers, and emits the final merged [`Metrics`].
+
+use super::admission::AdmissionConfig;
+use super::ingress::{Ingress, SharedGauges, WakeEvent};
+use super::worker::{LiveWorker, ServeEvent, WorkerResult, run_trace_worker};
+use crate::coordinator::baselines::{DeepRtScheduler, FixedScheduler};
+use crate::coordinator::sac_sched;
+use crate::coordinator::{Engine, EngineConfig, Scheduler};
+use crate::metrics::{Metrics, ShedReason};
+use crate::platform::{PlatformSim, PlatformSpec};
+use crate::runtime::executor::SimDispatcher;
+use crate::util::rng::Pcg32;
+use crate::util::time::{Clock, ClockSource, VirtualClock, WallClock};
+use crate::workload::models::{ModelId, N_MODELS};
+use crate::workload::request::Request;
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+
+/// Which time source the workers' engines run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockKind {
+    /// Discrete-event time per worker: deterministic, thousands× real
+    /// time. Trace mode only.
+    Virtual,
+    /// One shared wall clock: dispatch spans actually elapse, workers
+    /// genuinely overlap.
+    Wall,
+}
+
+/// How each worker builds its scheduler (copyable so the spec crosses
+/// into worker threads; construction happens on the worker's thread).
+#[derive(Clone, Copy, Debug)]
+pub enum SchedulerSpec {
+    Fixed { batch: usize, m_c: usize },
+    DeepRt,
+    /// Learning SAC scheduler, trained online. Worker `i` derives its
+    /// stream from `seed` (worker 0 uses `seed` itself, so single-worker
+    /// runs match a standalone `sac_sched::sac(space, seeded(seed))`).
+    Sac { seed: u64 },
+}
+
+impl SchedulerSpec {
+    pub fn build(&self, cfg: &EngineConfig, worker: usize)
+                 -> Box<dyn Scheduler> {
+        match *self {
+            SchedulerSpec::Fixed { batch, m_c } => {
+                Box::new(FixedScheduler { batch, m_c })
+            }
+            SchedulerSpec::DeepRt => Box::new(DeepRtScheduler::default()),
+            SchedulerSpec::Sac { seed } => {
+                let mut rng = Pcg32::seeded(
+                    seed.wrapping_add(worker as u64 * 0x9E37_79B9_97F4_A7C5),
+                );
+                Box::new(sac_sched::sac(cfg.action_space.clone(), &mut rng))
+            }
+        }
+    }
+}
+
+/// Serving-runtime configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads (clamped to [1, N_MODELS]; each worker owns the
+    /// models `m` with `m % workers == i`).
+    pub workers: usize,
+    pub clock: ClockKind,
+    pub platform: PlatformSpec,
+    /// Per-worker engine configuration (worker `i` perturbs the seed by
+    /// `i`; worker 0 keeps it verbatim for seed equivalence).
+    pub engine: EngineConfig,
+    pub scheduler: SchedulerSpec,
+    /// `None` disables admission control (every request is queued).
+    pub admission: Option<AdmissionConfig>,
+    /// Per-model ingress channel bound (live mode backpressure).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            clock: ClockKind::Virtual,
+            platform: PlatformSpec::xavier_nx(),
+            engine: EngineConfig::default(),
+            scheduler: SchedulerSpec::Sac { seed: 0x5AC },
+            admission: Some(AdmissionConfig::default()),
+            queue_capacity: 256,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn worker_count(&self) -> usize {
+        self.workers.clamp(1, N_MODELS)
+    }
+
+    /// Worker index owning `model`.
+    fn owner(&self, model: ModelId) -> usize {
+        model as usize % self.worker_count()
+    }
+
+    fn build_engine(&self, worker: usize, clock: ClockSource)
+                    -> Engine<SimDispatcher> {
+        let mut cfg = self.engine.clone();
+        cfg.seed ^= worker as u64; // worker 0: unchanged (seed equivalence)
+        cfg.max_total_instances = self.platform.max_instances;
+        let sim = PlatformSim::new(self.platform.clone());
+        Engine::new(SimDispatcher::with_clock(sim, clock), cfg)
+    }
+
+    fn isolated_ref_table(&self) -> [f64; N_MODELS] {
+        let ref_batch =
+            self.admission.map(|a| a.ref_batch).unwrap_or(8).max(1);
+        let sim = PlatformSim::new(self.platform.clone());
+        std::array::from_fn(|i| {
+            sim.latency.isolated_ms(ModelId::from_index(i), ref_batch)
+        })
+    }
+}
+
+/// Final report of a serving run: merged worker metrics + pool counters.
+pub struct ServeReport {
+    pub metrics: Metrics,
+    /// Serving horizon (virtual or wall, matching the run's clock), ms.
+    pub horizon_ms: f64,
+    pub workers: usize,
+    /// Total per-model scheduling slots across the pool.
+    pub slots: u64,
+    /// Requests still queued when the horizon expired (trace mode; the
+    /// live drain protocol flushes to zero).
+    pub leftover: usize,
+}
+
+impl ServeReport {
+    pub fn achieved_rps(&self) -> f64 {
+        self.metrics.completed() as f64 / (self.horizon_ms / 1e3).max(1e-9)
+    }
+
+    /// Human-readable summary (the `bcedge bench-serve` output).
+    pub fn print(&self) {
+        let m = &self.metrics;
+        println!(
+            "workers {} | {} slots | horizon {:.1}s",
+            self.workers,
+            self.slots,
+            self.horizon_ms / 1e3
+        );
+        println!(
+            "achieved {:.1} rps | e2e p50 {:.2} ms p99 {:.2} ms | \
+             SLO violations {:.2}% | shed {:.2}%",
+            self.achieved_rps(),
+            m.latency_percentile(0.5),
+            m.latency_percentile(0.99),
+            100.0 * m.violation_rate(),
+            100.0 * m.shed_rate(),
+        );
+        if m.shed_total() > 0 {
+            let by: Vec<String> = ShedReason::all()
+                .into_iter()
+                .filter(|r| m.shed_by_reason(*r) > 0)
+                .map(|r| format!("{}={}", r, m.shed_by_reason(r)))
+                .collect();
+            println!("sheds: {} ({})", m.shed_total(), by.join(", "));
+        }
+        if self.leftover > 0 {
+            println!("leftover in queue at horizon: {}", self.leftover);
+        }
+    }
+}
+
+fn merge_results(results: Vec<WorkerResult>, horizon_ms: f64,
+                 workers: usize) -> ServeReport {
+    let mut metrics = Metrics::new();
+    let mut slots = 0;
+    let mut leftover = 0;
+    for r in results {
+        metrics.merge(&r.metrics);
+        slots += r.slots;
+        leftover += r.leftover;
+    }
+    ServeReport { metrics, horizon_ms, workers, slots, leftover }
+}
+
+/// Serve a pre-generated trace across the worker pool and report.
+/// Requests must be sorted by arrival time (generator order).
+pub fn run_trace(cfg: &ServeConfig, requests: Vec<Request>,
+                 horizon_ms: f64) -> ServeReport {
+    let workers = cfg.worker_count();
+    let mut shards: Vec<Vec<Request>> = (0..workers).map(|_| Vec::new()).collect();
+    for r in requests {
+        shards[cfg.owner(r.model)].push(r);
+    }
+    let wall = WallClock::new(); // shared origin if the run is wall-clocked
+    let results: Vec<WorkerResult> = std::thread::scope(|s| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let wall = wall.clone();
+                s.spawn(move || {
+                    let clock = match cfg.clock {
+                        ClockKind::Virtual => {
+                            ClockSource::Virtual(VirtualClock::new())
+                        }
+                        ClockKind::Wall => ClockSource::Wall(wall),
+                    };
+                    let mut engine = cfg.build_engine(i, clock);
+                    if let Some(adm) = cfg.admission {
+                        engine.set_ingress_gate(Some(Box::new(
+                            super::admission::AdmissionGate::new(adm),
+                        )));
+                    }
+                    let mut sched = cfg.scheduler.build(&cfg.engine, i);
+                    run_trace_worker(engine, sched.as_mut(), shard, horizon_ms)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("serve worker panicked"))
+            .collect()
+    });
+    merge_results(results, horizon_ms, workers)
+}
+
+/// A running live server (wall clock).
+pub struct Server {
+    ingress: Ingress,
+    handles: Vec<std::thread::JoinHandle<WorkerResult>>,
+    clock: WallClock,
+    workers: usize,
+}
+
+impl Server {
+    /// Spawn the worker pool and open the ingress. Live serving is
+    /// wall-clock by definition (arrivals are stamped with real time), so
+    /// `cfg.clock` is ignored here. `events`, when given, receives every
+    /// request-terminal event — completion or engine-gate shed — for
+    /// closed-loop load generation.
+    pub fn start(cfg: &ServeConfig,
+                 events_tx: Option<std::sync::mpsc::Sender<ServeEvent>>)
+                 -> Server {
+        let workers = cfg.worker_count();
+        let clock = WallClock::new();
+        let gauges = Arc::new(SharedGauges::new());
+        let events: Vec<Arc<WakeEvent>> =
+            (0..workers).map(|_| Arc::new(WakeEvent::new())).collect();
+        // Per-model bounded channels; receivers grouped by owning worker.
+        let mut senders = Vec::with_capacity(N_MODELS);
+        let mut per_worker: Vec<(Vec<ModelId>, Vec<_>)> =
+            (0..workers).map(|_| (Vec::new(), Vec::new())).collect();
+        for model in ModelId::all() {
+            let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity.max(1));
+            senders.push(tx);
+            let owner = cfg.owner(model);
+            per_worker[owner].0.push(model);
+            per_worker[owner].1.push(rx);
+        }
+        let model_events: Vec<Arc<WakeEvent>> = ModelId::all()
+            .into_iter()
+            .map(|m| events[cfg.owner(m)].clone())
+            .collect();
+        let handles = per_worker
+            .into_iter()
+            .enumerate()
+            .map(|(i, (models, receivers))| {
+                let engine = cfg.build_engine(
+                    i,
+                    ClockSource::Wall(clock.clone()),
+                );
+                let worker = LiveWorker {
+                    engine,
+                    models,
+                    receivers,
+                    event: events[i].clone(),
+                    gauges: gauges.clone(),
+                    admission: cfg.admission,
+                    events_tx: events_tx.clone(),
+                };
+                let spec = cfg.scheduler;
+                let engine_cfg = cfg.engine.clone();
+                std::thread::Builder::new()
+                    .name(format!("bcedge-serve-{i}"))
+                    .spawn(move || {
+                        let mut sched = spec.build(&engine_cfg, i);
+                        worker.run(sched.as_mut())
+                    })
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        let ingress = Ingress::new(senders, model_events, gauges,
+                                   cfg.admission, cfg.isolated_ref_table());
+        Server { ingress, handles, clock, workers }
+    }
+
+    /// Milliseconds since the server started (the arrival timebase).
+    pub fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+
+    /// Submit a request arriving now. Typed rejection when admission
+    /// control or backpressure refuses it.
+    pub fn submit(&self, model: ModelId, slo_ms: f64, transmission_ms: f64)
+                  -> Result<u64, ShedReason> {
+        self.ingress
+            .submit(model, slo_ms, transmission_ms, self.clock.now_ms())
+    }
+
+    /// Drain and stop: close intake, flush every queue, join the
+    /// workers, and merge their metrics (ingress-side sheds included).
+    pub fn shutdown(self) -> ServeReport {
+        let Server { mut ingress, handles, clock, workers } = self;
+        let horizon_ms = clock.now_ms();
+        // Stop intake, disconnect the channels (the workers' exit
+        // signal), and wake anyone parked so the drain starts now.
+        ingress.close();
+        ingress.drop_senders();
+        ingress.wake_all();
+        let results: Vec<WorkerResult> = handles
+            .into_iter()
+            .map(|h| h.join().expect("serve worker panicked"))
+            .collect();
+        let mut report = merge_results(results, horizon_ms, workers);
+        ingress.fold_sheds_into(&mut report.metrics);
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::PoissonGenerator;
+
+    fn fixed_cfg(workers: usize, admission: Option<AdmissionConfig>)
+                 -> ServeConfig {
+        ServeConfig {
+            workers,
+            clock: ClockKind::Virtual,
+            scheduler: SchedulerSpec::Fixed { batch: 4, m_c: 2 },
+            admission,
+            ..Default::default()
+        }
+    }
+
+    /// Acceptance criterion: with one worker, a virtual clock, and no
+    /// admission gate, the serving runtime reproduces the single-threaded
+    /// engine BIT-FOR-BIT on the same trace seed — for a deterministic
+    /// scheduler and for the learning SAC scheduler (which exercises the
+    /// engine RNG, the predictor, and online training through the worker
+    /// path).
+    #[test]
+    fn single_worker_virtual_matches_bare_engine_bit_for_bit() {
+        for spec in [SchedulerSpec::Fixed { batch: 4, m_c: 2 },
+                     SchedulerSpec::Sac { seed: 0x5AC }] {
+            let mut gen = PoissonGenerator::new(120.0, 1234);
+            let trace = gen.generate_horizon(20_000.0);
+            let horizon = 20_000.0;
+
+            // Bare single-threaded engine, driven directly.
+            let mut engine = Engine::new(
+                SimDispatcher::new(PlatformSim::xavier_nx(),
+                                   crate::util::time::VirtualClock::new()),
+                EngineConfig::default(),
+            );
+            engine.submit(trace.clone());
+            let mut sched = spec.build(&EngineConfig::default(), 0);
+            let slots = engine.run(sched.as_mut(), horizon);
+
+            // The same trace through the serving runtime.
+            let cfg = fixed_cfg(1, None);
+            let cfg = ServeConfig { scheduler: spec, ..cfg };
+            let report = run_trace(&cfg, trace, horizon);
+
+            assert_eq!(report.workers, 1);
+            assert_eq!(report.slots, slots, "slot counts diverged ({spec:?})");
+            assert_eq!(report.metrics.outcomes(), engine.metrics.outcomes(),
+                       "outcome streams diverged ({spec:?})");
+            assert_eq!(report.leftover, engine.total_queued());
+            assert_eq!(report.metrics.shed_total(), 0);
+        }
+    }
+
+    #[test]
+    fn multi_worker_conserves_requests_and_is_deterministic() {
+        let mut gen = PoissonGenerator::new(180.0, 7);
+        let trace = gen.generate_horizon(20_000.0);
+        let n = trace.len();
+        let cfg = fixed_cfg(3, None);
+        let a = run_trace(&cfg, trace.clone(), 60_000.0);
+        assert_eq!(a.workers, 3);
+        assert_eq!(a.metrics.outcomes().len() + a.leftover, n,
+                   "requests lost or duplicated across the pool");
+        assert!(a.metrics.completed() > n * 8 / 10,
+                "pool kept up with only {}/{n}", a.metrics.completed());
+        // Every model still gets served after sharding.
+        for model in ModelId::all() {
+            let offered = trace.iter().filter(|r| r.model == model).count();
+            let served = a
+                .metrics
+                .outcomes()
+                .iter()
+                .filter(|o| o.model == model)
+                .count();
+            assert!(offered == 0 || served > 0, "{model:?} starved");
+        }
+        // Same seed ⇒ identical merged report (workers are deterministic
+        // discrete-event sims; merge order is worker order).
+        let b = run_trace(&cfg, trace, 60_000.0);
+        assert_eq!(a.metrics.outcomes(), b.metrics.outcomes());
+        assert_eq!(a.slots, b.slots);
+    }
+
+    /// Worker-count sweep: more workers must not break conservation, and
+    /// the clamp keeps `workers > N_MODELS` meaningful.
+    #[test]
+    fn worker_count_clamps_and_conserves() {
+        let mut gen = PoissonGenerator::new(90.0, 21);
+        let trace = gen.generate_horizon(10_000.0);
+        let n = trace.len();
+        for workers in [2, 4, 16] {
+            let cfg = fixed_cfg(workers, None);
+            let report = run_trace(&cfg, trace.clone(), 40_000.0);
+            assert_eq!(report.workers, workers.clamp(1, N_MODELS));
+            assert_eq!(report.metrics.outcomes().len() + report.leftover, n);
+        }
+    }
+
+    /// Acceptance criterion: admission control is load-bearing. At ≥5×
+    /// the sustainable rate, the admission-controlled server keeps the
+    /// accepted-request SLO violation rate strictly below the
+    /// no-admission baseline while shedding the overload — and sheds are
+    /// accounted separately, never silently folded into violations.
+    #[test]
+    fn admission_beats_no_admission_at_5x_overload() {
+        // Sustainable bound for a yolo-only load on the fixed (8, 2)
+        // config: one batch of 8 per isolated span, two instances —
+        // ignore interference, so this over-estimates sustainability and
+        // the 5× multiplier is conservative.
+        let sim = PlatformSim::xavier_nx();
+        let batch_ms = sim.latency.isolated_ms(ModelId::Yolo, 8);
+        let sustainable_rps = 2.0 * 8.0 / (batch_ms / 1e3);
+        let rps = 5.0 * sustainable_rps;
+        let horizon = 20_000.0;
+        let mk_trace = || {
+            PoissonGenerator::new(rps, 99)
+                .with_models(&[ModelId::Yolo])
+                .generate_horizon(horizon)
+        };
+        let n = mk_trace().len();
+        let sched = SchedulerSpec::Fixed { batch: 8, m_c: 2 };
+
+        let base_cfg = ServeConfig { scheduler: sched, ..fixed_cfg(1, None) };
+        let base = run_trace(&base_cfg, mk_trace(), horizon);
+
+        let adm_cfg = ServeConfig {
+            scheduler: sched,
+            ..fixed_cfg(1, Some(AdmissionConfig::default()))
+        };
+        let adm = run_trace(&adm_cfg, mk_trace(), horizon);
+
+        // The overload is real: the baseline drowns.
+        assert!(base.metrics.violation_rate() > 0.5,
+                "baseline not overloaded: viol {:.3} at {rps:.0} rps",
+                base.metrics.violation_rate());
+        assert_eq!(base.metrics.shed_total(), 0);
+
+        // Admission sheds the overload...
+        assert!(adm.metrics.shed_total() > 0, "nothing shed at 5× overload");
+        // ...keeps accepted-request violations strictly below baseline...
+        assert!(adm.metrics.violation_rate() < base.metrics.violation_rate(),
+                "admission did not help: {:.3} vs baseline {:.3}",
+                adm.metrics.violation_rate(),
+                base.metrics.violation_rate());
+        // ...and accounts sheds separately (conservation incl. sheds).
+        assert_eq!(adm.metrics.outcomes().len()
+                       + adm.metrics.shed_total() as usize
+                       + adm.leftover,
+                   n);
+        assert_eq!(adm.metrics.shed_by_reason(ShedReason::DeadlineUnmeetable),
+                   adm.metrics.shed_total(),
+                   "trace-mode sheds must all be deadline-based");
+    }
+
+    /// Live wall-clock server: parallel workers, bounded ingress, drain
+    /// protocol, completion streaming. Short horizon to stay CI-friendly.
+    #[test]
+    fn live_server_serves_drains_and_streams_completions() {
+        let cfg = ServeConfig {
+            workers: 2,
+            scheduler: SchedulerSpec::Fixed { batch: 4, m_c: 1 },
+            admission: None,
+            queue_capacity: 64,
+            ..Default::default()
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let server = Server::start(&cfg, Some(tx));
+        let attempts = 48u64;
+        for i in 0..attempts {
+            let model = if i % 2 == 0 { ModelId::Mob } else { ModelId::Bert };
+            let slo = crate::workload::models::ModelSpec::get(model).slo_ms;
+            // Ok ⇒ will surface as an outcome; Err ⇒ counted as a shed.
+            let _ = server.submit(model, slo, 0.5);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let report = server.shutdown();
+        // Drain protocol flushed everything that was accepted, and every
+        // attempt is accounted exactly once (outcome XOR shed).
+        assert_eq!(report.leftover, 0, "drain left requests queued");
+        assert_eq!(report.metrics.outcomes().len() as u64
+                       + report.metrics.shed_total(),
+                   attempts);
+        assert!(report.metrics.completed() > 0);
+        assert!(report.slots > 0);
+        assert!(report.horizon_ms > 0.0);
+        // Every request-terminal event was streamed: one Completed per
+        // outcome (admission is off, so no Shed events).
+        let events: Vec<_> = rx.try_iter().collect();
+        assert_eq!(events.len(), report.metrics.outcomes().len());
+        assert!(events.iter().all(|e| matches!(e, ServeEvent::Completed(_))));
+        // A shut-down server sheds at the door with a typed reason.
+        // (submit would need the server; it is consumed — covered by the
+        // ingress unit tests instead.)
+    }
+}

@@ -1,0 +1,185 @@
+//! Serving workers: N OS threads, each owning a full [`Engine`] (with its
+//! own dispatcher, profiler, predictor, and scheduler) and draining a
+//! shard of the model zoo. The paper's "concurrent model instances"
+//! become actual parallel execution — worker threads overlap in wall
+//! time — while the virtual-clock arm keeps every worker a deterministic
+//! discrete-event simulation (bit-identical to the single-threaded
+//! engine when `workers == 1`).
+//!
+//! Two intake modes share the engine code path:
+//!
+//! * **trace** — the worker's whole arrival shard is known up front
+//!   (virtual-clock benches, seed-equivalence tests): submit + run.
+//! * **live** — requests stream in over the per-model ingress channels
+//!   (wall clock): drain channels, serve a round, publish gauges, park
+//!   when idle, exit once the ingress disconnects and queues are flushed.
+
+use super::admission::{AdmissionConfig, AdmissionGate};
+use super::ingress::{SharedGauges, WakeEvent};
+use crate::coordinator::{Engine, Scheduler};
+use crate::metrics::Metrics;
+use crate::runtime::executor::SimDispatcher;
+use crate::workload::models::{ModelId, N_MODELS};
+use crate::workload::request::Request;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What one worker hands back at shutdown.
+pub struct WorkerResult {
+    pub metrics: Metrics,
+    /// Per-model scheduling slots executed.
+    pub slots: u64,
+    /// Requests still queued when the worker stopped (horizon expired
+    /// before the backlog drained).
+    pub leftover: usize,
+}
+
+/// A request completion.
+#[derive(Clone, Copy, Debug)]
+pub struct CompletionEvent {
+    pub id: u64,
+    pub model: ModelId,
+    pub e2e_ms: f64,
+    pub violated: bool,
+}
+
+/// Request-terminal events streamed to load-generator clients. Closed-loop
+/// clients must free an in-flight slot on EITHER variant — a request the
+/// engine gate sheds will never produce a completion, and treating sheds
+/// as still-in-flight would starve the client loop under exactly the
+/// overload it exists to measure.
+#[derive(Clone, Copy, Debug)]
+pub enum ServeEvent {
+    Completed(CompletionEvent),
+    /// The engine-side admission gate shed a delivered request.
+    Shed { model: ModelId },
+}
+
+/// Trace-mode worker: the shard's arrivals are fully known, so the run
+/// IS the engine's serve loop — with one worker and no admission gate
+/// this path is bit-identical to driving the engine directly.
+pub fn run_trace_worker(mut engine: Engine<SimDispatcher>,
+                        scheduler: &mut dyn Scheduler, shard: Vec<Request>,
+                        horizon_ms: f64) -> WorkerResult {
+    engine.submit(shard);
+    let slots = engine.run(scheduler, horizon_ms);
+    WorkerResult {
+        slots,
+        leftover: engine.total_queued(),
+        metrics: std::mem::take(&mut engine.metrics),
+    }
+}
+
+/// Everything a live worker owns.
+pub struct LiveWorker {
+    pub engine: Engine<SimDispatcher>,
+    /// This worker's model shard, parallel to `receivers`.
+    pub models: Vec<ModelId>,
+    pub receivers: Vec<Receiver<Request>>,
+    pub event: Arc<WakeEvent>,
+    pub gauges: Arc<SharedGauges>,
+    pub admission: Option<AdmissionConfig>,
+    pub events_tx: Option<std::sync::mpsc::Sender<ServeEvent>>,
+}
+
+/// How long an idle live worker parks before re-polling its channels
+/// (a missed wake costs at most this much added latency).
+const IDLE_PARK: Duration = Duration::from_millis(1);
+
+impl LiveWorker {
+    /// The live serve loop. Returns after the ingress disconnects every
+    /// channel AND the engine has flushed its queues (the drain
+    /// protocol's "stop intake → flush → join" middle step).
+    pub fn run(mut self, scheduler: &mut dyn Scheduler) -> WorkerResult {
+        if let Some(cfg) = self.admission {
+            self.engine.set_ingress_gate(Some(Box::new(AdmissionGate::new(cfg))));
+        }
+        let mut outcomes = Vec::new();
+        let mut open = vec![true; self.receivers.len()];
+        let mut slots = 0u64;
+        let mut reported = 0usize;
+        let mut sheds_seen = [0u64; N_MODELS];
+        loop {
+            // Intake: drain whatever the ingress has delivered.
+            let mut intake_done = true;
+            for (i, rx) in self.receivers.iter().enumerate() {
+                if !open[i] {
+                    continue;
+                }
+                loop {
+                    match rx.try_recv() {
+                        Ok(r) => self.engine.push_request(r),
+                        Err(TryRecvError::Empty) => {
+                            intake_done = false;
+                            break;
+                        }
+                        Err(TryRecvError::Disconnected) => {
+                            open[i] = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            // Serve one scheduling round.
+            let served = self.engine.step_into(scheduler, &mut outcomes);
+            if let Some(n) = served {
+                slots += n as u64;
+            }
+            self.publish_gauges();
+            reported = self.notify_events(reported, &mut sheds_seen);
+            match served {
+                Some(_) => {}
+                // Idle with intake closed and queues flushed: drained.
+                None if intake_done => break,
+                // Idle but the ingress is still open: park until work.
+                None => self.event.wait_timeout(IDLE_PARK),
+            }
+        }
+        WorkerResult {
+            slots,
+            leftover: self.engine.total_queued(),
+            metrics: std::mem::take(&mut self.engine.metrics),
+        }
+    }
+
+    /// Publish this shard's queue depths + rolling batch latencies for
+    /// the ingress fast path. The latency gauge stays NaN until the
+    /// profiler has observations — the admission decision function owns
+    /// the isolated-estimate fallback, so the policy lives in one place.
+    fn publish_gauges(&self) {
+        for &m in &self.models {
+            self.gauges.publish(m, self.engine.queue_len(m),
+                                self.engine.profiler.mean_latency_ms(m));
+        }
+    }
+
+    /// Stream request-terminal events recorded since the last round —
+    /// completions AND engine-gate sheds — to the load-generator clients.
+    /// Returns the new outcome high-water mark; `sheds_seen` tracks the
+    /// per-model shed counts already reported.
+    fn notify_events(&self, reported: usize,
+                     sheds_seen: &mut [u64; N_MODELS]) -> usize {
+        let outcomes = self.engine.metrics.outcomes();
+        if let Some(tx) = &self.events_tx {
+            for o in &outcomes[reported..] {
+                // A dropped receiver just means nobody is listening.
+                let _ = tx.send(ServeEvent::Completed(CompletionEvent {
+                    id: o.id,
+                    model: o.model,
+                    e2e_ms: o.e2e_ms,
+                    violated: o.violated,
+                }));
+            }
+            for &m in &self.models {
+                let seen = &mut sheds_seen[m as usize];
+                let now = self.engine.metrics.shed_for(m);
+                for _ in *seen..now {
+                    let _ = tx.send(ServeEvent::Shed { model: m });
+                }
+                *seen = now;
+            }
+        }
+        outcomes.len()
+    }
+}

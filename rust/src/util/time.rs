@@ -39,6 +39,34 @@ impl Clock for RealClock {
     }
 }
 
+/// Shareable wall-clock time source: like [`RealClock`] but `Copy`, so
+/// every worker thread in the serving runtime measures against the SAME
+/// origin (per-worker origins would skew cross-worker latency
+/// accounting). `Instant` is `Copy` and immutable — copying the value IS
+/// sharing the origin, no `Arc` needed.
+#[derive(Clone, Copy)]
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { origin: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64() * 1e3
+    }
+}
+
 /// Simulated time, advanced explicitly by the discrete-event loop.
 /// Stored as microseconds in an atomic so readers never lock.
 #[derive(Clone)]
@@ -91,6 +119,69 @@ impl Clock for VirtualClock {
     }
 }
 
+/// A time source the discrete-event engine can *drive*: virtual time
+/// jumps instantly (tests/benches, thousands× real time), wall time
+/// actually elapses (the serving runtime's workers pace real execution).
+/// The virtual arm delegates verbatim to [`VirtualClock`], so engines on
+/// `ClockSource::Virtual` behave bit-identically to engines on a bare
+/// `VirtualClock`.
+#[derive(Clone)]
+pub enum ClockSource {
+    Virtual(VirtualClock),
+    Wall(WallClock),
+}
+
+impl ClockSource {
+    pub fn virtual_() -> Self {
+        ClockSource::Virtual(VirtualClock::new())
+    }
+
+    pub fn wall() -> Self {
+        ClockSource::Wall(WallClock::new())
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, ClockSource::Virtual(_))
+    }
+
+    /// Advance by `dt_ms`: a jump in virtual time, a real sleep in wall
+    /// time (the span a dispatched group occupies the platform).
+    pub fn advance_ms(&self, dt_ms: f64) {
+        match self {
+            ClockSource::Virtual(c) => c.advance_ms(dt_ms),
+            ClockSource::Wall(_) => sleep_ms(dt_ms),
+        }
+    }
+
+    /// Advance to an absolute time; past targets are a no-op in both arms.
+    pub fn advance_to_ms(&self, t_ms: f64) {
+        match self {
+            ClockSource::Virtual(c) => c.advance_to_ms(t_ms),
+            ClockSource::Wall(c) => {
+                let now = c.now_ms();
+                if t_ms > now {
+                    sleep_ms(t_ms - now);
+                }
+            }
+        }
+    }
+}
+
+impl Clock for ClockSource {
+    fn now_ms(&self) -> f64 {
+        match self {
+            ClockSource::Virtual(c) => c.now_ms(),
+            ClockSource::Wall(c) => c.now_ms(),
+        }
+    }
+}
+
+fn sleep_ms(dt_ms: f64) {
+    if dt_ms > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(dt_ms / 1e3));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +213,39 @@ mod tests {
         let c2 = c.clone();
         c.advance_ms(5.0);
         assert!((c2.now_ms() - 5.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn wall_clock_shares_origin_across_clones() {
+        let c = WallClock::new();
+        let c2 = c.clone();
+        let (a, b) = (c.now_ms(), c2.now_ms());
+        // Same origin: readings are within scheduling noise of each other.
+        assert!((a - b).abs() < 50.0, "origins diverged: {a} vs {b}");
+    }
+
+    #[test]
+    fn clock_source_virtual_matches_bare_virtual() {
+        let bare = VirtualClock::new();
+        let src = ClockSource::Virtual(bare.clone());
+        assert!(src.is_virtual());
+        src.advance_ms(12.5);
+        assert_eq!(src.now_ms(), bare.now_ms());
+        src.advance_to_ms(100.0);
+        assert_eq!(src.now_ms(), bare.now_ms());
+        src.advance_to_ms(50.0); // past target: no-op
+        assert_eq!(src.now_ms(), bare.now_ms());
+    }
+
+    #[test]
+    fn clock_source_wall_advances_in_real_time() {
+        let src = ClockSource::wall();
+        assert!(!src.is_virtual());
+        let t0 = src.now_ms();
+        src.advance_ms(5.0);
+        let t1 = src.now_ms();
+        assert!(t1 - t0 >= 4.0, "wall advance slept too little: {}", t1 - t0);
+        src.advance_to_ms(t1 - 100.0); // past target: returns immediately
+        assert!(src.now_ms() - t1 < 50.0);
     }
 }

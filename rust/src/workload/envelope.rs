@@ -1,0 +1,260 @@
+//! Time-varying arrival-rate envelopes for the serving load generator.
+//!
+//! The paper evaluates under stationary Poisson traffic (§V-A), but a
+//! serving runtime earns its keep under the loads real edges see: bursty
+//! on/off traffic (a Markov-modulated Poisson process) and slow diurnal
+//! swings. [`ShapedGenerator`] produces a non-homogeneous Poisson arrival
+//! process by thinning a homogeneous process at the envelope's peak rate —
+//! exact, and deterministic from the seed like every other generator in
+//! the crate.
+
+use super::generator::stamp_request;
+use super::models::{ModelId, N_MODELS};
+use super::request::Request;
+use crate::util::rng::Pcg32;
+
+/// Shape of the offered-rate curve over time, as a multiplier on the
+/// generator's base rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RateEnvelope {
+    /// Stationary Poisson at the base rate (the paper's §V-A model).
+    Constant,
+    /// MMPP on/off bursts: rate multiplier `hi` while bursting, `lo`
+    /// otherwise, with exponentially distributed dwell times.
+    Bursty {
+        hi: f64,
+        lo: f64,
+        mean_on_ms: f64,
+        mean_off_ms: f64,
+    },
+    /// Diurnal swing: multiplier `1 + depth · sin(2πt / period)`,
+    /// time-compressed so a bench run sweeps a full "day".
+    Diurnal { period_ms: f64, depth: f64 },
+}
+
+impl RateEnvelope {
+    /// Default burst shape: 3× rate one quarter of the time.
+    pub fn bursty() -> Self {
+        RateEnvelope::Bursty {
+            hi: 3.0,
+            lo: 0.5,
+            mean_on_ms: 2_000.0,
+            mean_off_ms: 6_000.0,
+        }
+    }
+
+    /// Default diurnal shape: ±60 % swing over a 60 s "day".
+    pub fn diurnal() -> Self {
+        RateEnvelope::Diurnal { period_ms: 60_000.0, depth: 0.6 }
+    }
+
+    /// Largest multiplier the envelope can reach (the thinning bound).
+    pub fn peak(&self) -> f64 {
+        match *self {
+            RateEnvelope::Constant => 1.0,
+            RateEnvelope::Bursty { hi, lo, .. } => hi.max(lo),
+            RateEnvelope::Diurnal { depth, .. } => 1.0 + depth.abs(),
+        }
+    }
+
+    /// Mean multiplier over time (for sizing sustained-load experiments).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            RateEnvelope::Constant => 1.0,
+            RateEnvelope::Bursty { hi, lo, mean_on_ms, mean_off_ms } => {
+                (hi * mean_on_ms + lo * mean_off_ms)
+                    / (mean_on_ms + mean_off_ms)
+            }
+            RateEnvelope::Diurnal { .. } => 1.0,
+        }
+    }
+}
+
+/// Non-homogeneous Poisson request source: base rate × envelope, same
+/// model-mix and transmission model as
+/// [`super::generator::PoissonGenerator`].
+#[derive(Clone, Debug)]
+pub struct ShapedGenerator {
+    /// Base aggregate arrival rate, requests/second.
+    pub rps: f64,
+    pub envelope: RateEnvelope,
+    /// Per-model mixing weights (normalized internally).
+    pub mix: [f64; N_MODELS],
+    next_id: u64,
+    now_ms: f64,
+    rng: Pcg32,
+    /// MMPP phase state: currently in the `hi` (burst) phase, and when
+    /// the current phase ends.
+    burst_on: bool,
+    phase_until_ms: f64,
+}
+
+impl ShapedGenerator {
+    pub fn new(rps: f64, envelope: RateEnvelope, seed: u64) -> Self {
+        assert!(rps > 0.0);
+        ShapedGenerator {
+            rps,
+            envelope,
+            mix: [1.0; N_MODELS],
+            next_id: 0,
+            now_ms: 0.0,
+            rng: Pcg32::seeded(seed),
+            burst_on: false,
+            phase_until_ms: 0.0,
+        }
+    }
+
+    /// Restrict to a subset of models.
+    pub fn with_models(mut self, models: &[ModelId]) -> Self {
+        self.mix = [0.0; N_MODELS];
+        for &m in models {
+            self.mix[m as usize] = 1.0;
+        }
+        self
+    }
+
+    /// Envelope multiplier at `t_ms`, advancing MMPP phases as needed.
+    fn multiplier_at(&mut self, t_ms: f64) -> f64 {
+        match self.envelope {
+            RateEnvelope::Constant => 1.0,
+            RateEnvelope::Diurnal { period_ms, depth } => {
+                1.0 + depth
+                    * (2.0 * std::f64::consts::PI * t_ms / period_ms).sin()
+            }
+            RateEnvelope::Bursty { hi, lo, mean_on_ms, mean_off_ms } => {
+                while t_ms >= self.phase_until_ms {
+                    self.burst_on = !self.burst_on;
+                    let mean = if self.burst_on { mean_on_ms } else { mean_off_ms };
+                    self.phase_until_ms +=
+                        self.rng.exponential(1.0 / mean.max(1e-9));
+                }
+                if self.burst_on {
+                    hi
+                } else {
+                    lo
+                }
+            }
+        }
+    }
+
+    /// Next request via thinning: candidate arrivals at the peak rate,
+    /// each accepted with probability λ(t)/λ_peak.
+    pub fn next_request(&mut self) -> Request {
+        let peak_rps = self.rps * self.envelope.peak();
+        loop {
+            let dt_ms = self.rng.exponential(peak_rps) * 1e3;
+            self.now_ms += dt_ms;
+            let m = self.multiplier_at(self.now_ms);
+            let accept = m / self.envelope.peak();
+            if self.rng.f64() >= accept {
+                continue;
+            }
+            // Same model-mix + transmission stamping as PoissonGenerator
+            // (shared helper, so the request model cannot drift).
+            return stamp_request(&mut self.rng, &self.mix, &mut self.next_id,
+                                 self.now_ms);
+        }
+    }
+
+    /// All requests arriving within [0, horizon_ms).
+    pub fn generate_horizon(&mut self, horizon_ms: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        loop {
+            let r = self.next_request();
+            if r.arrival_ms >= horizon_ms {
+                break;
+            }
+            out.push(r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rate_in_window(reqs: &[Request], lo_ms: f64, hi_ms: f64) -> f64 {
+        let n = reqs
+            .iter()
+            .filter(|r| r.arrival_ms >= lo_ms && r.arrival_ms < hi_ms)
+            .count();
+        n as f64 / ((hi_ms - lo_ms) / 1e3)
+    }
+
+    #[test]
+    fn constant_envelope_matches_base_rate() {
+        let mut g = ShapedGenerator::new(40.0, RateEnvelope::Constant, 3);
+        let reqs = g.generate_horizon(120_000.0);
+        let rate = reqs.len() as f64 / 120.0;
+        assert!((rate - 40.0).abs() < 2.5, "rate {rate}");
+        assert!(reqs.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), reqs.len());
+    }
+
+    #[test]
+    fn bursty_envelope_hits_mean_rate_with_extra_variance() {
+        let env = RateEnvelope::bursty();
+        let mut g = ShapedGenerator::new(40.0, env, 5);
+        let horizon_s = 240.0;
+        let reqs = g.generate_horizon(horizon_s * 1e3);
+        let rate = reqs.len() as f64 / horizon_s;
+        let expect = 40.0 * env.mean();
+        assert!((rate - expect).abs() < 0.25 * expect,
+                "rate {rate} vs expected {expect}");
+        // Burstiness: per-second counts must be overdispersed vs Poisson
+        // (index of dispersion var/mean ≫ 1; ≈1 for constant-rate).
+        let mut counts = vec![0f64; horizon_s as usize];
+        for r in &reqs {
+            counts[(r.arrival_ms / 1e3) as usize] += 1.0;
+        }
+        let mean = counts.iter().sum::<f64>() / counts.len() as f64;
+        let var = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>()
+            / counts.len() as f64;
+        assert!(var / mean > 2.0, "dispersion {} not bursty", var / mean);
+    }
+
+    #[test]
+    fn diurnal_envelope_peaks_and_troughs() {
+        // period 40 s, depth 0.8: quarter-period windows around the peak
+        // (t=10 s) and trough (t=30 s) must differ strongly.
+        let env = RateEnvelope::Diurnal { period_ms: 40_000.0, depth: 0.8 };
+        let mut g = ShapedGenerator::new(60.0, env, 7);
+        let reqs = g.generate_horizon(40_000.0);
+        let peak = rate_in_window(&reqs, 5_000.0, 15_000.0);
+        let trough = rate_in_window(&reqs, 25_000.0, 35_000.0);
+        assert!(peak > 2.0 * trough, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn deterministic_from_seed_and_model_restriction() {
+        let env = RateEnvelope::bursty();
+        let a = ShapedGenerator::new(50.0, env, 11)
+            .with_models(&[ModelId::Yolo])
+            .generate_horizon(20_000.0);
+        let b = ShapedGenerator::new(50.0, env, 11)
+            .with_models(&[ModelId::Yolo])
+            .generate_horizon(20_000.0);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.iter().all(|r| r.model == ModelId::Yolo));
+    }
+
+    #[test]
+    fn peak_and_mean_multipliers() {
+        assert_eq!(RateEnvelope::Constant.peak(), 1.0);
+        assert_eq!(RateEnvelope::bursty().peak(), 3.0);
+        let d = RateEnvelope::diurnal();
+        assert!((d.peak() - 1.6).abs() < 1e-12);
+        assert_eq!(d.mean(), 1.0);
+        let b = RateEnvelope::Bursty {
+            hi: 4.0,
+            lo: 0.0,
+            mean_on_ms: 1_000.0,
+            mean_off_ms: 3_000.0,
+        };
+        assert!((b.mean() - 1.0).abs() < 1e-12);
+    }
+}

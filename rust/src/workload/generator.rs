@@ -50,15 +50,7 @@ impl PoissonGenerator {
     pub fn next_request(&mut self) -> Request {
         let dt_ms = self.rng.exponential(self.rps) * 1e3;
         self.now_ms += dt_ms;
-        let model = ModelId::from_index(self.rng.categorical(&self.mix));
-        let id = self.next_id;
-        self.next_id += 1;
-        let mut r = Request::new(id, model, self.now_ms);
-        // Simulated IoT→edge transmission (Eq. 2 tᵢ_t): ~1–3 ms for an
-        // image frame on local Wi-Fi/Ethernet, scaled by input size.
-        let elems = ModelSpec::get(model).input_elems as f64;
-        r.transmission_ms = 0.5 + 2.5 * (elems / 3072.0).min(1.0) * self.rng.f64();
-        r
+        stamp_request(&mut self.rng, &self.mix, &mut self.next_id, self.now_ms)
     }
 
     /// All requests arriving within [0, horizon_ms).
@@ -73,6 +65,24 @@ impl PoissonGenerator {
         }
         out
     }
+}
+
+/// Stamp one request arriving at `now_ms`: categorical model pick over
+/// `mix`, sequential id, and the simulated IoT→edge transmission time
+/// (Eq. 2 tᵢ_t): ~1–3 ms for an image frame on local Wi-Fi/Ethernet,
+/// scaled by input size. Shared by every arrival generator (Poisson and
+/// the envelope-shaped serving load) so the request model cannot drift
+/// between them. RNG call order — categorical, then one `f64` — is part
+/// of the contract: trace seeds reproduce bit-for-bit across releases.
+pub(crate) fn stamp_request(rng: &mut Pcg32, mix: &[f64; N_MODELS],
+                            next_id: &mut u64, now_ms: f64) -> Request {
+    let model = ModelId::from_index(rng.categorical(mix));
+    let id = *next_id;
+    *next_id += 1;
+    let mut r = Request::new(id, model, now_ms);
+    let elems = ModelSpec::get(model).input_elems as f64;
+    r.transmission_ms = 0.5 + 2.5 * (elems / 3072.0).min(1.0) * rng.f64();
+    r
 }
 
 #[cfg(test)]

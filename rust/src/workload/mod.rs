@@ -1,10 +1,13 @@
-//! Request model and workload generation (paper §III-A1, §V-A).
+//! Request model and workload generation (paper §III-A1, §V-A), plus the
+//! bursty/diurnal rate envelopes the serving load generator drives.
 
+pub mod envelope;
 pub mod generator;
 pub mod models;
 pub mod request;
 pub mod trace;
 
+pub use envelope::{RateEnvelope, ShapedGenerator};
 pub use generator::PoissonGenerator;
 pub use models::{ModelId, ModelSpec, N_MODELS};
 pub use request::Request;

@@ -77,6 +77,7 @@ impl Trace {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::envelope::{RateEnvelope, ShapedGenerator};
     use crate::workload::generator::PoissonGenerator;
 
     #[test]
@@ -86,6 +87,61 @@ mod tests {
         let text = trace.to_json();
         let back = Trace::from_json(&text).unwrap();
         assert_eq!(trace, back);
+    }
+
+    /// Record → JSON → replay must be BIT-identical, field by field —
+    /// including per-request SLO overrides and transmission times with
+    /// awkward f64 values (the writer prints shortest-round-trip
+    /// decimals, so exact f64 equality is the contract, not tolerance).
+    #[test]
+    fn round_trip_is_bit_identical_with_custom_slo_and_tx() {
+        let mut requests = Vec::new();
+        for (i, (slo, tx)) in [
+            (0.1 + 0.2, 1.0 / 3.0),          // classic non-representable
+            (58.0, 0.0),                      // exact integers
+            (1e-9, 2.5e3),                    // extreme magnitudes
+            (f64::MAX / 1e10, f64::MIN_POSITIVE),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let mut r = Request::new(i as u64 * 7 + 1, ModelId::from_index(i),
+                                     i as f64 * 1234.56789);
+            r.slo_ms = *slo;
+            r.transmission_ms = *tx;
+            requests.push(r);
+        }
+        let trace = Trace::from_requests(requests);
+        let back = Trace::from_json(&trace.to_json()).unwrap();
+        assert_eq!(trace, back);
+        for (a, b) in trace.requests.iter().zip(&back.requests) {
+            assert!(a.slo_ms.to_bits() == b.slo_ms.to_bits(),
+                    "slo bits diverged: {} vs {}", a.slo_ms, b.slo_ms);
+            assert!(a.transmission_ms.to_bits() == b.transmission_ms.to_bits(),
+                    "tx bits diverged");
+            assert!(a.arrival_ms.to_bits() == b.arrival_ms.to_bits(),
+                    "arrival bits diverged");
+        }
+    }
+
+    /// A full generated trace (bursty envelope: fractional arrivals, SLOs
+    /// from the zoo, random transmission) survives save → load through a
+    /// real file bit-identically.
+    #[test]
+    fn file_round_trip_replays_generated_trace() {
+        let mut g = ShapedGenerator::new(80.0, RateEnvelope::bursty(), 13);
+        let trace = Trace::from_requests(g.generate_horizon(5_000.0));
+        assert!(!trace.requests.is_empty());
+        let path = std::env::temp_dir().join("bcedge_trace_roundtrip.json");
+        let path = path.to_str().unwrap();
+        trace.save(path).unwrap();
+        let back = Trace::load(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert_eq!(trace, back);
+        // Double round trip is a fixed point.
+        assert_eq!(back.to_json(), Trace::from_json(&back.to_json())
+            .unwrap()
+            .to_json());
     }
 
     #[test]
