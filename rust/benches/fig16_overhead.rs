@@ -27,6 +27,8 @@ fn ctx(model: ModelId) -> SchedCtx {
         recent_latency_ms: 25.0,
         recent_throughput_rps: 80.0,
         recent_inflation: 1.3,
+        cluster_backlog_ms: 0.0,
+        cluster_share: 0.0,
     }
 }
 

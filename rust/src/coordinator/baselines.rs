@@ -72,6 +72,17 @@ impl Scheduler for DeepRtScheduler {
         {
             b *= 2;
         }
+        // Cross-worker gauge hint: when this shard holds the bulk of the
+        // pool's backlog, take one extra doubling beyond the queue-paced
+        // growth (slack permitting) to drain the hot queue faster. Inert
+        // at the hints' 0.0 default, so the bare engine's DeepRT is
+        // unchanged.
+        if ctx.cluster_share > 0.6 && b < self.max_batch {
+            let next = b * 2;
+            if est * 1.6f64.powf((next as f64).log2()) < slack {
+                b = next;
+            }
+        }
         (b.min(self.max_batch), 1)
     }
 
@@ -173,6 +184,8 @@ mod tests {
             recent_latency_ms: recent_latency,
             recent_throughput_rps: 40.0,
             recent_inflation: 1.1,
+            cluster_backlog_ms: 0.0,
+            cluster_share: 0.0,
         }
     }
 
@@ -203,6 +216,26 @@ mod tests {
         assert!(b_big > b_small, "{b_small} !< {b_big}");
         // Tight slack forces batch 1 regardless of backlog.
         let (b_tight, _) = s.decide(&ctx(64, 3.0, 5.0), &mut rng);
+        assert_eq!(b_tight, 1);
+    }
+
+    /// The gauge hint buys exactly one extra doubling when this shard
+    /// dominates the pool's backlog — and stays inert at the default.
+    #[test]
+    fn deeprt_drains_harder_when_shard_dominates_cluster() {
+        let mut s = DeepRtScheduler::default();
+        let mut rng = Pcg32::seeded(5);
+        let mut c = ctx(4, 500.0, 5.0);
+        let (b_base, _) = s.decide(&c, &mut rng);
+        c.cluster_share = 0.9;
+        c.cluster_backlog_ms = 600.0;
+        let (b_hot, m_c) = s.decide(&c, &mut rng);
+        assert_eq!(m_c, 1);
+        assert_eq!(b_hot, b_base * 2, "hint should buy one doubling");
+        // Tight slack still wins over the hint.
+        let mut tight = ctx(64, 3.0, 5.0);
+        tight.cluster_share = 0.9;
+        let (b_tight, _) = s.decide(&tight, &mut rng);
         assert_eq!(b_tight, 1);
     }
 

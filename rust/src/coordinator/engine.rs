@@ -170,6 +170,11 @@ pub struct Engine<D: Dispatcher> {
     slots_run: u64,
     scratch: RoundScratch,
     gate: Option<Box<dyn IngressGate>>,
+    /// Cross-worker gauge hints (see [`SchedCtx::cluster_backlog_ms`]).
+    /// Both stay 0.0 unless a serving-runtime worker injects them, so the
+    /// bare engine's decision context is hint-free by construction.
+    cluster_backlog_ms: f64,
+    cluster_share: f64,
 }
 
 impl<D: Dispatcher> Engine<D> {
@@ -199,6 +204,8 @@ impl<D: Dispatcher> Engine<D> {
             cfg,
             scratch: RoundScratch::default(),
             gate: None,
+            cluster_backlog_ms: 0.0,
+            cluster_share: 0.0,
         }
     }
 
@@ -239,6 +246,54 @@ impl<D: Dispatcher> Engine<D> {
     /// Depth of one model's routed queue (excludes not-yet-due arrivals).
     pub fn queue_len(&self, model: ModelId) -> usize {
         self.router.queue(model).len()
+    }
+
+    /// Does the engine hold any request for `model` — routed or still in
+    /// the not-yet-ingested pending deque? The serving runtime uses this
+    /// to detect backlog left behind after a shard migration.
+    pub fn holds_model(&self, model: ModelId) -> bool {
+        !self.router.queue(model).is_empty()
+            || self.pending.iter().any(|r| r.model == model)
+    }
+
+    /// Remove every queued request for `model` — the routed queue (in
+    /// priority order) and any not-yet-ingested pending arrivals (in
+    /// arrival order, appended after) — into `out`. Returns the count.
+    /// The serving runtime hands a migrated model's backlog to its new
+    /// owner with this; the engine itself never calls it, so the bare
+    /// scheduling loop is unaffected.
+    pub fn drain_model_into(&mut self, model: ModelId,
+                            out: &mut Vec<Request>) -> usize {
+        let mut moved = 0usize;
+        let q = self.router.queue_mut(model);
+        while let Some(r) = q.pop() {
+            out.push(r);
+            moved += 1;
+        }
+        if self.pending.iter().any(|r| r.model == model) {
+            let mut keep = VecDeque::with_capacity(self.pending.len());
+            for r in self.pending.drain(..) {
+                if r.model == model {
+                    out.push(r);
+                    moved += 1;
+                } else {
+                    keep.push_back(r);
+                }
+            }
+            self.pending = keep;
+        }
+        moved
+    }
+
+    /// Inject the cross-worker gauge hints surfaced through
+    /// [`SchedCtx`]: the pool-wide estimated backlog (ms) and this
+    /// worker's share of it. Never called outside the serving runtime —
+    /// both default to 0.0, keeping the bare engine's context
+    /// bit-identical to the pre-hint encoding.
+    pub fn set_cluster_hints(&mut self, cluster_backlog_ms: f64,
+                             local_share: f64) {
+        self.cluster_backlog_ms = cluster_backlog_ms;
+        self.cluster_share = local_share;
     }
 
     pub fn slots_run(&self) -> u64 {
@@ -295,6 +350,8 @@ impl<D: Dispatcher> Engine<D> {
             recent_latency_ms: self.profiler.mean_latency_ms(model),
             recent_throughput_rps: self.profiler.throughput_rps(model),
             recent_inflation: self.profiler.mean_inflation(),
+            cluster_backlog_ms: self.cluster_backlog_ms,
+            cluster_share: self.cluster_share,
         }
     }
 
@@ -871,6 +928,67 @@ mod tests {
                    n);
     }
 
+    /// Shard-migration support: draining one model's backlog removes it
+    /// completely (routed queue AND pending arrivals), conserves every
+    /// request, and the drained set serves correctly after re-submission
+    /// to another engine — the handoff the serving runtime performs.
+    #[test]
+    fn drain_model_into_conserves_and_rehomes() {
+        let mut src = sim_engine(EngineConfig {
+            learn: false,
+            ..Default::default()
+        });
+        let mut gen = PoissonGenerator::new(120.0, 31);
+        let reqs = gen.generate_horizon(4_000.0);
+        let n = reqs.len();
+        let n_yolo = reqs.iter().filter(|r| r.model == ModelId::Yolo).count();
+        assert!(n_yolo > 0);
+        // One future arrival keeps the pending deque non-empty so the
+        // drain must cover both stations.
+        let mut future = Request::new(u64::MAX, ModelId::Yolo, 1e9);
+        future.slo_ms = 138.0;
+        src.submit(reqs);
+        src.push_request(future);
+        src.next_model().unwrap(); // ingest everything already due
+        let mut handoff = Vec::new();
+        let moved = src.drain_model_into(ModelId::Yolo, &mut handoff);
+        assert_eq!(moved, handoff.len());
+        assert_eq!(moved, n_yolo + 1);
+        assert!(!src.holds_model(ModelId::Yolo));
+        assert!(handoff.iter().any(|r| r.id == u64::MAX),
+                "pending arrival missed by the drain");
+        // Nothing else was touched, nothing lost.
+        assert_eq!(src.total_queued() + moved, n + 1);
+        // Re-homed backlog serves on a fresh engine.
+        let mut dst = sim_engine(EngineConfig {
+            learn: false,
+            ..Default::default()
+        });
+        for r in handoff {
+            if r.id != u64::MAX {
+                dst.push_request(r);
+            }
+        }
+        let mut sched = FixedScheduler { batch: 8, m_c: 2 };
+        dst.run(&mut sched, 120_000.0);
+        assert_eq!(dst.metrics.outcomes().len() + dst.total_queued(), n_yolo);
+        assert!(dst.metrics.completed() > 0);
+    }
+
+    /// Gauge hints flow into the decision context verbatim and default
+    /// to the hint-free 0.0 encoding.
+    #[test]
+    fn cluster_hints_flow_into_ctx() {
+        let mut engine = sim_engine(EngineConfig::default());
+        let ctx = engine.ctx_for(ModelId::Res);
+        assert_eq!(ctx.cluster_backlog_ms, 0.0);
+        assert_eq!(ctx.cluster_share, 0.0);
+        engine.set_cluster_hints(420.0, 0.75);
+        let ctx = engine.ctx_for(ModelId::Res);
+        assert_eq!(ctx.cluster_backlog_ms, 420.0);
+        assert_eq!(ctx.cluster_share, 0.75);
+    }
+
     #[test]
     fn scratch_pool_stays_bounded() {
         let mut engine = sim_engine(EngineConfig::default());
@@ -934,6 +1052,8 @@ mod seed_equivalence {
             recent_latency_ms: e.profiler.mean_latency_ms(model),
             recent_throughput_rps: e.profiler.throughput_rps(model),
             recent_inflation: e.profiler.mean_inflation_naive(),
+            cluster_backlog_ms: e.cluster_backlog_ms,
+            cluster_share: e.cluster_share,
         }
     }
 

@@ -9,8 +9,9 @@
 use crate::util::rng::Pcg32;
 use crate::workload::models::{ModelId, ModelSpec, N_MODELS};
 
-/// Encoded-state width: one-hot model (6) + 10 scalar features.
-pub const STATE_DIM: usize = N_MODELS + 10;
+/// Encoded-state width: one-hot model (6) + 12 scalar features (10 local
+/// + 2 cross-worker gauge hints).
+pub const STATE_DIM: usize = N_MODELS + 12;
 
 /// Everything the scheduler can observe for one decision.
 #[derive(Clone, Copy, Debug)]
@@ -30,6 +31,15 @@ pub struct SchedCtx {
     pub recent_latency_ms: f64,
     pub recent_throughput_rps: f64,
     pub recent_inflation: f64,
+    /// Cross-worker gauge hints (serving runtime): estimated backlog-ms
+    /// across the WHOLE worker pool, and this worker's share of it. Both
+    /// are 0.0 on the bare single-threaded engine and whenever the
+    /// serving runtime's gauge hints are disabled, so their encoded
+    /// features vanish and decisions reduce to the local-only view.
+    pub cluster_backlog_ms: f64,
+    /// This worker's fraction of `cluster_backlog_ms` ∈ [0, 1] (0 when
+    /// the cluster view is absent or empty).
+    pub cluster_share: f64,
 }
 
 impl SchedCtx {
@@ -49,6 +59,8 @@ impl SchedCtx {
         f[7] = nan0(self.recent_latency_ms as f32 / self.slo_ms as f32).min(3.0);
         f[8] = nan0(self.recent_throughput_rps as f32 / 200.0).min(3.0);
         f[9] = nan0(self.recent_inflation as f32 - 1.0).min(3.0);
+        f[10] = nan0(self.cluster_share as f32).clamp(0.0, 1.0);
+        f[11] = nan0((self.cluster_backlog_ms / 1e3) as f32).clamp(0.0, 3.0);
         s
     }
 }
@@ -97,6 +109,8 @@ mod tests {
             recent_latency_ms: 30.0,
             recent_throughput_rps: 50.0,
             recent_inflation: 1.2,
+            cluster_backlog_ms: 0.0,
+            cluster_share: 0.0,
         }
     }
 
@@ -116,9 +130,33 @@ mod tests {
         c.recent_latency_ms = 1e9;
         c.recent_inflation = 1e9;
         c.min_slack_ms = -1e9;
+        c.cluster_backlog_ms = 1e12;
+        c.cluster_share = 1e9;
         let s = c.encode();
         assert!(s.iter().all(|x| x.is_finite() && x.abs() <= 3.0),
                 "unbounded features: {s:?}");
+    }
+
+    /// Cross-worker gauge hints occupy the two new feature slots and
+    /// vanish at their 0.0 default, so bare-engine encodings are the
+    /// hint-free encodings with two zero features appended.
+    #[test]
+    fn cluster_hint_features_encode_and_default_to_zero() {
+        let base = ctx().encode();
+        assert_eq!(base[N_MODELS + 10], 0.0);
+        assert_eq!(base[N_MODELS + 11], 0.0);
+        let mut c = ctx();
+        c.cluster_share = 0.5;
+        c.cluster_backlog_ms = 800.0;
+        let s = c.encode();
+        assert!((s[N_MODELS + 10] - 0.5).abs() < 1e-6);
+        assert!((s[N_MODELS + 11] - 0.8).abs() < 1e-6);
+        // Every other feature is untouched by the hints.
+        assert_eq!(&s[..N_MODELS + 10], &base[..N_MODELS + 10]);
+        // NaN hints are scrubbed like every other feature.
+        c.cluster_share = f64::NAN;
+        c.cluster_backlog_ms = f64::NAN;
+        assert!(c.encode().iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -5,13 +5,15 @@
 //!                 single-threaded engine loop)
 //!   bench-serve — drive the CONCURRENT serving runtime with the built-in
 //!                 load generator: multi-worker engine pool behind a
-//!                 bounded ingress with SLO-aware admission control
+//!                 bounded ingress with SLO-aware admission control and
+//!                 gauge-driven dynamic resharding
 //!   train       — offline SAC training on the platform simulator
 //!   sweep       — Fig. 1 style (batch × concurrency) sweep on the simulator
 //!   info        — print zoo / artifact / platform information
 //!
 //! bench-serve options:
-//!   --workers N          worker threads, each owning a model shard (4)
+//!   --workers N          worker threads; model m STARTS on worker
+//!                        m % workers, live runs may reshard (4)
 //!   --rps R              offered aggregate rate, requests/s (200)
 //!   --seconds S          serving horizon (10)
 //!   --clock virtual|wall virtual = deterministic discrete-event time per
@@ -29,10 +31,23 @@
 //!                        queues; overload melts down — the baseline the
 //!                        admission stress test beats)
 //!   --queue-cap N        per-model ingress channel bound (256)
+//!   --rebalance-epoch-ms N
+//!                        rebalance-controller epoch: every N ms it reads
+//!                        the per-model gauges (queue depth × rolling
+//!                        batch latency = backlog-ms per worker) and may
+//!                        migrate one model from the most- to the
+//!                        least-backlogged worker (200; live wall-clock
+//!                        multi-worker runs only)
+//!   --no-rebalance       pin the static modulo shard map (the baseline
+//!                        the hot-model stress test beats)
+//!   --no-gauge-hints     keep cross-worker backlog summaries out of the
+//!                        scheduler state (SchedCtx cluster features
+//!                        stay 0, as on the bare engine)
 //!   --seed S             trace + scheduler seed (7)
 //!
 //! Reported: achieved rps, p50/p99 end-to-end latency, SLO violation rate
-//! over accepted requests, and the admission shed rate with typed reasons.
+//! over accepted requests, the admission shed rate with typed reasons,
+//! and (live multi-worker) migrations + peak worker imbalance.
 //!
 //! Examples:
 //!   bcedge serve --backend sim --rps 30 --seconds 300 --scheduler sac
@@ -40,6 +55,7 @@
 //!   bcedge bench-serve --workers 4 --rps 200 --seconds 10
 //!   bcedge bench-serve --workers 4 --rps 300 --seconds 10 --envelope bursty
 //!   bcedge bench-serve --clock wall --mode closed --concurrency 32
+//!   bcedge bench-serve --clock wall --workers 2 --rebalance-epoch-ms 50
 //!   bcedge train --episodes 100 --out results/sac_policy.json
 //!   bcedge info
 
@@ -59,7 +75,8 @@ use bcedge::workload::PoissonGenerator;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["no-predictor", "greedy", "no-admission"])
+    let args = Args::from_env(&["no-predictor", "greedy", "no-admission",
+                                "no-rebalance", "no-gauge-hints"])
         .map_err(anyhow::Error::msg)?;
     match args.positional().first().map(String::as_str) {
         Some("serve") => serve(&args),
@@ -230,6 +247,16 @@ fn bench_serve(args: &Args) -> anyhow::Result<()> {
         "fixed" => SchedulerSpec::Fixed { batch: 4, m_c: 2 },
         other => anyhow::bail!("unknown scheduler {other}"),
     };
+    let rebalance = if args.flag("no-rebalance") {
+        None
+    } else {
+        Some(bcedge::serve::RebalanceConfig {
+            epoch_ms: args
+                .get_parse("rebalance-epoch-ms", 200u64)
+                .map_err(anyhow::Error::msg)?,
+            ..Default::default()
+        })
+    };
     let serve_cfg = ServeConfig {
         workers,
         clock,
@@ -243,6 +270,8 @@ fn bench_serve(args: &Args) -> anyhow::Result<()> {
         queue_capacity: args
             .get_parse("queue-cap", 256)
             .map_err(anyhow::Error::msg)?,
+        rebalance,
+        cluster_hints: !args.flag("no-gauge-hints"),
         ..Default::default()
     };
     let load = LoadGenConfig { rps, seconds, seed, envelope, mode };

@@ -73,6 +73,14 @@ pub struct Metrics {
     /// Separate from `outcomes`: sheds never execute, never violate, and
     /// are reported as their own rate.
     shed: [[u64; N_SHED_REASONS]; N_MODELS],
+    /// Shard migrations performed by the serving runtime's rebalance
+    /// controller (0 outside the live worker pool).
+    migrations: u64,
+    /// Rebalance-controller epochs observed (gauge reads, migrated or not).
+    rebalance_epochs: u64,
+    /// Worst cross-worker backlog spread seen by the controller, ms
+    /// (max-backlog worker minus min-backlog worker).
+    peak_imbalance_ms: f64,
 }
 
 impl Metrics {
@@ -122,6 +130,32 @@ impl Metrics {
         }
     }
 
+    /// Account one rebalance-controller run: epochs observed, migrations
+    /// performed, and the worst cross-worker backlog spread seen (ms).
+    pub fn record_rebalance(&mut self, epochs: u64, migrations: u64,
+                            peak_imbalance_ms: f64) {
+        self.rebalance_epochs += epochs;
+        self.migrations += migrations;
+        if peak_imbalance_ms.is_finite() {
+            self.peak_imbalance_ms =
+                self.peak_imbalance_ms.max(peak_imbalance_ms);
+        }
+    }
+
+    /// Shard migrations performed by the rebalance controller.
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    pub fn rebalance_epochs(&self) -> u64 {
+        self.rebalance_epochs
+    }
+
+    /// Worst observed cross-worker backlog spread, ms.
+    pub fn peak_imbalance_ms(&self) -> f64 {
+        self.peak_imbalance_ms
+    }
+
     /// Fold another run's (or worker's) metrics into this one.
     pub fn merge(&mut self, other: &Metrics) {
         self.outcomes.extend(other.outcomes.iter().cloned());
@@ -131,6 +165,10 @@ impl Metrics {
                 *d += s;
             }
         }
+        self.migrations += other.migrations;
+        self.rebalance_epochs += other.rebalance_epochs;
+        self.peak_imbalance_ms =
+            self.peak_imbalance_ms.max(other.peak_imbalance_ms);
     }
 
     pub fn record_utility(&mut self, t_ms: f64, model: ModelId, u: f64) {
@@ -363,6 +401,8 @@ mod tests {
         b.record(outcome(ModelId::Mob, 200.0, 90.0, 86.0)); // violated
         b.record_utility(1.0, ModelId::Mob, 4.0);
         b.record_shed_n(ModelId::Res, ShedReason::QueueFull, 2);
+        a.record_rebalance(10, 2, 40.0);
+        b.record_rebalance(5, 1, 75.0);
         a.merge(&b);
         assert_eq!(a.outcomes().len(), 2);
         assert_eq!(a.completed(), 2);
@@ -371,6 +411,10 @@ mod tests {
         assert_eq!(a.shed_by_reason(ShedReason::QueueFull), 3);
         assert!((a.mean_utility(None) - 3.0).abs() < 1e-12);
         assert_eq!(a.offered(), 5);
+        // Rebalance counters: sums, except the spread peak which is a max.
+        assert_eq!(a.rebalance_epochs(), 15);
+        assert_eq!(a.migrations(), 3);
+        assert!((a.peak_imbalance_ms() - 75.0).abs() < 1e-12);
     }
 
     #[test]

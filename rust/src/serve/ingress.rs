@@ -19,7 +19,7 @@ use crate::metrics::{Metrics, ShedReason, N_SHED_REASONS};
 use crate::workload::models::{ModelId, N_MODELS};
 use crate::workload::request::Request;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -61,6 +61,97 @@ impl SharedGauges {
     pub fn batch_ms(&self, model: ModelId) -> f64 {
         f64::from_bits(self.batch_ms_bits[model as usize].load(Ordering::Relaxed))
     }
+
+    /// Estimated backlog for one model, ms: queue depth × the rolling
+    /// per-request service estimate (profiled batch latency over the
+    /// reference batch; `isolated_ref_ms` is the cold-start fallback).
+    /// The rebalance controller sums this per worker to find overload,
+    /// and the workers sum it pool-wide for the scheduler's gauge hints.
+    pub fn backlog_ms(&self, model: ModelId, isolated_ref_ms: f64,
+                      ref_batch: usize) -> f64 {
+        let q = self.queue_len(model);
+        if q == 0 {
+            return 0.0;
+        }
+        let batch = self.batch_ms(model);
+        let batch = if batch.is_finite() && batch > 0.0 {
+            batch
+        } else {
+            isolated_ref_ms
+        };
+        q as f64 * batch / ref_batch.max(1) as f64
+    }
+
+    /// Has the model seen traffic — currently queued, or ever profiled
+    /// (the latency gauge leaves NaN on the first served batch)?
+    pub fn is_active(&self, model: ModelId) -> bool {
+        self.queue_len(model) > 0 || self.batch_ms(model).is_finite()
+    }
+}
+
+/// Which worker owns each model's intake — the shard map, made dynamic.
+/// Reads are lock-free on the serve fast path (ingress wakeups, worker
+/// intake scans); the rebalance controller is the only writer. Each
+/// migration stamps a new epoch, so workers can cheaply notice that the
+/// map changed and flush a disowned model's backlog to its new owner —
+/// in-flight channel sends simply drain to whichever worker owns the
+/// slot next, so the handoff loses nothing.
+pub struct OwnershipTable {
+    owner: [AtomicUsize; N_MODELS],
+    epoch: AtomicU64,
+    migrations: AtomicU64,
+}
+
+impl OwnershipTable {
+    /// The static modulo shard map PR 2 hard-wired: model `m` starts on
+    /// worker `m % workers`.
+    pub fn new_static(workers: usize) -> Self {
+        let workers = workers.max(1);
+        OwnershipTable {
+            owner: std::array::from_fn(|m| AtomicUsize::new(m % workers)),
+            epoch: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+        }
+    }
+
+    /// Worker currently owning `model`'s intake.
+    pub fn owner(&self, model: ModelId) -> usize {
+        self.owner[model as usize].load(Ordering::Acquire)
+    }
+
+    /// Monotone stamp bumped by every migration.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Total migrations performed.
+    pub fn migrations(&self) -> u64 {
+        self.migrations.load(Ordering::Relaxed)
+    }
+
+    /// Reassign `model` to worker `to`, stamping a new epoch. Returns
+    /// the new epoch. The old owner flushes the model's queued backlog
+    /// into the shared [`ModelIntake`] slot on its next round; the new
+    /// owner picks it up from there — no request is lost or served twice.
+    pub fn migrate(&self, model: ModelId, to: usize) -> u64 {
+        self.owner[model as usize].store(to, Ordering::Release);
+        self.migrations.fetch_add(1, Ordering::Relaxed);
+        self.epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+}
+
+/// One model's shared intake slot: the ingress channel's receive side
+/// plus the migration handoff buffer. The slots live behind per-model
+/// mutexes shared by the whole worker pool; the [`OwnershipTable`]
+/// decides who drains each one, so a migration is just a table write —
+/// the channel itself never moves.
+pub struct ModelIntake {
+    pub rx: Receiver<Request>,
+    /// Backlog flushed out of the previous owner's engine mid-migration,
+    /// waiting for the new owner's next intake pass.
+    pub handoff: Vec<Request>,
+    /// Channel disconnected AND fully drained (shutdown bookkeeping).
+    pub closed: bool,
 }
 
 /// One worker's parking spot: the ingress rings it after delivering a
@@ -101,8 +192,10 @@ impl WakeEvent {
 /// The ingress: admission fast path + per-model channel senders.
 pub struct Ingress {
     senders: Vec<SyncSender<Request>>,
-    /// Owning worker's wake event, per model.
-    events: Vec<Arc<WakeEvent>>,
+    /// One wake event per WORKER; the ownership table resolves which one
+    /// a delivery should ring.
+    worker_events: Vec<Arc<WakeEvent>>,
+    ownership: Arc<OwnershipTable>,
     gauges: Arc<SharedGauges>,
     admission: Option<AdmissionConfig>,
     /// Isolated latency estimate at the admission reference batch, per
@@ -117,15 +210,17 @@ pub struct Ingress {
 
 impl Ingress {
     pub(crate) fn new(senders: Vec<SyncSender<Request>>,
-                      events: Vec<Arc<WakeEvent>>,
+                      worker_events: Vec<Arc<WakeEvent>>,
+                      ownership: Arc<OwnershipTable>,
                       gauges: Arc<SharedGauges>,
                       admission: Option<AdmissionConfig>,
                       isolated_ref_ms: [f64; N_MODELS]) -> Self {
         assert_eq!(senders.len(), N_MODELS);
-        assert_eq!(events.len(), N_MODELS);
+        assert!(!worker_events.is_empty());
         Ingress {
             senders,
-            events,
+            worker_events,
+            ownership,
             gauges,
             admission,
             isolated_ref_ms,
@@ -167,7 +262,12 @@ impl Ingress {
         r.transmission_ms = transmission_ms;
         match self.senders[model as usize].try_send(r) {
             Ok(()) => {
-                self.events[model as usize].notify();
+                // Ring the CURRENT owner (the table may have migrated the
+                // model since the channel was created). A stale read just
+                // wakes a worker that finds nothing — harmless.
+                let owner =
+                    self.ownership.owner(model).min(self.worker_events.len() - 1);
+                self.worker_events[owner].notify();
                 Ok(id)
             }
             Err(TrySendError::Full(_)) => {
@@ -195,7 +295,7 @@ impl Ingress {
     /// Wake every worker (used at shutdown so parked workers notice the
     /// disconnect immediately).
     pub fn wake_all(&self) {
-        for e in &self.events {
+        for e in &self.worker_events {
             e.notify();
         }
     }
@@ -240,11 +340,11 @@ mod tests {
             senders.push(tx);
             receivers.push(rx);
         }
-        let events: Vec<Arc<WakeEvent>> =
-            (0..N_MODELS).map(|_| Arc::new(WakeEvent::new())).collect();
+        let worker_events = vec![Arc::new(WakeEvent::new())];
+        let ownership = Arc::new(OwnershipTable::new_static(1));
         let gauges = Arc::new(SharedGauges::new());
-        let ing = Ingress::new(senders, events, gauges, admission,
-                               [10.0; N_MODELS]);
+        let ing = Ingress::new(senders, worker_events, ownership, gauges,
+                               admission, [10.0; N_MODELS]);
         (ing, receivers)
     }
 
@@ -295,6 +395,50 @@ mod tests {
                    Err(ShedReason::DeadlineUnmeetable));
         // An idle model still admits.
         assert!(ing.submit(ModelId::Bert, 114.0, 0.0, 0.0).is_ok());
+    }
+
+    #[test]
+    fn ownership_table_static_map_and_migration() {
+        let t = OwnershipTable::new_static(2);
+        for m in ModelId::all() {
+            assert_eq!(t.owner(m), m as usize % 2, "static shard map");
+        }
+        assert_eq!(t.epoch(), 0);
+        assert_eq!(t.migrations(), 0);
+        let e1 = t.migrate(ModelId::Yolo, 1);
+        assert_eq!(e1, 1);
+        assert_eq!(t.owner(ModelId::Yolo), 1);
+        assert_eq!(t.migrations(), 1);
+        let e2 = t.migrate(ModelId::Res, 1);
+        assert_eq!(e2, 2);
+        assert_eq!(t.epoch(), 2);
+        // Workers clamp to [1, ..]; a degenerate pool is all-on-worker-0.
+        let solo = OwnershipTable::new_static(0);
+        for m in ModelId::all() {
+            assert_eq!(solo.owner(m), 0);
+        }
+    }
+
+    #[test]
+    fn gauge_backlog_estimate_and_activity() {
+        let g = SharedGauges::new();
+        // Unobserved and empty: no backlog, inactive.
+        assert_eq!(g.backlog_ms(ModelId::Res, 40.0, 8), 0.0);
+        assert!(!g.is_active(ModelId::Res));
+        // Queued but unprofiled: priced by the isolated fallback.
+        g.publish(ModelId::Res, 16, f64::NAN);
+        assert!(g.is_active(ModelId::Res));
+        assert!((g.backlog_ms(ModelId::Res, 40.0, 8) - 16.0 * 5.0).abs()
+                    < 1e-9);
+        // Profiled: priced by the rolling batch latency.
+        g.publish(ModelId::Res, 16, 24.0);
+        assert!((g.backlog_ms(ModelId::Res, 40.0, 8) - 16.0 * 3.0).abs()
+                    < 1e-9);
+        // Drained but profiled: active (it has traffic history), zero
+        // backlog.
+        g.publish(ModelId::Res, 0, 24.0);
+        assert_eq!(g.backlog_ms(ModelId::Res, 40.0, 8), 0.0);
+        assert!(g.is_active(ModelId::Res));
     }
 
     #[test]

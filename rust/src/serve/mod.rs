@@ -5,20 +5,24 @@
 //! repo only simulated that inside a single-threaded virtual-clock loop.
 //! This subsystem turns the engine into a real server:
 //!
-//! * [`ingress`] — per-model bounded MPSC channels with worker wakeups
-//!   and lock-free serving gauges;
+//! * [`ingress`] — per-model bounded MPSC channels with worker wakeups,
+//!   lock-free serving gauges, and the epoch-stamped [`OwnershipTable`]
+//!   mapping each model to the worker that currently drains it;
 //! * [`admission`] — the SLO-aware admission controller: requests whose
 //!   deadline is provably unmeetable (queue depth × profiled batch
 //!   latency vs remaining slack) shed with typed reasons, at the ingress
 //!   fast path and again exactly at the engine's ingest gate;
 //! * [`worker`] — N OS threads, each owning an [`crate::coordinator::Engine`]
-//!   + scheduler and draining a shard of the model zoo: the paper's
-//!   concurrent instances as actual parallel execution. The engine code
-//!   is clock-generic: `VirtualClock` workers are deterministic
-//!   discrete-event sims (bit-identical to the bare engine at
-//!   `workers == 1`), wall-clock workers genuinely overlap;
-//! * [`server`] — composition + the drain/shutdown protocol (stop
-//!   intake → flush queues → join workers → merged [`crate::metrics::Metrics`]);
+//!   + scheduler and draining the shard the ownership table assigns it:
+//!   the paper's concurrent instances as actual parallel execution. The
+//!   engine code is clock-generic: `VirtualClock` workers are
+//!   deterministic discrete-event sims (bit-identical to the bare engine
+//!   at `workers == 1`), wall-clock workers genuinely overlap;
+//! * [`server`] — composition, the gauge-driven rebalance controller
+//!   (dynamic resharding: backlogged models migrate off overloaded
+//!   workers with a lossless handoff protocol), and the drain/shutdown
+//!   protocol (freeze shard map → stop intake → flush queues → join
+//!   workers → merged [`crate::metrics::Metrics`]);
 //! * [`loadgen`] — open- and closed-loop load generation over constant /
 //!   MMPP-bursty / diurnal rate envelopes (`bcedge bench-serve`).
 
@@ -29,8 +33,8 @@ pub mod server;
 pub mod worker;
 
 pub use admission::{AdmissionConfig, AdmissionGate};
-pub use ingress::{Ingress, SharedGauges};
+pub use ingress::{Ingress, ModelIntake, OwnershipTable, SharedGauges};
 pub use loadgen::{LoadGenConfig, LoadMode};
-pub use server::{ClockKind, SchedulerSpec, ServeConfig, ServeReport, Server,
-                 run_trace};
+pub use server::{ClockKind, RebalanceConfig, SchedulerSpec, ServeConfig,
+                 ServeReport, Server, run_trace};
 pub use worker::{CompletionEvent, ServeEvent};

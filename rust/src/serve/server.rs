@@ -1,19 +1,29 @@
 //! The concurrent serving runtime: ingress + admission + worker pool +
-//! drain protocol, composed behind two entry points:
+//! dynamic resharding + drain protocol, composed behind two entry points:
 //!
 //! * [`run_trace`] — serve a pre-generated arrival trace across the
 //!   worker pool (virtual or wall clock). With `workers == 1`, a virtual
 //!   clock, and no admission, this reproduces the single-threaded
 //!   [`Engine`] run bit-for-bit (enforced by the seed-equivalence test
 //!   below) — the serving layer adds concurrency without forking the
-//!   engine's semantics.
+//!   engine's semantics. Trace shards are static (resharding needs live
+//!   gauges).
 //! * [`Server::start`] / [`Server::shutdown`] — a live wall-clock server:
 //!   submit requests from any thread through the bounded ingress, workers
 //!   drain their shards in parallel, shutdown stops intake, flushes every
 //!   queue, joins the workers, and emits the final merged [`Metrics`].
+//!
+//! Live shards are DYNAMIC: a rebalance controller reads the per-model
+//! [`SharedGauges`] each epoch (queue depth × rolling batch latency =
+//! estimated backlog-ms), sums them per worker through the
+//! [`OwnershipTable`], and migrates model ownership from overloaded to
+//! underloaded workers. A hot model that saturates its worker no longer
+//! drags its shard-siblings' round spans with it — exactly the
+//! utilization failure static modulo sharding has under skewed load.
 
 use super::admission::AdmissionConfig;
-use super::ingress::{Ingress, SharedGauges, WakeEvent};
+use super::ingress::{Ingress, ModelIntake, OwnershipTable, SharedGauges,
+                     WakeEvent};
 use super::worker::{LiveWorker, ServeEvent, WorkerResult, run_trace_worker};
 use crate::coordinator::baselines::{DeepRtScheduler, FixedScheduler};
 use crate::coordinator::sac_sched;
@@ -25,8 +35,10 @@ use crate::util::rng::Pcg32;
 use crate::util::time::{Clock, ClockSource, VirtualClock, WallClock};
 use crate::workload::models::{ModelId, N_MODELS};
 use crate::workload::request::Request;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Which time source the workers' engines run on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,11 +81,31 @@ impl SchedulerSpec {
     }
 }
 
+/// Rebalance-controller tunables (live serving only).
+#[derive(Clone, Copy, Debug)]
+pub struct RebalanceConfig {
+    /// How often the controller reads the gauges and considers one
+    /// migration, ms.
+    pub epoch_ms: u64,
+    /// Trigger: the most-backlogged worker must exceed `ratio` × the
+    /// least-backlogged one...
+    pub ratio: f64,
+    /// ...by at least this absolute gap, ms (hysteresis — tiny
+    /// imbalances are noise, migrating on them would thrash).
+    pub min_gap_ms: f64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { epoch_ms: 200, ratio: 1.5, min_gap_ms: 25.0 }
+    }
+}
+
 /// Serving-runtime configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// Worker threads (clamped to [1, N_MODELS]; each worker owns the
-    /// models `m` with `m % workers == i`).
+    /// Worker threads (clamped to [1, N_MODELS]; model `m` STARTS on
+    /// worker `m % workers` — live serving may reshard from there).
     pub workers: usize,
     pub clock: ClockKind,
     pub platform: PlatformSpec,
@@ -85,6 +117,13 @@ pub struct ServeConfig {
     pub admission: Option<AdmissionConfig>,
     /// Per-model ingress channel bound (live mode backpressure).
     pub queue_capacity: usize,
+    /// Dynamic resharding (live, multi-worker only). `None` pins the
+    /// static modulo shard map for the whole run.
+    pub rebalance: Option<RebalanceConfig>,
+    /// Feed cross-worker gauge summaries into [`crate::coordinator::SchedCtx`]
+    /// (live, multi-worker only — single-worker pools stay bit-identical
+    /// to the bare engine regardless).
+    pub cluster_hints: bool,
 }
 
 impl Default for ServeConfig {
@@ -97,6 +136,8 @@ impl Default for ServeConfig {
             scheduler: SchedulerSpec::Sac { seed: 0x5AC },
             admission: Some(AdmissionConfig::default()),
             queue_capacity: 256,
+            rebalance: Some(RebalanceConfig::default()),
+            cluster_hints: true,
         }
     }
 }
@@ -120,13 +161,220 @@ impl ServeConfig {
         Engine::new(SimDispatcher::with_clock(sim, clock), cfg)
     }
 
+    /// Reference batch pricing backlog estimates (shared with admission).
+    fn ref_batch(&self) -> usize {
+        self.admission.map(|a| a.ref_batch).unwrap_or(8).max(1)
+    }
+
     fn isolated_ref_table(&self) -> [f64; N_MODELS] {
-        let ref_batch =
-            self.admission.map(|a| a.ref_batch).unwrap_or(8).max(1);
+        let ref_batch = self.ref_batch();
         let sim = PlatformSim::new(self.platform.clone());
         std::array::from_fn(|i| {
             sim.latency.isolated_ms(ModelId::from_index(i), ref_batch)
         })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dynamic resharding
+// ---------------------------------------------------------------------
+
+/// Decide at most one ownership migration from per-model backlog
+/// estimates. Pure so the policy is unit-testable without threads.
+///
+/// Trigger: the most-backlogged worker exceeds `ratio` × the least plus
+/// `min_gap_ms`. Then:
+///
+/// * **hot-model isolation** — if one model carries ≥ half the hot
+///   worker's backlog, peel the SMALLEST active sibling off to the cold
+///   worker. Moving the dominant model only relocates the hotspot; what
+///   actually helps is decoupling its siblings' round spans from it
+///   (every co-resident model dispatches in the same concurrent group,
+///   so the hot model's span and interference tax them all).
+/// * **spread reduction** — otherwise move whichever active model most
+///   reduces the max−min backlog spread, requiring strict improvement
+///   (which is also what prevents ping-pong: a move that merely mirrors
+///   the imbalance is rejected).
+///
+/// Returns `(model index, destination worker)`.
+fn plan_migration(backlog_ms: &[f64; N_MODELS], active: &[bool; N_MODELS],
+                  owner: &[usize; N_MODELS], workers: usize, ratio: f64,
+                  min_gap_ms: f64) -> Option<(usize, usize)> {
+    if workers < 2 {
+        return None;
+    }
+    let totals = worker_totals(backlog_ms, owner, workers);
+    let (w_max, _) = totals.iter().enumerate().fold(
+        (0, f64::MIN),
+        |acc, (i, &t)| if t > acc.1 { (i, t) } else { acc },
+    );
+    let (w_min, _) = totals.iter().enumerate().fold(
+        (0, f64::MAX),
+        |acc, (i, &t)| if t < acc.1 { (i, t) } else { acc },
+    );
+    if totals[w_max] <= ratio * totals[w_min] + min_gap_ms {
+        return None;
+    }
+    let owned_active: Vec<usize> = (0..N_MODELS)
+        .filter(|&m| owner[m] == w_max && active[m])
+        .collect();
+    if owned_active.len() < 2 {
+        // Nothing to decouple: zero or one active model on the hot
+        // worker (a lone hot model is already isolated).
+        return None;
+    }
+    let min_backlog = |candidates: &[usize]| -> Option<usize> {
+        candidates
+            .iter()
+            .min_by(|&&a, &&b| {
+                backlog_ms[a]
+                    .partial_cmp(&backlog_ms[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .copied()
+    };
+    let top = *owned_active
+        .iter()
+        .max_by(|&&a, &&b| {
+            backlog_ms[a]
+                .partial_cmp(&backlog_ms[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .unwrap();
+    if backlog_ms[top] >= 0.5 * totals[w_max] {
+        // Prefer siblings that hold backlog RIGHT NOW (moving one
+        // relieves the hot worker immediately AND decouples it);
+        // idle-but-active siblings are the fallback, still worth moving
+        // for the span decoupling alone.
+        let siblings: Vec<usize> = owned_active
+            .iter()
+            .copied()
+            .filter(|&m| m != top)
+            .collect();
+        let queued: Vec<usize> = siblings
+            .iter()
+            .copied()
+            .filter(|&m| backlog_ms[m] > 0.0)
+            .collect();
+        let pool = if queued.is_empty() { &siblings } else { &queued };
+        return min_backlog(pool).map(|m| (m, w_min));
+    }
+    // Spread-reduction arm: strict improvement required.
+    let before = backlog_spread_ms(&totals);
+    let mut best: Option<(usize, f64)> = None;
+    for &m in &owned_active {
+        let mut after = totals.clone();
+        after[w_max] -= backlog_ms[m];
+        after[w_min] += backlog_ms[m];
+        let s = backlog_spread_ms(&after);
+        if s + 1e-9 < before && best.map(|(_, bs)| s < bs).unwrap_or(true) {
+            best = Some((m, s));
+        }
+    }
+    best.map(|(m, _)| (m, w_min))
+}
+
+/// Per-worker backlog totals — the ONE aggregation both the controller's
+/// stats and the migration policy read, so they can never disagree.
+fn worker_totals(backlog_ms: &[f64; N_MODELS], owner: &[usize; N_MODELS],
+                 workers: usize) -> Vec<f64> {
+    let mut totals = vec![0.0f64; workers];
+    for m in 0..N_MODELS {
+        totals[owner[m].min(workers - 1)] += backlog_ms[m];
+    }
+    totals
+}
+
+/// Max−min backlog spread across workers, ms.
+fn backlog_spread_ms(totals: &[f64]) -> f64 {
+    let max = totals.iter().cloned().fold(f64::MIN, f64::max);
+    let min = totals.iter().cloned().fold(f64::MAX, f64::min);
+    max - min
+}
+
+/// Controller-side counters surfaced in the final report's metrics.
+#[derive(Default)]
+struct RebalanceStats {
+    epochs: AtomicU64,
+    /// Worst max−min backlog spread seen, as f64 bits (monotone max).
+    peak_imbalance_bits: AtomicU64,
+}
+
+impl RebalanceStats {
+    fn observe_imbalance(&self, spread_ms: f64) {
+        if !spread_ms.is_finite() {
+            return;
+        }
+        let mut cur = self.peak_imbalance_bits.load(Ordering::Relaxed);
+        while spread_ms > f64::from_bits(cur) {
+            match self.peak_imbalance_bits.compare_exchange_weak(
+                cur,
+                spread_ms.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    fn peak_imbalance_ms(&self) -> f64 {
+        f64::from_bits(self.peak_imbalance_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// The rebalance controller: one thread reading gauges each epoch and
+/// rewriting the ownership table (the only writer it has).
+struct Rebalancer {
+    cfg: RebalanceConfig,
+    gauges: Arc<SharedGauges>,
+    ownership: Arc<OwnershipTable>,
+    worker_events: Vec<Arc<WakeEvent>>,
+    isolated_ref_ms: [f64; N_MODELS],
+    ref_batch: usize,
+    stop: Arc<AtomicBool>,
+    wake: Arc<WakeEvent>,
+    stats: Arc<RebalanceStats>,
+}
+
+impl Rebalancer {
+    fn run(self) {
+        loop {
+            self.wake
+                .wait_timeout(Duration::from_millis(self.cfg.epoch_ms.max(1)));
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            self.tick();
+        }
+    }
+
+    fn tick(&self) {
+        let workers = self.worker_events.len();
+        let mut backlog = [0.0f64; N_MODELS];
+        let mut active = [false; N_MODELS];
+        let mut owner = [0usize; N_MODELS];
+        for m in ModelId::all() {
+            let i = m as usize;
+            backlog[i] = self.gauges.backlog_ms(
+                m, self.isolated_ref_ms[i], self.ref_batch);
+            active[i] = self.gauges.is_active(m);
+            owner[i] = self.ownership.owner(m);
+        }
+        let totals = worker_totals(&backlog, &owner, workers);
+        self.stats.observe_imbalance(backlog_spread_ms(&totals));
+        self.stats.epochs.fetch_add(1, Ordering::Relaxed);
+        if let Some((m, to)) = plan_migration(&backlog, &active, &owner,
+                                              workers, self.cfg.ratio,
+                                              self.cfg.min_gap_ms) {
+            let from = owner[m];
+            self.ownership.migrate(ModelId::from_index(m), to);
+            // Wake both sides so the handoff starts now: the old owner
+            // flushes the backlog, the new owner picks it up.
+            self.worker_events[from].notify();
+            self.worker_events[to].notify();
+        }
     }
 }
 
@@ -173,6 +421,15 @@ impl ServeReport {
                 .map(|r| format!("{}={}", r, m.shed_by_reason(r)))
                 .collect();
             println!("sheds: {} ({})", m.shed_total(), by.join(", "));
+        }
+        if m.rebalance_epochs() > 0 {
+            println!(
+                "rebalance: {} migrations over {} epochs | peak worker \
+                 imbalance {:.1} ms",
+                m.migrations(),
+                m.rebalance_epochs(),
+                m.peak_imbalance_ms(),
+            );
         }
         if self.leftover > 0 {
             println!("leftover in queue at horizon: {}", self.leftover);
@@ -241,10 +498,21 @@ pub struct Server {
     handles: Vec<std::thread::JoinHandle<WorkerResult>>,
     clock: WallClock,
     workers: usize,
+    /// Shared intake slots, kept for the post-join conservation sweep.
+    intake: Arc<Vec<Mutex<ModelIntake>>>,
+    ownership: Arc<OwnershipTable>,
+    /// Drain flag the workers watch (stop migrating backlog, serve what
+    /// you hold).
+    closed: Arc<AtomicBool>,
+    rebalance_stop: Arc<AtomicBool>,
+    rebalance_wake: Arc<WakeEvent>,
+    rebalance_handle: Option<std::thread::JoinHandle<()>>,
+    rebalance_stats: Arc<RebalanceStats>,
 }
 
 impl Server {
-    /// Spawn the worker pool and open the ingress. Live serving is
+    /// Spawn the worker pool, the rebalance controller (when configured
+    /// and `workers > 1`), and open the ingress. Live serving is
     /// wall-clock by definition (arrivals are stamped with real time), so
     /// `cfg.clock` is ignored here. `events`, when given, receives every
     /// request-terminal event — completion or engine-gate shed — for
@@ -255,38 +523,46 @@ impl Server {
         let workers = cfg.worker_count();
         let clock = WallClock::new();
         let gauges = Arc::new(SharedGauges::new());
-        let events: Vec<Arc<WakeEvent>> =
+        let ownership = Arc::new(OwnershipTable::new_static(workers));
+        let closed = Arc::new(AtomicBool::new(false));
+        let worker_events: Vec<Arc<WakeEvent>> =
             (0..workers).map(|_| Arc::new(WakeEvent::new())).collect();
-        // Per-model bounded channels; receivers grouped by owning worker.
+        let isolated_ref_ms = cfg.isolated_ref_table();
+        let ref_batch = cfg.ref_batch();
+        // Per-model bounded channels behind shared intake slots: the
+        // ownership table (not channel plumbing) decides who drains what,
+        // so a migration is a table write and the channels never move.
         let mut senders = Vec::with_capacity(N_MODELS);
-        let mut per_worker: Vec<(Vec<ModelId>, Vec<_>)> =
-            (0..workers).map(|_| (Vec::new(), Vec::new())).collect();
-        for model in ModelId::all() {
+        let mut slots = Vec::with_capacity(N_MODELS);
+        for _ in ModelId::all() {
             let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity.max(1));
             senders.push(tx);
-            let owner = cfg.owner(model);
-            per_worker[owner].0.push(model);
-            per_worker[owner].1.push(rx);
+            slots.push(Mutex::new(ModelIntake {
+                rx,
+                handoff: Vec::new(),
+                closed: false,
+            }));
         }
-        let model_events: Vec<Arc<WakeEvent>> = ModelId::all()
-            .into_iter()
-            .map(|m| events[cfg.owner(m)].clone())
-            .collect();
-        let handles = per_worker
-            .into_iter()
-            .enumerate()
-            .map(|(i, (models, receivers))| {
+        let intake: Arc<Vec<Mutex<ModelIntake>>> = Arc::new(slots);
+        let cluster_hints = cfg.cluster_hints && workers > 1;
+        let handles = (0..workers)
+            .map(|i| {
                 let engine = cfg.build_engine(
                     i,
                     ClockSource::Wall(clock.clone()),
                 );
                 let worker = LiveWorker {
+                    id: i,
                     engine,
-                    models,
-                    receivers,
-                    event: events[i].clone(),
+                    intake: intake.clone(),
+                    ownership: ownership.clone(),
+                    worker_events: worker_events.clone(),
                     gauges: gauges.clone(),
                     admission: cfg.admission,
+                    isolated_ref_ms,
+                    ref_batch,
+                    cluster_hints,
+                    closed: closed.clone(),
                     events_tx: events_tx.clone(),
                 };
                 let spec = cfg.scheduler;
@@ -300,9 +576,46 @@ impl Server {
                     .expect("spawn serve worker")
             })
             .collect();
-        let ingress = Ingress::new(senders, model_events, gauges,
-                                   cfg.admission, cfg.isolated_ref_table());
-        Server { ingress, handles, clock, workers }
+        let rebalance_stop = Arc::new(AtomicBool::new(false));
+        let rebalance_wake = Arc::new(WakeEvent::new());
+        let rebalance_stats = Arc::new(RebalanceStats::default());
+        let rebalance_handle = match cfg.rebalance {
+            Some(rcfg) if workers > 1 => {
+                let controller = Rebalancer {
+                    cfg: rcfg,
+                    gauges: gauges.clone(),
+                    ownership: ownership.clone(),
+                    worker_events: worker_events.clone(),
+                    isolated_ref_ms,
+                    ref_batch,
+                    stop: rebalance_stop.clone(),
+                    wake: rebalance_wake.clone(),
+                    stats: rebalance_stats.clone(),
+                };
+                Some(
+                    std::thread::Builder::new()
+                        .name("bcedge-rebalance".into())
+                        .spawn(move || controller.run())
+                        .expect("spawn rebalance controller"),
+                )
+            }
+            _ => None,
+        };
+        let ingress = Ingress::new(senders, worker_events, ownership.clone(),
+                                   gauges, cfg.admission, isolated_ref_ms);
+        Server {
+            ingress,
+            handles,
+            clock,
+            workers,
+            intake,
+            ownership,
+            closed,
+            rebalance_stop,
+            rebalance_wake,
+            rebalance_handle,
+            rebalance_stats,
+        }
     }
 
     /// Milliseconds since the server started (the arrival timebase).
@@ -318,13 +631,42 @@ impl Server {
             .submit(model, slo_ms, transmission_ms, self.clock.now_ms())
     }
 
-    /// Drain and stop: close intake, flush every queue, join the
-    /// workers, and merge their metrics (ingress-side sheds included).
+    /// Shard migrations performed so far (live observability).
+    pub fn migrations(&self) -> u64 {
+        self.ownership.migrations()
+    }
+
+    /// Drain and stop: freeze the shard map (join the rebalance
+    /// controller), raise the drain flag, close intake, flush every
+    /// queue, join the workers, and merge their metrics (ingress-side
+    /// sheds and rebalance counters included).
     pub fn shutdown(self) -> ServeReport {
-        let Server { mut ingress, handles, clock, workers } = self;
+        let Server {
+            mut ingress,
+            handles,
+            clock,
+            workers,
+            intake,
+            ownership,
+            closed,
+            rebalance_stop,
+            rebalance_wake,
+            rebalance_handle,
+            rebalance_stats,
+        } = self;
+        // 1. Freeze the ownership table: no migrations during the drain.
+        rebalance_stop.store(true, Ordering::Release);
+        rebalance_wake.notify();
+        if let Some(h) = rebalance_handle {
+            h.join().expect("rebalance controller panicked");
+        }
+        // 2. Drain flag up: workers keep (and serve) any backlog they
+        //    still hold for disowned models instead of bouncing it
+        //    between exiting threads.
+        closed.store(true, Ordering::Release);
         let horizon_ms = clock.now_ms();
-        // Stop intake, disconnect the channels (the workers' exit
-        // signal), and wake anyone parked so the drain starts now.
+        // 3. Stop intake, disconnect the channels (the workers' exit
+        //    signal), and wake anyone parked so the drain starts now.
         ingress.close();
         ingress.drop_senders();
         ingress.wake_all();
@@ -334,6 +676,22 @@ impl Server {
             .collect();
         let mut report = merge_results(results, horizon_ms, workers);
         ingress.fold_sheds_into(&mut report.metrics);
+        // 4. Conservation sweep: anything a racing handoff left in a
+        //    slot after its owner exited is accounted as leftover, never
+        //    silently dropped.
+        for slot in intake.iter() {
+            let mut slot = slot.lock().unwrap();
+            report.leftover += slot.handoff.len();
+            slot.handoff.clear();
+            while slot.rx.try_recv().is_ok() {
+                report.leftover += 1;
+            }
+        }
+        report.metrics.record_rebalance(
+            rebalance_stats.epochs.load(Ordering::Relaxed),
+            ownership.migrations(),
+            rebalance_stats.peak_imbalance_ms(),
+        );
         report
     }
 }
@@ -491,6 +849,116 @@ mod tests {
         assert_eq!(adm.metrics.shed_by_reason(ShedReason::DeadlineUnmeetable),
                    adm.metrics.shed_total(),
                    "trace-mode sheds must all be deadline-based");
+    }
+
+    /// The migration policy, exercised without threads: triggers,
+    /// hot-model isolation, spread reduction, hysteresis, thrash
+    /// rejection.
+    #[test]
+    fn plan_migration_isolates_hot_models_and_balances_spread() {
+        let owner = [0, 1, 0, 1, 0, 1];
+        let all_active = [true; N_MODELS];
+        // Hot model 0 dominates worker 0; siblings 2 and 4 ride along.
+        let backlog = [400.0, 0.0, 12.0, 0.0, 30.0, 5.0];
+        // Smallest QUEUED sibling (model 2) peels off to the cold worker.
+        assert_eq!(
+            plan_migration(&backlog, &all_active, &owner, 2, 1.5, 25.0),
+            Some((2, 1))
+        );
+        // A sibling holding backlog outranks an idle-but-profiled one:
+        // moving the idle sibling would relieve nothing this epoch.
+        let idle_first = [400.0, 0.0, 0.0, 0.0, 30.0, 0.0];
+        assert_eq!(
+            plan_migration(&idle_first, &all_active, &owner, 2, 1.5, 25.0),
+            Some((4, 1))
+        );
+        // A lone hot model is already isolated: nothing to move.
+        let lone = [400.0, 3.0, 0.0, 1.0, 0.0, 2.0];
+        let active = [true, true, false, true, false, true];
+        assert_eq!(plan_migration(&lone, &active, &owner, 2, 1.5, 25.0),
+                   None);
+        // Balanced-ish backlogs below the trigger: no churn.
+        let calm = [30.0, 25.0, 20.0, 28.0, 22.0, 26.0];
+        assert_eq!(plan_migration(&calm, &all_active, &owner, 2, 1.5, 25.0),
+                   None);
+        // No dominant model: the spread-reducing move wins (moving one
+        // 100 ms model from the 300 ms worker to the empty one).
+        let owner3 = [0, 0, 0, 1, 1, 1];
+        let flat = [100.0, 100.0, 100.0, 0.0, 0.0, 0.0];
+        let got = plan_migration(&flat, &all_active, &owner3, 2, 1.5, 25.0);
+        let (m, to) = got.expect("spread reduction should fire");
+        assert!(m < 3, "must move one of worker 0's models, got {m}");
+        assert_eq!(to, 1);
+        // Dominance with only two live models: the non-dominant one is
+        // peeled off (inactive zero-traffic siblings are never moved —
+        // relocating them changes nothing).
+        let mirror = [0.0, 0.0, 90.0, 0.0, 40.0, 0.0];
+        let two_live = [false, false, true, false, true, false];
+        assert_eq!(
+            plan_migration(&mirror, &two_live, &owner, 2, 1.5, 25.0),
+            Some((4, 1))
+        );
+        // Single worker: never migrates.
+        assert_eq!(plan_migration(&backlog, &all_active, &[0; 6], 1, 1.5,
+                                  25.0),
+                   None);
+    }
+
+    /// Tentpole conservation pin: under aggressive rebalancing epochs and
+    /// a hot-model skew, ownership handoffs happen mid-stream and every
+    /// submitted request is still accounted exactly once — completed,
+    /// shed, or leftover; never lost, never double-served.
+    #[test]
+    fn migration_conserves_requests_under_skew() {
+        let cfg = ServeConfig {
+            workers: 2,
+            clock: ClockKind::Wall,
+            scheduler: SchedulerSpec::Fixed { batch: 2, m_c: 2 },
+            admission: None,
+            queue_capacity: 1024,
+            rebalance: Some(RebalanceConfig {
+                epoch_ms: 15,
+                ratio: 1.1,
+                min_gap_ms: 5.0,
+            }),
+            ..Default::default()
+        };
+        let server = Server::start(&cfg, None);
+        // ~70 % yolo (the hot model, statically on worker 0), the rest on
+        // its shard-siblings res/inc so their backlog rides the same
+        // worker until the controller peels them off.
+        let mut attempts = 0u64;
+        let mut accepted = std::collections::HashSet::new();
+        for i in 0..60u64 {
+            let model = match i % 10 {
+                0..=6 => ModelId::Yolo,
+                7 | 8 => ModelId::Res,
+                _ => ModelId::Inc,
+            };
+            let slo = crate::workload::models::ModelSpec::get(model).slo_ms;
+            attempts += 1;
+            if let Ok(id) = server.submit(model, slo, 0.5) {
+                assert!(accepted.insert(id), "ingress reused a request id");
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let report = server.shutdown();
+        // Every attempt is accounted exactly once.
+        assert_eq!(report.metrics.outcomes().len() as u64
+                       + report.metrics.shed_total()
+                       + report.leftover as u64,
+                   attempts);
+        // No double service: outcome ids are unique and were accepted.
+        let mut seen = std::collections::HashSet::new();
+        for o in report.metrics.outcomes() {
+            assert!(seen.insert(o.id), "request {} served twice", o.id);
+            assert!(accepted.contains(&o.id));
+        }
+        // The skew actually forced ownership handoffs.
+        assert!(report.metrics.migrations() > 0,
+                "rebalance controller never migrated under hot-model skew");
+        assert!(report.metrics.rebalance_epochs() > 0);
+        assert!(report.metrics.peak_imbalance_ms() > 0.0);
     }
 
     /// Live wall-clock server: parallel workers, bounded ingress, drain

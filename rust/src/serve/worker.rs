@@ -1,28 +1,36 @@
 //! Serving workers: N OS threads, each owning a full [`Engine`] (with its
-//! own dispatcher, profiler, predictor, and scheduler) and draining a
-//! shard of the model zoo. The paper's "concurrent model instances"
-//! become actual parallel execution — worker threads overlap in wall
-//! time — while the virtual-clock arm keeps every worker a deterministic
-//! discrete-event simulation (bit-identical to the single-threaded
-//! engine when `workers == 1`).
+//! own dispatcher, profiler, predictor, and scheduler) and draining the
+//! shard of the model zoo the [`OwnershipTable`] currently assigns it.
+//! The paper's "concurrent model instances" become actual parallel
+//! execution — worker threads overlap in wall time — while the
+//! virtual-clock arm keeps every worker a deterministic discrete-event
+//! simulation (bit-identical to the single-threaded engine when
+//! `workers == 1`).
 //!
 //! Two intake modes share the engine code path:
 //!
 //! * **trace** — the worker's whole arrival shard is known up front
-//!   (virtual-clock benches, seed-equivalence tests): submit + run.
+//!   (virtual-clock benches, seed-equivalence tests): submit + run. The
+//!   shard map is static here; resharding needs live gauges.
 //! * **live** — requests stream in over the per-model ingress channels
-//!   (wall clock): drain channels, serve a round, publish gauges, park
-//!   when idle, exit once the ingress disconnects and queues are flushed.
+//!   (wall clock): drain the channels of currently-owned models, serve a
+//!   round, publish gauges, park when idle, exit once intake is closed
+//!   and the queues are flushed. Ownership is DYNAMIC: when the
+//!   rebalance controller migrates a model away, the worker flushes that
+//!   model's queued backlog into the shared [`ModelIntake`] slot on its
+//!   next round and the new owner picks it up — requests are handed
+//!   over, never dropped or double-served.
 
 use super::admission::{AdmissionConfig, AdmissionGate};
-use super::ingress::{SharedGauges, WakeEvent};
+use super::ingress::{ModelIntake, OwnershipTable, SharedGauges, WakeEvent};
 use crate::coordinator::{Engine, Scheduler};
 use crate::metrics::Metrics;
 use crate::runtime::executor::SimDispatcher;
 use crate::workload::models::{ModelId, N_MODELS};
 use crate::workload::request::Request;
-use std::sync::mpsc::{Receiver, TryRecvError};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::TryRecvError;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// What one worker hands back at shutdown.
@@ -71,15 +79,33 @@ pub fn run_trace_worker(mut engine: Engine<SimDispatcher>,
     }
 }
 
-/// Everything a live worker owns.
+/// Everything a live worker owns (or shares with the pool).
 pub struct LiveWorker {
+    /// This worker's index in the pool — matched against the ownership
+    /// table every intake pass.
+    pub id: usize,
     pub engine: Engine<SimDispatcher>,
-    /// This worker's model shard, parallel to `receivers`.
-    pub models: Vec<ModelId>,
-    pub receivers: Vec<Receiver<Request>>,
-    pub event: Arc<WakeEvent>,
+    /// All N_MODELS intake slots, shared across the pool; the ownership
+    /// table says which ones this worker drains right now.
+    pub intake: Arc<Vec<Mutex<ModelIntake>>>,
+    pub ownership: Arc<OwnershipTable>,
+    /// Every worker's parking event — `worker_events[id]` is OURS (the
+    /// ingress and the rebalance controller ring it); the rest are for
+    /// waking a migration's new owner.
+    pub worker_events: Vec<Arc<WakeEvent>>,
     pub gauges: Arc<SharedGauges>,
     pub admission: Option<AdmissionConfig>,
+    /// Isolated latency at the reference batch, per model (prices the
+    /// gauge-hint backlog before a model is profiled).
+    pub isolated_ref_ms: [f64; N_MODELS],
+    pub ref_batch: usize,
+    /// Feed cross-worker backlog summaries into the scheduler context
+    /// (off for single-worker pools so they stay bit-identical to the
+    /// bare engine).
+    pub cluster_hints: bool,
+    /// Set by the server when a drain begins: stop handing backlog to
+    /// other workers and serve whatever we hold.
+    pub closed: Arc<AtomicBool>,
     pub events_tx: Option<std::sync::mpsc::Sender<ServeEvent>>,
 }
 
@@ -88,52 +114,50 @@ pub struct LiveWorker {
 const IDLE_PARK: Duration = Duration::from_millis(1);
 
 impl LiveWorker {
-    /// The live serve loop. Returns after the ingress disconnects every
-    /// channel AND the engine has flushed its queues (the drain
-    /// protocol's "stop intake → flush → join" middle step).
+    /// The live serve loop. Returns after the drain flag is up, every
+    /// owned channel has disconnected, and the engine has flushed its
+    /// queues (the drain protocol's "stop intake → flush → join" middle
+    /// step).
     pub fn run(mut self, scheduler: &mut dyn Scheduler) -> WorkerResult {
         if let Some(cfg) = self.admission {
             self.engine.set_ingress_gate(Some(Box::new(AdmissionGate::new(cfg))));
         }
         let mut outcomes = Vec::new();
-        let mut open = vec![true; self.receivers.len()];
         let mut slots = 0u64;
         let mut reported = 0usize;
         let mut sheds_seen = [0u64; N_MODELS];
+        // Ownership epoch seen at the last intake pass: the disowned-
+        // backlog scan only needs to run when the table actually changed
+        // (backlog for a model we don't own can only appear via a
+        // migration). u64::MAX forces the first pass to scan.
+        let mut seen_epoch = u64::MAX;
         loop {
-            // Intake: drain whatever the ingress has delivered.
-            let mut intake_done = true;
-            for (i, rx) in self.receivers.iter().enumerate() {
-                if !open[i] {
-                    continue;
-                }
-                loop {
-                    match rx.try_recv() {
-                        Ok(r) => self.engine.push_request(r),
-                        Err(TryRecvError::Empty) => {
-                            intake_done = false;
-                            break;
-                        }
-                        Err(TryRecvError::Disconnected) => {
-                            open[i] = false;
-                            break;
-                        }
-                    }
-                }
-            }
+            let closing = self.closed.load(Ordering::Acquire);
+            let epoch = self.ownership.epoch();
+            let intake_done = self.intake_pass(closing, epoch != seen_epoch);
+            seen_epoch = epoch;
             // Serve one scheduling round.
             let served = self.engine.step_into(scheduler, &mut outcomes);
             if let Some(n) = served {
                 slots += n as u64;
             }
             self.publish_gauges();
+            if self.cluster_hints {
+                self.update_cluster_hints();
+            }
             reported = self.notify_events(reported, &mut sheds_seen);
             match served {
                 Some(_) => {}
-                // Idle with intake closed and queues flushed: drained.
-                None if intake_done => break,
+                // Idle with the drain flag up, every owned channel
+                // disconnected, and no handoff pending: drained. The
+                // final owned_intake_clear re-check closes the window
+                // where a migration handoff lands between the intake
+                // pass and this decision.
+                None if closing && intake_done && self.owned_intake_clear() => {
+                    break
+                }
                 // Idle but the ingress is still open: park until work.
-                None => self.event.wait_timeout(IDLE_PARK),
+                None => self.worker_events[self.id].wait_timeout(IDLE_PARK),
             }
         }
         WorkerResult {
@@ -143,15 +167,111 @@ impl LiveWorker {
         }
     }
 
-    /// Publish this shard's queue depths + rolling batch latencies for
-    /// the ingress fast path. The latency gauge stays NaN until the
-    /// profiler has observations — the admission decision function owns
-    /// the isolated-estimate fallback, so the policy lives in one place.
-    fn publish_gauges(&self) {
-        for &m in &self.models {
-            self.gauges.publish(m, self.engine.queue_len(m),
-                                self.engine.profiler.mean_latency_ms(m));
+    /// One intake pass over every model slot. Owned models: pick up any
+    /// migration handoff, then drain the ingress channel. When the
+    /// ownership epoch moved (`scan_disowned`), also check for backlog
+    /// we hold for models migrated away and flush it to the new owner
+    /// (unless a drain has begun — then we keep and serve it ourselves,
+    /// so shutdown never bounces requests between exiting workers).
+    /// Returns true when every owned channel has disconnected.
+    fn intake_pass(&mut self, closing: bool, scan_disowned: bool) -> bool {
+        let mut done = true;
+        for model in ModelId::all() {
+            let idx = model as usize;
+            if self.ownership.owner(model) == self.id {
+                let mut slot = self.intake[idx].lock().unwrap();
+                for r in slot.handoff.drain(..) {
+                    self.engine.push_request(r);
+                }
+                if !slot.closed {
+                    loop {
+                        match slot.rx.try_recv() {
+                            Ok(r) => self.engine.push_request(r),
+                            Err(TryRecvError::Empty) => {
+                                done = false;
+                                break;
+                            }
+                            Err(TryRecvError::Disconnected) => {
+                                slot.closed = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+            } else if scan_disowned && !closing
+                && self.engine.holds_model(model)
+            {
+                let new_owner = self.ownership.owner(model);
+                let moved = {
+                    let mut slot = self.intake[idx].lock().unwrap();
+                    self.engine.drain_model_into(model, &mut slot.handoff)
+                };
+                if moved > 0 {
+                    self.worker_events[new_owner].notify();
+                }
+            }
         }
+        done
+    }
+
+    /// Exit gate: re-verify under the locks that every owned slot is
+    /// disconnected with an empty handoff buffer, so a flush that landed
+    /// after the intake pass is never stranded.
+    fn owned_intake_clear(&self) -> bool {
+        ModelId::all().into_iter().all(|m| {
+            if self.ownership.owner(m) != self.id {
+                return true;
+            }
+            let slot = self.intake[m as usize].lock().unwrap();
+            slot.closed && slot.handoff.is_empty()
+        })
+    }
+
+    /// Publish the owned shard's queue depths + rolling batch latencies
+    /// for the ingress fast path and the rebalance controller. The
+    /// latency gauge stays NaN until the profiler has observations — the
+    /// admission decision function owns the isolated-estimate fallback,
+    /// so the policy lives in one place.
+    ///
+    /// Mid-migration a model's backlog is split between the handoff slot
+    /// (counted by the new owner below) and the OLD owner's engine
+    /// (published by the still-holding branch), so a hot queue never
+    /// reads 0 just because ownership moved — that blind spot would let
+    /// the admission fast path under-price the model and feed the
+    /// controller a falsely collapsed imbalance. The two sides may
+    /// overwrite each other for the ≤1 round the flush takes; either
+    /// value is honest about real queued work.
+    fn publish_gauges(&self) {
+        for m in ModelId::all() {
+            let idx = m as usize;
+            if self.ownership.owner(m) == self.id {
+                let in_handoff = self.intake[idx].lock().unwrap().handoff.len();
+                self.gauges.publish(m, self.engine.queue_len(m) + in_handoff,
+                                    self.engine.profiler.mean_latency_ms(m));
+            } else if self.engine.holds_model(m) {
+                self.gauges.publish(m, self.engine.queue_len(m),
+                                    self.engine.profiler.mean_latency_ms(m));
+            }
+        }
+    }
+
+    /// Fold the pool-wide gauges into the engine's decision context:
+    /// total estimated backlog across every worker and this worker's
+    /// share of it, so SAC/DeepRT see cluster pressure instead of just
+    /// their own shard.
+    fn update_cluster_hints(&mut self) {
+        let mut total = 0.0;
+        let mut local = 0.0;
+        for m in ModelId::all() {
+            let b = self.gauges.backlog_ms(
+                m, self.isolated_ref_ms[m as usize], self.ref_batch);
+            total += b;
+            if self.ownership.owner(m) == self.id {
+                local += b;
+            }
+        }
+        let share = if total > 0.0 { local / total } else { 0.0 };
+        self.engine.set_cluster_hints(total, share);
     }
 
     /// Stream request-terminal events recorded since the last round —
@@ -171,7 +291,7 @@ impl LiveWorker {
                     violated: o.violated,
                 }));
             }
-            for &m in &self.models {
+            for m in ModelId::all() {
                 let seen = &mut sheds_seen[m as usize];
                 let now = self.engine.metrics.shed_for(m);
                 for _ in *seen..now {

@@ -173,3 +173,123 @@ fn real_backend_smoke() {
         assert!(o.e2e_ms > 0.0 && o.e2e_ms.is_finite());
     }
 }
+
+/// Tentpole acceptance: under a 70 %-hot-model skew at overload, dynamic
+/// resharding strictly beats the static modulo shard map on violation
+/// rate, with full request conservation in both runs.
+///
+/// Scenario: yolo (the heaviest model) carries 70 % of the traffic and
+/// statically shares worker 0 with res and inc, which carry the rest.
+/// Every co-resident model dispatches in the same concurrent group, so
+/// the hot model's long, interference-inflated spans tax its siblings'
+/// latency directly — res (58 ms SLO) and inc (66 ms) structurally blow
+/// their deadlines behind yolo's ~90 ms rounds, while worker 1 idles.
+/// The rebalance controller reads exactly that from the gauges and peels
+/// the siblings off; after the handoff both sides meet their SLOs the
+/// static map cannot.
+#[test]
+fn rebalance_beats_static_shard_under_hot_model() {
+    use bcedge::serve::{ClockKind, RebalanceConfig, SchedulerSpec,
+                        ServeConfig, Server};
+    use bcedge::workload::models::{ModelSpec, N_MODELS};
+    use std::time::Duration;
+
+    // Self-calibrate the load to the simulator: one (batch 2, m_c 2)
+    // round serves 4 yolo per isolated span, so load the hot model to
+    // ~65 % of that bound (comfortable alone, drowning once co-residents
+    // inflate and lengthen its rounds).
+    let sim = PlatformSim::xavier_nx();
+    let hot_span_s = sim.latency.isolated_ms(ModelId::Yolo, 2) / 1e3;
+    let hot_capacity_rps = 4.0 / hot_span_s;
+    let hot_rps = 0.65 * hot_capacity_rps;
+    let cold_rps = hot_rps * 3.0 / 7.0; // 70/30 request split
+    let mut mix = [0.0f64; N_MODELS];
+    mix[ModelId::Yolo as usize] = hot_rps;
+    mix[ModelId::Res as usize] = cold_rps / 2.0;
+    mix[ModelId::Inc as usize] = cold_rps / 2.0;
+    let total_rps = hot_rps + cold_rps;
+    let horizon_ms = 2_500.0;
+
+    let run = |rebalance: Option<RebalanceConfig>| {
+        let cfg = ServeConfig {
+            workers: 2,
+            clock: ClockKind::Wall,
+            scheduler: SchedulerSpec::Fixed { batch: 2, m_c: 2 },
+            admission: None,
+            queue_capacity: 2048,
+            rebalance,
+            ..Default::default()
+        };
+        let server = Server::start(&cfg, None);
+        let mut gen = PoissonGenerator::new(total_rps, 4242).with_mix(mix);
+        let trace = gen.generate_horizon(horizon_ms);
+        let mut attempts = 0u64;
+        for r in &trace {
+            let wait_ms = r.arrival_ms - server.now_ms();
+            if wait_ms > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wait_ms / 1e3));
+            }
+            let _ = server.submit(r.model, r.slo_ms, r.transmission_ms);
+            attempts += 1;
+        }
+        let report = server.shutdown();
+        // Conservation: every attempt completed, shed, or leftover.
+        assert_eq!(report.metrics.outcomes().len() as u64
+                       + report.metrics.shed_total()
+                       + report.leftover as u64,
+                   attempts,
+                   "requests lost or double-counted");
+        report
+    };
+
+    let static_rep = run(None);
+    let dynamic_rep = run(Some(RebalanceConfig {
+        epoch_ms: 40,
+        ratio: 1.3,
+        min_gap_ms: 20.0,
+    }));
+
+    // Both runs served real traffic.
+    assert!(static_rep.metrics.completed() > 0);
+    assert!(dynamic_rep.metrics.completed() > 0);
+    for model in [ModelId::Yolo, ModelId::Res, ModelId::Inc] {
+        assert!(dynamic_rep
+                    .metrics
+                    .outcomes()
+                    .iter()
+                    .any(|o| o.model == model),
+                "{} starved after resharding", ModelSpec::get(model).name);
+    }
+    // The controller actually migrated ownership.
+    assert!(dynamic_rep.metrics.migrations() > 0,
+            "no migrations under a 70% hot-model skew");
+    // The static map is genuinely hurting. The structural expectation is
+    // ~0.7+ (cold models behind the hot model's rounds violate nearly
+    // always); the bound is deliberately loose so scheduler jitter on a
+    // loaded CI runner cannot flake it. Note the arrival pacing targets
+    // ABSOLUTE timestamps: a slow submitter degrades to bursty load,
+    // never lighter load, so slowness pushes this rate up, not down.
+    assert!(static_rep.metrics.violation_rate() > 0.15,
+            "static sharding not overloaded enough: viol {:.3}",
+            static_rep.metrics.violation_rate());
+    // The headline: dynamic resharding strictly lowers the violation
+    // rate over accepted requests.
+    assert!(dynamic_rep.metrics.violation_rate()
+                < static_rep.metrics.violation_rate(),
+            "resharding did not help: dynamic {:.3} vs static {:.3}",
+            dynamic_rep.metrics.violation_rate(),
+            static_rep.metrics.violation_rate());
+    // And the cold models specifically are rescued: their combined
+    // violation rate drops against the static map.
+    let cold_viol = |m: &bcedge::metrics::Metrics| {
+        let cold: Vec<_> = m
+            .outcomes()
+            .iter()
+            .filter(|o| o.model != ModelId::Yolo)
+            .collect();
+        assert!(!cold.is_empty());
+        cold.iter().filter(|o| o.violated).count() as f64 / cold.len() as f64
+    };
+    assert!(cold_viol(&dynamic_rep.metrics) < cold_viol(&static_rep.metrics),
+            "cold models saw no benefit from isolation");
+}
