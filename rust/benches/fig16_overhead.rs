@@ -29,6 +29,7 @@ fn ctx(model: ModelId) -> SchedCtx {
         recent_inflation: 1.3,
         cluster_backlog_ms: 0.0,
         cluster_share: 0.0,
+        replica_share: 0.0,
     }
 }
 

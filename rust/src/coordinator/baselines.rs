@@ -186,6 +186,7 @@ mod tests {
             recent_inflation: 1.1,
             cluster_backlog_ms: 0.0,
             cluster_share: 0.0,
+            replica_share: 0.0,
         }
     }
 

@@ -16,17 +16,24 @@
 //! allocation-free in steady state. All per-round buffers — the
 //! busy-model walk, per-model plans, the flattened job list, dispatch
 //! results, and the assembled batches with their request vectors — live
-//! in [`RoundScratch`] and are recycled between rounds; the outcome
-//! vector is caller-owned ([`Engine::step_into`]); queue/profiler
-//! aggregate reads are O(1); and OOM'd requests are requeued by move
-//! instead of clone. The `seed_equivalence` test module proves the
-//! optimized loop emits a bit-identical [`SlotOutcome`] stream to the
-//! seed implementation.
+//! in the private `RoundScratch` and are recycled between rounds; the
+//! outcome vector is caller-owned ([`Engine::step_into`]);
+//! queue/profiler aggregate reads are O(1); and OOM'd requests are
+//! requeued by move instead of clone. The `seed_equivalence` test module
+//! proves the optimized loop emits a bit-identical [`SlotOutcome`]
+//! stream to the seed implementation.
 //!
-//! Serving-runtime seam (PR #2): an optional [`IngressGate`] is consulted
-//! as arrivals move into the per-model queues, so the `serve` subsystem's
-//! SLO-aware admission controller can shed provably-late requests at
-//! ingress; with no gate installed the path is byte-identical to PR #1.
+//! Serving-runtime seams (PRs #2–#4), all inert on the bare engine: an
+//! optional [`IngressGate`] is consulted as arrivals move into the
+//! per-model queues, so the `serve` subsystem's SLO-aware admission
+//! controller can shed provably-late requests at ingress; the
+//! queue-surgery drains ([`Engine::drain_model_into`],
+//! [`Engine::drain_model_excess_into`]) let the serving runtime hand
+//! backlog between worker engines losslessly for shard migration and
+//! multi-owner (replicated) draining; and the cross-worker hint setters
+//! ([`Engine::set_cluster_hints`], [`Engine::set_replica_share`]) widen
+//! the decision context with pool state. With no gate installed and no
+//! hints injected the path is byte-identical to PR #1.
 
 use super::batcher::{AssembledBatch, Batcher};
 use super::instances::InstanceManager;
@@ -175,6 +182,10 @@ pub struct Engine<D: Dispatcher> {
     /// bare engine's decision context is hint-free by construction.
     cluster_backlog_ms: f64,
     cluster_share: f64,
+    /// Per-model replica-set width hints (see [`SchedCtx::replica_share`]).
+    /// All 0.0 unless a serving-runtime worker injects them — the bare
+    /// engine is a sole owner of everything by construction.
+    replica_share: [f64; N_MODELS],
 }
 
 impl<D: Dispatcher> Engine<D> {
@@ -206,6 +217,7 @@ impl<D: Dispatcher> Engine<D> {
             gate: None,
             cluster_backlog_ms: 0.0,
             cluster_share: 0.0,
+            replica_share: [0.0; N_MODELS],
         }
     }
 
@@ -256,6 +268,31 @@ impl<D: Dispatcher> Engine<D> {
             || self.pending.iter().any(|r| r.model == model)
     }
 
+    /// Pop queued requests for `model` (priority order — tightest
+    /// deadlines first) into `out` until only `keep` remain routed,
+    /// returning the count moved. The serving runtime's multi-owner
+    /// drain uses this: a replica holding more than its fair share of a
+    /// replicated model's queue sheds the surplus for an under-loaded
+    /// replica, handing the most urgent work to the engine that will
+    /// reach it soonest. Unlike [`Engine::drain_model_into`] it leaves
+    /// not-yet-ingested pending arrivals alone (those are already this
+    /// engine's to route). Never called by the engine itself.
+    pub fn drain_model_excess_into(&mut self, model: ModelId, keep: usize,
+                                   out: &mut Vec<Request>) -> usize {
+        let q = self.router.queue_mut(model);
+        let mut moved = 0usize;
+        while q.len() > keep {
+            match q.pop() {
+                Some(r) => {
+                    out.push(r);
+                    moved += 1;
+                }
+                None => break,
+            }
+        }
+        moved
+    }
+
     /// Remove every queued request for `model` — the routed queue (in
     /// priority order) and any not-yet-ingested pending arrivals (in
     /// arrival order, appended after) — into `out`. Returns the count.
@@ -294,6 +331,14 @@ impl<D: Dispatcher> Engine<D> {
                              local_share: f64) {
         self.cluster_backlog_ms = cluster_backlog_ms;
         self.cluster_share = local_share;
+    }
+
+    /// Surface one model's replica-set width to the decision context
+    /// ([`SchedCtx::replica_share`]; 0.0 = sole owner). Never called
+    /// outside the serving runtime, so the bare engine's context stays
+    /// bit-identical to the pre-replication encoding.
+    pub fn set_replica_share(&mut self, model: ModelId, share: f64) {
+        self.replica_share[model as usize] = share;
     }
 
     pub fn slots_run(&self) -> u64 {
@@ -352,6 +397,7 @@ impl<D: Dispatcher> Engine<D> {
             recent_inflation: self.profiler.mean_inflation(),
             cluster_backlog_ms: self.cluster_backlog_ms,
             cluster_share: self.cluster_share,
+            replica_share: self.replica_share[model as usize],
         }
     }
 
@@ -975,18 +1021,62 @@ mod tests {
         assert!(dst.metrics.completed() > 0);
     }
 
-    /// Gauge hints flow into the decision context verbatim and default
-    /// to the hint-free 0.0 encoding.
+    /// Gauge and replica hints flow into the decision context verbatim,
+    /// per model where applicable, and default to the hint-free 0.0
+    /// encoding.
     #[test]
     fn cluster_hints_flow_into_ctx() {
         let mut engine = sim_engine(EngineConfig::default());
         let ctx = engine.ctx_for(ModelId::Res);
         assert_eq!(ctx.cluster_backlog_ms, 0.0);
         assert_eq!(ctx.cluster_share, 0.0);
+        assert_eq!(ctx.replica_share, 0.0);
         engine.set_cluster_hints(420.0, 0.75);
+        engine.set_replica_share(ModelId::Res, 0.5);
         let ctx = engine.ctx_for(ModelId::Res);
         assert_eq!(ctx.cluster_backlog_ms, 420.0);
         assert_eq!(ctx.cluster_share, 0.75);
+        assert_eq!(ctx.replica_share, 0.5);
+        // Replica shares are per model: other models stay at 0.
+        assert_eq!(engine.ctx_for(ModelId::Yolo).replica_share, 0.0);
+    }
+
+    /// Multi-owner drain support: shedding surplus down to `keep` moves
+    /// exactly the excess (tightest deadlines first), conserves every
+    /// request, and leaves pending arrivals and other models untouched.
+    #[test]
+    fn drain_model_excess_keeps_fair_share() {
+        let mut engine = sim_engine(EngineConfig {
+            learn: false,
+            ..Default::default()
+        });
+        let reqs: Vec<Request> = (0..32)
+            .map(|i| Request::new(i, ModelId::Yolo, 0.0))
+            .collect();
+        engine.submit(reqs);
+        engine.push_request(Request::new(99, ModelId::Res, 0.0));
+        // One far-future yolo arrival stays in the pending deque: the
+        // excess drain must NOT touch it (unlike drain_model_into).
+        engine.push_request(Request::new(u64::MAX, ModelId::Yolo, 1e9));
+        engine.next_model().unwrap(); // ingest everything already due
+        assert_eq!(engine.queue_len(ModelId::Yolo), 32);
+        let mut out = Vec::new();
+        let moved = engine.drain_model_excess_into(ModelId::Yolo, 20, &mut out);
+        assert_eq!(moved, 12);
+        assert_eq!(out.len(), 12);
+        assert_eq!(engine.queue_len(ModelId::Yolo), 20);
+        assert!(out.iter().all(|r| r.model == ModelId::Yolo));
+        assert!(out.iter().all(|r| r.id != u64::MAX),
+                "pending arrivals are not excess");
+        assert!(engine.holds_model(ModelId::Yolo));
+        assert_eq!(engine.queue_len(ModelId::Res), 1);
+        // keep ≥ len is a no-op.
+        assert_eq!(
+            engine.drain_model_excess_into(ModelId::Yolo, 64, &mut out),
+            0
+        );
+        // Conservation: routed + drained + pending covers every submit.
+        assert_eq!(engine.total_queued() + out.len(), 32 + 1 + 1);
     }
 
     #[test]
@@ -1054,6 +1144,7 @@ mod seed_equivalence {
             recent_inflation: e.profiler.mean_inflation_naive(),
             cluster_backlog_ms: e.cluster_backlog_ms,
             cluster_share: e.cluster_share,
+            replica_share: e.replica_share[model as usize],
         }
     }
 

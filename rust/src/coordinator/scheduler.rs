@@ -9,9 +9,9 @@
 use crate::util::rng::Pcg32;
 use crate::workload::models::{ModelId, ModelSpec, N_MODELS};
 
-/// Encoded-state width: one-hot model (6) + 12 scalar features (10 local
-/// + 2 cross-worker gauge hints).
-pub const STATE_DIM: usize = N_MODELS + 12;
+/// Encoded-state width: one-hot model (6) + 13 scalar features (10 local
+/// + 2 cross-worker gauge hints + 1 replica share).
+pub const STATE_DIM: usize = N_MODELS + 13;
 
 /// Everything the scheduler can observe for one decision.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +40,15 @@ pub struct SchedCtx {
     /// This worker's fraction of `cluster_backlog_ms` ∈ [0, 1] (0 when
     /// the cluster view is absent or empty).
     pub cluster_share: f64,
+    /// How widely this model's intake is replicated across the worker
+    /// pool ∈ [0, 1]: 0 = one drainer (sole ownership — always the case
+    /// on the bare engine, at `workers == 1`, and whenever the serving
+    /// runtime's pool-state hints are disabled, so the feature vanishes
+    /// and decisions reduce to the local-only view), 1 = every worker
+    /// drains it. A replicated model's local queue understates its real
+    /// demand (the pool splits it), which is exactly what the scheduler
+    /// needs to see to keep batch sizing honest.
+    pub replica_share: f64,
 }
 
 impl SchedCtx {
@@ -61,6 +70,7 @@ impl SchedCtx {
         f[9] = nan0(self.recent_inflation as f32 - 1.0).min(3.0);
         f[10] = nan0(self.cluster_share as f32).clamp(0.0, 1.0);
         f[11] = nan0((self.cluster_backlog_ms / 1e3) as f32).clamp(0.0, 3.0);
+        f[12] = nan0(self.replica_share as f32).clamp(0.0, 1.0);
         s
     }
 }
@@ -111,6 +121,7 @@ mod tests {
             recent_inflation: 1.2,
             cluster_backlog_ms: 0.0,
             cluster_share: 0.0,
+            replica_share: 0.0,
         }
     }
 
@@ -132,6 +143,7 @@ mod tests {
         c.min_slack_ms = -1e9;
         c.cluster_backlog_ms = 1e12;
         c.cluster_share = 1e9;
+        c.replica_share = 1e9;
         let s = c.encode();
         assert!(s.iter().all(|x| x.is_finite() && x.abs() <= 3.0),
                 "unbounded features: {s:?}");
@@ -156,6 +168,24 @@ mod tests {
         // NaN hints are scrubbed like every other feature.
         c.cluster_share = f64::NAN;
         c.cluster_backlog_ms = f64::NAN;
+        assert!(c.encode().iter().all(|x| x.is_finite()));
+    }
+
+    /// The replica-share feature occupies the last slot and vanishes at
+    /// its 0.0 default, so sole-owner (and bare-engine) encodings are
+    /// the pre-replication encodings with one zero feature appended.
+    #[test]
+    fn replica_share_feature_encodes_and_defaults_to_zero() {
+        let base = ctx().encode();
+        assert_eq!(base[N_MODELS + 12], 0.0);
+        let mut c = ctx();
+        c.replica_share = 0.75;
+        let s = c.encode();
+        assert!((s[N_MODELS + 12] - 0.75).abs() < 1e-6);
+        // Every other feature is untouched by the replica share.
+        assert_eq!(&s[..N_MODELS + 12], &base[..N_MODELS + 12]);
+        // NaN shares are scrubbed like every other feature.
+        c.replica_share = f64::NAN;
         assert!(c.encode().iter().all(|x| x.is_finite()));
     }
 

@@ -23,16 +23,18 @@
 //!   simulation backend behind one trait;
 //! * [`serve`] — the concurrent serving runtime: bounded ingress with
 //!   SLO-aware admission control, a multi-worker engine pool (virtual or
-//!   wall clock), drain/shutdown, and the open/closed-loop load
-//!   generator behind `bcedge bench-serve`;
+//!   wall clock) with dynamic resharding and hot-model replication,
+//!   drain/shutdown, and the open/closed-loop load generator behind
+//!   `bcedge bench-serve`;
 //! * [`profiler`], [`metrics`] — §IV-E performance profiler and experiment
 //!   instrumentation;
 //! * [`nn`], [`util`] — from-scratch substrates (tensor/MLP/Adam, RNG,
 //!   JSON, CLI, stats, clocks, thread pool, property testing): the offline
 //!   build environment provides no third-party crates beyond `xla`.
 //!
-//! See `DESIGN.md` for the system inventory and per-figure experiment
-//! index, and `EXPERIMENTS.md` for measured results.
+//! See `rust/ARCHITECTURE.md` for the module ↔ paper-section map, the
+//! serving request lifecycle, the pinned invariants (and the tests that
+//! enforce them), and the consolidated CLI flags table.
 
 pub mod util;
 pub mod nn;

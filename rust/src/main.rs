@@ -5,57 +5,30 @@
 //!                 single-threaded engine loop)
 //!   bench-serve — drive the CONCURRENT serving runtime with the built-in
 //!                 load generator: multi-worker engine pool behind a
-//!                 bounded ingress with SLO-aware admission control and
-//!                 gauge-driven dynamic resharding
+//!                 bounded ingress with SLO-aware admission control,
+//!                 gauge-driven dynamic resharding, and hot-model
+//!                 replication
 //!   train       — offline SAC training on the platform simulator
 //!   sweep       — Fig. 1 style (batch × concurrency) sweep on the simulator
 //!   info        — print zoo / artifact / platform information
 //!
-//! bench-serve options:
-//!   --workers N          worker threads; model m STARTS on worker
-//!                        m % workers, live runs may reshard (4)
-//!   --rps R              offered aggregate rate, requests/s (200)
-//!   --seconds S          serving horizon (10)
-//!   --clock virtual|wall virtual = deterministic discrete-event time per
-//!                        worker (CI-fast); wall = workers genuinely
-//!                        overlap in real time (virtual)
-//!   --mode open|closed   open-loop rate-driven vs closed-loop
-//!                        keep-K-in-flight clients; closed implies wall
-//!                        clock (open)
-//!   --concurrency K      in-flight requests for closed mode (16)
-//!   --envelope constant|bursty|diurnal
-//!                        arrival-rate envelope: stationary Poisson, MMPP
-//!                        on/off bursts, or a sinusoidal "day" (constant)
-//!   --scheduler sac|deeprt|fixed (sac)
-//!   --no-admission       disable the admission controller (every request
-//!                        queues; overload melts down — the baseline the
-//!                        admission stress test beats)
-//!   --queue-cap N        per-model ingress channel bound (256)
-//!   --rebalance-epoch-ms N
-//!                        rebalance-controller epoch: every N ms it reads
-//!                        the per-model gauges (queue depth × rolling
-//!                        batch latency = backlog-ms per worker) and may
-//!                        migrate one model from the most- to the
-//!                        least-backlogged worker (200; live wall-clock
-//!                        multi-worker runs only)
-//!   --no-rebalance       pin the static modulo shard map (the baseline
-//!                        the hot-model stress test beats)
-//!   --no-gauge-hints     keep cross-worker backlog summaries out of the
-//!                        scheduler state (SchedCtx cluster features
-//!                        stay 0, as on the bare engine)
-//!   --seed S             trace + scheduler seed (7)
+//! Every subcommand's full flag set lives in ONE place: the consolidated
+//! flags table in `rust/ARCHITECTURE.md` (§ "CLI flags"), next to the
+//! module map and the serving-stack invariants. This header deliberately
+//! does not duplicate it.
 //!
-//! Reported: achieved rps, p50/p99 end-to-end latency, SLO violation rate
-//! over accepted requests, the admission shed rate with typed reasons,
-//! and (live multi-worker) migrations + peak worker imbalance.
+//! Reported by bench-serve: achieved rps, p50/p99 end-to-end latency, SLO
+//! violation rate over accepted requests, the admission shed rate with
+//! typed reasons, and (live multi-worker) migrations + peak worker
+//! imbalance + replica scale-ups/scale-downs.
 //!
 //! Examples:
 //!   bcedge serve --backend sim --rps 30 --seconds 300 --scheduler sac
-//!   bcedge serve --backend real --rps 30 --seconds 30
 //!   bcedge bench-serve --workers 4 --rps 200 --seconds 10
-//!   bcedge bench-serve --workers 4 --rps 300 --seconds 10 --envelope bursty
 //!   bcedge bench-serve --clock wall --mode closed --concurrency 32
 //!   bcedge bench-serve --clock wall --workers 2 --rebalance-epoch-ms 50
+//!   bcedge bench-serve --clock wall --workers 4 --rps 400 --max-replicas 2
+//!   bcedge bench-serve --clock wall --no-replication --no-rebalance
 //!   bcedge train --episodes 100 --out results/sac_policy.json
 //!   bcedge info
 
@@ -76,7 +49,8 @@ use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&["no-predictor", "greedy", "no-admission",
-                                "no-rebalance", "no-gauge-hints"])
+                                "no-rebalance", "no-gauge-hints",
+                                "no-replication"])
         .map_err(anyhow::Error::msg)?;
     match args.positional().first().map(String::as_str) {
         Some("serve") => serve(&args),
@@ -90,10 +64,13 @@ fn main() -> anyhow::Result<()> {
             eprintln!("        --scheduler sac|tac|deeprt|fixed [--policy F] [--no-predictor]");
             eprintln!("  bench-serve --workers N --rps N --seconds N [--clock virtual|wall] \\");
             eprintln!("        --mode open|closed [--concurrency K] --envelope constant|bursty|diurnal \\");
-            eprintln!("        --scheduler sac|deeprt|fixed [--no-admission] [--queue-cap N] [--seed S]");
+            eprintln!("        --scheduler sac|deeprt|fixed [--no-admission] [--queue-cap N] [--seed S] \\");
+            eprintln!("        [--rebalance-epoch-ms N] [--no-rebalance] [--no-gauge-hints] \\");
+            eprintln!("        [--max-replicas N] [--no-replication]");
             eprintln!("  train --episodes N --rps N --platform nx|tx2|nano --out F");
             eprintln!("  sweep --model yolo");
             eprintln!("  info  [--artifacts DIR]");
+            eprintln!("full flags table: rust/ARCHITECTURE.md");
             std::process::exit(2);
         }
     }
@@ -250,10 +227,18 @@ fn bench_serve(args: &Args) -> anyhow::Result<()> {
     let rebalance = if args.flag("no-rebalance") {
         None
     } else {
+        let defaults = bcedge::serve::RebalanceConfig::default();
+        let max_replicas = if args.flag("no-replication") {
+            1 // one owner per model: the PR 3 resharding-only behaviour
+        } else {
+            args.get_parse("max-replicas", defaults.max_replicas)
+                .map_err(anyhow::Error::msg)?
+        };
         Some(bcedge::serve::RebalanceConfig {
             epoch_ms: args
-                .get_parse("rebalance-epoch-ms", 200u64)
+                .get_parse("rebalance-epoch-ms", defaults.epoch_ms)
                 .map_err(anyhow::Error::msg)?,
+            max_replicas,
             ..Default::default()
         })
     };

@@ -81,6 +81,16 @@ pub struct Metrics {
     /// Worst cross-worker backlog spread seen by the controller, ms
     /// (max-backlog worker minus min-backlog worker).
     peak_imbalance_ms: f64,
+    /// Hot-model replica scale-ups performed (a worker added to a
+    /// model's replica set because its backlog outran one worker's
+    /// drain rate).
+    scale_ups: u64,
+    /// Replica scale-downs performed (sets collapsing as backlog
+    /// subsides).
+    scale_downs: u64,
+    /// Widest replica set any model reached (0 outside the live worker
+    /// pool; 1 = replication never triggered).
+    peak_replicas: u64,
 }
 
 impl Metrics {
@@ -156,6 +166,29 @@ impl Metrics {
         self.peak_imbalance_ms
     }
 
+    /// Account one serving run's hot-model replication activity.
+    pub fn record_replication(&mut self, scale_ups: u64, scale_downs: u64,
+                              peak_replicas: u64) {
+        self.scale_ups += scale_ups;
+        self.scale_downs += scale_downs;
+        self.peak_replicas = self.peak_replicas.max(peak_replicas);
+    }
+
+    /// Replica scale-ups performed by the rebalance controller.
+    pub fn scale_ups(&self) -> u64 {
+        self.scale_ups
+    }
+
+    /// Replica scale-downs performed by the rebalance controller.
+    pub fn scale_downs(&self) -> u64 {
+        self.scale_downs
+    }
+
+    /// Widest replica set any model reached.
+    pub fn peak_replicas(&self) -> u64 {
+        self.peak_replicas
+    }
+
     /// Fold another run's (or worker's) metrics into this one.
     pub fn merge(&mut self, other: &Metrics) {
         self.outcomes.extend(other.outcomes.iter().cloned());
@@ -169,6 +202,9 @@ impl Metrics {
         self.rebalance_epochs += other.rebalance_epochs;
         self.peak_imbalance_ms =
             self.peak_imbalance_ms.max(other.peak_imbalance_ms);
+        self.scale_ups += other.scale_ups;
+        self.scale_downs += other.scale_downs;
+        self.peak_replicas = self.peak_replicas.max(other.peak_replicas);
     }
 
     pub fn record_utility(&mut self, t_ms: f64, model: ModelId, u: f64) {
@@ -403,6 +439,8 @@ mod tests {
         b.record_shed_n(ModelId::Res, ShedReason::QueueFull, 2);
         a.record_rebalance(10, 2, 40.0);
         b.record_rebalance(5, 1, 75.0);
+        a.record_replication(3, 1, 2);
+        b.record_replication(1, 2, 3);
         a.merge(&b);
         assert_eq!(a.outcomes().len(), 2);
         assert_eq!(a.completed(), 2);
@@ -415,6 +453,10 @@ mod tests {
         assert_eq!(a.rebalance_epochs(), 15);
         assert_eq!(a.migrations(), 3);
         assert!((a.peak_imbalance_ms() - 75.0).abs() < 1e-12);
+        // Replication counters: sums, except the set-width peak (a max).
+        assert_eq!(a.scale_ups(), 4);
+        assert_eq!(a.scale_downs(), 3);
+        assert_eq!(a.peak_replicas(), 3);
     }
 
     #[test]

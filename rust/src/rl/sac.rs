@@ -219,8 +219,8 @@ impl DiscreteSac {
 
     /// One SAC update on a replay minibatch. Allocation-free in steady
     /// state: the minibatch indices, every state/activation matrix, and
-    /// every gradient buffer live in [`SacScratch`] and are recycled
-    /// across updates.
+    /// every gradient buffer live in the private `SacScratch` and are
+    /// recycled across updates.
     pub fn update_batch(&mut self, rng: &mut Pcg32) -> SacLosses {
         if self.replay.len() < self.cfg.warmup.max(self.cfg.batch_size) {
             return SacLosses::default();

@@ -8,11 +8,13 @@
 //! stalling the caller — an edge box that cannot keep up must say so
 //! immediately, not buffer unboundedly (SLICE-style ingress control).
 //!
-//! Workers publish per-model gauges (queue depth, rolling batch latency)
-//! after every scheduling round; [`Ingress::submit`] reads them lock-free
-//! to refuse provably-late requests before they ever cross a channel.
-//! Requests that pass the fast path are re-checked exactly at the
-//! engine's ingest gate, where queue depths are authoritative.
+//! Workers publish per-(model, worker) gauges (queue depth, rolling
+//! batch latency) after every scheduling round; [`Ingress::submit`] sums
+//! them lock-free to refuse provably-late requests before they ever
+//! cross a channel — divided by the model's replica count, since a
+//! replicated model's summed backlog drains `R`× as fast. Requests that
+//! pass the fast path are re-checked exactly at the engine's ingest
+//! gate, where the local queue depth is authoritative.
 
 use super::admission::AdmissionConfig;
 use crate::metrics::{Metrics, ShedReason, N_SHED_REASONS};
@@ -23,20 +25,34 @@ use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-/// Lock-free per-model serving gauges, published by workers each round
-/// and read by the ingress fast path. Latencies travel as f64 bit
-/// patterns in an `AtomicU64`.
+/// Upper bound on the worker-pool size ([`crate::serve::ServeConfig`]
+/// clamps `workers` to `[1, N_MODELS]`). Sizes the per-worker gauge lanes
+/// and the replica bitmasks' meaningful width.
+pub const MAX_POOL: usize = N_MODELS;
+
+/// Lock-free per-(model, worker) serving gauges, published by workers
+/// each round and read by the ingress fast path and the rebalance
+/// controller. Latencies travel as f64 bit patterns in an `AtomicU64`.
+///
+/// Each worker owns one LANE per model and republishes every model every
+/// round (an uninvolved worker writes a zero queue), so a lane can never
+/// go stale after a migration or a replica scale-down. The model-wide
+/// view is the sum (queues, backlog) or the finite-mean (batch latency)
+/// over lanes — with hot-model replication, one model's queue is split
+/// across several workers, and only the summed view prices it honestly.
 pub struct SharedGauges {
-    queue_len: [AtomicUsize; N_MODELS],
-    batch_ms_bits: [AtomicU64; N_MODELS],
+    queue_len: [[AtomicUsize; MAX_POOL]; N_MODELS],
+    batch_ms_bits: [[AtomicU64; MAX_POOL]; N_MODELS],
 }
 
 impl Default for SharedGauges {
     fn default() -> Self {
         SharedGauges {
-            queue_len: std::array::from_fn(|_| AtomicUsize::new(0)),
+            queue_len: std::array::from_fn(|_| {
+                std::array::from_fn(|_| AtomicUsize::new(0))
+            }),
             batch_ms_bits: std::array::from_fn(|_| {
-                AtomicU64::new(f64::NAN.to_bits())
+                std::array::from_fn(|_| AtomicU64::new(f64::NAN.to_bits()))
             }),
         }
     }
@@ -47,33 +63,67 @@ impl SharedGauges {
         SharedGauges::default()
     }
 
-    pub fn publish(&self, model: ModelId, queue_len: usize, batch_ms: f64) {
-        self.queue_len[model as usize].store(queue_len, Ordering::Relaxed);
-        self.batch_ms_bits[model as usize]
+    /// Publish one worker's lane for `model`: its local queue depth and
+    /// its engine's rolling batch-latency estimate (NaN if this worker
+    /// never served the model).
+    pub fn publish(&self, model: ModelId, worker: usize, queue_len: usize,
+                   batch_ms: f64) {
+        let w = worker.min(MAX_POOL - 1);
+        self.queue_len[model as usize][w].store(queue_len, Ordering::Relaxed);
+        self.batch_ms_bits[model as usize][w]
             .store(batch_ms.to_bits(), Ordering::Relaxed);
     }
 
+    /// Pool-wide queue depth for `model` (sum over worker lanes).
     pub fn queue_len(&self, model: ModelId) -> usize {
-        self.queue_len[model as usize].load(Ordering::Relaxed)
+        self.queue_len[model as usize]
+            .iter()
+            .map(|q| q.load(Ordering::Relaxed))
+            .sum()
     }
 
-    /// Rolling batch latency estimate, ms (NaN before any publish).
+    /// One worker's published queue depth for `model`.
+    pub fn queue_len_for(&self, model: ModelId, worker: usize) -> usize {
+        self.queue_len[model as usize][worker.min(MAX_POOL - 1)]
+            .load(Ordering::Relaxed)
+    }
+
+    /// One worker's rolling batch latency estimate, ms (NaN before it
+    /// ever served the model).
+    pub fn batch_ms_for(&self, model: ModelId, worker: usize) -> f64 {
+        f64::from_bits(
+            self.batch_ms_bits[model as usize][worker.min(MAX_POOL - 1)]
+                .load(Ordering::Relaxed),
+        )
+    }
+
+    /// Rolling batch latency estimate for `model`, ms: the mean over
+    /// workers that have served it (NaN before any publish anywhere).
     pub fn batch_ms(&self, model: ModelId) -> f64 {
-        f64::from_bits(self.batch_ms_bits[model as usize].load(Ordering::Relaxed))
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for bits in &self.batch_ms_bits[model as usize] {
+            let ms = f64::from_bits(bits.load(Ordering::Relaxed));
+            if ms.is_finite() && ms > 0.0 {
+                sum += ms;
+                n += 1;
+            }
+        }
+        if n == 0 { f64::NAN } else { sum / n as f64 }
     }
 
-    /// Estimated backlog for one model, ms: queue depth × the rolling
-    /// per-request service estimate (profiled batch latency over the
-    /// reference batch; `isolated_ref_ms` is the cold-start fallback).
-    /// The rebalance controller sums this per worker to find overload,
-    /// and the workers sum it pool-wide for the scheduler's gauge hints.
-    pub fn backlog_ms(&self, model: ModelId, isolated_ref_ms: f64,
-                      ref_batch: usize) -> f64 {
-        let q = self.queue_len(model);
+    /// Estimated backlog parked on ONE worker for `model`, ms: its lane's
+    /// queue depth × its per-request service estimate (profiled batch
+    /// latency over the reference batch; `isolated_ref_ms` is the
+    /// cold-start fallback). The rebalance controller reads this per
+    /// (model, worker) to find overload and replica imbalance.
+    pub fn backlog_ms_for(&self, model: ModelId, worker: usize,
+                          isolated_ref_ms: f64, ref_batch: usize) -> f64 {
+        let q = self.queue_len_for(model, worker);
         if q == 0 {
             return 0.0;
         }
-        let batch = self.batch_ms(model);
+        let batch = self.batch_ms_for(model, worker);
         let batch = if batch.is_finite() && batch > 0.0 {
             batch
         } else {
@@ -82,73 +132,206 @@ impl SharedGauges {
         q as f64 * batch / ref_batch.max(1) as f64
     }
 
-    /// Has the model seen traffic — currently queued, or ever profiled
-    /// (the latency gauge leaves NaN on the first served batch)?
+    /// Pool-wide estimated backlog for one model, ms (sum over worker
+    /// lanes). The workers sum this over models for the scheduler's
+    /// cross-worker gauge hints.
+    pub fn backlog_ms(&self, model: ModelId, isolated_ref_ms: f64,
+                      ref_batch: usize) -> f64 {
+        (0..MAX_POOL)
+            .map(|w| self.backlog_ms_for(model, w, isolated_ref_ms, ref_batch))
+            .sum()
+    }
+
+    /// Has the model seen traffic — currently queued anywhere, or ever
+    /// profiled by any worker (a lane's latency leaves NaN on that
+    /// worker's first served batch)?
     pub fn is_active(&self, model: ModelId) -> bool {
         self.queue_len(model) > 0 || self.batch_ms(model).is_finite()
     }
 }
 
-/// Which worker owns each model's intake — the shard map, made dynamic.
+/// Which workers drain each model's intake — the shard map, made dynamic
+/// (PR 3) and replicated (PR 4). Each model maps to a non-empty REPLICA
+/// SET, stored as a bitmask of worker indices: several workers can
+/// concurrently drain one hot model's intake, which is how a single
+/// model's load gets past one worker's capacity (the paper's m_c
+/// dimension crossing the worker boundary).
+///
 /// Reads are lock-free on the serve fast path (ingress wakeups, worker
-/// intake scans); the rebalance controller is the only writer. Each
-/// migration stamps a new epoch, so workers can cheaply notice that the
-/// map changed and flush a disowned model's backlog to its new owner —
-/// in-flight channel sends simply drain to whichever worker owns the
-/// slot next, so the handoff loses nothing.
+/// intake scans); the rebalance controller is the only writer. Every
+/// mutation — whole-model migration, replica scale-up, replica
+/// scale-down — stamps a new epoch, so workers can cheaply notice the
+/// map changed and flush a disowned model's backlog into the shared
+/// [`ModelIntake`] slot for its current drainers; in-flight channel
+/// sends simply drain to whichever replicas hold the slot next, so no
+/// handoff loses anything.
 pub struct OwnershipTable {
-    owner: [AtomicUsize; N_MODELS],
+    /// Bitmask of workers currently draining each model (bit `w` set ⇒
+    /// worker `w` is a replica). Invariant: never empty.
+    replicas: [AtomicU64; N_MODELS],
     epoch: AtomicU64,
     migrations: AtomicU64,
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
+    /// Widest replica set any model ever reached (monotone max; 1 when
+    /// replication never triggered).
+    peak_replicas: AtomicUsize,
 }
 
 impl OwnershipTable {
     /// The static modulo shard map PR 2 hard-wired: model `m` starts on
-    /// worker `m % workers`.
+    /// worker `m % workers`, one replica each.
     pub fn new_static(workers: usize) -> Self {
         let workers = workers.max(1);
         OwnershipTable {
-            owner: std::array::from_fn(|m| AtomicUsize::new(m % workers)),
+            replicas: std::array::from_fn(|m| {
+                AtomicU64::new(1u64 << (m % workers))
+            }),
             epoch: AtomicU64::new(0),
             migrations: AtomicU64::new(0),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
+            peak_replicas: AtomicUsize::new(1),
         }
     }
 
-    /// Worker currently owning `model`'s intake.
+    /// The model's PRIMARY drainer (lowest worker index in the replica
+    /// set). For an unreplicated model this is simply its owner; with
+    /// replicas it is the worker accounting shared handoff backlog in
+    /// its gauge lane.
     pub fn owner(&self, model: ModelId) -> usize {
-        self.owner[model as usize].load(Ordering::Acquire)
+        let mask = self.replica_mask(model);
+        if mask == 0 {
+            return 0; // unreachable by invariant; stay in bounds anyway
+        }
+        mask.trailing_zeros() as usize
     }
 
-    /// Monotone stamp bumped by every migration.
+    /// Bitmask of workers currently draining `model`.
+    pub fn replica_mask(&self, model: ModelId) -> u64 {
+        self.replicas[model as usize].load(Ordering::Acquire)
+    }
+
+    /// Number of workers currently draining `model` (≥ 1).
+    pub fn replica_count(&self, model: ModelId) -> usize {
+        self.replica_mask(model).count_ones().max(1) as usize
+    }
+
+    /// Is `worker` currently one of `model`'s drainers?
+    pub fn is_replica(&self, model: ModelId, worker: usize) -> bool {
+        worker < 64 && self.replica_mask(model) & (1u64 << worker) != 0
+    }
+
+    /// The `n % replica_count`-th replica of `model`, ascending worker
+    /// index. The ingress stripes delivery wakeups across the replica
+    /// set with this.
+    pub fn nth_replica(&self, model: ModelId, n: u64) -> usize {
+        let mask = self.replica_mask(model);
+        if mask == 0 {
+            return 0;
+        }
+        let mut k = n % u64::from(mask.count_ones());
+        let mut rest = mask;
+        while k > 0 && rest.count_ones() > 1 {
+            rest &= rest - 1; // clear the lowest set bit
+            k -= 1;
+        }
+        rest.trailing_zeros() as usize
+    }
+
+    /// Monotone stamp bumped by every map mutation (migration or replica
+    /// scaling).
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Ordering::Acquire)
     }
 
-    /// Total migrations performed.
+    /// Total whole-model migrations performed.
     pub fn migrations(&self) -> u64 {
         self.migrations.load(Ordering::Relaxed)
     }
 
-    /// Reassign `model` to worker `to`, stamping a new epoch. Returns
-    /// the new epoch. The old owner flushes the model's queued backlog
-    /// into the shared [`ModelIntake`] slot on its next round; the new
-    /// owner picks it up from there — no request is lost or served twice.
+    /// Total replicas added by hot-model scale-ups.
+    pub fn scale_ups(&self) -> u64 {
+        self.scale_ups.load(Ordering::Relaxed)
+    }
+
+    /// Total replicas collapsed by scale-downs.
+    pub fn scale_downs(&self) -> u64 {
+        self.scale_downs.load(Ordering::Relaxed)
+    }
+
+    /// Widest replica set any model reached so far.
+    pub fn peak_replicas(&self) -> usize {
+        self.peak_replicas.load(Ordering::Relaxed)
+    }
+
+    /// Reassign `model` to worker `to` alone (collapsing any replica
+    /// set), stamping a new epoch. Returns the new epoch. Former
+    /// drainers flush the model's queued backlog into the shared
+    /// [`ModelIntake`] slot on their next round; the new owner picks it
+    /// up from there — no request is lost or served twice.
     pub fn migrate(&self, model: ModelId, to: usize) -> u64 {
-        self.owner[model as usize].store(to, Ordering::Release);
+        self.replicas[model as usize].store(1u64 << to, Ordering::Release);
         self.migrations.fetch_add(1, Ordering::Relaxed);
         self.epoch.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Add `worker` to `model`'s replica set (hot-model scale-up),
+    /// stamping a new epoch. Returns `None` — and stamps nothing — when
+    /// the worker already drains the model.
+    pub fn add_replica(&self, model: ModelId, worker: usize) -> Option<u64> {
+        let bit = 1u64 << worker;
+        let prev = self.replicas[model as usize].fetch_or(bit, Ordering::AcqRel);
+        if prev & bit != 0 {
+            return None;
+        }
+        self.scale_ups.fetch_add(1, Ordering::Relaxed);
+        let count = (prev | bit).count_ones() as usize;
+        self.peak_replicas.fetch_max(count, Ordering::Relaxed);
+        Some(self.epoch.fetch_add(1, Ordering::AcqRel) + 1)
+    }
+
+    /// Remove `worker` from `model`'s replica set (scale-down), stamping
+    /// a new epoch. Refuses — returning `None` — when the worker is not
+    /// a replica or is the LAST one: a model always keeps a drainer. The
+    /// removed worker flushes its share of the model's backlog into the
+    /// handoff slot for the surviving replicas.
+    pub fn remove_replica(&self, model: ModelId, worker: usize)
+                          -> Option<u64> {
+        let bit = 1u64 << worker;
+        let res = self.replicas[model as usize].fetch_update(
+            Ordering::AcqRel,
+            Ordering::Acquire,
+            |mask| {
+                if mask & bit == 0 || mask == bit {
+                    None
+                } else {
+                    Some(mask & !bit)
+                }
+            },
+        );
+        if res.is_err() {
+            return None;
+        }
+        self.scale_downs.fetch_add(1, Ordering::Relaxed);
+        Some(self.epoch.fetch_add(1, Ordering::AcqRel) + 1)
     }
 }
 
 /// One model's shared intake slot: the ingress channel's receive side
-/// plus the migration handoff buffer. The slots live behind per-model
-/// mutexes shared by the whole worker pool; the [`OwnershipTable`]
-/// decides who drains each one, so a migration is just a table write —
-/// the channel itself never moves.
+/// plus the handoff buffer. The slots live behind per-model mutexes
+/// shared by the whole worker pool; the [`OwnershipTable`] decides who
+/// drains each one, so a migration or replica-scaling action is just a
+/// table write — the channel itself never moves. With a replica set
+/// wider than one, every replica pops the same channel under the slot's
+/// mutex (a sharded MPSC pop: each takes a bounded stripe per pass, so
+/// arrivals spread across the set).
 pub struct ModelIntake {
     pub rx: Receiver<Request>,
-    /// Backlog flushed out of the previous owner's engine mid-migration,
-    /// waiting for the new owner's next intake pass.
+    /// Backlog in flight between workers: flushed out of a drainer's
+    /// engine mid-migration or mid-scale-down (or shed as above-fair-
+    /// share surplus by an overloaded replica), waiting for a current
+    /// replica's next intake pass.
     pub handoff: Vec<Request>,
     /// Channel disconnected AND fully drained (shutdown bookkeeping).
     pub closed: bool,
@@ -244,10 +427,15 @@ impl Ingress {
         if let Some(cfg) = &self.admission {
             // Fast path against published gauges: approximate (a round
             // stale), so it only front-runs the authoritative engine-gate
-            // check — both use the same decision function.
+            // check — both use the same decision function. The pool-wide
+            // queue is priced per replica: with R workers draining the
+            // model, a new request waits behind roughly 1/R of the summed
+            // backlog, so a scale-up immediately widens what admission
+            // accepts.
             let slack = slo_ms - transmission_ms;
+            let replicas = self.ownership.replica_count(model);
             if let Err(reason) = cfg.decide(
-                self.gauges.queue_len(model),
+                self.gauges.queue_len(model) / replicas,
                 self.gauges.batch_ms(model),
                 self.isolated_ref_ms[model as usize],
                 slack,
@@ -262,12 +450,15 @@ impl Ingress {
         r.transmission_ms = transmission_ms;
         match self.senders[model as usize].try_send(r) {
             Ok(()) => {
-                // Ring the CURRENT owner (the table may have migrated the
-                // model since the channel was created). A stale read just
-                // wakes a worker that finds nothing — harmless.
-                let owner =
-                    self.ownership.owner(model).min(self.worker_events.len() - 1);
-                self.worker_events[owner].notify();
+                // Ring one CURRENT replica, striping deliveries across
+                // the set by request id (the table may have changed since
+                // the channel was created — a stale read just wakes a
+                // worker that finds nothing, harmless).
+                let target = self
+                    .ownership
+                    .nth_replica(model, id)
+                    .min(self.worker_events.len() - 1);
+                self.worker_events[target].notify();
                 Ok(id)
             }
             Err(TrySendError::Full(_)) => {
@@ -390,11 +581,41 @@ mod tests {
         let (ing, _rx) = test_ingress(64, Some(AdmissionConfig::default()));
         // Workers report 80 queued at 30 ms/batch → 11 batches ≈ 330 ms,
         // far beyond res's 58 ms SLO.
-        ing.gauges.publish(ModelId::Res, 80, 30.0);
+        ing.gauges.publish(ModelId::Res, 0, 80, 30.0);
         assert_eq!(ing.submit(ModelId::Res, 58.0, 0.0, 0.0),
                    Err(ShedReason::DeadlineUnmeetable));
         // An idle model still admits.
         assert!(ing.submit(ModelId::Bert, 114.0, 0.0, 0.0).is_ok());
+    }
+
+    /// With R replicas draining one model, the fast path prices the
+    /// summed queue at 1/R — a scale-up immediately widens admission.
+    #[test]
+    fn fast_path_prices_replicated_queue_per_replica() {
+        let mut senders = Vec::new();
+        let mut _receivers = Vec::new();
+        for _ in 0..N_MODELS {
+            let (tx, rx) = sync_channel(64);
+            senders.push(tx);
+            _receivers.push(rx);
+        }
+        let worker_events =
+            vec![Arc::new(WakeEvent::new()), Arc::new(WakeEvent::new())];
+        let ownership = Arc::new(OwnershipTable::new_static(2));
+        let gauges = Arc::new(SharedGauges::new());
+        let ing = Ingress::new(senders, worker_events, ownership.clone(),
+                               gauges, Some(AdmissionConfig::default()),
+                               [10.0; N_MODELS]);
+        // 80 queued at 30 ms/batch, 300 ms budget: 11 batches ≈ 330 ms —
+        // a sole owner sheds.
+        ing.gauges.publish(ModelId::Res, ownership.owner(ModelId::Res), 80,
+                           30.0);
+        assert_eq!(ing.submit(ModelId::Res, 300.0, 0.0, 0.0),
+                   Err(ShedReason::DeadlineUnmeetable));
+        // Two replicas: 40 effective → 6 batches ≈ 180 ms — admits.
+        let other = 1 - ownership.owner(ModelId::Res);
+        assert!(ownership.add_replica(ModelId::Res, other).is_some());
+        assert!(ing.submit(ModelId::Res, 300.0, 0.0, 0.0).is_ok());
     }
 
     #[test]
@@ -402,6 +623,7 @@ mod tests {
         let t = OwnershipTable::new_static(2);
         for m in ModelId::all() {
             assert_eq!(t.owner(m), m as usize % 2, "static shard map");
+            assert_eq!(t.replica_count(m), 1);
         }
         assert_eq!(t.epoch(), 0);
         assert_eq!(t.migrations(), 0);
@@ -419,6 +641,56 @@ mod tests {
         }
     }
 
+    /// Replica-set lifecycle: scale-ups widen the mask (stamping epochs),
+    /// scale-downs shrink it but never below one drainer, and a
+    /// whole-model migration collapses the set to its destination.
+    #[test]
+    fn replica_set_scaling_guards_and_striping() {
+        let t = OwnershipTable::new_static(3);
+        let m = ModelId::Yolo;
+        let home = t.owner(m);
+        assert_eq!(t.replica_count(m), 1);
+        assert!(t.is_replica(m, home));
+
+        // Scale up onto two more workers.
+        let others: Vec<usize> = (0..3).filter(|&w| w != home).collect();
+        assert!(t.add_replica(m, others[0]).is_some());
+        assert!(t.add_replica(m, others[1]).is_some());
+        assert_eq!(t.replica_count(m), 3);
+        assert_eq!(t.scale_ups(), 2);
+        assert_eq!(t.peak_replicas(), 3);
+        // Idempotent: re-adding an existing replica is a refused no-op.
+        let epoch = t.epoch();
+        assert!(t.add_replica(m, others[0]).is_none());
+        assert_eq!(t.epoch(), epoch);
+        // The primary is the lowest worker index in the set.
+        assert_eq!(t.owner(m), 0);
+        // nth_replica stripes over the set in ascending order, wrapping.
+        assert_eq!(t.nth_replica(m, 0), 0);
+        assert_eq!(t.nth_replica(m, 1), 1);
+        assert_eq!(t.nth_replica(m, 2), 2);
+        assert_eq!(t.nth_replica(m, 3), 0);
+
+        // Scale down: removing a member works, removing a stranger or
+        // the last member is refused.
+        assert!(t.remove_replica(m, others[1]).is_some());
+        assert_eq!(t.replica_count(m), 2);
+        assert_eq!(t.scale_downs(), 1);
+        assert!(t.remove_replica(m, others[1]).is_none(), "not a member");
+        assert!(t.remove_replica(m, others[0]).is_some());
+        assert!(t.remove_replica(m, home).is_none(),
+                "must keep the last drainer");
+        assert_eq!(t.replica_count(m), 1);
+
+        // Migration collapses any set to exactly the destination.
+        assert!(t.add_replica(m, others[0]).is_some());
+        t.migrate(m, 2);
+        assert_eq!(t.replica_count(m), 1);
+        assert_eq!(t.owner(m), 2);
+        // Peak survives the collapse (monotone high-water mark).
+        assert_eq!(t.peak_replicas(), 3);
+    }
+
     #[test]
     fn gauge_backlog_estimate_and_activity() {
         let g = SharedGauges::new();
@@ -426,19 +698,46 @@ mod tests {
         assert_eq!(g.backlog_ms(ModelId::Res, 40.0, 8), 0.0);
         assert!(!g.is_active(ModelId::Res));
         // Queued but unprofiled: priced by the isolated fallback.
-        g.publish(ModelId::Res, 16, f64::NAN);
+        g.publish(ModelId::Res, 0, 16, f64::NAN);
         assert!(g.is_active(ModelId::Res));
         assert!((g.backlog_ms(ModelId::Res, 40.0, 8) - 16.0 * 5.0).abs()
                     < 1e-9);
         // Profiled: priced by the rolling batch latency.
-        g.publish(ModelId::Res, 16, 24.0);
+        g.publish(ModelId::Res, 0, 16, 24.0);
         assert!((g.backlog_ms(ModelId::Res, 40.0, 8) - 16.0 * 3.0).abs()
                     < 1e-9);
         // Drained but profiled: active (it has traffic history), zero
         // backlog.
-        g.publish(ModelId::Res, 0, 24.0);
+        g.publish(ModelId::Res, 0, 0, 24.0);
         assert_eq!(g.backlog_ms(ModelId::Res, 40.0, 8), 0.0);
         assert!(g.is_active(ModelId::Res));
+    }
+
+    /// Per-worker gauge lanes: queues sum pool-wide, each lane prices its
+    /// own backlog by its own latency profile, and the model-wide batch
+    /// latency is the mean over lanes that have served it.
+    #[test]
+    fn gauge_lanes_sum_across_workers() {
+        let g = SharedGauges::new();
+        g.publish(ModelId::Yolo, 0, 24, 40.0);
+        g.publish(ModelId::Yolo, 1, 8, f64::NAN);
+        assert_eq!(g.queue_len(ModelId::Yolo), 32);
+        assert_eq!(g.queue_len_for(ModelId::Yolo, 0), 24);
+        assert_eq!(g.queue_len_for(ModelId::Yolo, 1), 8);
+        // Lane 0 priced by its profile, lane 1 by the isolated fallback.
+        assert!((g.backlog_ms_for(ModelId::Yolo, 0, 80.0, 8)
+                     - 24.0 * 5.0).abs() < 1e-9);
+        assert!((g.backlog_ms_for(ModelId::Yolo, 1, 80.0, 8)
+                     - 8.0 * 10.0).abs() < 1e-9);
+        assert!((g.backlog_ms(ModelId::Yolo, 80.0, 8) - 200.0).abs() < 1e-9);
+        // Model-wide latency: mean over finite lanes only.
+        assert!((g.batch_ms(ModelId::Yolo) - 40.0).abs() < 1e-9);
+        g.publish(ModelId::Yolo, 1, 8, 20.0);
+        assert!((g.batch_ms(ModelId::Yolo) - 30.0).abs() < 1e-9);
+        // A worker emptying its lane keeps the others visible.
+        g.publish(ModelId::Yolo, 0, 0, 40.0);
+        assert_eq!(g.queue_len(ModelId::Yolo), 8);
+        assert!(g.is_active(ModelId::Yolo));
     }
 
     #[test]

@@ -6,25 +6,37 @@
 //! This subsystem turns the engine into a real server:
 //!
 //! * [`ingress`] — per-model bounded MPSC channels with worker wakeups,
-//!   lock-free serving gauges, and the epoch-stamped [`OwnershipTable`]
-//!   mapping each model to the worker that currently drains it;
+//!   lock-free per-(model, worker) serving gauges, and the epoch-stamped
+//!   [`OwnershipTable`] mapping each model to the REPLICA SET of workers
+//!   that currently drains it (one worker for a cold model, several for
+//!   a hot one);
 //! * [`admission`] — the SLO-aware admission controller: requests whose
 //!   deadline is provably unmeetable (queue depth × profiled batch
-//!   latency vs remaining slack) shed with typed reasons, at the ingress
-//!   fast path and again exactly at the engine's ingest gate;
+//!   latency vs remaining slack, priced per replica) shed with typed
+//!   reasons, at the ingress fast path and again exactly at the engine's
+//!   ingest gate;
 //! * [`worker`] — N OS threads, each owning an [`crate::coordinator::Engine`]
-//!   + scheduler and draining the shard the ownership table assigns it:
-//!   the paper's concurrent instances as actual parallel execution. The
-//!   engine code is clock-generic: `VirtualClock` workers are
-//!   deterministic discrete-event sims (bit-identical to the bare engine
-//!   at `workers == 1`), wall-clock workers genuinely overlap;
+//!   + scheduler and draining the models the ownership table assigns it:
+//!   the paper's concurrent instances as actual parallel execution.
+//!   Replicas of one model pop bounded stripes of its shared channel and
+//!   shed above-fair-share surplus through the handoff slot. The engine
+//!   code is clock-generic: `VirtualClock` workers are deterministic
+//!   discrete-event sims (bit-identical to the bare engine at
+//!   `workers == 1`), wall-clock workers genuinely overlap;
 //! * [`server`] — composition, the gauge-driven rebalance controller
-//!   (dynamic resharding: backlogged models migrate off overloaded
-//!   workers with a lossless handoff protocol), and the drain/shutdown
-//!   protocol (freeze shard map → stop intake → flush queues → join
-//!   workers → merged [`crate::metrics::Metrics`]);
+//!   (hot-model replication: a model whose backlog outruns one worker's
+//!   drain rate gains replicas on the least-loaded workers and collapses
+//!   them when it subsides; dynamic resharding: backlogged models
+//!   migrate off overloaded workers — both over the same lossless
+//!   handoff protocol), and the drain/shutdown protocol (freeze shard
+//!   map → stop intake → flush queues → join workers → merged
+//!   [`crate::metrics::Metrics`]);
 //! * [`loadgen`] — open- and closed-loop load generation over constant /
 //!   MMPP-bursty / diurnal rate envelopes (`bcedge bench-serve`).
+//!
+//! The module ↔ paper-section map, the request lifecycle, the pinned
+//! invariants, and the consolidated CLI flags table live in
+//! `rust/ARCHITECTURE.md`.
 
 pub mod admission;
 pub mod ingress;

@@ -13,17 +13,27 @@
 //!   drain their shards in parallel, shutdown stops intake, flushes every
 //!   queue, joins the workers, and emits the final merged [`Metrics`].
 //!
-//! Live shards are DYNAMIC: a rebalance controller reads the per-model
-//! [`SharedGauges`] each epoch (queue depth × rolling batch latency =
-//! estimated backlog-ms), sums them per worker through the
-//! [`OwnershipTable`], and migrates model ownership from overloaded to
-//! underloaded workers. A hot model that saturates its worker no longer
-//! drags its shard-siblings' round spans with it — exactly the
-//! utilization failure static modulo sharding has under skewed load.
+//! Live shards are DYNAMIC: a rebalance controller reads the
+//! per-(model, worker) [`SharedGauges`] each epoch (queue depth ×
+//! rolling batch latency = estimated backlog-ms) and rewrites the
+//! [`OwnershipTable`] along both of the paper's control axes:
+//!
+//! * **hot-model replication** — a model whose pool-wide backlog
+//!   exceeds one worker's drain rate gains a REPLICA on the
+//!   least-loaded worker, so several engines drain its intake
+//!   concurrently (the m_c dimension crossing the worker boundary);
+//!   replica sets collapse once the backlog subsides.
+//! * **whole-model migration** — when no replica set is widened, model
+//!   ownership migrates from overloaded to underloaded workers, so a
+//!   hot model no longer drags its shard-siblings' round spans with it.
+//!
+//! Both actions reuse the same lossless [`ModelIntake`] handoff, so the
+//! request-conservation invariant (outcomes + sheds + leftover ==
+//! attempts) holds through every map rewrite.
 
 use super::admission::AdmissionConfig;
-use super::ingress::{Ingress, ModelIntake, OwnershipTable, SharedGauges,
-                     WakeEvent};
+use super::ingress::{Ingress, MAX_POOL, ModelIntake, OwnershipTable,
+                     SharedGauges, WakeEvent};
 use super::worker::{LiveWorker, ServeEvent, WorkerResult, run_trace_worker};
 use crate::coordinator::baselines::{DeepRtScheduler, FixedScheduler};
 use crate::coordinator::sac_sched;
@@ -85,19 +95,40 @@ impl SchedulerSpec {
 #[derive(Clone, Copy, Debug)]
 pub struct RebalanceConfig {
     /// How often the controller reads the gauges and considers one
-    /// migration, ms.
+    /// action (replica scaling or migration), ms.
     pub epoch_ms: u64,
-    /// Trigger: the most-backlogged worker must exceed `ratio` × the
-    /// least-backlogged one...
+    /// Migration trigger: the most-backlogged worker must exceed
+    /// `ratio` × the least-backlogged one...
     pub ratio: f64,
     /// ...by at least this absolute gap, ms (hysteresis — tiny
     /// imbalances are noise, migrating on them would thrash).
     pub min_gap_ms: f64,
+    /// Hot-model replication ceiling: the widest replica set any one
+    /// model may reach (clamped to the pool size at decision time).
+    /// `1` disables replication entirely (`--no-replication`), restoring
+    /// the PR 3 one-owner-per-model behaviour.
+    pub max_replicas: usize,
+    /// Scale-up trigger: one model's pool-wide priced backlog must
+    /// exceed this, ms — the point where a single worker's drain rate
+    /// is provably behind and only another concurrent drainer helps.
+    pub scale_up_backlog_ms: f64,
+    /// Scale-down trigger: a replicated model whose pool-wide backlog
+    /// falls below this collapses one replica. Keep well under the
+    /// scale-up trigger (the band between them is the hysteresis that
+    /// prevents replica flapping).
+    pub scale_down_backlog_ms: f64,
 }
 
 impl Default for RebalanceConfig {
     fn default() -> Self {
-        RebalanceConfig { epoch_ms: 200, ratio: 1.5, min_gap_ms: 25.0 }
+        RebalanceConfig {
+            epoch_ms: 200,
+            ratio: 1.5,
+            min_gap_ms: 25.0,
+            max_replicas: MAX_POOL,
+            scale_up_backlog_ms: 250.0,
+            scale_down_backlog_ms: 30.0,
+        }
     }
 }
 
@@ -117,8 +148,9 @@ pub struct ServeConfig {
     pub admission: Option<AdmissionConfig>,
     /// Per-model ingress channel bound (live mode backpressure).
     pub queue_capacity: usize,
-    /// Dynamic resharding (live, multi-worker only). `None` pins the
-    /// static modulo shard map for the whole run.
+    /// Dynamic resharding + hot-model replication (live, multi-worker
+    /// only). `None` pins the static modulo shard map — one fixed owner
+    /// per model — for the whole run.
     pub rebalance: Option<RebalanceConfig>,
     /// Feed cross-worker gauge summaries into [`crate::coordinator::SchedCtx`]
     /// (live, multi-worker only — single-worker pools stay bit-identical
@@ -176,11 +208,98 @@ impl ServeConfig {
 }
 
 // ---------------------------------------------------------------------
-// Dynamic resharding
+// Dynamic resharding + hot-model replication
 // ---------------------------------------------------------------------
 
+/// One replica-scaling decision (worker indices into the live pool).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ScaleAction {
+    /// Add `worker` to `model`'s replica set.
+    Up { model: usize, worker: usize },
+    /// Remove `worker` from `model`'s replica set.
+    Down { model: usize, worker: usize },
+}
+
+/// Decide at most one replica-scaling action from the per-(model,
+/// worker) backlog estimates. Pure so the policy is unit-testable
+/// without threads. `model_total` and `worker_total[..workers]` are the
+/// row/column sums of `backlog` — the caller (the controller's tick)
+/// already aggregates them for imbalance stats and migration planning,
+/// so the policy consumes the same numbers instead of re-deriving its
+/// own.
+///
+/// * **scale-up** — the model with the LARGEST pool-wide backlog above
+///   `up_ms` that still has replica headroom gains a replica on the
+///   least-loaded worker outside its set. Backlog above the trigger
+///   means one worker's drain rate is provably behind; only another
+///   concurrent drainer (the paper's m_c crossing the worker boundary)
+///   closes that gap — migration would merely relocate it.
+/// * **scale-down** — a replicated model whose pool-wide backlog fell
+///   below `down_ms` sheds the replica holding the LEAST of it (the
+///   cheapest handoff). The `[down_ms, up_ms]` band is the hysteresis
+///   that keeps sets from flapping.
+///
+/// Scale-ups outrank scale-downs (relieve pressure first); one action
+/// per epoch bounds churn the same way migration planning does.
+fn plan_scaling(backlog: &[[f64; MAX_POOL]; N_MODELS],
+                model_total: &[f64; N_MODELS], worker_total: &[f64],
+                replica_mask: &[u64; N_MODELS], workers: usize,
+                max_replicas: usize, up_ms: f64, down_ms: f64)
+                -> Option<ScaleAction> {
+    let workers = workers.min(MAX_POOL).min(worker_total.len());
+    let cap = max_replicas.min(workers);
+    if workers < 2 || cap < 2 {
+        return None;
+    }
+    // Scale-up arm: hottest eligible model.
+    let mut hottest: Option<(usize, f64)> = None;
+    for (m, &total) in model_total.iter().enumerate() {
+        let count = replica_mask[m].count_ones() as usize;
+        if total > up_ms
+            && count < cap
+            && hottest.map(|(_, t)| total > t).unwrap_or(true)
+        {
+            hottest = Some((m, total));
+        }
+    }
+    if let Some((m, _)) = hottest {
+        let target = (0..workers)
+            .filter(|&w| replica_mask[m] & (1u64 << w) == 0)
+            .min_by(|&a, &b| {
+                worker_total[a]
+                    .partial_cmp(&worker_total[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+        if let Some(w) = target {
+            return Some(ScaleAction::Up { model: m, worker: w });
+        }
+    }
+    // Scale-down arm: first subsided replicated model, cheapest member.
+    for (m, &total) in model_total.iter().enumerate() {
+        if replica_mask[m].count_ones() < 2 || total >= down_ms {
+            continue;
+        }
+        let victim = (0..workers)
+            .filter(|&w| replica_mask[m] & (1u64 << w) != 0)
+            .min_by(|&a, &b| {
+                backlog[m][a]
+                    .partial_cmp(&backlog[m][b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+        if let Some(w) = victim {
+            return Some(ScaleAction::Down { model: m, worker: w });
+        }
+    }
+    None
+}
+
 /// Decide at most one ownership migration from per-model backlog
-/// estimates. Pure so the policy is unit-testable without threads.
+/// estimates and the per-worker totals (`totals[w]` = worker `w`'s
+/// lane-accurate backlog; the controller passes the SAME sums its
+/// imbalance stat reads, so with replicas in play a worker busy
+/// draining replica lanes is never mistaken for idle). Pure so the
+/// policy is unit-testable without threads. `workers` is
+/// `totals.len()`.
 ///
 /// Trigger: the most-backlogged worker exceeds `ratio` × the least plus
 /// `min_gap_ms`. Then:
@@ -198,12 +317,12 @@ impl ServeConfig {
 ///
 /// Returns `(model index, destination worker)`.
 fn plan_migration(backlog_ms: &[f64; N_MODELS], active: &[bool; N_MODELS],
-                  owner: &[usize; N_MODELS], workers: usize, ratio: f64,
+                  owner: &[usize; N_MODELS], totals: &[f64], ratio: f64,
                   min_gap_ms: f64) -> Option<(usize, usize)> {
+    let workers = totals.len();
     if workers < 2 {
         return None;
     }
-    let totals = worker_totals(backlog_ms, owner, workers);
     let (w_max, _) = totals.iter().enumerate().fold(
         (0, f64::MIN),
         |acc, (i, &t)| if t > acc.1 { (i, t) } else { acc },
@@ -260,10 +379,10 @@ fn plan_migration(backlog_ms: &[f64; N_MODELS], active: &[bool; N_MODELS],
         return min_backlog(pool).map(|m| (m, w_min));
     }
     // Spread-reduction arm: strict improvement required.
-    let before = backlog_spread_ms(&totals);
+    let before = backlog_spread_ms(totals);
     let mut best: Option<(usize, f64)> = None;
     for &m in &owned_active {
-        let mut after = totals.clone();
+        let mut after = totals.to_vec();
         after[w_max] -= backlog_ms[m];
         after[w_min] += backlog_ms[m];
         let s = backlog_spread_ms(&after);
@@ -272,17 +391,6 @@ fn plan_migration(backlog_ms: &[f64; N_MODELS], active: &[bool; N_MODELS],
         }
     }
     best.map(|(m, _)| (m, w_min))
-}
-
-/// Per-worker backlog totals — the ONE aggregation both the controller's
-/// stats and the migration policy read, so they can never disagree.
-fn worker_totals(backlog_ms: &[f64; N_MODELS], owner: &[usize; N_MODELS],
-                 workers: usize) -> Vec<f64> {
-    let mut totals = vec![0.0f64; workers];
-    for m in 0..N_MODELS {
-        totals[owner[m].min(workers - 1)] += backlog_ms[m];
-    }
-    totals
 }
 
 /// Max−min backlog spread across workers, ms.
@@ -325,7 +433,8 @@ impl RebalanceStats {
 }
 
 /// The rebalance controller: one thread reading gauges each epoch and
-/// rewriting the ownership table (the only writer it has).
+/// rewriting the ownership table (the only writer it has) — replica
+/// scaling first, whole-model migration when no set is widened.
 struct Rebalancer {
     cfg: RebalanceConfig,
     gauges: Arc<SharedGauges>,
@@ -351,22 +460,65 @@ impl Rebalancer {
     }
 
     fn tick(&self) {
-        let workers = self.worker_events.len();
-        let mut backlog = [0.0f64; N_MODELS];
+        let workers = self.worker_events.len().min(MAX_POOL);
+        let mut backlog = [[0.0f64; MAX_POOL]; N_MODELS];
+        let mut model_total = [0.0f64; N_MODELS];
         let mut active = [false; N_MODELS];
         let mut owner = [0usize; N_MODELS];
+        let mut replica_mask = [0u64; N_MODELS];
         for m in ModelId::all() {
             let i = m as usize;
-            backlog[i] = self.gauges.backlog_ms(
-                m, self.isolated_ref_ms[i], self.ref_batch);
-            active[i] = self.gauges.is_active(m);
+            for (w, b) in backlog[i][..workers].iter_mut().enumerate() {
+                *b = self.gauges.backlog_ms_for(
+                    m, w, self.isolated_ref_ms[i], self.ref_batch);
+                model_total[i] += *b;
+            }
             owner[i] = self.ownership.owner(m);
+            replica_mask[i] = self.ownership.replica_mask(m);
+            // Replicated models are PINNED for migration — their queue
+            // is spread across the set, so "moving the model" is
+            // meaningless mid-replication — but their load still counts:
+            // each replica's share lands in its own lane of the
+            // worker totals below. Pinning per model keeps migration
+            // alive for the rest of the zoo even while one model stays
+            // replicated for a long stretch.
+            active[i] = self.gauges.is_active(m)
+                && replica_mask[i].count_ones() <= 1;
         }
-        let totals = worker_totals(&backlog, &owner, workers);
-        self.stats.observe_imbalance(backlog_spread_ms(&totals));
+        let mut worker_total = [0.0f64; MAX_POOL];
+        for per_worker in backlog.iter() {
+            for (w, b) in per_worker[..workers].iter().enumerate() {
+                worker_total[w] += b;
+            }
+        }
+        self.stats
+            .observe_imbalance(backlog_spread_ms(&worker_total[..workers]));
         self.stats.epochs.fetch_add(1, Ordering::Relaxed);
-        if let Some((m, to)) = plan_migration(&backlog, &active, &owner,
-                                              workers, self.cfg.ratio,
+        // Replica scaling is the first-class control: a hot model whose
+        // backlog no single worker can drain gets another drainer.
+        if self.cfg.max_replicas > 1 {
+            if let Some(action) = plan_scaling(
+                &backlog,
+                &model_total,
+                &worker_total[..workers],
+                &replica_mask,
+                workers,
+                self.cfg.max_replicas,
+                self.cfg.scale_up_backlog_ms,
+                self.cfg.scale_down_backlog_ms,
+            ) {
+                self.apply_scaling(action);
+                return;
+            }
+        }
+        // Whole-model migration over the un-replicated models (the
+        // replicated ones are pinned via `active` above — scaling is
+        // their control axis), against the SAME lane-accurate worker
+        // totals the imbalance stat reads: a worker busy draining
+        // replica lanes is never mistaken for an idle destination.
+        if let Some((m, to)) = plan_migration(&model_total, &active, &owner,
+                                              &worker_total[..workers],
+                                              self.cfg.ratio,
                                               self.cfg.min_gap_ms) {
             let from = owner[m];
             self.ownership.migrate(ModelId::from_index(m), to);
@@ -374,6 +526,38 @@ impl Rebalancer {
             // flushes the backlog, the new owner picks it up.
             self.worker_events[from].notify();
             self.worker_events[to].notify();
+        }
+    }
+
+    /// Commit one scaling decision to the table and wake every affected
+    /// worker so handoffs start immediately.
+    fn apply_scaling(&self, action: ScaleAction) {
+        match action {
+            ScaleAction::Up { model, worker } => {
+                let m = ModelId::from_index(model);
+                if self.ownership.add_replica(m, worker).is_some() {
+                    // The loaded replicas shed above-fair-share surplus
+                    // into the handoff slot; the new one picks it up.
+                    self.notify_replicas(m);
+                }
+            }
+            ScaleAction::Down { model, worker } => {
+                let m = ModelId::from_index(model);
+                if self.ownership.remove_replica(m, worker).is_some() {
+                    // The removed worker flushes its share out...
+                    self.worker_events[worker].notify();
+                    // ...and the survivors pick it up.
+                    self.notify_replicas(m);
+                }
+            }
+        }
+    }
+
+    fn notify_replicas(&self, model: ModelId) {
+        for (w, e) in self.worker_events.iter().enumerate() {
+            if self.ownership.is_replica(model, w) {
+                e.notify();
+            }
         }
     }
 }
@@ -429,6 +613,15 @@ impl ServeReport {
                 m.migrations(),
                 m.rebalance_epochs(),
                 m.peak_imbalance_ms(),
+            );
+        }
+        if m.scale_ups() > 0 || m.scale_downs() > 0 {
+            println!(
+                "replication: {} scale-ups, {} scale-downs | peak \
+                 replicas {}",
+                m.scale_ups(),
+                m.scale_downs(),
+                m.peak_replicas(),
             );
         }
         if self.leftover > 0 {
@@ -636,6 +829,16 @@ impl Server {
         self.ownership.migrations()
     }
 
+    /// Hot-model replica scale-ups performed so far (live observability).
+    pub fn scale_ups(&self) -> u64 {
+        self.ownership.scale_ups()
+    }
+
+    /// Replica scale-downs performed so far (live observability).
+    pub fn scale_downs(&self) -> u64 {
+        self.ownership.scale_downs()
+    }
+
     /// Drain and stop: freeze the shard map (join the rebalance
     /// controller), raise the drain flag, close intake, flush every
     /// queue, join the workers, and merge their metrics (ingress-side
@@ -691,6 +894,11 @@ impl Server {
             rebalance_stats.epochs.load(Ordering::Relaxed),
             ownership.migrations(),
             rebalance_stats.peak_imbalance_ms(),
+        );
+        report.metrics.record_replication(
+            ownership.scale_ups(),
+            ownership.scale_downs(),
+            ownership.peak_replicas() as u64,
         );
         report
     }
@@ -862,30 +1070,30 @@ mod tests {
         let backlog = [400.0, 0.0, 12.0, 0.0, 30.0, 5.0];
         // Smallest QUEUED sibling (model 2) peels off to the cold worker.
         assert_eq!(
-            plan_migration(&backlog, &all_active, &owner, 2, 1.5, 25.0),
+            migrate_plan(&backlog, &all_active, &owner, 2, 1.5, 25.0),
             Some((2, 1))
         );
         // A sibling holding backlog outranks an idle-but-profiled one:
         // moving the idle sibling would relieve nothing this epoch.
         let idle_first = [400.0, 0.0, 0.0, 0.0, 30.0, 0.0];
         assert_eq!(
-            plan_migration(&idle_first, &all_active, &owner, 2, 1.5, 25.0),
+            migrate_plan(&idle_first, &all_active, &owner, 2, 1.5, 25.0),
             Some((4, 1))
         );
         // A lone hot model is already isolated: nothing to move.
         let lone = [400.0, 3.0, 0.0, 1.0, 0.0, 2.0];
         let active = [true, true, false, true, false, true];
-        assert_eq!(plan_migration(&lone, &active, &owner, 2, 1.5, 25.0),
+        assert_eq!(migrate_plan(&lone, &active, &owner, 2, 1.5, 25.0),
                    None);
         // Balanced-ish backlogs below the trigger: no churn.
         let calm = [30.0, 25.0, 20.0, 28.0, 22.0, 26.0];
-        assert_eq!(plan_migration(&calm, &all_active, &owner, 2, 1.5, 25.0),
+        assert_eq!(migrate_plan(&calm, &all_active, &owner, 2, 1.5, 25.0),
                    None);
         // No dominant model: the spread-reducing move wins (moving one
         // 100 ms model from the 300 ms worker to the empty one).
         let owner3 = [0, 0, 0, 1, 1, 1];
         let flat = [100.0, 100.0, 100.0, 0.0, 0.0, 0.0];
-        let got = plan_migration(&flat, &all_active, &owner3, 2, 1.5, 25.0);
+        let got = migrate_plan(&flat, &all_active, &owner3, 2, 1.5, 25.0);
         let (m, to) = got.expect("spread reduction should fire");
         assert!(m < 3, "must move one of worker 0's models, got {m}");
         assert_eq!(to, 1);
@@ -895,13 +1103,135 @@ mod tests {
         let mirror = [0.0, 0.0, 90.0, 0.0, 40.0, 0.0];
         let two_live = [false, false, true, false, true, false];
         assert_eq!(
-            plan_migration(&mirror, &two_live, &owner, 2, 1.5, 25.0),
+            migrate_plan(&mirror, &two_live, &owner, 2, 1.5, 25.0),
             Some((4, 1))
         );
         // Single worker: never migrates.
-        assert_eq!(plan_migration(&backlog, &all_active, &[0; 6], 1, 1.5,
+        assert_eq!(migrate_plan(&backlog, &all_active, &[0; 6], 1, 1.5,
                                   25.0),
                    None);
+    }
+
+    /// Test shim for the migration policy: owner-attributed worker
+    /// totals, which are exactly the lane sums whenever every model has
+    /// a single owner (true for all these cases).
+    fn migrate_plan(backlog: &[f64; N_MODELS], active: &[bool; N_MODELS],
+                    owner: &[usize; N_MODELS], workers: usize, ratio: f64,
+                    min_gap_ms: f64) -> Option<(usize, usize)> {
+        let mut totals = vec![0.0f64; workers.max(1)];
+        for m in 0..N_MODELS {
+            totals[owner[m].min(workers.max(1) - 1)] += backlog[m];
+        }
+        plan_migration(backlog, active, owner, &totals, ratio, min_gap_ms)
+    }
+
+    /// Test shim: aggregate the row/column totals exactly the way the
+    /// controller's tick does before calling the policy.
+    fn scaling(backlog: &[[f64; MAX_POOL]; N_MODELS],
+               mask: &[u64; N_MODELS], workers: usize, cap: usize,
+               up_ms: f64, down_ms: f64) -> Option<ScaleAction> {
+        let w_n = workers.min(MAX_POOL);
+        let mut model_total = [0.0f64; N_MODELS];
+        let mut worker_total = [0.0f64; MAX_POOL];
+        for (m, per_worker) in backlog.iter().enumerate() {
+            for (w, b) in per_worker[..w_n].iter().enumerate() {
+                model_total[m] += b;
+                worker_total[w] += b;
+            }
+        }
+        plan_scaling(backlog, &model_total, &worker_total[..w_n], mask,
+                     workers, cap, up_ms, down_ms)
+    }
+
+    /// The scaling policy, exercised without threads: scale-up triggers,
+    /// replica-headroom and pool caps, least-loaded targeting, scale-down
+    /// hysteresis, last-drainer protection (by construction: only
+    /// replicated models scale down).
+    #[test]
+    fn plan_scaling_grows_hot_models_and_collapses_idle_sets() {
+        let one = |w: usize| 1u64 << w;
+        let mut backlog = [[0.0f64; MAX_POOL]; N_MODELS];
+        let mut mask = [0u64; N_MODELS];
+        for (m, msk) in mask.iter_mut().enumerate() {
+            *msk = one(m % 3);
+        }
+        // Model 0's backlog (all on worker 0) blows past the trigger;
+        // worker 2 is the least-loaded non-replica.
+        backlog[0][0] = 400.0;
+        backlog[1][1] = 80.0;
+        backlog[2][2] = 20.0;
+        assert_eq!(
+            scaling(&backlog, &mask, 3, MAX_POOL, 250.0, 30.0),
+            Some(ScaleAction::Up { model: 0, worker: 2 })
+        );
+        // Two hot models: the hotter one wins the epoch's action.
+        backlog[1][1] = 500.0;
+        assert_eq!(
+            scaling(&backlog, &mask, 3, MAX_POOL, 250.0, 30.0),
+            Some(ScaleAction::Up { model: 1, worker: 2 })
+        );
+        backlog[1][1] = 80.0;
+        // A model already at the replica cap cannot widen further.
+        mask[0] = one(0) | one(1);
+        assert_eq!(scaling(&backlog, &mask, 3, 2, 250.0, 30.0), None);
+        // With headroom it still grows, onto the remaining worker.
+        assert_eq!(
+            scaling(&backlog, &mask, 3, 3, 250.0, 30.0),
+            Some(ScaleAction::Up { model: 0, worker: 2 })
+        );
+        // In the hysteresis band (below up, above down): no action.
+        backlog[0][0] = 100.0;
+        backlog[0][1] = 60.0;
+        assert_eq!(scaling(&backlog, &mask, 3, 3, 250.0, 30.0), None);
+        // Subsided: the replica holding the least of the model goes.
+        backlog[0][0] = 12.0;
+        backlog[0][1] = 2.0;
+        assert_eq!(
+            scaling(&backlog, &mask, 3, 3, 250.0, 30.0),
+            Some(ScaleAction::Down { model: 0, worker: 1 })
+        );
+        // Single-worker pools and max_replicas == 1 never scale.
+        assert_eq!(scaling(&backlog, &mask, 1, 3, 250.0, 30.0), None);
+        backlog[0][0] = 400.0;
+        backlog[0][1] = 0.0;
+        mask[0] = one(0);
+        assert_eq!(scaling(&backlog, &mask, 3, 1, 250.0, 30.0), None);
+    }
+
+    /// Migration-policy edge cases the original unit test skipped:
+    /// single-worker pools, an empty-gauge epoch (all backlog zero), and
+    /// ALL backlog concentrated in one model.
+    #[test]
+    fn plan_migration_edge_cases() {
+        let owner = [0, 1, 0, 1, 0, 1];
+        let all_active = [true; N_MODELS];
+        let hot = [500.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        // Single-worker pool: a no-op regardless of pressure.
+        assert_eq!(migrate_plan(&hot, &all_active, &[0; 6], 1, 1.5, 25.0),
+                   None);
+        // Empty-gauge epoch (startup, or fully drained): zero totals
+        // never clear the ratio+gap trigger, so the controller idles
+        // instead of shuffling idle models.
+        let empty = [0.0; N_MODELS];
+        assert_eq!(migrate_plan(&empty, &all_active, &owner, 2, 1.5, 25.0),
+                   None);
+        assert_eq!(migrate_plan(&empty, &[false; N_MODELS], &owner, 2,
+                                  1.5, 25.0),
+                   None);
+        // All backlog on ONE model whose siblings never saw traffic:
+        // nothing to peel (moving inactive models changes nothing), and
+        // moving the hot model itself would only relocate the hotspot.
+        let one_live = [false, true, false, false, false, false];
+        let solo = [0.0, 700.0, 0.0, 0.0, 0.0, 0.0];
+        assert_eq!(migrate_plan(&solo, &one_live, &owner, 2, 1.5, 25.0),
+                   None);
+        // Same concentration but with an idle-yet-active sibling riding
+        // the hot worker: the sibling is peeled off to decouple its
+        // round spans (hot-model isolation, not hot-model motion).
+        let with_sibling = [0.0, 700.0, 0.0, 1.0, 0.0, 0.0];
+        assert_eq!(migrate_plan(&with_sibling, &all_active, &owner, 2,
+                                  1.5, 25.0),
+                   Some((3, 0)));
     }
 
     /// Tentpole conservation pin: under aggressive rebalancing epochs and
@@ -920,6 +1250,10 @@ mod tests {
                 epoch_ms: 15,
                 ratio: 1.1,
                 min_gap_ms: 5.0,
+                // This test pins the MIGRATION mechanism; replication is
+                // covered by its own conservation/stress tests.
+                max_replicas: 1,
+                ..Default::default()
             }),
             ..Default::default()
         };

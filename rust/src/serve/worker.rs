@@ -13,13 +13,17 @@
 //!   (virtual-clock benches, seed-equivalence tests): submit + run. The
 //!   shard map is static here; resharding needs live gauges.
 //! * **live** — requests stream in over the per-model ingress channels
-//!   (wall clock): drain the channels of currently-owned models, serve a
-//!   round, publish gauges, park when idle, exit once intake is closed
-//!   and the queues are flushed. Ownership is DYNAMIC: when the
-//!   rebalance controller migrates a model away, the worker flushes that
+//!   (wall clock): drain the channels of currently-assigned models,
+//!   serve a round, publish gauges, park when idle, exit once intake is
+//!   closed and the queues are flushed. Ownership is DYNAMIC and may be
+//!   REPLICATED: when the rebalance controller migrates a model away (or
+//!   scales this worker out of its replica set), the worker flushes that
 //!   model's queued backlog into the shared [`ModelIntake`] slot on its
-//!   next round and the new owner picks it up — requests are handed
-//!   over, never dropped or double-served.
+//!   next round and the current drainers pick it up — requests are
+//!   handed over, never dropped or double-served. When several workers
+//!   replicate one hot model, each pops a bounded stripe of its channel
+//!   per pass and sheds above-fair-share surplus back through the same
+//!   handoff slot, so the model's queue stays spread across the set.
 
 use super::admission::{AdmissionConfig, AdmissionGate};
 use super::ingress::{ModelIntake, OwnershipTable, SharedGauges, WakeEvent};
@@ -113,6 +117,15 @@ pub struct LiveWorker {
 /// (a missed wake costs at most this much added latency).
 const IDLE_PARK: Duration = Duration::from_millis(1);
 
+/// Channel pops per REPLICATED model per intake pass: when several
+/// workers drain one model, each takes a bounded stripe so arrivals
+/// spread across the replica set instead of all landing on whichever
+/// replica polls first. Sole owners (and workers mid-drain) pop
+/// unbounded — exactly the pre-replication behaviour. Doubling as the
+/// fair-share hysteresis, it also bounds how lopsided a replica set can
+/// get before the surplus flush kicks in.
+const REPLICA_STRIPE: usize = 32;
+
 impl LiveWorker {
     /// The live serve loop. Returns after the drain flag is up, every
     /// owned channel has disconnected, and the engine has flushed its
@@ -131,11 +144,27 @@ impl LiveWorker {
         // (backlog for a model we don't own can only appear via a
         // migration). u64::MAX forces the first pass to scan.
         let mut seen_epoch = u64::MAX;
+        // Models whose surplus this worker flushed on the previous round:
+        // it skips exactly one handoff-pickup pass for them, so another
+        // replica gets first claim on the flush (see share_excess).
+        let mut flushed = [false; N_MODELS];
         loop {
             let closing = self.closed.load(Ordering::Acquire);
             let epoch = self.ownership.epoch();
-            let intake_done = self.intake_pass(closing, epoch != seen_epoch);
+            let intake_done =
+                self.intake_pass(closing, epoch != seen_epoch, &mut flushed);
             seen_epoch = epoch;
+            if !closing {
+                self.share_excess(&mut flushed);
+            }
+            if self.cluster_hints {
+                // Pool-state scheduler features share one opt-out:
+                // --no-gauge-hints keeps the decision context pool-blind
+                // (cluster AND replica features stay 0, the bare-engine
+                // encoding), even while replication keeps acting on the
+                // queues themselves.
+                self.update_replica_shares();
+            }
             // Serve one scheduling round.
             let served = self.engine.step_into(scheduler, &mut outcomes);
             if let Some(n) = served {
@@ -167,26 +196,81 @@ impl LiveWorker {
         }
     }
 
-    /// One intake pass over every model slot. Owned models: pick up any
-    /// migration handoff, then drain the ingress channel. When the
-    /// ownership epoch moved (`scan_disowned`), also check for backlog
-    /// we hold for models migrated away and flush it to the new owner
-    /// (unless a drain has begun — then we keep and serve it ourselves,
-    /// so shutdown never bounces requests between exiting workers).
-    /// Returns true when every owned channel has disconnected.
-    fn intake_pass(&mut self, closing: bool, scan_disowned: bool) -> bool {
+    /// One intake pass over every model slot. Models this worker drains
+    /// (sole owner or replica-set member): pick up any handoff backlog,
+    /// then pop the ingress channel — unbounded as a sole owner, a
+    /// bounded stripe per pass inside a replica set, so arrivals spread
+    /// across the set. When the ownership epoch moved (`scan_disowned`),
+    /// also check for backlog we hold for models we no longer drain —
+    /// migrated away or scaled down — and flush it to the current
+    /// drainers (unless a drain has begun — then we keep and serve it
+    /// ourselves, so shutdown never bounces requests between exiting
+    /// workers). Returns true when every drained channel has
+    /// disconnected and no handoff is pending.
+    fn intake_pass(&mut self, closing: bool, scan_disowned: bool,
+                   flushed: &mut [bool; N_MODELS]) -> bool {
         let mut done = true;
         for model in ModelId::all() {
             let idx = model as usize;
-            if self.ownership.owner(model) == self.id {
+            // One mask load, both facts derived from it: reading
+            // membership and set width separately could straddle a
+            // concurrent scale event and combine "I'm a replica" with
+            // the post-removal count, turning this pass into an
+            // unbounded pop on a model we no longer drain.
+            let mask = self.ownership.replica_mask(model);
+            if mask & (1u64 << self.id) != 0 {
+                let replicas = mask.count_ones().max(1) as usize;
+                let striped = replicas > 1 && !closing;
+                // Handoff pickup: a striped replica only takes it while
+                // at or below its fair share of the model's pool-wide
+                // queue, and NEVER on the pass right after it shed
+                // surplus itself — the gauges lag a round, so without
+                // the `flushed` latch the flusher would still look
+                // under-share and reclaim its own flush before the
+                // notified replica reaches the slot lock.
+                let was_flushed = std::mem::take(&mut flushed[idx]);
+                let fair = if striped {
+                    Some(self.fair_share(model, replicas))
+                } else {
+                    None
+                };
+                let take_handoff = !(striped && was_flushed)
+                    && fair.map(|(mine, share)| mine <= share).unwrap_or(true);
                 let mut slot = self.intake[idx].lock().unwrap();
-                for r in slot.handoff.drain(..) {
-                    self.engine.push_request(r);
+                if take_handoff && !slot.handoff.is_empty() {
+                    // Bounded pickup: only up to this replica's fair-
+                    // share headroom (floored at one stripe so a small
+                    // remainder is never stranded); the rest stays for
+                    // the other replicas instead of bouncing through
+                    // this one in a re-flush. Head-first, because the
+                    // flusher sheds tightest deadlines first — the head
+                    // is the most urgent work.
+                    let take = match fair {
+                        Some((mine, share)) => slot.handoff.len().min(
+                            share.saturating_sub(mine).max(REPLICA_STRIPE),
+                        ),
+                        None => slot.handoff.len(),
+                    };
+                    for r in slot.handoff.drain(..take) {
+                        self.engine.push_request(r);
+                    }
+                }
+                if !slot.handoff.is_empty() {
+                    done = false;
                 }
                 if !slot.closed {
+                    let mut budget =
+                        if striped { REPLICA_STRIPE } else { usize::MAX };
                     loop {
+                        if budget == 0 {
+                            done = false;
+                            break;
+                        }
                         match slot.rx.try_recv() {
-                            Ok(r) => self.engine.push_request(r),
+                            Ok(r) => {
+                                self.engine.push_request(r);
+                                budget -= 1;
+                            }
                             Err(TryRecvError::Empty) => {
                                 done = false;
                                 break;
@@ -201,25 +285,102 @@ impl LiveWorker {
             } else if scan_disowned && !closing
                 && self.engine.holds_model(model)
             {
-                let new_owner = self.ownership.owner(model);
                 let moved = {
                     let mut slot = self.intake[idx].lock().unwrap();
                     self.engine.drain_model_into(model, &mut slot.handoff)
                 };
                 if moved > 0 {
-                    self.worker_events[new_owner].notify();
+                    self.notify_replicas(model);
                 }
             }
         }
         done
     }
 
-    /// Exit gate: re-verify under the locks that every owned slot is
+    /// This worker's local queue for `model` and its fair share of the
+    /// replica set's pool-wide queue, per the last-published gauges.
+    /// (Gauges lag a round; the pool sum is floored by our own live
+    /// count so a fresh replica never divides by a stale zero.) The ONE
+    /// fair-share definition both the surplus shed and the handoff
+    /// pickup use, so the hysteresis pair can never drift apart.
+    fn fair_share(&self, model: ModelId, replicas: usize) -> (usize, usize) {
+        let mine = self.engine.queue_len(model);
+        let total = self.gauges.queue_len(model).max(mine);
+        (mine, total / replicas.max(1))
+    }
+
+    /// Intra-set load balancing: when this worker holds clearly more
+    /// than its fair share of a replicated model's pool-wide queue
+    /// (fair share + one stripe of hysteresis), flush the surplus into
+    /// the shared handoff slot for an under-loaded replica to pick up.
+    /// The `flushed` latch makes this worker sit out the next pickup
+    /// pass (so a notified replica gets first claim — if none takes it,
+    /// the flusher may reclaim it a round later rather than strand it);
+    /// the hysteresis keeps gauge staleness from ping-ponging requests
+    /// between replicas.
+    fn share_excess(&mut self, flushed: &mut [bool; N_MODELS]) {
+        for model in ModelId::all() {
+            // Single mask load (see intake_pass) for a consistent
+            // membership + width view.
+            let mask = self.ownership.replica_mask(model);
+            if mask & (1u64 << self.id) == 0 {
+                continue;
+            }
+            let replicas = mask.count_ones() as usize;
+            if replicas < 2 {
+                continue;
+            }
+            let (mine, share) = self.fair_share(model, replicas);
+            if mine > share + REPLICA_STRIPE {
+                let moved = {
+                    let mut slot =
+                        self.intake[model as usize].lock().unwrap();
+                    self.engine.drain_model_excess_into(
+                        model, share, &mut slot.handoff)
+                };
+                if moved > 0 {
+                    flushed[model as usize] = true;
+                    self.notify_replicas(model);
+                }
+            }
+        }
+    }
+
+    /// Wake every other worker currently draining `model` (handoff
+    /// backlog is waiting for one of them).
+    fn notify_replicas(&self, model: ModelId) {
+        for (w, e) in self.worker_events.iter().enumerate() {
+            if w != self.id && self.ownership.is_replica(model, w) {
+                e.notify();
+            }
+        }
+    }
+
+    /// Surface each model's replica-set width to the scheduler
+    /// ([`crate::coordinator::SchedCtx::replica_share`]). Gated behind
+    /// `cluster_hints` by the caller — `--no-gauge-hints` keeps every
+    /// pool-state feature out of the decision context — and skipped for
+    /// single-worker pools, where every share is structurally 0 anyway:
+    /// both keep the bare-engine encoding bit-identical.
+    fn update_replica_shares(&mut self) {
+        let workers = self.worker_events.len();
+        if workers < 2 {
+            return;
+        }
+        for model in ModelId::all() {
+            let count = self.ownership.replica_count(model);
+            let share =
+                count.saturating_sub(1) as f64 / (workers - 1) as f64;
+            self.engine.set_replica_share(model, share);
+        }
+    }
+
+    /// Exit gate: re-verify under the locks that every drained slot is
     /// disconnected with an empty handoff buffer, so a flush that landed
     /// after the intake pass is never stranded.
     fn owned_intake_clear(&self) -> bool {
         ModelId::all().into_iter().all(|m| {
-            if self.ownership.owner(m) != self.id {
+            if !self.ownership.is_replica(m, self.id) {
                 return true;
             }
             let slot = self.intake[m as usize].lock().unwrap();
@@ -227,48 +388,56 @@ impl LiveWorker {
         })
     }
 
-    /// Publish the owned shard's queue depths + rolling batch latencies
-    /// for the ingress fast path and the rebalance controller. The
-    /// latency gauge stays NaN until the profiler has observations — the
-    /// admission decision function owns the isolated-estimate fallback,
-    /// so the policy lives in one place.
+    /// Publish this worker's gauge LANE for every model: its local queue
+    /// depth plus its engine's rolling batch latency (NaN until this
+    /// worker's profiler has observations — the admission decision
+    /// function owns the isolated-estimate fallback, so the policy lives
+    /// in one place). Uninvolved workers publish a zero queue AND a NaN
+    /// latency, so a lane can never go stale after a migration or a
+    /// replica scale-down.
     ///
-    /// Mid-migration a model's backlog is split between the handoff slot
-    /// (counted by the new owner below) and the OLD owner's engine
-    /// (published by the still-holding branch), so a hot queue never
-    /// reads 0 just because ownership moved — that blind spot would let
-    /// the admission fast path under-price the model and feed the
-    /// controller a falsely collapsed imbalance. The two sides may
-    /// overwrite each other for the ≤1 round the flush takes; either
-    /// value is honest about real queued work.
+    /// Mid-handoff a model's backlog is split between the handoff slot
+    /// (counted in the PRIMARY drainer's lane) and the flushing worker's
+    /// engine (its own lane), so a hot queue never reads 0 just because
+    /// ownership moved — that blind spot would let the admission fast
+    /// path under-price the model and feed the controller a falsely
+    /// collapsed imbalance.
     fn publish_gauges(&self) {
         for m in ModelId::all() {
             let idx = m as usize;
+            let mut queue = self.engine.queue_len(m);
             if self.ownership.owner(m) == self.id {
-                let in_handoff = self.intake[idx].lock().unwrap().handoff.len();
-                self.gauges.publish(m, self.engine.queue_len(m) + in_handoff,
-                                    self.engine.profiler.mean_latency_ms(m));
-            } else if self.engine.holds_model(m) {
-                self.gauges.publish(m, self.engine.queue_len(m),
-                                    self.engine.profiler.mean_latency_ms(m));
+                queue += self.intake[idx].lock().unwrap().handoff.len();
             }
+            // A real latency only while draining or holding the model:
+            // an ex-replica's frozen profile must not keep skewing the
+            // pool-wide finite-lane mean after it stops serving (its
+            // lane goes NaN, exactly like the queue side going 0 —
+            // pre-replication, the single last-writer slot self-
+            // corrected the same way).
+            let involved = self.ownership.is_replica(m, self.id)
+                || self.engine.holds_model(m);
+            let latency = if involved {
+                self.engine.profiler.mean_latency_ms(m)
+            } else {
+                f64::NAN
+            };
+            self.gauges.publish(m, self.id, queue, latency);
         }
     }
 
     /// Fold the pool-wide gauges into the engine's decision context:
     /// total estimated backlog across every worker and this worker's
-    /// share of it, so SAC/DeepRT see cluster pressure instead of just
-    /// their own shard.
+    /// share of it (the backlog parked in its own gauge lane), so
+    /// SAC/DeepRT see cluster pressure instead of just their own shard.
     fn update_cluster_hints(&mut self) {
         let mut total = 0.0;
         let mut local = 0.0;
         for m in ModelId::all() {
-            let b = self.gauges.backlog_ms(
-                m, self.isolated_ref_ms[m as usize], self.ref_batch);
-            total += b;
-            if self.ownership.owner(m) == self.id {
-                local += b;
-            }
+            let iso = self.isolated_ref_ms[m as usize];
+            total += self.gauges.backlog_ms(m, iso, self.ref_batch);
+            local += self.gauges.backlog_ms_for(m, self.id, iso,
+                                                self.ref_batch);
         }
         let share = if total > 0.0 { local / total } else { 0.0 };
         self.engine.set_cluster_hints(total, share);
