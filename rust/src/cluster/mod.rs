@@ -1,0 +1,816 @@
+//! The heterogeneous edge-cluster tier: SLO-aware routing across
+//! multi-node serving pools.
+//!
+//! BCEdge evaluates on a zoo of heterogeneous edge platforms (Table V:
+//! Xavier NX / TX2 / Nano); this module crosses the node boundary the
+//! same way the serving runtime crossed the worker boundary. Each
+//! [`EdgeNode`] owns a full [`crate::serve::Server`] — workers, admission,
+//! rebalancer, hot-model replication — configured with its own
+//! [`crate::platform::PlatformSpec`] and network link, so nodes genuinely
+//! differ in drain rate and distance. A front-end [`Router`] places every
+//! request under a pluggable policy (round-robin,
+//! join-shortest-backlog, power-of-two-choices, SLO-aware), reading the
+//! per-node [`crate::serve::GaugeSnapshot`]s the nodes' workers publish;
+//! the SLO-aware policy prices estimated RTT + queue backlog + batch
+//! latency against remaining slack and sheds at the edge
+//! ([`crate::metrics::ShedReason::NoFeasibleNode`]) when no node can make
+//! the deadline.
+//!
+//! Two clock arms, mirroring the serving runtime:
+//!
+//! * **wall** — live: every node is a real [`crate::serve::Server`];
+//!   routing reads live gauge snapshots; a [`DrainScenario`] can take a
+//!   node out mid-run (routing stops, the node flushes through the
+//!   existing drain protocol, its accounted requests fold into cluster
+//!   totals) and bring it back (a fresh server incarnation in a disjoint
+//!   request-id window).
+//! * **virtual** — deterministic: the router places a pre-generated trace
+//!   using a leaky-bucket backlog model (per-node estimated work, drained
+//!   at the node's worker count), then each node serves its shard as its
+//!   own discrete-event simulation — same seed, same report, bit for bit.
+//!
+//! Conservation holds cluster-wide through every drain/rejoin:
+//! `outcomes + sheds + leftover == attempts`, outcome ids unique across
+//! nodes (each node incarnation stamps ids in its own window).
+//!
+//! Entry point: [`run_cluster`], surfaced as `bcedge bench-cluster`.
+
+pub mod netmodel;
+pub mod node;
+pub mod router;
+
+pub use netmodel::NetModel;
+pub use node::{EdgeNode, FinishedNode, NodeSpec, NodeState};
+pub use router::{NodeView, RoutePolicy, Router};
+
+use crate::metrics::{Metrics, ShedReason};
+use crate::platform::PlatformSim;
+use crate::serve::worker::ServeEvent;
+use crate::serve::{ClockKind, LoadGenConfig, LoadMode, ServeConfig,
+                   run_trace};
+use crate::util::rng::Pcg32;
+use crate::util::time::WallClock;
+use crate::workload::models::{ModelId, N_MODELS};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Take one node out of the cluster mid-run and bring it back: routing
+/// to `node` stops at `at_ms`, the node flushes through the drain
+/// protocol, and a fresh incarnation rejoins at `rejoin_at_ms` (cluster
+/// timebase, ms). On the virtual clock the window gates routing only —
+/// the node's single simulation serves everything it was dealt.
+#[derive(Clone, Copy, Debug)]
+pub struct DrainScenario {
+    /// Index into [`ClusterConfig::nodes`].
+    pub node: usize,
+    /// When routing to the node stops and its drain begins, ms.
+    pub at_ms: f64,
+    /// When the node rejoins (must be > `at_ms`), ms. A rejoin time past
+    /// the horizon means the node stays out.
+    pub rejoin_at_ms: f64,
+}
+
+/// Cluster-tier configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// The nodes, heterogeneous in platform, worker count, and link.
+    pub nodes: Vec<NodeSpec>,
+    /// Front-end routing policy.
+    pub policy: RoutePolicy,
+    /// Per-node serving template: scheduler, admission, queue capacity,
+    /// rebalance/replication, gauge hints, and the clock arm. Platform
+    /// and worker count are overridden per node from its [`NodeSpec`].
+    pub serve: ServeConfig,
+    /// Optional mid-run node drain/rejoin.
+    pub drain: Option<DrainScenario>,
+}
+
+impl Default for ClusterConfig {
+    /// The paper's Table-V trio behind LAN-ish links, SLO-aware routing.
+    fn default() -> Self {
+        use crate::platform::PlatformSpec;
+        ClusterConfig {
+            nodes: vec![
+                NodeSpec::new(PlatformSpec::xavier_nx(), 2, 2.0),
+                NodeSpec::new(PlatformSpec::jetson_tx2(), 2, 6.0),
+                NodeSpec::new(PlatformSpec::jetson_nano(), 1, 12.0),
+            ],
+            policy: RoutePolicy::SloAware,
+            serve: ServeConfig { clock: ClockKind::Wall, ..Default::default() },
+            drain: None,
+        }
+    }
+}
+
+impl ClusterConfig {
+    fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("cluster needs at least one node".into());
+        }
+        if let Some(d) = &self.drain {
+            if d.node >= self.nodes.len() {
+                return Err(format!(
+                    "--drain-node {} out of range (cluster has {} nodes)",
+                    d.node,
+                    self.nodes.len()
+                ));
+            }
+            if d.at_ms < 0.0 || d.rejoin_at_ms <= d.at_ms {
+                return Err("drain window needs 0 <= drain-at < rejoin-at"
+                    .into());
+            }
+        }
+        Ok(())
+    }
+
+    /// The admission reference batch every estimate is priced at.
+    fn ref_batch(&self) -> usize {
+        self.serve.admission.map(|a| a.ref_batch).unwrap_or(8).max(1)
+    }
+}
+
+/// One node's line in the cluster report.
+#[derive(Clone, Debug)]
+pub struct NodeBreakdown {
+    /// Platform name (Table V).
+    pub platform: &'static str,
+    /// Worker threads in the node's pool.
+    pub workers: usize,
+    /// Base link RTT, ms.
+    pub rtt_ms: f64,
+    /// Requests the router dispatched here.
+    pub dispatched: u64,
+    /// Requests the node completed.
+    pub completed: usize,
+    /// SLO violation rate over the node's executed requests.
+    pub violation_rate: f64,
+    /// Requests the node's own admission/backpressure shed.
+    pub sheds: u64,
+    /// Requests left queued at the node's horizon.
+    pub leftover: usize,
+    /// Serving segments (1 normally; 2 after a drain/rejoin cycle).
+    pub segments: usize,
+}
+
+/// Final report of a cluster run: merged metrics plus per-node
+/// breakdowns and the router's edge-shed accounting.
+pub struct ClusterReport {
+    /// Cluster-merged metrics: every node's outcomes and sheds plus the
+    /// router's [`ShedReason::NoFeasibleNode`] edge sheds.
+    pub metrics: Metrics,
+    /// Cluster serving horizon, ms (wall or virtual, matching the run).
+    pub horizon_ms: f64,
+    /// Requests the load generator offered to the cluster.
+    pub attempts: u64,
+    /// Requests still queued anywhere when the run ended.
+    pub leftover: usize,
+    /// Scheduling slots executed across every node.
+    pub slots: u64,
+    /// Node drains performed (the scenario fired).
+    pub drains: u32,
+    /// Node rejoins performed.
+    pub rejoins: u32,
+    /// The routing policy the run used.
+    pub policy: RoutePolicy,
+    /// Per-node accounting, in [`ClusterConfig::nodes`] order.
+    pub per_node: Vec<NodeBreakdown>,
+}
+
+impl ClusterReport {
+    /// Completed requests per second over the horizon.
+    pub fn achieved_rps(&self) -> f64 {
+        self.metrics.completed() as f64 / (self.horizon_ms / 1e3).max(1e-9)
+    }
+
+    /// Requests the router shed at the edge (no feasible node).
+    pub fn router_sheds(&self) -> u64 {
+        self.metrics.shed_by_reason(ShedReason::NoFeasibleNode)
+    }
+
+    /// Human-readable summary (the `bcedge bench-cluster` output).
+    pub fn print(&self) {
+        let m = &self.metrics;
+        println!(
+            "cluster {} nodes | {} routing | {} slots | horizon {:.1}s",
+            self.per_node.len(),
+            self.policy.name(),
+            self.slots,
+            self.horizon_ms / 1e3
+        );
+        println!(
+            "achieved {:.1} rps | e2e p50 {:.2} ms p99 {:.2} ms | \
+             SLO violations {:.2}% | shed {:.2}% ({} at the edge)",
+            self.achieved_rps(),
+            m.latency_percentile(0.5),
+            m.latency_percentile(0.99),
+            100.0 * m.violation_rate(),
+            100.0 * m.shed_rate(),
+            self.router_sheds(),
+        );
+        if self.drains > 0 {
+            println!("lifecycle: {} drain(s), {} rejoin(s)", self.drains,
+                     self.rejoins);
+        }
+        for (i, n) in self.per_node.iter().enumerate() {
+            println!(
+                "  node {i}: {:<12} ×{} workers | rtt {:>5.1} ms | \
+                 dispatched {:>6} | completed {:>6} | viol {:>6.2}% | \
+                 shed {:>5} | leftover {:>4} | segments {}",
+                n.platform,
+                n.workers,
+                n.rtt_ms,
+                n.dispatched,
+                n.completed,
+                100.0 * n.violation_rate,
+                n.sheds,
+                n.leftover,
+                n.segments,
+            );
+        }
+        if self.leftover > 0 {
+            println!("leftover across the cluster: {}", self.leftover);
+        }
+    }
+}
+
+/// Run the load generator against a cluster configuration. Open loop on
+/// either clock; closed loop needs the wall clock (real completions),
+/// exactly like single-node serving.
+pub fn run_cluster(cfg: &ClusterConfig, load: &LoadGenConfig)
+                   -> Result<ClusterReport, String> {
+    cfg.validate()?;
+    let horizon_ms = load.seconds * 1e3;
+    match (load.mode, cfg.serve.clock) {
+        (LoadMode::Open, ClockKind::Virtual) => {
+            Ok(run_virtual_open(cfg, load, horizon_ms))
+        }
+        (LoadMode::Open, ClockKind::Wall) => {
+            Ok(run_wall_open(cfg, load, horizon_ms))
+        }
+        (LoadMode::Closed { concurrency }, ClockKind::Wall) => Ok(
+            run_wall_closed(cfg, load, horizon_ms, concurrency.max(1)),
+        ),
+        (LoadMode::Closed { .. }, ClockKind::Virtual) => Err(
+            "closed-loop cluster serving needs --clock wall (the feedback \
+             loop runs on real completions)"
+                .into(),
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wall-clock (live) driver
+// ---------------------------------------------------------------------
+
+/// The live cluster front-end: nodes + router + lifecycle bookkeeping.
+struct WallCluster {
+    nodes: Vec<EdgeNode>,
+    router: Router,
+    /// Link-jitter draws only (routing itself uses the router's stream).
+    link_rng: Pcg32,
+    clock: WallClock,
+    drain: Option<DrainScenario>,
+    drains: u32,
+    rejoins: u32,
+    /// Edge sheds (no feasible node), folded into the final metrics.
+    router_metrics: Metrics,
+    attempts: u64,
+    /// Reusable per-request routing views (the dispatch path allocates
+    /// nothing in steady state).
+    view_scratch: Vec<NodeView>,
+}
+
+impl WallCluster {
+    fn start(cfg: &ClusterConfig, seed: u64,
+             events_tx: Option<mpsc::Sender<ServeEvent>>) -> WallCluster {
+        let mut nodes: Vec<EdgeNode> = cfg
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                EdgeNode::new(spec.clone(), &cfg.serve, i, events_tx.clone())
+            })
+            .collect();
+        for node in &mut nodes {
+            node.start();
+        }
+        WallCluster {
+            nodes,
+            router: Router::new(cfg.policy, seed ^ 0xC1_05_7E),
+            link_rng: Pcg32::seeded(seed ^ 0x11_4E),
+            clock: WallClock::new(),
+            drain: cfg.drain,
+            drains: 0,
+            rejoins: 0,
+            router_metrics: Metrics::new(),
+            attempts: 0,
+            view_scratch: Vec::with_capacity(cfg.nodes.len()),
+        }
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+
+    /// Advance the drain/rejoin scenario against the cluster clock.
+    fn tick_lifecycle(&mut self) {
+        let Some(d) = self.drain else { return };
+        let now = self.clock.now_ms();
+        let node = &mut self.nodes[d.node];
+        match node.state() {
+            NodeState::Active => {
+                if self.drains == 0 && now >= d.at_ms {
+                    node.begin_drain();
+                    self.drains += 1;
+                }
+            }
+            NodeState::Draining => {
+                node.poll_drained();
+            }
+            NodeState::Drained => {
+                if self.drains > 0 && self.rejoins == 0
+                    && now >= d.rejoin_at_ms
+                {
+                    node.rejoin();
+                    self.rejoins += 1;
+                }
+            }
+        }
+    }
+
+    /// Refresh the per-request routing views from the nodes' live gauge
+    /// snapshots into the reusable scratch buffer.
+    fn refresh_views(&mut self, model: ModelId) {
+        self.view_scratch.clear();
+        for n in &self.nodes {
+            self.view_scratch.push(match n.snapshot() {
+                Some(snap) => NodeView {
+                    active: true,
+                    rtt_ms: n.spec.net.rtt_ms,
+                    backlog_ms: snap.total_backlog_ms,
+                    service_est_ms: snap.service_est_ms(model),
+                },
+                None => NodeView {
+                    active: false,
+                    rtt_ms: n.spec.net.rtt_ms,
+                    backlog_ms: f64::INFINITY,
+                    service_est_ms: f64::INFINITY,
+                },
+            });
+        }
+    }
+
+    /// Offer one request to the cluster: route, charge the link, dispatch
+    /// — or shed at the edge with a typed reason.
+    fn submit(&mut self, model: ModelId, slo_ms: f64, transmission_ms: f64)
+              -> Result<u64, ShedReason> {
+        self.attempts += 1;
+        self.refresh_views(model);
+        match self.router.route(&self.view_scratch, slo_ms - transmission_ms) {
+            Ok(i) => {
+                let delay = self.nodes[i].spec.net.delay_ms(&mut self.link_rng);
+                self.nodes[i].dispatch(model, slo_ms,
+                                       transmission_ms + delay)
+            }
+            Err(reason) => {
+                self.router_metrics.record_shed(model, reason);
+                Err(reason)
+            }
+        }
+    }
+
+    /// Stop every node (draining live servers, waiting out any pending
+    /// background drain) and merge the cluster report.
+    fn finish(self) -> ClusterReport {
+        let horizon_ms = self.clock.now_ms();
+        let policy = self.router.policy();
+        let mut metrics = self.router_metrics;
+        let mut leftover = 0usize;
+        let mut slots = 0u64;
+        let mut per_node = Vec::with_capacity(self.nodes.len());
+        for node in self.nodes {
+            let fin = node.finish();
+            merge_node(&mut metrics, &mut leftover, &mut slots,
+                       &mut per_node, fin);
+        }
+        ClusterReport {
+            metrics,
+            horizon_ms,
+            attempts: self.attempts,
+            leftover,
+            slots,
+            drains: self.drains,
+            rejoins: self.rejoins,
+            policy,
+            per_node,
+        }
+    }
+}
+
+/// Fold one finished node into the cluster totals and breakdown rows.
+fn merge_node(metrics: &mut Metrics, leftover: &mut usize, slots: &mut u64,
+              per_node: &mut Vec<NodeBreakdown>, fin: FinishedNode) {
+    let mut nm = Metrics::new();
+    let mut node_leftover = 0usize;
+    let mut node_slots = 0u64;
+    for seg in &fin.segments {
+        nm.merge(&seg.metrics);
+        node_leftover += seg.leftover;
+        node_slots += seg.slots;
+    }
+    per_node.push(NodeBreakdown {
+        platform: fin.spec.platform.name,
+        workers: fin.spec.workers,
+        rtt_ms: fin.spec.net.rtt_ms,
+        dispatched: fin.dispatched,
+        completed: nm.completed(),
+        violation_rate: nm.violation_rate(),
+        sheds: nm.shed_total(),
+        leftover: node_leftover,
+        segments: fin.segments.len(),
+    });
+    metrics.merge(&nm);
+    *leftover += node_leftover;
+    *slots += node_slots;
+}
+
+/// Open loop on the wall clock: pace the pre-drawn arrival process
+/// against the cluster clock, routing each request as it arrives. Sleeps
+/// are capped so the drain/rejoin scenario fires on time even through an
+/// arrival lull; late submission degrades to burstier — never lighter —
+/// offered load.
+fn run_wall_open(cfg: &ClusterConfig, load: &LoadGenConfig,
+                 horizon_ms: f64) -> ClusterReport {
+    let trace = load.generator().generate_horizon(horizon_ms);
+    let mut cluster = WallCluster::start(cfg, load.seed, None);
+    for r in &trace {
+        loop {
+            cluster.tick_lifecycle();
+            let wait_ms = r.arrival_ms - cluster.now_ms();
+            if wait_ms <= 0.0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_secs_f64(
+                wait_ms.min(5.0) / 1e3,
+            ));
+        }
+        // Rejections are accounted (router edge sheds here, node ingress
+        // sheds at the node); nothing more to do.
+        let _ = cluster.submit(r.model, r.slo_ms, r.transmission_ms);
+    }
+    // Keep the lifecycle ticking to the horizon so a rejoin scheduled
+    // after the last arrival still happens inside the run.
+    loop {
+        cluster.tick_lifecycle();
+        let wait_ms = horizon_ms - cluster.now_ms();
+        if wait_ms <= 0.0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_secs_f64(wait_ms.min(5.0) / 1e3));
+    }
+    cluster.finish()
+}
+
+/// Closed loop on the wall clock: keep `concurrency` requests in flight
+/// across the whole cluster, launching the next the moment one
+/// terminates anywhere (completion or engine-gate shed — every node
+/// streams its terminal events into one channel).
+fn run_wall_closed(cfg: &ClusterConfig, load: &LoadGenConfig,
+                   horizon_ms: f64, concurrency: usize) -> ClusterReport {
+    let (tx, rx) = mpsc::channel();
+    let mut cluster = WallCluster::start(cfg, load.seed, Some(tx));
+    let mut rng = Pcg32::seeded(load.seed);
+    let mut rr = 0usize;
+    let slo_scale = load.slo_scale;
+    // The SAME closed-loop client model as single-node bench-serve
+    // (shared launcher: model rotation, transmission stamp, SLO scale),
+    // submitting through the router instead of one ingress. Requests
+    // every node refuses — or the router edge-sheds — free their slot.
+    let launch = |cluster: &mut WallCluster, rng: &mut Pcg32,
+                  rr: &mut usize| {
+        crate::serve::loadgen::launch_round_robin(
+            rng, rr, slo_scale,
+            |m, slo, tx_ms| cluster.submit(m, slo, tx_ms))
+    };
+    let mut in_flight = 0usize;
+    for _ in 0..concurrency {
+        if launch(&mut cluster, &mut rng, &mut rr) {
+            in_flight += 1;
+        }
+    }
+    while cluster.now_ms() < horizon_ms {
+        cluster.tick_lifecycle();
+        match rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(_terminal_event) => {
+                in_flight = in_flight.saturating_sub(1);
+                if launch(&mut cluster, &mut rng, &mut rr) {
+                    in_flight += 1;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // Top back up (e.g. every node was refusing earlier).
+                while in_flight < concurrency
+                    && launch(&mut cluster, &mut rng, &mut rr)
+                {
+                    in_flight += 1;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    cluster.finish()
+}
+
+// ---------------------------------------------------------------------
+// Virtual-clock (deterministic) driver
+// ---------------------------------------------------------------------
+
+/// Open loop on the virtual clock: route the pre-generated trace with a
+/// deterministic per-node backlog model, then serve each node's shard as
+/// its own discrete-event simulation. Same seed ⇒ identical report.
+///
+/// The backlog model is a leaky bucket per node: dispatching a request
+/// adds its estimated per-request work (the platform's isolated latency
+/// at the reference batch, amortized over the batch), and the bucket
+/// drains at one ms of work per worker per millisecond of trace time —
+/// so a Nano node fills ~12× faster than a Xavier NX node and the
+/// gauge-driven policies see the heterogeneity without live feedback.
+fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
+                    horizon_ms: f64) -> ClusterReport {
+    let n = cfg.nodes.len();
+    let trace = load.generator().generate_horizon(horizon_ms);
+    let attempts = trace.len() as u64;
+    let mut router = Router::new(cfg.policy, load.seed ^ 0xC1_05_7E);
+    let mut link_rng = Pcg32::seeded(load.seed ^ 0x11_4E);
+    let ref_batch = cfg.ref_batch();
+    let sims: Vec<PlatformSim> = cfg
+        .nodes
+        .iter()
+        .map(|s| PlatformSim::new(s.platform.clone()))
+        .collect();
+    // Match the serving pool's own clamp ([`ServeConfig`] runs at most
+    // N_MODELS workers), so the routing model never credits a node with
+    // more drain rate than its simulation will actually have.
+    let drain_rate: Vec<f64> = cfg
+        .nodes
+        .iter()
+        .map(|s| s.workers.clamp(1, N_MODELS) as f64)
+        .collect();
+    let mut est_backlog = vec![0.0f64; n];
+    let mut last_ms = vec![0.0f64; n];
+    let mut shards: Vec<Vec<crate::workload::request::Request>> =
+        (0..n).map(|_| Vec::new()).collect();
+    let mut router_metrics = Metrics::new();
+    for r in &trace {
+        for i in 0..n {
+            est_backlog[i] = (est_backlog[i]
+                - (r.arrival_ms - last_ms[i]) * drain_rate[i])
+                .max(0.0);
+            last_ms[i] = r.arrival_ms;
+        }
+        let offline = cfg
+            .drain
+            .filter(|d| r.arrival_ms >= d.at_ms && r.arrival_ms < d.rejoin_at_ms)
+            .map(|d| d.node);
+        let views: Vec<NodeView> = (0..n)
+            .map(|i| NodeView {
+                active: offline != Some(i),
+                rtt_ms: cfg.nodes[i].net.rtt_ms,
+                backlog_ms: est_backlog[i],
+                service_est_ms: est_backlog[i] / drain_rate[i]
+                    + sims[i].latency.isolated_ms(r.model, ref_batch),
+            })
+            .collect();
+        match router.route(&views, r.slo_ms - r.transmission_ms) {
+            Ok(i) => {
+                let mut routed = r.clone();
+                routed.transmission_ms +=
+                    cfg.nodes[i].net.delay_ms(&mut link_rng);
+                est_backlog[i] += sims[i]
+                    .latency
+                    .isolated_ms(r.model, ref_batch)
+                    / ref_batch as f64;
+                shards[i].push(routed);
+            }
+            Err(reason) => router_metrics.record_shed(r.model, reason),
+        }
+    }
+    // Serve the shards sequentially: each node is its own deterministic
+    // simulation, and a fixed merge order keeps the report bit-stable.
+    let mut metrics = router_metrics;
+    let mut leftover = 0usize;
+    let mut slots = 0u64;
+    let mut per_node = Vec::with_capacity(n);
+    for (i, shard) in shards.into_iter().enumerate() {
+        let node_cfg = ServeConfig {
+            platform: cfg.nodes[i].platform.clone(),
+            workers: cfg.nodes[i].workers,
+            clock: ClockKind::Virtual,
+            ..cfg.serve.clone()
+        };
+        let dispatched = shard.len() as u64;
+        let report = run_trace(&node_cfg, shard, horizon_ms);
+        merge_node(&mut metrics, &mut leftover, &mut slots, &mut per_node,
+                   FinishedNode {
+                       spec: cfg.nodes[i].clone(),
+                       dispatched,
+                       segments: vec![report],
+                   });
+    }
+    let (drains, rejoins) = match cfg.drain {
+        Some(d) if d.at_ms < horizon_ms => {
+            (1, u32::from(d.rejoin_at_ms < horizon_ms))
+        }
+        _ => (0, 0),
+    };
+    ClusterReport {
+        metrics,
+        horizon_ms,
+        attempts,
+        leftover,
+        slots,
+        drains,
+        rejoins,
+        policy: cfg.policy,
+        per_node,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::PlatformSpec;
+    use crate::serve::SchedulerSpec;
+    use std::collections::HashSet;
+
+    fn hetero_cfg(policy: RoutePolicy, clock: ClockKind,
+                  drain: Option<DrainScenario>) -> ClusterConfig {
+        ClusterConfig {
+            nodes: vec![
+                NodeSpec::new(PlatformSpec::xavier_nx(), 2, 2.0),
+                NodeSpec::new(PlatformSpec::jetson_tx2(), 2, 6.0),
+                NodeSpec::new(PlatformSpec::jetson_nano(), 1, 12.0),
+            ],
+            policy,
+            serve: ServeConfig {
+                clock,
+                scheduler: SchedulerSpec::Fixed { batch: 4, m_c: 2 },
+                admission: None,
+                queue_capacity: 4096,
+                ..Default::default()
+            },
+            drain,
+        }
+    }
+
+    fn assert_conserved(report: &ClusterReport) {
+        assert_eq!(report.metrics.outcomes().len() as u64
+                       + report.metrics.shed_total()
+                       + report.leftover as u64,
+                   report.attempts,
+                   "requests lost or double-counted cluster-wide");
+        let mut seen = HashSet::new();
+        for o in report.metrics.outcomes() {
+            assert!(seen.insert(o.id),
+                    "request {} served twice across the cluster", o.id);
+        }
+        // Router edge sheds + per-node dispatch cover every attempt.
+        let dispatched: u64 =
+            report.per_node.iter().map(|n| n.dispatched).sum();
+        assert_eq!(dispatched + report.router_sheds(), report.attempts);
+    }
+
+    /// Satellite acceptance: virtual-clock cluster runs are conserved and
+    /// bit-deterministic from the seed — identical outcomes, slots, and
+    /// per-node dispatch counts across two runs — with unique outcome ids
+    /// across nodes and the drain window gating routing mid-trace.
+    #[test]
+    fn virtual_cluster_conserves_and_is_deterministic() {
+        let drain = DrainScenario {
+            node: 1,
+            at_ms: 5_000.0,
+            rejoin_at_ms: 10_000.0,
+        };
+        let cfg = hetero_cfg(RoutePolicy::JoinShortestBacklog,
+                             ClockKind::Virtual, Some(drain));
+        let load = LoadGenConfig {
+            rps: 150.0,
+            seconds: 20.0,
+            seed: 42,
+            slo_scale: 3.0,
+            ..Default::default()
+        };
+        let a = run_cluster(&cfg, &load).unwrap();
+        let b = run_cluster(&cfg, &load).unwrap();
+        assert!(a.attempts > 1_000, "trace too small to mean anything");
+        assert_conserved(&a);
+        assert_conserved(&b);
+        assert_eq!(a.metrics.outcomes(), b.metrics.outcomes(),
+                   "virtual cluster runs diverged on the same seed");
+        assert_eq!(a.slots, b.slots);
+        let dispatched = |r: &ClusterReport| -> Vec<u64> {
+            r.per_node.iter().map(|n| n.dispatched).collect()
+        };
+        assert_eq!(dispatched(&a), dispatched(&b));
+        // The drain window was honored and the node came back.
+        assert_eq!(a.drains, 1);
+        assert_eq!(a.rejoins, 1);
+        // The fast node carries the bulk under join-shortest-backlog
+        // (its leaky bucket drains ~9× faster than the Nano's fills).
+        assert!(a.per_node[0].dispatched > a.per_node[2].dispatched,
+                "routing ignored the heterogeneity: {:?}", dispatched(&a));
+        assert!(a.metrics.completed() > 0);
+    }
+
+    /// The drain window really gates routing: draining a node for the
+    /// whole horizon leaves it with zero dispatched requests, and the
+    /// remaining nodes absorb (or edge-shed) the full offered load.
+    #[test]
+    fn virtual_drain_window_stops_dispatch_entirely() {
+        let drain = DrainScenario {
+            node: 0,
+            at_ms: 0.0,
+            rejoin_at_ms: 1e12,
+        };
+        let cfg = hetero_cfg(RoutePolicy::RoundRobin, ClockKind::Virtual,
+                             Some(drain));
+        let load = LoadGenConfig {
+            rps: 60.0,
+            seconds: 5.0,
+            seed: 7,
+            ..Default::default()
+        };
+        let report = run_cluster(&cfg, &load).unwrap();
+        assert_conserved(&report);
+        assert_eq!(report.per_node[0].dispatched, 0,
+                   "router dispatched to a drained node");
+        assert!(report.per_node[1].dispatched > 0);
+        assert!(report.per_node[2].dispatched > 0);
+    }
+
+    /// SLO-aware routing on the virtual arm sheds hopeless requests at
+    /// the edge instead of feeding them to an infeasible node: with ONLY
+    /// a Nano in the cluster (12× slower than the SLOs were budgeted
+    /// for), everything sheds NoFeasibleNode and nothing is dispatched.
+    #[test]
+    fn virtual_slo_aware_sheds_at_the_edge_when_no_node_is_feasible() {
+        let cfg = ClusterConfig {
+            nodes: vec![NodeSpec::new(PlatformSpec::jetson_nano(), 2, 5.0)],
+            policy: RoutePolicy::SloAware,
+            serve: ServeConfig {
+                clock: ClockKind::Virtual,
+                scheduler: SchedulerSpec::Fixed { batch: 4, m_c: 2 },
+                admission: None,
+                ..Default::default()
+            },
+            drain: None,
+        };
+        let load = LoadGenConfig {
+            rps: 40.0,
+            seconds: 5.0,
+            seed: 3,
+            ..Default::default()
+        };
+        let report = run_cluster(&cfg, &load).unwrap();
+        assert!(report.attempts > 0);
+        assert_conserved(&report);
+        assert_eq!(report.router_sheds(), report.attempts,
+                   "infeasible node still received dispatch");
+        assert_eq!(report.metrics.outcomes().len(), 0);
+    }
+
+    /// Closed-loop wall-clock cluster smoke: terminal events from every
+    /// node feed one in-flight loop, and conservation holds at shutdown.
+    #[test]
+    fn closed_loop_wall_cluster_serves_and_conserves() {
+        let cfg = ClusterConfig {
+            nodes: vec![
+                NodeSpec::new(PlatformSpec::xavier_nx(), 2, 1.0),
+                NodeSpec::new(PlatformSpec::xavier_nx(), 2, 3.0),
+            ],
+            policy: RoutePolicy::PowerOfTwoChoices,
+            serve: ServeConfig {
+                clock: ClockKind::Wall,
+                scheduler: SchedulerSpec::Fixed { batch: 4, m_c: 1 },
+                admission: None,
+                queue_capacity: 256,
+                ..Default::default()
+            },
+            drain: None,
+        };
+        let load = LoadGenConfig {
+            seconds: 0.3,
+            seed: 11,
+            mode: LoadMode::Closed { concurrency: 8 },
+            ..Default::default()
+        };
+        let report = run_cluster(&cfg, &load).unwrap();
+        assert!(report.metrics.completed() > 0, "cluster served nothing");
+        assert_conserved(&report);
+        assert_eq!(report.leftover, 0, "drain protocol left requests queued");
+        // Closed loop on the virtual clock is rejected, as single-node.
+        let mut bad = cfg;
+        bad.serve.clock = ClockKind::Virtual;
+        assert!(run_cluster(&bad, &load).is_err());
+    }
+}

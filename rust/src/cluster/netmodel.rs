@@ -1,0 +1,80 @@
+//! Per-node network model for the edge-cluster tier.
+//!
+//! A request routed to a remote node pays the link before any queue does:
+//! the round-trip delay (request out, result back) is charged to the
+//! request's transmission time, which Eq. (2) counts inside end-to-end
+//! latency — so routing to a far node genuinely spends SLO slack, and the
+//! SLO-aware policy prices exactly that trade (a fast-but-far node can
+//! lose to a slower-but-near one).
+//!
+//! The model is deliberately small: a fixed base RTT per node plus an
+//! optional uniform jitter term. Base RTT is what routing feasibility is
+//! priced with (deterministic, so policy decisions are reproducible from
+//! a seed); jitter only perturbs what a dispatched request is charged.
+
+use crate::util::rng::Pcg32;
+
+/// One node's link as seen from the cluster front-end.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetModel {
+    /// Base round-trip time to the node, ms (request + result return).
+    pub rtt_ms: f64,
+    /// Uniform jitter bound, ms: each dispatched request is charged
+    /// `rtt_ms + U[0, jitter_ms)`. Zero (the default) keeps the link
+    /// fully deterministic.
+    pub jitter_ms: f64,
+}
+
+impl NetModel {
+    /// A jitter-free link with the given round-trip time.
+    pub fn fixed(rtt_ms: f64) -> Self {
+        assert!(rtt_ms >= 0.0);
+        NetModel { rtt_ms, jitter_ms: 0.0 }
+    }
+
+    /// Round-trip delay charged to one dispatched request, ms. Draws
+    /// from `rng` only when the link has jitter, so jitter-free
+    /// configurations consume no randomness (routing stays bit-stable
+    /// when jitter is switched off).
+    pub fn delay_ms(&self, rng: &mut Pcg32) -> f64 {
+        if self.jitter_ms > 0.0 {
+            self.rtt_ms + self.jitter_ms * rng.f64()
+        } else {
+            self.rtt_ms
+        }
+    }
+}
+
+impl Default for NetModel {
+    /// A LAN-ish 5 ms round trip, no jitter.
+    fn default() -> Self {
+        NetModel::fixed(5.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_link_charges_base_rtt_without_touching_rng() {
+        let link = NetModel::fixed(8.0);
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(1);
+        assert_eq!(link.delay_ms(&mut a), 8.0);
+        // RNG untouched: both streams still agree.
+        assert_eq!(a.f64().to_bits(), b.f64().to_bits());
+    }
+
+    #[test]
+    fn jitter_stays_in_bounds_and_is_seed_deterministic() {
+        let link = NetModel { rtt_ms: 10.0, jitter_ms: 4.0 };
+        let mut rng = Pcg32::seeded(7);
+        let mut rng2 = Pcg32::seeded(7);
+        for _ in 0..100 {
+            let d = link.delay_ms(&mut rng);
+            assert!((10.0..14.0).contains(&d), "delay {d} out of bounds");
+            assert_eq!(d.to_bits(), link.delay_ms(&mut rng2).to_bits());
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! One edge node of the cluster: a full serving runtime (worker pool,
+//! admission, rebalancer, hot-model replication) on its own platform,
+//! behind its own network link, with a drain/rejoin lifecycle.
+//!
+//! The node boundary deliberately reuses the single-node stack whole: an
+//! [`EdgeNode`] owns a [`Server`] configured with its own
+//! [`PlatformSpec`], so the cluster tier is heterogeneous in drain rate
+//! exactly the way the paper's Table V platforms are — a Nano node really
+//! is ~12× slower per batch than a Xavier NX node, and the router has to
+//! price that.
+//!
+//! Lifecycle: `Active` (router may dispatch) → `begin_drain` moves the
+//! server into a background thread running the existing drain protocol
+//! (stop intake → flush queues → join workers) while the router stops
+//! dispatching → `Drained` once the flushed segment's report is
+//! collected → `rejoin` starts a fresh server incarnation and dispatch
+//! resumes. Every incarnation gets a disjoint request-id window, so
+//! outcome ids stay unique cluster-wide through any number of rejoins.
+
+use crate::metrics::ShedReason;
+use crate::platform::PlatformSpec;
+use crate::serve::worker::ServeEvent;
+use crate::serve::{GaugeSnapshot, ServeConfig, ServeReport, Server};
+use crate::workload::models::ModelId;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+
+use super::netmodel::NetModel;
+
+/// Everything needed to stand up one serving node.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    /// The node's hardware (reuse the Table-V presets —
+    /// [`PlatformSpec::xavier_nx`] / [`PlatformSpec::jetson_tx2`] /
+    /// [`PlatformSpec::jetson_nano`] — for a genuinely heterogeneous
+    /// cluster).
+    pub platform: PlatformSpec,
+    /// Worker threads inside the node's serving pool.
+    pub workers: usize,
+    /// The node's link as seen from the cluster front-end.
+    pub net: NetModel,
+}
+
+impl NodeSpec {
+    /// A node on `platform` with 2 workers behind a fixed-RTT link.
+    pub fn new(platform: PlatformSpec, workers: usize, rtt_ms: f64) -> Self {
+        NodeSpec { platform, workers, net: NetModel::fixed(rtt_ms) }
+    }
+}
+
+/// Router-facing lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    /// Serving; the router may dispatch here.
+    Active,
+    /// Flushing its backlog through the drain protocol; the router must
+    /// not dispatch, but already-accepted requests still complete.
+    Draining,
+    /// Fully drained and stopped; may rejoin.
+    Drained,
+}
+
+/// Width of each (node, incarnation) request-id window: bits 40.. encode
+/// the node, bits 32..40 the incarnation, leaving 2^32 ids per serving
+/// segment.
+const NODE_ID_STRIDE: u64 = 1 << 40;
+const INCARNATION_ID_STRIDE: u64 = 1 << 32;
+
+/// One live (or drained) cluster node.
+pub struct EdgeNode {
+    /// The node's static description.
+    pub spec: NodeSpec,
+    /// Requests the router dispatched here (including any the node's own
+    /// ingress then shed — those are accounted in the node's metrics).
+    pub dispatched: u64,
+    cfg: ServeConfig,
+    state: NodeState,
+    server: Option<Server>,
+    drain_rx: Option<Receiver<ServeReport>>,
+    /// Reports of completed serving segments (one per drain, plus the
+    /// final shutdown).
+    segments: Vec<ServeReport>,
+    events_tx: Option<Sender<ServeEvent>>,
+    node_index: usize,
+    incarnations: u64,
+}
+
+impl EdgeNode {
+    /// Build (but do not start) a node: `base` supplies the shared
+    /// serving knobs (scheduler, admission, queue capacity, rebalance,
+    /// hints); the spec's platform and worker count override it.
+    pub fn new(spec: NodeSpec, base: &ServeConfig, node_index: usize,
+               events_tx: Option<Sender<ServeEvent>>) -> Self {
+        let cfg = ServeConfig {
+            platform: spec.platform.clone(),
+            workers: spec.workers,
+            ..base.clone()
+        };
+        EdgeNode {
+            spec,
+            dispatched: 0,
+            cfg,
+            state: NodeState::Drained,
+            server: None,
+            drain_rx: None,
+            segments: Vec::new(),
+            events_tx,
+            node_index,
+            incarnations: 0,
+        }
+    }
+
+    /// Current lifecycle state.
+    pub fn state(&self) -> NodeState {
+        self.state
+    }
+
+    /// Serving segments completed so far (drains; the live segment is
+    /// not counted until [`EdgeNode::finish`]).
+    pub fn segments_done(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// The per-node trace-mode serving configuration (virtual-clock
+    /// cluster runs drive [`crate::serve::run_trace`] with this).
+    pub fn serve_config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Start (or restart) the node's server. Each incarnation claims a
+    /// fresh request-id window so ids never collide across nodes or
+    /// across a drain/rejoin cycle.
+    pub fn start(&mut self) {
+        assert!(self.server.is_none(), "node already running");
+        self.cfg.request_id_base = (self.node_index as u64 + 1)
+            * NODE_ID_STRIDE
+            + self.incarnations * INCARNATION_ID_STRIDE;
+        self.incarnations += 1;
+        self.server = Some(Server::start(&self.cfg, self.events_tx.clone()));
+        self.state = NodeState::Active;
+    }
+
+    /// Export the node's live gauge snapshot (`None` unless active).
+    pub fn snapshot(&self) -> Option<GaugeSnapshot> {
+        match self.state {
+            NodeState::Active => {
+                self.server.as_ref().map(|s| s.gauge_snapshot())
+            }
+            _ => None,
+        }
+    }
+
+    /// Dispatch one request to the node's ingress. The caller has
+    /// already charged the link delay into `transmission_ms`; rejections
+    /// (admission, backpressure) are typed and accounted in the node's
+    /// own metrics.
+    pub fn dispatch(&mut self, model: ModelId, slo_ms: f64,
+                    transmission_ms: f64) -> Result<u64, ShedReason> {
+        debug_assert_eq!(self.state, NodeState::Active,
+                         "router dispatched to a non-active node");
+        self.dispatched += 1;
+        self.server
+            .as_ref()
+            .expect("active node without a server")
+            .submit(model, slo_ms, transmission_ms)
+    }
+
+    /// Take the node out of the cluster: dispatch stops immediately (the
+    /// state flips to `Draining`), and the server runs the existing drain
+    /// protocol on a background thread — accepted backlog is flushed, not
+    /// dropped. Poll [`EdgeNode::poll_drained`] for completion.
+    pub fn begin_drain(&mut self) {
+        assert_eq!(self.state, NodeState::Active, "can only drain an active node");
+        let server = self.server.take().expect("active node without a server");
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::Builder::new()
+            .name(format!("bcedge-node-drain-{}", self.node_index))
+            .spawn(move || {
+                // A dropped receiver cannot happen before `finish`, which
+                // blocks on this send's result.
+                let _ = tx.send(server.shutdown());
+            })
+            .expect("spawn node drain thread");
+        self.drain_rx = Some(rx);
+        self.state = NodeState::Draining;
+    }
+
+    /// Has an in-progress drain finished? Folds the flushed segment's
+    /// report into the node's accounting when it has. Idempotent; `true`
+    /// once the node is `Drained`.
+    pub fn poll_drained(&mut self) -> bool {
+        match self.state {
+            NodeState::Drained => true,
+            NodeState::Active => false,
+            NodeState::Draining => match self
+                .drain_rx
+                .as_ref()
+                .expect("draining node without a report channel")
+                .try_recv()
+            {
+                Ok(report) => {
+                    self.segments.push(report);
+                    self.drain_rx = None;
+                    self.state = NodeState::Drained;
+                    true
+                }
+                Err(TryRecvError::Empty) => false,
+                Err(TryRecvError::Disconnected) => {
+                    panic!("node drain thread died before reporting")
+                }
+            },
+        }
+    }
+
+    /// Bring a drained node back: a fresh server incarnation starts and
+    /// the router may dispatch again.
+    pub fn rejoin(&mut self) {
+        assert_eq!(self.state, NodeState::Drained,
+                   "can only rejoin a drained node");
+        self.start();
+    }
+
+    /// Stop the node and hand back every serving segment it completed
+    /// (any live server is shut down through the drain protocol; an
+    /// unfinished background drain is waited for). Conservation: the
+    /// segments jointly account every dispatched request as outcome,
+    /// shed, or leftover.
+    pub fn finish(mut self) -> FinishedNode {
+        if let Some(rx) = self.drain_rx.take() {
+            let report = rx.recv().expect("node drain thread died");
+            self.segments.push(report);
+            self.state = NodeState::Drained;
+        }
+        if let Some(server) = self.server.take() {
+            self.segments.push(server.shutdown());
+        }
+        FinishedNode {
+            spec: self.spec,
+            dispatched: self.dispatched,
+            segments: self.segments,
+        }
+    }
+}
+
+/// A stopped node's full accounting, returned by [`EdgeNode::finish`].
+pub struct FinishedNode {
+    /// The node's static description.
+    pub spec: NodeSpec,
+    /// Requests the router dispatched to the node over its lifetime.
+    pub dispatched: u64,
+    /// One report per completed serving segment (≥ 1; a drain/rejoin
+    /// cycle leaves two).
+    pub segments: Vec<ServeReport>,
+}

@@ -1,0 +1,312 @@
+//! Cluster front-end routing: which node serves the next request.
+//!
+//! Castellano et al. and EdgeServing both observe that on heterogeneous
+//! edge clusters, *where* a request lands dominates SLO attainment —
+//! routing sits above admission, resharding, and replication as the
+//! outermost control loop. Four policies are provided, each a pure
+//! function over per-node [`NodeView`]s so the decision logic is
+//! unit-testable without servers or threads:
+//!
+//! * **round-robin** — rotate over active nodes (the heterogeneity-blind
+//!   baseline the SLO-aware policy must beat);
+//! * **join-shortest-backlog** — the node with the least estimated total
+//!   backlog, read from the gauge snapshots each node's workers publish;
+//! * **power-of-two-choices** — sample two distinct active nodes, take
+//!   the less backlogged (classic load-balancing variance reduction at
+//!   O(1) state);
+//! * **slo-aware** — price every candidate's estimated completion
+//!   (network RTT + queue backlog + profiled batch latency) against the
+//!   request's remaining slack; dispatch to the cheapest *feasible* node
+//!   and shed at the edge ([`ShedReason::NoFeasibleNode`]) when no node
+//!   can make the deadline — a hopeless request should not spend a slow
+//!   node's capacity proving it.
+
+use crate::metrics::ShedReason;
+use crate::util::rng::Pcg32;
+
+/// Routing policy selector (see the module docs for semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Rotate over active nodes, heterogeneity-blind.
+    RoundRobin,
+    /// Least estimated total backlog (gauge snapshots).
+    JoinShortestBacklog,
+    /// Two random candidates, keep the less backlogged.
+    PowerOfTwoChoices,
+    /// Cheapest node whose estimated completion fits the slack; shed at
+    /// the edge when none does.
+    SloAware,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI name. Accepts the canonical hyphenated names plus the
+    /// common short forms (`jsb`, `p2c`).
+    pub fn from_name(name: &str) -> Option<RoutePolicy> {
+        match name {
+            "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "join-shortest-backlog" | "jsb" => {
+                Some(RoutePolicy::JoinShortestBacklog)
+            }
+            "power-of-two" | "power-of-two-choices" | "p2c" => {
+                Some(RoutePolicy::PowerOfTwoChoices)
+            }
+            "slo-aware" => Some(RoutePolicy::SloAware),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::JoinShortestBacklog => "join-shortest-backlog",
+            RoutePolicy::PowerOfTwoChoices => "power-of-two",
+            RoutePolicy::SloAware => "slo-aware",
+        }
+    }
+}
+
+/// What the router knows about one node when placing one request. Built
+/// per request by the cluster driver — from live gauge snapshots on the
+/// wall clock, from the deterministic backlog model on the virtual clock
+/// — so the policies themselves never touch a server.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeView {
+    /// Is the node accepting dispatch right now (false while draining or
+    /// drained)?
+    pub active: bool,
+    /// Base round-trip time to the node, ms (deterministic part of the
+    /// link; jitter is charged at dispatch, not priced here).
+    pub rtt_ms: f64,
+    /// Estimated total backlog across the node's whole zoo, ms — the
+    /// load-balancing signal (join-shortest-backlog, power-of-two).
+    pub backlog_ms: f64,
+    /// Estimated completion time for THIS request's model on this node,
+    /// excluding the network: queue-ahead batches × per-batch latency
+    /// (profiled, or the platform's isolated estimate before any profile
+    /// — heterogeneous drain rates show up here).
+    pub service_est_ms: f64,
+}
+
+/// Estimated end-to-end cost of placing the request on `view`'s node, ms.
+pub fn estimated_e2e_ms(view: &NodeView) -> f64 {
+    view.rtt_ms + view.service_est_ms
+}
+
+/// Round-robin over active nodes: the first active node at or after the
+/// cursor, advancing it past the pick. `None` when no node is active.
+pub fn route_round_robin(views: &[NodeView], cursor: &mut usize)
+                         -> Option<usize> {
+    let n = views.len();
+    if n == 0 {
+        return None;
+    }
+    for k in 0..n {
+        let i = (*cursor + k) % n;
+        if views[i].active {
+            *cursor = (i + 1) % n;
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// The active node with the least total backlog; ties go to the lowest
+/// index (deterministic).
+pub fn route_shortest_backlog(views: &[NodeView]) -> Option<usize> {
+    views
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| v.active)
+        .min_by(|(_, a), (_, b)| {
+            a.backlog_ms
+                .partial_cmp(&b.backlog_ms)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .map(|(i, _)| i)
+}
+
+/// Power-of-two-choices: sample two distinct active nodes, keep the one
+/// with less backlog (ties: the first sample). One active node is picked
+/// outright; with exactly two this degenerates to join-shortest-backlog.
+pub fn route_power_of_two(views: &[NodeView], rng: &mut Pcg32)
+                          -> Option<usize> {
+    let active: Vec<usize> = views
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| v.active)
+        .map(|(i, _)| i)
+        .collect();
+    match active.len() {
+        0 => None,
+        1 => Some(active[0]),
+        n => {
+            let a = active[rng.below(n as u32) as usize];
+            let b = loop {
+                let c = active[rng.below(n as u32) as usize];
+                if c != a {
+                    break c;
+                }
+            };
+            if views[b].backlog_ms < views[a].backlog_ms {
+                Some(b)
+            } else {
+                Some(a)
+            }
+        }
+    }
+}
+
+/// SLO-aware placement: among active nodes whose estimated completion
+/// (RTT + service estimate) fits within `slack_ms`, the cheapest one;
+/// ties go to the lowest index. `None` when no node is feasible — the
+/// caller sheds at the edge with [`ShedReason::NoFeasibleNode`].
+pub fn route_slo_aware(views: &[NodeView], slack_ms: f64) -> Option<usize> {
+    views
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| v.active)
+        .map(|(i, v)| (i, estimated_e2e_ms(v)))
+        .filter(|(_, est)| *est <= slack_ms)
+        .min_by(|(_, a), (_, b)| {
+            a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .map(|(i, _)| i)
+}
+
+/// The stateful front-end router: one policy plus the small state it
+/// needs (round-robin cursor, power-of-two sampling stream).
+pub struct Router {
+    policy: RoutePolicy,
+    cursor: usize,
+    rng: Pcg32,
+}
+
+impl Router {
+    /// A router for `policy`; `seed` drives only power-of-two sampling.
+    pub fn new(policy: RoutePolicy, seed: u64) -> Self {
+        Router { policy, cursor: 0, rng: Pcg32::seeded(seed) }
+    }
+
+    /// The policy this router runs.
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Place one request with `slack_ms` of deadline budget left
+    /// (SLO − transmission already spent). `Err(NoFeasibleNode)` when the
+    /// policy finds no candidate — for the non-SLO-aware policies that
+    /// means no node is active at all (e.g. a one-node cluster mid-drain).
+    pub fn route(&mut self, views: &[NodeView], slack_ms: f64)
+                 -> Result<usize, ShedReason> {
+        let pick = match self.policy {
+            RoutePolicy::RoundRobin => {
+                route_round_robin(views, &mut self.cursor)
+            }
+            RoutePolicy::JoinShortestBacklog => route_shortest_backlog(views),
+            RoutePolicy::PowerOfTwoChoices => {
+                route_power_of_two(views, &mut self.rng)
+            }
+            RoutePolicy::SloAware => route_slo_aware(views, slack_ms),
+        };
+        pick.ok_or(ShedReason::NoFeasibleNode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(active: bool, rtt: f64, backlog: f64, service: f64) -> NodeView {
+        NodeView { active, rtt_ms: rtt, backlog_ms: backlog,
+                   service_est_ms: service }
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_inactive() {
+        let views = [view(true, 1.0, 0.0, 10.0),
+                     view(false, 1.0, 0.0, 10.0),
+                     view(true, 1.0, 0.0, 10.0)];
+        let mut cursor = 0;
+        assert_eq!(route_round_robin(&views, &mut cursor), Some(0));
+        assert_eq!(route_round_robin(&views, &mut cursor), Some(2));
+        assert_eq!(route_round_robin(&views, &mut cursor), Some(0));
+        // Nothing active: no pick.
+        let dark = [view(false, 1.0, 0.0, 1.0); 3];
+        assert_eq!(route_round_robin(&dark, &mut cursor), None);
+        assert_eq!(route_round_robin(&[], &mut cursor), None);
+    }
+
+    #[test]
+    fn shortest_backlog_prefers_least_and_breaks_ties_low() {
+        let views = [view(true, 1.0, 40.0, 10.0),
+                     view(true, 1.0, 10.0, 10.0),
+                     view(true, 1.0, 25.0, 10.0)];
+        assert_eq!(route_shortest_backlog(&views), Some(1));
+        // Exact tie: lowest index wins (deterministic).
+        let tied = [view(true, 1.0, 10.0, 10.0),
+                    view(true, 1.0, 10.0, 10.0)];
+        assert_eq!(route_shortest_backlog(&tied), Some(0));
+        // Inactive nodes are invisible even when emptiest.
+        let drained = [view(false, 1.0, 0.0, 10.0),
+                       view(true, 1.0, 99.0, 10.0)];
+        assert_eq!(route_shortest_backlog(&drained), Some(1));
+        assert_eq!(route_shortest_backlog(&[]), None);
+    }
+
+    #[test]
+    fn power_of_two_picks_the_less_loaded_of_its_samples() {
+        let mut rng = Pcg32::seeded(3);
+        // One active node: picked outright.
+        let solo = [view(false, 1.0, 0.0, 1.0), view(true, 1.0, 50.0, 1.0)];
+        assert_eq!(route_power_of_two(&solo, &mut rng), Some(1));
+        // Two active nodes: both are always sampled, so the pick IS the
+        // less backlogged one, every draw.
+        let pair = [view(true, 1.0, 80.0, 1.0), view(true, 1.0, 5.0, 1.0)];
+        for _ in 0..50 {
+            assert_eq!(route_power_of_two(&pair, &mut rng), Some(1));
+        }
+        // Three nodes, one inactive: the inactive one is never sampled.
+        let trio = [view(true, 1.0, 10.0, 1.0),
+                    view(false, 1.0, 0.0, 1.0),
+                    view(true, 1.0, 20.0, 1.0)];
+        for _ in 0..50 {
+            let pick = route_power_of_two(&trio, &mut rng).unwrap();
+            assert_ne!(pick, 1, "sampled a draining node");
+        }
+        assert_eq!(route_power_of_two(&[], &mut rng), None);
+    }
+
+    #[test]
+    fn slo_aware_prices_rtt_plus_service_against_slack() {
+        // Node 0: near but slow (2 + 120 = 122); node 1: far but fast
+        // (30 + 40 = 70); node 2: nearest and fastest but draining.
+        let views = [view(true, 2.0, 0.0, 120.0),
+                     view(true, 30.0, 0.0, 40.0),
+                     view(false, 1.0, 0.0, 10.0)];
+        // 100 ms slack: only node 1 is feasible.
+        assert_eq!(route_slo_aware(&views, 100.0), Some(1));
+        // 200 ms slack: both feasible; the cheaper estimate wins.
+        assert_eq!(route_slo_aware(&views, 200.0), Some(1));
+        // 60 ms slack: nobody can make it — shed at the edge.
+        assert_eq!(route_slo_aware(&views, 60.0), None);
+        // Exact tie on the estimate: lowest index wins.
+        let tied = [view(true, 10.0, 0.0, 40.0), view(true, 20.0, 0.0, 30.0)];
+        assert_eq!(route_slo_aware(&tied, 100.0), Some(0));
+        // One-node cluster: feasible → routed, infeasible → shed.
+        let one = [view(true, 5.0, 0.0, 50.0)];
+        assert_eq!(route_slo_aware(&one, 100.0), Some(0));
+        assert_eq!(route_slo_aware(&one, 40.0), None);
+    }
+
+    #[test]
+    fn router_converts_no_pick_into_typed_shed() {
+        let mut r = Router::new(RoutePolicy::SloAware, 1);
+        let views = [view(true, 50.0, 0.0, 100.0)];
+        assert_eq!(r.route(&views, 500.0), Ok(0));
+        assert_eq!(r.route(&views, 10.0), Err(ShedReason::NoFeasibleNode));
+        let mut rr = Router::new(RoutePolicy::RoundRobin, 1);
+        assert_eq!(rr.route(&[view(false, 1.0, 0.0, 1.0)], 100.0),
+                   Err(ShedReason::NoFeasibleNode));
+    }
+}

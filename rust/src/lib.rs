@@ -26,6 +26,10 @@
 //!   wall clock) with dynamic resharding and hot-model replication,
 //!   drain/shutdown, and the open/closed-loop load generator behind
 //!   `bcedge bench-serve`;
+//! * [`cluster`] — the heterogeneous edge-cluster tier: each node a full
+//!   serving runtime on its own Table-V platform behind its own network
+//!   link, with pluggable SLO-aware front-end routing, edge shedding,
+//!   and a node drain/rejoin lifecycle behind `bcedge bench-cluster`;
 //! * [`profiler`], [`metrics`] — §IV-E performance profiler and experiment
 //!   instrumentation;
 //! * [`nn`], [`util`] — from-scratch substrates (tensor/MLP/Adam, RNG,
@@ -47,6 +51,7 @@ pub mod predictor;
 pub mod profiler;
 pub mod metrics;
 pub mod serve;
+pub mod cluster;
 
 /// Crate version (mirrors `Cargo.toml`).
 pub fn version() -> &'static str {

@@ -1,16 +1,22 @@
 //! `bcedge` — launcher CLI for the BCEdge serving framework.
 //!
 //! Subcommands:
-//!   serve       — serve Poisson traffic (sim or real PJRT backend,
-//!                 single-threaded engine loop)
-//!   bench-serve — drive the CONCURRENT serving runtime with the built-in
-//!                 load generator: multi-worker engine pool behind a
-//!                 bounded ingress with SLO-aware admission control,
-//!                 gauge-driven dynamic resharding, and hot-model
-//!                 replication
-//!   train       — offline SAC training on the platform simulator
-//!   sweep       — Fig. 1 style (batch × concurrency) sweep on the simulator
-//!   info        — print zoo / artifact / platform information
+//!   serve         — serve Poisson traffic (sim or real PJRT backend,
+//!                   single-threaded engine loop)
+//!   bench-serve   — drive the CONCURRENT serving runtime with the
+//!                   built-in load generator: multi-worker engine pool
+//!                   behind a bounded ingress with SLO-aware admission
+//!                   control, gauge-driven dynamic resharding, and
+//!                   hot-model replication
+//!   bench-cluster — drive the HETEROGENEOUS EDGE-CLUSTER tier: several
+//!                   nodes (each a full serving runtime on its own
+//!                   Table-V platform behind its own network link)
+//!                   behind a pluggable SLO-aware router, with an
+//!                   optional mid-run node drain/rejoin
+//!   train         — offline SAC training on the platform simulator
+//!   sweep         — Fig. 1 style (batch × concurrency) sweep on the
+//!                   simulator
+//!   info          — print zoo / artifact / platform information
 //!
 //! Every subcommand's full flag set lives in ONE place: the consolidated
 //! flags table in `rust/ARCHITECTURE.md` (§ "CLI flags"), next to the
@@ -20,15 +26,18 @@
 //! Reported by bench-serve: achieved rps, p50/p99 end-to-end latency, SLO
 //! violation rate over accepted requests, the admission shed rate with
 //! typed reasons, and (live multi-worker) migrations + peak worker
-//! imbalance + replica scale-ups/scale-downs.
+//! imbalance + replica scale-ups/scale-downs. bench-cluster adds the
+//! per-node breakdown (dispatched / completed / violations / sheds) and
+//! the router's edge-shed count.
 //!
 //! Examples:
 //!   bcedge serve --backend sim --rps 30 --seconds 300 --scheduler sac
 //!   bcedge bench-serve --workers 4 --rps 200 --seconds 10
 //!   bcedge bench-serve --clock wall --mode closed --concurrency 32
-//!   bcedge bench-serve --clock wall --workers 2 --rebalance-epoch-ms 50
-//!   bcedge bench-serve --clock wall --workers 4 --rps 400 --max-replicas 2
-//!   bcedge bench-serve --clock wall --no-replication --no-rebalance
+//!   bcedge bench-serve --platform tx2 --rps 60 --seconds 10
+//!   bcedge bench-cluster --nodes xavier-nx:2:2,tx2:2:6,nano:1:12 \
+//!          --policy slo-aware --rps 250 --seconds 5 --slo-scale 3
+//!   bcedge bench-cluster --policy round-robin --drain-node 1
 //!   bcedge train --episodes 100 --out results/sac_policy.json
 //!   bcedge info
 
@@ -55,19 +64,25 @@ fn main() -> anyhow::Result<()> {
     match args.positional().first().map(String::as_str) {
         Some("serve") => serve(&args),
         Some("bench-serve") => bench_serve(&args),
+        Some("bench-cluster") => bench_cluster(&args),
         Some("train") => train(&args),
         Some("sweep") => sweep(&args),
         Some("info") => info(&args),
         _ => {
-            eprintln!("usage: bcedge <serve|bench-serve|train|sweep|info> [options]");
+            eprintln!("usage: bcedge <serve|bench-serve|bench-cluster|train|sweep|info> [options]");
             eprintln!("  serve --backend sim|real --rps N --seconds N \\");
             eprintln!("        --scheduler sac|tac|deeprt|fixed [--policy F] [--no-predictor]");
             eprintln!("  bench-serve --workers N --rps N --seconds N [--clock virtual|wall] \\");
+            eprintln!("        [--platform xavier-nx|tx2|nano|host] \\");
             eprintln!("        --mode open|closed [--concurrency K] --envelope constant|bursty|diurnal \\");
             eprintln!("        --scheduler sac|deeprt|fixed [--no-admission] [--queue-cap N] [--seed S] \\");
             eprintln!("        [--rebalance-epoch-ms N] [--no-rebalance] [--no-gauge-hints] \\");
-            eprintln!("        [--max-replicas N] [--no-replication]");
-            eprintln!("  train --episodes N --rps N --platform nx|tx2|nano --out F");
+            eprintln!("        [--max-replicas N] [--no-replication] [--slo-scale X]");
+            eprintln!("  bench-cluster --nodes PLAT[:WORKERS[:RTT_MS]],... --policy round-robin|\\");
+            eprintln!("        join-shortest-backlog|power-of-two|slo-aware --rps N --seconds N \\");
+            eprintln!("        [--clock wall|virtual] [--mode open|closed] [--slo-scale X] \\");
+            eprintln!("        [--drain-node I] [--drain-at-s T] [--rejoin-at-s T] + bench-serve knobs");
+            eprintln!("  train --episodes N --rps N --platform xavier-nx|tx2|nano --out F");
             eprintln!("  sweep --model yolo");
             eprintln!("  info  [--artifacts DIR]");
             eprintln!("full flags table: rust/ARCHITECTURE.md");
@@ -100,12 +115,21 @@ fn make_scheduler(name: &str, space: &ActionSpace, rng: &mut Pcg32,
     })
 }
 
-fn platform_of(args: &Args) -> PlatformSpec {
-    match args.get_or("platform", "nx") {
-        "nano" => PlatformSpec::jetson_nano(),
+/// Parse one platform name (Table V presets + the calibrated host).
+fn parse_platform(name: &str) -> anyhow::Result<PlatformSpec> {
+    Ok(match name {
+        "nx" | "xavier-nx" => PlatformSpec::xavier_nx(),
         "tx2" => PlatformSpec::jetson_tx2(),
-        _ => PlatformSpec::xavier_nx(),
-    }
+        "nano" => PlatformSpec::jetson_nano(),
+        "host" => PlatformSpec::host_cpu(),
+        other => anyhow::bail!(
+            "unknown platform {other} (xavier-nx|nx|tx2|nano|host)"
+        ),
+    })
+}
+
+fn platform_of(args: &Args) -> anyhow::Result<PlatformSpec> {
+    parse_platform(args.get_or("platform", "nx"))
 }
 
 fn report(m: &bcedge::metrics::Metrics, horizon_ms: f64) {
@@ -133,6 +157,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         args.get_parse("seconds", 60.0).map_err(anyhow::Error::msg)?;
     let backend = args.get_or("backend", "sim");
     let sched = args.get_or("scheduler", "sac").to_string();
+    let platform = platform_of(args)?;
     let horizon_ms = seconds * 1e3;
     let space = ActionSpace::standard();
     let mut rng = Pcg32::seeded(
@@ -144,7 +169,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         action_space: space,
         use_predictor: !args.flag("no-predictor"),
         pad_to_artifacts: backend == "real",
-        max_total_instances: platform_of(args).max_instances,
+        max_total_instances: platform.max_instances,
         learn: true,
         ..Default::default()
     };
@@ -155,7 +180,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     match backend {
         "sim" => {
             let clock = VirtualClock::new();
-            let sim = PlatformSim::new(platform_of(args));
+            let sim = PlatformSim::new(platform);
             let mut engine =
                 Engine::new(SimDispatcher::new(sim, clock), cfg);
             engine.submit(reqs);
@@ -182,42 +207,12 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Drive the concurrent serving runtime with the built-in load generator.
-fn bench_serve(args: &Args) -> anyhow::Result<()> {
-    use bcedge::serve::{self, LoadGenConfig, LoadMode, SchedulerSpec,
-                        ServeConfig};
-    use bcedge::workload::RateEnvelope;
-
-    let workers: usize =
-        args.get_parse("workers", 4).map_err(anyhow::Error::msg)?;
-    let rps: f64 = args.get_parse("rps", 200.0).map_err(anyhow::Error::msg)?;
-    let seconds: f64 =
-        args.get_parse("seconds", 10.0).map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.get_parse("seed", 7u64).map_err(anyhow::Error::msg)?;
-    let mode = match args.get_or("mode", "open") {
-        "open" => LoadMode::Open,
-        "closed" => LoadMode::Closed {
-            concurrency: args
-                .get_parse("concurrency", 16)
-                .map_err(anyhow::Error::msg)?,
-        },
-        other => anyhow::bail!("unknown mode {other}"),
-    };
-    let clock = match (args.get("clock"), mode) {
-        // Closed loop runs on real completions: wall unless overridden.
-        (None, LoadMode::Closed { .. }) => serve::ClockKind::Wall,
-        (None, LoadMode::Open) | (Some("virtual"), _) => {
-            serve::ClockKind::Virtual
-        }
-        (Some("wall"), _) => serve::ClockKind::Wall,
-        (Some(other), _) => anyhow::bail!("unknown clock {other}"),
-    };
-    let envelope = match args.get_or("envelope", "constant") {
-        "constant" => RateEnvelope::Constant,
-        "bursty" => RateEnvelope::bursty(),
-        "diurnal" => RateEnvelope::diurnal(),
-        other => anyhow::bail!("unknown envelope {other}"),
-    };
+/// Shared serving-runtime knobs for bench-serve and bench-cluster:
+/// scheduler, admission, queue capacity, rebalance/replication, gauge
+/// hints. Clock defaults differ per subcommand, so it is a parameter.
+fn serve_config_of(args: &Args, clock: bcedge::serve::ClockKind,
+                   seed: u64) -> anyhow::Result<bcedge::serve::ServeConfig> {
+    use bcedge::serve::{RebalanceConfig, SchedulerSpec, ServeConfig};
     let scheduler = match args.get_or("scheduler", "sac") {
         "sac" => SchedulerSpec::Sac { seed: seed ^ 0x5AC },
         "deeprt" => SchedulerSpec::DeepRt,
@@ -227,14 +222,14 @@ fn bench_serve(args: &Args) -> anyhow::Result<()> {
     let rebalance = if args.flag("no-rebalance") {
         None
     } else {
-        let defaults = bcedge::serve::RebalanceConfig::default();
+        let defaults = RebalanceConfig::default();
         let max_replicas = if args.flag("no-replication") {
             1 // one owner per model: the PR 3 resharding-only behaviour
         } else {
             args.get_parse("max-replicas", defaults.max_replicas)
                 .map_err(anyhow::Error::msg)?
         };
-        Some(bcedge::serve::RebalanceConfig {
+        Some(RebalanceConfig {
             epoch_ms: args
                 .get_parse("rebalance-epoch-ms", defaults.epoch_ms)
                 .map_err(anyhow::Error::msg)?,
@@ -242,10 +237,10 @@ fn bench_serve(args: &Args) -> anyhow::Result<()> {
             ..Default::default()
         })
     };
-    let serve_cfg = ServeConfig {
-        workers,
+    Ok(ServeConfig {
+        workers: args.get_parse("workers", 4).map_err(anyhow::Error::msg)?,
         clock,
-        platform: platform_of(args),
+        platform: platform_of(args)?,
         scheduler,
         admission: if args.flag("no-admission") {
             None
@@ -258,17 +253,184 @@ fn bench_serve(args: &Args) -> anyhow::Result<()> {
         rebalance,
         cluster_hints: !args.flag("no-gauge-hints"),
         ..Default::default()
+    })
+}
+
+/// Shared load-generation knobs (rate, horizon, envelope, client model,
+/// SLO scale).
+fn loadgen_of(args: &Args, rps_default: f64, seconds_default: f64)
+              -> anyhow::Result<bcedge::serve::LoadGenConfig> {
+    use bcedge::serve::{LoadGenConfig, LoadMode};
+    use bcedge::workload::RateEnvelope;
+    let mode = match args.get_or("mode", "open") {
+        "open" => LoadMode::Open,
+        "closed" => LoadMode::Closed {
+            concurrency: args
+                .get_parse("concurrency", 16)
+                .map_err(anyhow::Error::msg)?,
+        },
+        other => anyhow::bail!("unknown mode {other}"),
     };
-    let load = LoadGenConfig { rps, seconds, seed, envelope, mode };
-    println!(
-        "bcedge bench-serve — {} workers, {:?} clock, {:?} mode, \
-         {rps} rps × {seconds}s, admission {}",
-        serve_cfg.workers,
-        clock,
+    let envelope = match args.get_or("envelope", "constant") {
+        "constant" => RateEnvelope::Constant,
+        "bursty" => RateEnvelope::bursty(),
+        "diurnal" => RateEnvelope::diurnal(),
+        other => anyhow::bail!("unknown envelope {other}"),
+    };
+    let slo_scale: f64 =
+        args.get_parse("slo-scale", 1.0).map_err(anyhow::Error::msg)?;
+    if !slo_scale.is_finite() || slo_scale <= 0.0 {
+        anyhow::bail!("--slo-scale must be a positive finite number");
+    }
+    Ok(LoadGenConfig {
+        rps: args.get_parse("rps", rps_default).map_err(anyhow::Error::msg)?,
+        seconds: args
+            .get_parse("seconds", seconds_default)
+            .map_err(anyhow::Error::msg)?,
+        seed: args.get_parse("seed", 7u64).map_err(anyhow::Error::msg)?,
+        envelope,
         mode,
+        slo_scale,
+    })
+}
+
+/// Drive the concurrent serving runtime with the built-in load generator.
+fn bench_serve(args: &Args) -> anyhow::Result<()> {
+    use bcedge::serve::{self, LoadMode};
+
+    let load = loadgen_of(args, 200.0, 10.0)?;
+    let seed = load.seed; // one --seed pins trace AND schedulers
+    let clock = match (args.get("clock"), load.mode) {
+        // Closed loop runs on real completions: wall unless overridden.
+        (None, LoadMode::Closed { .. }) => serve::ClockKind::Wall,
+        (None, LoadMode::Open) | (Some("virtual"), _) => {
+            serve::ClockKind::Virtual
+        }
+        (Some("wall"), _) => serve::ClockKind::Wall,
+        (Some(other), _) => anyhow::bail!("unknown clock {other}"),
+    };
+    let serve_cfg = serve_config_of(args, clock, seed)?;
+    println!(
+        "bcedge bench-serve — {} workers on {}, {:?} clock, {:?} mode, \
+         {} rps × {}s, admission {}",
+        serve_cfg.workers,
+        serve_cfg.platform.name,
+        clock,
+        load.mode,
+        load.rps,
+        load.seconds,
         if serve_cfg.admission.is_some() { "on" } else { "off" },
     );
     let report = serve::loadgen::run(&serve_cfg, &load)
+        .map_err(anyhow::Error::msg)?;
+    report.print();
+    Ok(())
+}
+
+/// Drive the heterogeneous edge-cluster tier: parse the node specs,
+/// stand up one serving runtime per node, route the load-generator
+/// stream through the chosen policy, optionally drain/rejoin a node
+/// mid-run, and print the cluster report.
+fn bench_cluster(args: &Args) -> anyhow::Result<()> {
+    use bcedge::cluster::{self, ClusterConfig, DrainScenario, NodeSpec,
+                          RoutePolicy};
+    use bcedge::serve::ClockKind;
+
+    let load = loadgen_of(args, 200.0, 5.0)?;
+    let seed = load.seed; // one --seed pins trace, schedulers, and router
+    // The cluster tier is live by default (routing reads live gauge
+    // snapshots); the virtual arm is the deterministic trace mode.
+    let clock = match args.get_or("clock", "wall") {
+        "wall" => ClockKind::Wall,
+        "virtual" => ClockKind::Virtual,
+        other => anyhow::bail!("unknown clock {other}"),
+    };
+    let policy = RoutePolicy::from_name(args.get_or("policy", "slo-aware"))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown policy (round-robin|join-shortest-backlog|\
+                 power-of-two|slo-aware)"
+            )
+        })?;
+    // Node spec grammar: PLATFORM[:WORKERS[:RTT_MS]], comma-separated.
+    let nodes: Vec<NodeSpec> = args
+        .get_or("nodes", "xavier-nx:2:2,tx2:2:6,nano:1:12")
+        .split(',')
+        .map(|spec| -> anyhow::Result<NodeSpec> {
+            let mut parts = spec.split(':');
+            let platform = parse_platform(
+                parts.next().filter(|p| !p.is_empty()).ok_or_else(|| {
+                    anyhow::anyhow!("empty node spec in --nodes")
+                })?,
+            )?;
+            let workers: usize = match parts.next() {
+                None => 2,
+                Some(w) => w.parse().map_err(|_| {
+                    anyhow::anyhow!("bad worker count in node spec {spec:?}")
+                })?,
+            };
+            let rtt_ms: f64 = match parts.next() {
+                None => 5.0,
+                Some(r) => r.parse().map_err(|_| {
+                    anyhow::anyhow!("bad RTT in node spec {spec:?}")
+                })?,
+            };
+            if workers == 0 {
+                anyhow::bail!("node spec {spec:?} needs >= 1 worker");
+            }
+            if !rtt_ms.is_finite() || rtt_ms < 0.0 {
+                anyhow::bail!(
+                    "node spec {spec:?} needs a non-negative finite RTT"
+                );
+            }
+            if parts.next().is_some() {
+                anyhow::bail!(
+                    "node spec {spec:?} has too many fields \
+                     (PLATFORM[:WORKERS[:RTT_MS]])"
+                );
+            }
+            Ok(NodeSpec::new(platform, workers, rtt_ms))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let drain = match args.get("drain-node") {
+        None => None,
+        Some(n) => {
+            let node: usize = n.parse().map_err(|_| {
+                anyhow::anyhow!("--drain-node: cannot parse {n:?}")
+            })?;
+            let at_s: f64 = args
+                .get_parse("drain-at-s", 0.4 * load.seconds)
+                .map_err(anyhow::Error::msg)?;
+            let rejoin_s: f64 = args
+                .get_parse("rejoin-at-s", 0.7 * load.seconds)
+                .map_err(anyhow::Error::msg)?;
+            Some(DrainScenario {
+                node,
+                at_ms: at_s * 1e3,
+                rejoin_at_ms: rejoin_s * 1e3,
+            })
+        }
+    };
+    // Per-node template: the node specs override platform/workers, so
+    // --workers and --platform are ignored here in favour of --nodes.
+    let serve_cfg = serve_config_of(args, clock, seed)?;
+    let cfg = ClusterConfig { nodes, policy, serve: serve_cfg, drain };
+    println!(
+        "bcedge bench-cluster — {} nodes, {} routing, {:?} clock, \
+         {:?} mode, {} rps × {}s, slo×{}",
+        cfg.nodes.len(),
+        policy.name(),
+        clock,
+        load.mode,
+        load.rps,
+        load.seconds,
+        load.slo_scale,
+    );
+    for (i, n) in cfg.nodes.iter().enumerate() {
+        println!("  node {i}: {} ×{} workers, rtt {} ms", n.platform.name,
+                 n.workers, n.net.rtt_ms);
+    }
+    let report = cluster::run_cluster(&cfg, &load)
         .map_err(anyhow::Error::msg)?;
     report.print();
     Ok(())
@@ -280,7 +442,7 @@ fn train(args: &Args) -> anyhow::Result<()> {
     let rps: f64 = args.get_parse("rps", 30.0).map_err(anyhow::Error::msg)?;
     let out = args.get_or("out", "results/sac_policy.json");
     let space = ActionSpace::standard();
-    let mut env = SchedEnv::new(space.clone(), rps, platform_of(args));
+    let mut env = SchedEnv::new(space.clone(), rps, platform_of(args)?);
     env.episode_len = 96;
     let mut rng = Pcg32::seeded(0x7EA1);
     let cfg = SacConfig { batch_size: 128, warmup: 256, ..Default::default() };
@@ -303,14 +465,15 @@ fn sweep(args: &Args) -> anyhow::Result<()> {
     use bcedge::runtime::executor::{BatchJob, Dispatcher};
     let model = ModelId::from_name(args.get_or("model", "yolo"))
         .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let platform = platform_of(args)?;
     println!("(batch × concurrency) sweep for {} on sim {}",
-             model.name(), platform_of(args).name);
+             model.name(), platform.name);
     println!("{:>5} {:>5} {:>12} {:>12}", "b", "m_c", "rps", "latency(ms)");
     for b in [1usize, 2, 4, 8, 16, 32, 64, 128] {
         for c in [1usize, 2, 4, 8] {
             let clock = VirtualClock::new();
             let mut d = SimDispatcher::new(
-                PlatformSim::new(platform_of(args)), clock);
+                PlatformSim::new(platform.clone()), clock);
             let jobs: Vec<BatchJob> = (0..c)
                 .map(|_| BatchJob { model, batch: b, n_real: b })
                 .collect();

@@ -18,10 +18,15 @@ pub enum ShedReason {
     DeadlineUnmeetable = 1,
     /// The server is draining; intake is closed.
     Shutdown = 2,
+    /// The cluster router found no node that could meet the request's
+    /// deadline (estimated network RTT + queue backlog + batch latency
+    /// exceeded the remaining slack on every candidate), so the request
+    /// was shed at the edge before ever crossing a node boundary.
+    NoFeasibleNode = 3,
 }
 
 /// Number of [`ShedReason`] variants (sizes the per-reason counters).
-pub const N_SHED_REASONS: usize = 3;
+pub const N_SHED_REASONS: usize = 4;
 
 impl ShedReason {
     pub fn all() -> [ShedReason; N_SHED_REASONS] {
@@ -29,6 +34,7 @@ impl ShedReason {
             ShedReason::QueueFull,
             ShedReason::DeadlineUnmeetable,
             ShedReason::Shutdown,
+            ShedReason::NoFeasibleNode,
         ]
     }
 
@@ -37,6 +43,7 @@ impl ShedReason {
             ShedReason::QueueFull => "queue-full",
             ShedReason::DeadlineUnmeetable => "deadline-unmeetable",
             ShedReason::Shutdown => "shutdown",
+            ShedReason::NoFeasibleNode => "no-feasible-node",
         }
     }
 }

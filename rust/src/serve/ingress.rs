@@ -150,6 +150,57 @@ impl SharedGauges {
     }
 }
 
+/// One coherent export of a server's pool-wide serving state, read
+/// lock-free from the [`SharedGauges`] the workers publish each round.
+/// The cluster router prices candidate nodes from this — the same
+/// numbers the node's own admission fast path reads, so edge-of-cluster
+/// routing and node-local admission can never disagree about what a
+/// queue costs.
+#[derive(Clone, Copy, Debug)]
+pub struct GaugeSnapshot {
+    /// Pool-wide queue depth per model, divided by the model's replica
+    /// count (a replicated queue drains `R`× as fast — the same pricing
+    /// [`Ingress::submit`] applies).
+    pub queue_per_replica: [usize; N_MODELS],
+    /// Estimated per-batch service latency per model at the reference
+    /// batch, ms: the profiled finite-lane mean when any worker has
+    /// served the model, the platform's isolated estimate otherwise —
+    /// so a heterogeneous node's drain rate shows before its first batch.
+    pub est_batch_ms: [f64; N_MODELS],
+    /// Pool-wide estimated backlog per model, ms.
+    pub backlog_ms: [f64; N_MODELS],
+    /// Total estimated backlog across the zoo, ms (join-shortest-backlog
+    /// routing reads this).
+    pub total_backlog_ms: f64,
+    /// Reference batch the estimates are priced at.
+    pub ref_batch: usize,
+}
+
+impl Default for GaugeSnapshot {
+    fn default() -> Self {
+        GaugeSnapshot {
+            queue_per_replica: [0; N_MODELS],
+            est_batch_ms: [f64::NAN; N_MODELS],
+            backlog_ms: [0.0; N_MODELS],
+            total_backlog_ms: 0.0,
+            ref_batch: 1,
+        }
+    }
+}
+
+impl GaugeSnapshot {
+    /// Optimistic completion estimate for one new request of `model`
+    /// queued behind the snapshot's backlog, ms (excluding network):
+    /// `⌈(q_per_replica + 1) / ref_batch⌉ × batch latency` — the
+    /// admission decision's bound, computed from the exported state.
+    pub fn service_est_ms(&self, model: ModelId) -> f64 {
+        let i = model as usize;
+        let batches_ahead =
+            self.queue_per_replica[i] / self.ref_batch.max(1) + 1;
+        batches_ahead as f64 * self.est_batch_ms[i]
+    }
+}
+
 /// Which workers drain each model's intake — the shard map, made dynamic
 /// (PR 3) and replicated (PR 4). Each model maps to a non-empty REPLICA
 /// SET, stored as a bitmask of worker indices: several workers can
@@ -397,7 +448,8 @@ impl Ingress {
                       ownership: Arc<OwnershipTable>,
                       gauges: Arc<SharedGauges>,
                       admission: Option<AdmissionConfig>,
-                      isolated_ref_ms: [f64; N_MODELS]) -> Self {
+                      isolated_ref_ms: [f64; N_MODELS],
+                      first_request_id: u64) -> Self {
         assert_eq!(senders.len(), N_MODELS);
         assert!(!worker_events.is_empty());
         Ingress {
@@ -408,11 +460,38 @@ impl Ingress {
             admission,
             isolated_ref_ms,
             accepting: AtomicBool::new(true),
-            next_id: AtomicU64::new(0),
+            next_id: AtomicU64::new(first_request_id),
             sheds: std::array::from_fn(|_| {
                 std::array::from_fn(|_| AtomicU64::new(0))
             }),
         }
+    }
+
+    /// Export the current pool-wide gauge state (see [`GaugeSnapshot`]).
+    /// Lock-free and approximate — gauges lag the engines by at most one
+    /// scheduling round, exactly like the admission fast path's view.
+    pub fn gauge_snapshot(&self) -> GaugeSnapshot {
+        let ref_batch = self
+            .admission
+            .map(|a| a.ref_batch)
+            .unwrap_or(8)
+            .max(1);
+        let mut snap = GaugeSnapshot { ref_batch, ..Default::default() };
+        for m in ModelId::all() {
+            let i = m as usize;
+            let replicas = self.ownership.replica_count(m);
+            snap.queue_per_replica[i] = self.gauges.queue_len(m) / replicas;
+            let batch = self.gauges.batch_ms(m);
+            snap.est_batch_ms[i] = if batch.is_finite() && batch > 0.0 {
+                batch
+            } else {
+                self.isolated_ref_ms[i]
+            };
+            snap.backlog_ms[i] = self.gauges.backlog_ms(
+                m, self.isolated_ref_ms[i], ref_batch);
+            snap.total_backlog_ms += snap.backlog_ms[i];
+        }
+        snap
     }
 
     /// Submit a live request arriving NOW (`now_ms` from the server's
@@ -535,7 +614,7 @@ mod tests {
         let ownership = Arc::new(OwnershipTable::new_static(1));
         let gauges = Arc::new(SharedGauges::new());
         let ing = Ingress::new(senders, worker_events, ownership, gauges,
-                               admission, [10.0; N_MODELS]);
+                               admission, [10.0; N_MODELS], 0);
         (ing, receivers)
     }
 
@@ -605,7 +684,7 @@ mod tests {
         let gauges = Arc::new(SharedGauges::new());
         let ing = Ingress::new(senders, worker_events, ownership.clone(),
                                gauges, Some(AdmissionConfig::default()),
-                               [10.0; N_MODELS]);
+                               [10.0; N_MODELS], 0);
         // 80 queued at 30 ms/batch, 300 ms budget: 11 batches ≈ 330 ms —
         // a sole owner sheds.
         ing.gauges.publish(ModelId::Res, ownership.owner(ModelId::Res), 80,
@@ -738,6 +817,57 @@ mod tests {
         g.publish(ModelId::Yolo, 0, 0, 40.0);
         assert_eq!(g.queue_len(ModelId::Yolo), 8);
         assert!(g.is_active(ModelId::Yolo));
+    }
+
+    /// The cluster-facing gauge export: queues priced per replica, batch
+    /// estimates falling back to the isolated table before any profile,
+    /// and totals summing over the zoo — the same numbers the admission
+    /// fast path reads.
+    #[test]
+    fn gauge_snapshot_exports_pool_state() {
+        let (ing, _rx) = test_ingress(8, Some(AdmissionConfig::default()));
+        let cold = ing.gauge_snapshot();
+        assert_eq!(cold.ref_batch, 8);
+        assert_eq!(cold.queue_per_replica, [0; N_MODELS]);
+        // Unprofiled models price at the isolated fallback (10 ms here).
+        assert!((cold.est_batch_ms[ModelId::Res as usize] - 10.0).abs()
+                    < 1e-9);
+        assert_eq!(cold.total_backlog_ms, 0.0);
+        // Empty queue: one batch ahead at the fallback latency.
+        assert!((cold.service_est_ms(ModelId::Res) - 10.0).abs() < 1e-9);
+
+        // 16 queued at 24 ms/batch: backlog 16 × 3 = 48 ms, service est
+        // (16/8 + 1) × 24 = 72 ms.
+        ing.gauges.publish(ModelId::Res, 0, 16, 24.0);
+        let hot = ing.gauge_snapshot();
+        assert_eq!(hot.queue_per_replica[ModelId::Res as usize], 16);
+        assert!((hot.est_batch_ms[ModelId::Res as usize] - 24.0).abs()
+                    < 1e-9);
+        assert!((hot.backlog_ms[ModelId::Res as usize] - 48.0).abs() < 1e-9);
+        assert!((hot.total_backlog_ms - 48.0).abs() < 1e-9);
+        assert!((hot.service_est_ms(ModelId::Res) - 72.0).abs() < 1e-9);
+    }
+
+    /// Request-id namespacing: an ingress started at a non-zero id base
+    /// stamps ids from there — how cluster nodes keep outcome ids unique
+    /// pool-wide without coordination.
+    #[test]
+    fn first_request_id_offsets_the_id_space() {
+        let mut senders = Vec::new();
+        let mut _receivers = Vec::new();
+        for _ in 0..N_MODELS {
+            let (tx, rx) = sync_channel(4);
+            senders.push(tx);
+            _receivers.push(rx);
+        }
+        let ing = Ingress::new(senders, vec![Arc::new(WakeEvent::new())],
+                               Arc::new(OwnershipTable::new_static(1)),
+                               Arc::new(SharedGauges::new()), None,
+                               [10.0; N_MODELS], 1u64 << 40);
+        let a = ing.submit(ModelId::Res, 58.0, 1.0, 0.0).unwrap();
+        let b = ing.submit(ModelId::Res, 58.0, 1.0, 1.0).unwrap();
+        assert_eq!(a, 1u64 << 40);
+        assert_eq!(b, (1u64 << 40) + 1);
     }
 
     #[test]

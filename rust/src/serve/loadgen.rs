@@ -16,6 +16,7 @@
 //!   feedback loop needs real completions).
 
 use super::server::{ClockKind, ServeConfig, ServeReport, Server, run_trace};
+use crate::metrics::ShedReason;
 use crate::util::rng::Pcg32;
 use crate::workload::envelope::{RateEnvelope, ShapedGenerator};
 use crate::workload::models::{ModelId, ModelSpec, N_MODELS};
@@ -39,6 +40,9 @@ pub struct LoadGenConfig {
     pub seed: u64,
     pub envelope: RateEnvelope,
     pub mode: LoadMode,
+    /// Multiplier on every request's Table-IV SLO (1.0 = the paper's
+    /// deadlines; see [`ShapedGenerator::with_slo_scale`]).
+    pub slo_scale: f64,
 }
 
 impl Default for LoadGenConfig {
@@ -49,8 +53,39 @@ impl Default for LoadGenConfig {
             seed: 7,
             envelope: RateEnvelope::Constant,
             mode: LoadMode::Open,
+            slo_scale: 1.0,
         }
     }
+}
+
+impl LoadGenConfig {
+    /// Build the config's arrival generator (shared by single-node and
+    /// cluster drivers so the offered load cannot drift between them).
+    pub fn generator(&self) -> ShapedGenerator {
+        ShapedGenerator::new(self.rps, self.envelope, self.seed)
+            .with_slo_scale(self.slo_scale)
+    }
+}
+
+/// One closed-loop launch attempt: round-robin over the zoo, submitting
+/// through `submit` until some model is accepted (`true`) or every model
+/// was refused (`false`). THE closed-loop client model — shared by the
+/// single-node and cluster drivers so the workload (model rotation,
+/// transmission stamp, SLO scaling) cannot drift between them.
+pub(crate) fn launch_round_robin(
+    rng: &mut Pcg32, rr: &mut usize, slo_scale: f64,
+    mut submit: impl FnMut(ModelId, f64, f64) -> Result<u64, ShedReason>,
+) -> bool {
+    for _ in 0..N_MODELS {
+        let model = ModelId::from_index(*rr % N_MODELS);
+        *rr += 1;
+        let spec = ModelSpec::get(model);
+        let tx_ms = 0.5 + 2.5 * rng.f64();
+        if submit(model, spec.slo_ms * slo_scale, tx_ms).is_ok() {
+            return true;
+        }
+    }
+    false
 }
 
 /// Run the load generator against a serving configuration.
@@ -59,9 +94,7 @@ pub fn run(serve: &ServeConfig, load: &LoadGenConfig)
     let horizon_ms = load.seconds * 1e3;
     match (load.mode, serve.clock) {
         (LoadMode::Open, ClockKind::Virtual) => {
-            let mut gen =
-                ShapedGenerator::new(load.rps, load.envelope, load.seed);
-            let trace = gen.generate_horizon(horizon_ms);
+            let trace = load.generator().generate_horizon(horizon_ms);
             Ok(run_trace(serve, trace, horizon_ms))
         }
         (LoadMode::Open, ClockKind::Wall) => Ok(open_loop_wall(
@@ -84,8 +117,7 @@ pub fn run(serve: &ServeConfig, load: &LoadGenConfig)
 /// the offered load burstier — never lighter.
 fn open_loop_wall(serve: &ServeConfig, load: &LoadGenConfig,
                   horizon_ms: f64) -> ServeReport {
-    let mut gen = ShapedGenerator::new(load.rps, load.envelope, load.seed);
-    let trace = gen.generate_horizon(horizon_ms);
+    let trace = load.generator().generate_horizon(horizon_ms);
     let server = Server::start(serve, None);
     for r in trace {
         let wait_ms = r.arrival_ms - server.now_ms();
@@ -108,22 +140,15 @@ fn closed_loop_wall(serve: &ServeConfig, load: &LoadGenConfig,
     let server = Server::start(serve, Some(tx));
     let mut rng = Pcg32::seeded(load.seed);
     let mut rr = 0usize;
-    let launch = |server: &Server, rng: &mut Pcg32, rr: &mut usize| {
-        // Round-robin over the zoo; skip models the ingress refuses.
-        for _ in 0..N_MODELS {
-            let model = ModelId::from_index(*rr % N_MODELS);
-            *rr += 1;
-            let spec = ModelSpec::get(model);
-            let tx_ms = 0.5 + 2.5 * rng.f64();
-            if server.submit(model, spec.slo_ms, tx_ms).is_ok() {
-                return true;
-            }
-        }
-        false
+    let slo_scale = load.slo_scale;
+    // Round-robin over the zoo; skip models the ingress refuses.
+    let launch = |rng: &mut Pcg32, rr: &mut usize| {
+        launch_round_robin(rng, rr, slo_scale,
+                           |m, slo, tx_ms| server.submit(m, slo, tx_ms))
     };
     let mut in_flight = 0usize;
     for _ in 0..concurrency {
-        if launch(&server, &mut rng, &mut rr) {
+        if launch(&mut rng, &mut rr) {
             in_flight += 1;
         }
     }
@@ -132,15 +157,13 @@ fn closed_loop_wall(serve: &ServeConfig, load: &LoadGenConfig,
             // Completed and Shed both free an in-flight slot.
             Ok(_terminal_event) => {
                 in_flight = in_flight.saturating_sub(1);
-                if launch(&server, &mut rng, &mut rr) {
+                if launch(&mut rng, &mut rr) {
                     in_flight += 1;
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 // Top back up (e.g. every model was refusing earlier).
-                while in_flight < concurrency
-                    && launch(&server, &mut rng, &mut rr)
-                {
+                while in_flight < concurrency && launch(&mut rng, &mut rr) {
                     in_flight += 1;
                 }
             }

@@ -45,7 +45,8 @@ pub mod server;
 pub mod worker;
 
 pub use admission::{AdmissionConfig, AdmissionGate};
-pub use ingress::{Ingress, ModelIntake, OwnershipTable, SharedGauges};
+pub use ingress::{GaugeSnapshot, Ingress, ModelIntake, OwnershipTable,
+                  SharedGauges};
 pub use loadgen::{LoadGenConfig, LoadMode};
 pub use server::{ClockKind, RebalanceConfig, SchedulerSpec, ServeConfig,
                  ServeReport, Server, run_trace};

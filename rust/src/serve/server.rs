@@ -156,6 +156,11 @@ pub struct ServeConfig {
     /// (live, multi-worker only — single-worker pools stay bit-identical
     /// to the bare engine regardless).
     pub cluster_hints: bool,
+    /// First request id the live ingress assigns. Single-node serving
+    /// keeps the default `0`; the cluster tier gives every node (and
+    /// every drain/rejoin incarnation) a disjoint id window so outcome
+    /// ids stay unique cluster-wide without coordination.
+    pub request_id_base: u64,
 }
 
 impl Default for ServeConfig {
@@ -170,6 +175,7 @@ impl Default for ServeConfig {
             queue_capacity: 256,
             rebalance: Some(RebalanceConfig::default()),
             cluster_hints: true,
+            request_id_base: 0,
         }
     }
 }
@@ -445,10 +451,18 @@ struct Rebalancer {
     stop: Arc<AtomicBool>,
     wake: Arc<WakeEvent>,
     stats: Arc<RebalanceStats>,
+    /// Post-scale-down migration cooldown, epochs remaining per model. A
+    /// model whose replica set just collapsed to one owner reads, for the
+    /// 1–2 rounds until the ex-replica's flush lands, as if its POOL-WIDE
+    /// backlog sat entirely on that owner — a transient that could bait
+    /// migration planning into moving it (or a sibling) for load that is
+    /// about to redistribute anyway. Sitting the model out of migration
+    /// for one epoch after its scale-down removes that window.
+    migration_cooldown: [u8; N_MODELS],
 }
 
 impl Rebalancer {
-    fn run(self) {
+    fn run(mut self) {
         loop {
             self.wake
                 .wait_timeout(Duration::from_millis(self.cfg.epoch_ms.max(1)));
@@ -459,7 +473,7 @@ impl Rebalancer {
         }
     }
 
-    fn tick(&self) {
+    fn tick(&mut self) {
         let workers = self.worker_events.len().min(MAX_POOL);
         let mut backlog = [[0.0f64; MAX_POOL]; N_MODELS];
         let mut model_total = [0.0f64; N_MODELS];
@@ -481,9 +495,16 @@ impl Rebalancer {
             // each replica's share lands in its own lane of the
             // worker totals below. Pinning per model keeps migration
             // alive for the rest of the zoo even while one model stays
-            // replicated for a long stretch.
+            // replicated for a long stretch. A just-collapsed set stays
+            // pinned one epoch longer (`migration_cooldown`): until the
+            // ex-replica's flush lands, the model's backlog transiently
+            // reads as all-on-owner.
             active[i] = self.gauges.is_active(m)
-                && replica_mask[i].count_ones() <= 1;
+                && replica_mask[i].count_ones() <= 1
+                && self.migration_cooldown[i] == 0;
+        }
+        for c in self.migration_cooldown.iter_mut() {
+            *c = c.saturating_sub(1);
         }
         let mut worker_total = [0.0f64; MAX_POOL];
         for per_worker in backlog.iter() {
@@ -531,7 +552,7 @@ impl Rebalancer {
 
     /// Commit one scaling decision to the table and wake every affected
     /// worker so handoffs start immediately.
-    fn apply_scaling(&self, action: ScaleAction) {
+    fn apply_scaling(&mut self, action: ScaleAction) {
         match action {
             ScaleAction::Up { model, worker } => {
                 let m = ModelId::from_index(model);
@@ -544,6 +565,10 @@ impl Rebalancer {
             ScaleAction::Down { model, worker } => {
                 let m = ModelId::from_index(model);
                 if self.ownership.remove_replica(m, worker).is_some() {
+                    // Sit the model out of the NEXT epoch's migration
+                    // planning: its pool-wide backlog reads as all-on-
+                    // owner until this flush lands.
+                    self.migration_cooldown[model] = 1;
                     // The removed worker flushes its share out...
                     self.worker_events[worker].notify();
                     // ...and the survivors pick it up.
@@ -784,6 +809,7 @@ impl Server {
                     stop: rebalance_stop.clone(),
                     wake: rebalance_wake.clone(),
                     stats: rebalance_stats.clone(),
+                    migration_cooldown: [0; N_MODELS],
                 };
                 Some(
                     std::thread::Builder::new()
@@ -795,7 +821,8 @@ impl Server {
             _ => None,
         };
         let ingress = Ingress::new(senders, worker_events, ownership.clone(),
-                                   gauges, cfg.admission, isolated_ref_ms);
+                                   gauges, cfg.admission, isolated_ref_ms,
+                                   cfg.request_id_base);
         Server {
             ingress,
             handles,
@@ -822,6 +849,15 @@ impl Server {
                   -> Result<u64, ShedReason> {
         self.ingress
             .submit(model, slo_ms, transmission_ms, self.clock.now_ms())
+    }
+
+    /// Export the pool-wide gauge state the workers publish each round
+    /// (queues priced per replica, profiled-or-isolated batch estimates,
+    /// backlog totals). The cluster router reads this per node to price
+    /// routing candidates — the same numbers the node's own admission
+    /// fast path uses.
+    pub fn gauge_snapshot(&self) -> super::ingress::GaugeSnapshot {
+        self.ingress.gauge_snapshot()
     }
 
     /// Shard migrations performed so far (live observability).
@@ -1232,6 +1268,70 @@ mod tests {
         assert_eq!(migrate_plan(&with_sibling, &all_active, &owner, 2,
                                   1.5, 25.0),
                    Some((3, 0)));
+    }
+
+    /// Post-scale-down migration cooldown (ROADMAP PR 4 follow-up): the
+    /// epoch right after a model's replica set collapses, its pool-wide
+    /// backlog transiently reads as all-on-owner — the controller must
+    /// not let migration planning act on that model until the flush
+    /// lands. Drives the Rebalancer's tick directly (no threads).
+    #[test]
+    fn scale_down_cooldown_pins_migration_for_one_epoch() {
+        let gauges = Arc::new(SharedGauges::new());
+        let ownership = Arc::new(OwnershipTable::new_static(2));
+        let mut reb = Rebalancer {
+            cfg: RebalanceConfig {
+                epoch_ms: 1_000,
+                ratio: 1.2,
+                min_gap_ms: 10.0,
+                max_replicas: 2,
+                // Keep the scale-UP arm out of the way: this test is
+                // about what happens after a scale-DOWN.
+                scale_up_backlog_ms: 1e9,
+                scale_down_backlog_ms: 30.0,
+            },
+            gauges: gauges.clone(),
+            ownership: ownership.clone(),
+            worker_events: vec![Arc::new(WakeEvent::new()),
+                                Arc::new(WakeEvent::new())],
+            isolated_ref_ms: [10.0; N_MODELS],
+            ref_batch: 8,
+            stop: Arc::new(AtomicBool::new(false)),
+            wake: Arc::new(WakeEvent::new()),
+            stats: Arc::new(RebalanceStats::default()),
+            migration_cooldown: [0; N_MODELS],
+        };
+        // Yolo replicated on both workers with a subsided backlog
+        // (10 + 5 = 15 ms < the 30 ms scale-down trigger).
+        assert!(ownership.add_replica(ModelId::Yolo, 1).is_some());
+        gauges.publish(ModelId::Yolo, 0, 8, f64::NAN);
+        gauges.publish(ModelId::Yolo, 1, 4, f64::NAN);
+        reb.tick();
+        assert_eq!(ownership.replica_count(ModelId::Yolo), 1,
+                   "subsided set should have collapsed");
+        assert_eq!(ownership.scale_downs(), 1);
+        assert_eq!(ownership.owner(ModelId::Yolo), 0);
+
+        // The very next epoch, yolo's whole backlog (the ex-replica's
+        // share included) reads as on worker 0, alongside sibling res —
+        // a spread the planner would normally fix by moving yolo. The
+        // cooldown pins yolo, and with only one other active model on
+        // the hot worker there is nothing to decouple: no migration.
+        gauges.publish(ModelId::Yolo, 0, 80, 10.0); // 100 ms backlog
+        gauges.publish(ModelId::Yolo, 1, 0, f64::NAN);
+        gauges.publish(ModelId::Res, 0, 80, 10.0); // 100 ms backlog
+        reb.tick();
+        assert_eq!(ownership.migrations(), 0,
+                   "migrated during the post-scale-down cooldown");
+        assert_eq!(ownership.owner(ModelId::Yolo), 0);
+
+        // One epoch later the cooldown has expired; the same gauges now
+        // trigger hot-model isolation (res dominates half the worker's
+        // backlog) and yolo is migratable again.
+        reb.tick();
+        assert_eq!(ownership.migrations(), 1,
+                   "cooldown must expire after one epoch");
+        assert_eq!(ownership.owner(ModelId::Yolo), 1);
     }
 
     /// Tentpole conservation pin: under aggressive rebalancing epochs and

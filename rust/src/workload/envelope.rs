@@ -80,6 +80,11 @@ pub struct ShapedGenerator {
     pub envelope: RateEnvelope,
     /// Per-model mixing weights (normalized internally).
     pub mix: [f64; N_MODELS],
+    /// Multiplier on every request's Table-IV SLO (1.0 = the paper's
+    /// deadlines). SLO-tightness is its own experiment axis (Fig. 15);
+    /// heterogeneous-cluster runs loosen it so slower platforms are
+    /// feasible for part of the zoo instead of none of it.
+    pub slo_scale: f64,
     next_id: u64,
     now_ms: f64,
     rng: Pcg32,
@@ -96,6 +101,7 @@ impl ShapedGenerator {
             rps,
             envelope,
             mix: [1.0; N_MODELS],
+            slo_scale: 1.0,
             next_id: 0,
             now_ms: 0.0,
             rng: Pcg32::seeded(seed),
@@ -110,6 +116,15 @@ impl ShapedGenerator {
         for &m in models {
             self.mix[m as usize] = 1.0;
         }
+        self
+    }
+
+    /// Scale every generated request's SLO by `scale` (> 0). Does not
+    /// perturb the RNG stream: a scaled run sees the same arrivals,
+    /// models, and transmission stamps as an unscaled one.
+    pub fn with_slo_scale(mut self, scale: f64) -> Self {
+        assert!(scale > 0.0);
+        self.slo_scale = scale;
         self
     }
 
@@ -151,8 +166,10 @@ impl ShapedGenerator {
             }
             // Same model-mix + transmission stamping as PoissonGenerator
             // (shared helper, so the request model cannot drift).
-            return stamp_request(&mut self.rng, &self.mix, &mut self.next_id,
-                                 self.now_ms);
+            let mut r = stamp_request(&mut self.rng, &self.mix,
+                                      &mut self.next_id, self.now_ms);
+            r.slo_ms *= self.slo_scale;
+            return r;
         }
     }
 
@@ -273,6 +290,26 @@ mod tests {
             // A different seed must diverge (the stream is genuinely
             // seed-driven, not constant).
             assert_ne!(a, gen(43), "{envelope:?} ignores its seed");
+        }
+    }
+
+    /// SLO scaling stretches deadlines without touching the arrival
+    /// stream: same ids, times, models, and transmission stamps.
+    #[test]
+    fn slo_scale_stretches_deadlines_only() {
+        let base = ShapedGenerator::new(50.0, RateEnvelope::Constant, 13)
+            .generate_horizon(10_000.0);
+        let scaled = ShapedGenerator::new(50.0, RateEnvelope::Constant, 13)
+            .with_slo_scale(3.0)
+            .generate_horizon(10_000.0);
+        assert_eq!(base.len(), scaled.len());
+        for (a, b) in base.iter().zip(&scaled) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.arrival_ms.to_bits(), b.arrival_ms.to_bits());
+            assert_eq!(a.transmission_ms.to_bits(),
+                       b.transmission_ms.to_bits());
+            assert!((b.slo_ms - 3.0 * a.slo_ms).abs() < 1e-9);
         }
     }
 
