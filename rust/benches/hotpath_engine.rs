@@ -1,7 +1,7 @@
 //! Hot-path benchmark for the scheduling engine (perf PR #1) — the
 //! trajectory anchor for every future perf PR.
 //!
-//! Three sections, all on the shared `util::bench` harness:
+//! Four sections, all on the shared `util::bench` harness:
 //!
 //! 1. **sim serving** — rounds/sec and µs/decision for the full engine
 //!    loop (SAC learning on, predictor on) at three offered loads;
@@ -13,12 +13,19 @@
 //!    binary — including the PR #2 finishes: `step_into`'s caller-owned
 //!    outcome buffer and the predictor's scratch predict/train paths;
 //! 3. **SAC update step** — µs per `update_batch` on the paper's network
-//!    shape, plus the allocating fwd+bwd core it replaced.
+//!    shape, plus the allocating fwd+bwd core it replaced;
+//! 4. **router throughput** — front-end routing decisions/sec against a
+//!    gossiped 12-node [`ClusterView`] at 1/4/16 router shards, with the
+//!    deduplicating result cache off and on, while a publisher thread
+//!    keeps re-publishing slots (the contention the sharded design must
+//!    shrug off: per-decision cost should stay flat as shards grow).
 //!
 //! Writes `BENCH_hotpath.json` at the repo root (falling back to the
 //! crate root when run elsewhere). Compare across commits by re-running
 //! `cargo bench --bench hotpath_engine` on each.
 
+use bcedge::cluster::{digest_for, CacheConfig, CacheLookup, ClusterView,
+                      NodeView, ResultCache, RoutePolicy, Router, ViewReader};
 use bcedge::coordinator::baselines::FixedScheduler;
 use bcedge::coordinator::queue::ModelQueue;
 use bcedge::coordinator::sac_sched;
@@ -33,6 +40,7 @@ use bcedge::rl::env::{Agent, Transition};
 use bcedge::rl::sac::{DiscreteSac, SacConfig};
 use bcedge::rl::ActionSpace;
 use bcedge::runtime::executor::SimDispatcher;
+use bcedge::serve::GaugeSnapshot;
 use bcedge::util::bench::{banner, time_fn};
 use bcedge::util::json::{arr, num, obj, s, Json};
 use bcedge::util::rng::Pcg32;
@@ -54,6 +62,94 @@ fn serving_run(rps_per_model: f64, horizon_ms: f64) -> (u64, f64) {
     let t0 = std::time::Instant::now();
     let slots = engine.run(&mut sched, horizon_ms);
     (slots, t0.elapsed().as_secs_f64())
+}
+
+/// Publish every slot of `view` active with heterogeneous backlogs, as
+/// the gossip thread does in `run_cluster`.
+fn publish_synthetic(view: &ClusterView, t_ms: f64) {
+    for i in 0..view.len() {
+        let mut g = GaugeSnapshot::default();
+        g.total_backlog_ms = 7.0 * i as f64;
+        for e in g.est_batch_ms.iter_mut() {
+            *e = 10.0 + i as f64;
+        }
+        view.publish(i, true, g, t_ms);
+    }
+}
+
+/// One router-throughput run: `shards` front-end shards each draining
+/// `total / shards` requests against a live gossiped `view` (a publisher
+/// thread keeps bumping epochs underneath), with the result cache
+/// optionally in front. Returns (wall seconds, requests, cache-served).
+fn router_run(view: &ClusterView, shards: usize, cache: Option<&ResultCache>,
+              total: u64) -> (f64, u64, u64) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let per_shard = total / shards as u64;
+    let stop = AtomicBool::new(false);
+    let model = ModelId::Res;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        let publisher = scope.spawn(|| {
+            let mut tick = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                tick += 1;
+                publish_synthetic(view, tick as f64);
+                std::thread::sleep(std::time::Duration::from_micros(500));
+            }
+        });
+        let workers: Vec<_> = (0..shards)
+            .map(|s| {
+                scope.spawn(move || {
+                    let mut reader = ViewReader::new(view);
+                    let mut router = Router::with_stream(
+                        RoutePolicy::PowerOfTwoChoices, 0xBE_7C, s as u64);
+                    let mut views = Vec::with_capacity(view.len());
+                    for j in 0..per_shard {
+                        let idx = s as u64 * per_shard + j;
+                        let mut lead = None;
+                        if let Some(c) = cache {
+                            let digest = digest_for(0xD16, idx, 0.5);
+                            match c.lookup(model, digest, idx as f64) {
+                                CacheLookup::Hit
+                                | CacheLookup::Coalesced => continue,
+                                CacheLookup::Lead => lead = Some(digest),
+                            }
+                        }
+                        reader.sync(view);
+                        views.clear();
+                        for n in 0..reader.len() {
+                            let p = reader.get(n);
+                            views.push(NodeView {
+                                active: p.active,
+                                rtt_ms: 1.0 + n as f64,
+                                backlog_ms: p.gauges.total_backlog_ms,
+                                service_est_ms: p.gauges
+                                    .service_est_ms(model),
+                            });
+                        }
+                        let pick = router.route(&views, 1e9);
+                        std::hint::black_box(&pick);
+                        if let (Some(c), Some(digest), Ok(_)) =
+                            (cache, lead, pick)
+                        {
+                            // Fill immediately: the steady state where
+                            // popular digests are resident.
+                            c.commit_leader(model, digest, idx);
+                            c.on_completed(idx, idx as f64);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        publisher.join().unwrap();
+    });
+    let requests = per_shard * shards as u64;
+    let served = cache.map_or(0, |c| c.stats().served());
+    (t0.elapsed().as_secs_f64(), requests, served)
 }
 
 fn main() {
@@ -323,6 +419,67 @@ fn main() {
             ("sac_update_speedup_vs_seed",
              num(t_update_seed.mean_us / t_update.mean_us.max(1e-9))),
             ("sac_act_us", num(t_act.mean_us)),
+        ]),
+    ));
+
+    // ---------------------------------------------------------------
+    // 4. Sharded front-end routing throughput (PR #6): decisions/sec
+    //    from a gossiped 12-node view at 1/4/16 shards, cache off/on.
+    //    The sharded design's whole claim is that per-request cost
+    //    stays flat as shards grow (no shared locks on the serving
+    //    path); the flatness ratio below is that claim, measured.
+    // ---------------------------------------------------------------
+    banner("sharded front-end routing (gossiped 12-node view, p2c)");
+    const FE_NODES: usize = 12;
+    const FE_REQUESTS: u64 = 1 << 20;
+    let fe_view = ClusterView::new(FE_NODES);
+    publish_synthetic(&fe_view, 0.0);
+    let mut sweep = Vec::new();
+    let mut thr_uncached = std::collections::HashMap::new();
+    for shards in [1usize, 4, 16] {
+        for cached in [false, true] {
+            let cache = cached.then(|| {
+                ResultCache::new(CacheConfig {
+                    ttl_ms: 1e9,
+                    capacity: 65_536,
+                })
+            });
+            let (wall_s, requests, served) =
+                router_run(&fe_view, shards, cache.as_ref(), FE_REQUESTS);
+            let rps = requests as f64 / wall_s.max(1e-9);
+            let ns_per_req = wall_s * 1e9 / requests.max(1) as f64;
+            if !cached {
+                thr_uncached.insert(shards, rps);
+            }
+            println!(
+                "{shards:>3} shard(s)  cache {}  {requests:>8} reqs  \
+                 {rps:>12.0} req/s  {ns_per_req:>8.1} ns/req  \
+                 {served:>7} cache-served",
+                if cached { "on " } else { "off" }
+            );
+            sweep.push(obj(vec![
+                ("shards", num(shards as f64)),
+                ("cache", s(if cached { "on" } else { "off" })),
+                ("requests", num(requests as f64)),
+                ("requests_per_sec", num(rps)),
+                ("ns_per_request", num(ns_per_req)),
+                ("cache_served", num(served as f64)),
+            ]));
+        }
+    }
+    // Aggregate throughput at 16 shards over 1 shard, cache off. >= ~1
+    // means the serving path added no shared-state penalty; > 1 is the
+    // parallel speedup the runner's cores allow.
+    let flatness = thr_uncached.get(&16).copied().unwrap_or(0.0)
+        / thr_uncached.get(&1).copied().unwrap_or(1.0).max(1e-9);
+    println!("throughput ratio 16/1 shards (cache off): {flatness:.2}x");
+    sections.push((
+        "router_throughput",
+        obj(vec![
+            ("nodes", num(FE_NODES as f64)),
+            ("requests_per_config", num(FE_REQUESTS as f64)),
+            ("sweep", arr(sweep)),
+            ("throughput_ratio_16_over_1", num(flatness)),
         ]),
     ));
 

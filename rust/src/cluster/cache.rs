@@ -1,0 +1,546 @@
+//! Deduplicating result cache in front of the cluster router: TTL'd
+//! results plus single-flight coalescing of identical in-flight work.
+//!
+//! Edge inference traffic repeats: the same frame crop, the same query
+//! embedding, the same sensor window arrives at many clients within a
+//! short span. Since the paper charges transmission/RTT into the
+//! end-to-end budget (Eq. 2), a front-end cache hit is the cheapest
+//! possible SLO win — it spends *zero* slack and zero node capacity.
+//! CDN-style edge stacks put exactly this in front of their routers;
+//! this module is that layer for `bench-cluster`.
+//!
+//! Keyed by `(model, input_digest)`. Three outcomes per lookup:
+//!
+//! * **Hit** — a fresh result (within TTL of its fill) is served
+//!   instantly; the request never touches the router or any queue.
+//! * **Coalesced** — an identical request is already in flight; this one
+//!   joins the leader's outcome (single-flight). One upstream dispatch
+//!   serves N waiters.
+//! * **Lead** — no usable entry; the caller routes upstream as usual and
+//!   registers the dispatched request id so the completion event fills
+//!   the entry.
+//!
+//! Conservation: cache-served requests (hits + coalesced) are a third
+//! terminal disposition next to node outcomes and sheds, so the cluster
+//! identity extends to
+//! `outcomes + sheds + cache_served + leftover == attempts` and
+//! `dispatched + router_sheds + cache_served == attempts`.
+//!
+//! Two implementations, one per clock arm, sharing [`CacheStats`]:
+//! [`ResultCache`] is sharded and thread-safe for the live wall-clock
+//! driver (per-shard mutexes, atomic counters, a pending-id map filled
+//! by the completion event stream); [`VirtualCache`] is single-threaded
+//! and deterministic for the virtual arm, modeling the leader's fill
+//! time from the same backlog estimate the router prices with.
+
+use crate::util::rng::Pcg32;
+use crate::workload::models::ModelId;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Front-end cache knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// How long a filled result stays servable, ms. Also bounds how long
+    /// an in-flight leader may be coalesced onto before it is presumed
+    /// lost (shed upstream) and a new leader is elected.
+    pub ttl_ms: f64,
+    /// Max resident entries (FIFO eviction past this).
+    pub capacity: usize,
+}
+
+/// What one lookup decided (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheLookup {
+    /// Fresh result present: served instantly, zero slack spent.
+    Hit,
+    /// Identical request in flight: coalesced onto the leader's outcome.
+    Coalesced,
+    /// Nothing usable: the caller leads a fill (routes upstream).
+    Lead,
+}
+
+/// Cache disposition counters, folded into the cluster report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from a fresh Ready entry.
+    pub hits: u64,
+    /// Lookups coalesced onto an in-flight leader (single-flight).
+    pub coalesced: u64,
+    /// Lookups that found nothing and led a fill.
+    pub misses: u64,
+    /// Ready entries found TTL-expired at lookup (the request returned
+    /// to routing and re-led).
+    pub stale: u64,
+    /// In-flight leaders presumed lost (no completion within TTL —
+    /// upstream shed or drain); the waiter re-led.
+    pub orphaned: u64,
+    /// Entries evicted by the capacity bound.
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Requests the cache terminated (never reached the router):
+    /// the `cache_served` term of the conservation identity.
+    pub fn served(&self) -> u64 {
+        self.hits + self.coalesced
+    }
+
+    /// Hit rate over all lookups (served / looked-up).
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.served() + self.misses + self.stale + self.orphaned;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.served() as f64 / lookups as f64
+        }
+    }
+
+    /// Fold another shard's counters into this one.
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.coalesced += other.coalesced;
+        self.misses += other.misses;
+        self.stale += other.stale;
+        self.orphaned += other.orphaned;
+        self.evictions += other.evictions;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic input digests
+// ---------------------------------------------------------------------
+
+/// Digests drawn from this many "popular" repeated inputs per model.
+pub const REPEAT_POOL: u32 = 64;
+
+/// Deterministic input digest for trace request `index`: with
+/// probability `repeat_fraction` the request carries one of
+/// [`REPEAT_POOL`] popular digests (cacheable repeats); otherwise a
+/// unique digest no other request shares. Drawn from a PCG stream keyed
+/// by `index` itself, so the digest depends only on `(seed, index)` —
+/// never on which router shard handles the request — preserving the
+/// virtual arm's bit-determinism for any fixed `(seed, shards)`.
+pub fn digest_for(seed: u64, index: u64, repeat_fraction: f64) -> u64 {
+    const UNIQUE_BASE: u64 = 1 << 48; // disjoint from the popular pool
+    if repeat_fraction <= 0.0 {
+        return UNIQUE_BASE | index;
+    }
+    let mut rng = Pcg32::new(seed ^ 0xD1_6E57, index);
+    if rng.f64() < repeat_fraction {
+        u64::from(rng.below(REPEAT_POOL))
+    } else {
+        UNIQUE_BASE | index
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live (wall-clock) cache: sharded, thread-safe, single-flight
+// ---------------------------------------------------------------------
+
+type Key = (usize, u64); // (model index, digest)
+
+#[derive(Clone, Copy, Debug)]
+enum EntryState {
+    /// A leader is upstream; `since_ms` bounds how long waiters coalesce.
+    InFlight { since_ms: f64 },
+    /// Result landed at `filled_ms`; servable until `filled_ms + ttl`.
+    Ready { filled_ms: f64 },
+}
+
+struct CacheShard {
+    map: HashMap<Key, EntryState>,
+    /// Insertion order for FIFO capacity eviction.
+    order: VecDeque<Key>,
+}
+
+/// Number of independent lock shards — router shards contend only when
+/// they touch the same digest neighborhood, not on every lookup.
+const CACHE_SHARDS: usize = 16;
+
+/// The live, thread-safe front-end cache (see module docs).
+pub struct ResultCache {
+    ttl_ms: f64,
+    capacity_per_shard: usize,
+    shards: Vec<Mutex<CacheShard>>,
+    /// Dispatched leader request id → cache key, resolved by the
+    /// completion event stream.
+    pending: Mutex<HashMap<u64, Key>>,
+    hits: AtomicU64,
+    coalesced: AtomicU64,
+    misses: AtomicU64,
+    stale: AtomicU64,
+    orphaned: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ResultCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        ResultCache {
+            ttl_ms: cfg.ttl_ms.max(0.0),
+            capacity_per_shard: (cfg.capacity / CACHE_SHARDS).max(1),
+            shards: (0..CACHE_SHARDS)
+                .map(|_| {
+                    Mutex::new(CacheShard {
+                        map: HashMap::new(),
+                        order: VecDeque::new(),
+                    })
+                })
+                .collect(),
+            pending: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stale: AtomicU64::new(0),
+            orphaned: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(key: &Key) -> usize {
+        // Digest low bits spread uniformly (PCG output / unique index).
+        (key.1 as usize ^ key.0) % CACHE_SHARDS
+    }
+
+    /// Decide one request's disposition at `now_ms`. A `Lead` return has
+    /// already installed the in-flight placeholder (single-flight is
+    /// committed *atomically with the lookup* — two racing identical
+    /// requests cannot both lead). The leader must follow up with
+    /// [`ResultCache::commit_leader`] (dispatch accepted) or
+    /// [`ResultCache::abort_leader`] (dispatch refused).
+    pub fn lookup(&self, model: ModelId, digest: u64, now_ms: f64)
+                  -> CacheLookup {
+        let key = (model as usize, digest);
+        let mut shard = self.shards[Self::shard_of(&key)].lock().unwrap();
+        match shard.map.get(&key).copied() {
+            Some(EntryState::Ready { filled_ms })
+                if now_ms <= filled_ms + self.ttl_ms =>
+            {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                CacheLookup::Hit
+            }
+            Some(EntryState::Ready { .. }) => {
+                // Expired: this request re-leads a refill in place.
+                self.stale.fetch_add(1, Ordering::Relaxed);
+                shard.map.insert(key, EntryState::InFlight { since_ms: now_ms });
+                CacheLookup::Lead
+            }
+            Some(EntryState::InFlight { since_ms })
+                if now_ms <= since_ms + self.ttl_ms =>
+            {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                CacheLookup::Coalesced
+            }
+            Some(EntryState::InFlight { .. }) => {
+                // The leader never completed within TTL — it was shed or
+                // lost upstream (`ServeEvent::Shed` carries no id, so
+                // timeout is the only safe signal). Elect a new leader.
+                self.orphaned.fetch_add(1, Ordering::Relaxed);
+                shard.map.insert(key, EntryState::InFlight { since_ms: now_ms });
+                CacheLookup::Lead
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                shard.map.insert(key, EntryState::InFlight { since_ms: now_ms });
+                shard.order.push_back(key);
+                if shard.order.len() > self.capacity_per_shard {
+                    if let Some(old) = shard.order.pop_front() {
+                        if shard.map.remove(&old).is_some() {
+                            self.evictions.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                CacheLookup::Lead
+            }
+        }
+    }
+
+    /// The leader's dispatch was accepted upstream as request `id`: the
+    /// completion event for `id` will fill the entry.
+    pub fn commit_leader(&self, model: ModelId, digest: u64, id: u64) {
+        self.pending.lock().unwrap().insert(id, (model as usize, digest));
+    }
+
+    /// The leader's dispatch was refused (router or node shed): drop the
+    /// in-flight placeholder so the next identical request leads afresh
+    /// instead of waiting out the orphan TTL.
+    pub fn abort_leader(&self, model: ModelId, digest: u64) {
+        let key = (model as usize, digest);
+        let mut shard = self.shards[Self::shard_of(&key)].lock().unwrap();
+        if let Some(EntryState::InFlight { .. }) = shard.map.get(&key) {
+            shard.map.remove(&key);
+        }
+    }
+
+    /// A terminal completion event for request `id` arrived at `now_ms`:
+    /// if it was a registered leader, its entry becomes Ready. Events for
+    /// non-leader ids are ignored (cheap hash miss).
+    pub fn on_completed(&self, id: u64, now_ms: f64) {
+        let Some(key) = self.pending.lock().unwrap().remove(&id) else {
+            return;
+        };
+        let mut shard = self.shards[Self::shard_of(&key)].lock().unwrap();
+        // Only fill an entry still waiting on a leader — it may have
+        // been evicted, or orphan-recycled to a newer leader.
+        if let Some(e @ EntryState::InFlight { .. }) = shard.map.get_mut(&key) {
+            *e = EntryState::Ready { filled_ms: now_ms };
+        }
+    }
+
+    /// Current disposition counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stale: self.stale.load(Ordering::Relaxed),
+            orphaned: self.orphaned.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Virtual (deterministic) cache
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct VirtualEntry {
+    /// When the leader's modeled result lands (dispatch time + estimated
+    /// RTT + service); before this the entry is in flight.
+    fill_ms: f64,
+}
+
+/// Deterministic single-threaded cache for the virtual-clock arm. Same
+/// disposition semantics as [`ResultCache`], with the leader's fill time
+/// *modeled* (the router's own RTT + backlog estimate at dispatch) since
+/// virtual node simulations run after the whole trace is routed.
+pub struct VirtualCache {
+    ttl_ms: f64,
+    capacity: usize,
+    map: HashMap<Key, VirtualEntry>,
+    order: VecDeque<Key>,
+    /// Disposition counters (public: the driver folds them directly).
+    pub stats: CacheStats,
+}
+
+impl VirtualCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        VirtualCache {
+            ttl_ms: cfg.ttl_ms.max(0.0),
+            capacity: cfg.capacity.max(1),
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Decide one request's disposition at trace time `now_ms`. Unlike
+    /// the live cache, a `Lead` installs nothing — the caller routes and,
+    /// if dispatch succeeds, records the modeled fill via
+    /// [`VirtualCache::fill`] (a shed leader simply leaves no entry).
+    pub fn lookup(&mut self, model: ModelId, digest: u64, now_ms: f64)
+                  -> CacheLookup {
+        let key = (model as usize, digest);
+        match self.map.get(&key).copied() {
+            Some(e) if now_ms < e.fill_ms => {
+                self.stats.coalesced += 1;
+                CacheLookup::Coalesced
+            }
+            Some(e) if now_ms <= e.fill_ms + self.ttl_ms => {
+                self.stats.hits += 1;
+                CacheLookup::Hit
+            }
+            Some(_) => {
+                self.stats.stale += 1;
+                self.map.remove(&key);
+                CacheLookup::Lead
+            }
+            None => {
+                self.stats.misses += 1;
+                CacheLookup::Lead
+            }
+        }
+    }
+
+    /// Record a dispatched leader's modeled fill time for `(model,
+    /// digest)`.
+    pub fn fill(&mut self, model: ModelId, digest: u64, fill_ms: f64) {
+        let key = (model as usize, digest);
+        if self.map.insert(key, VirtualEntry { fill_ms }).is_none() {
+            self.order.push_back(key);
+            if self.order.len() > self.capacity {
+                if let Some(old) = self.order.pop_front() {
+                    if self.map.remove(&old).is_some() {
+                        self.stats.evictions += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    const CFG: CacheConfig = CacheConfig { ttl_ms: 100.0, capacity: 1024 };
+
+    #[test]
+    fn live_cache_single_flight_one_leader_many_waiters() {
+        let cache = ResultCache::new(CFG);
+        let m = ModelId::all()[0];
+        // First request leads...
+        assert_eq!(cache.lookup(m, 7, 0.0), CacheLookup::Lead);
+        cache.commit_leader(m, 7, 999);
+        // ...N identical in-flight requests all coalesce onto it...
+        for t in 1..=5 {
+            assert_eq!(cache.lookup(m, 7, t as f64), CacheLookup::Coalesced);
+        }
+        // ...the ONE upstream completion fills the entry...
+        cache.on_completed(999, 10.0);
+        // ...and later identical requests are plain hits within TTL.
+        assert_eq!(cache.lookup(m, 7, 50.0), CacheLookup::Hit);
+        let s = cache.stats();
+        assert_eq!((s.misses, s.coalesced, s.hits), (1, 5, 1));
+        assert_eq!(s.served(), 6);
+    }
+
+    #[test]
+    fn live_cache_ttl_expiry_returns_to_routing() {
+        let cache = ResultCache::new(CFG);
+        let m = ModelId::all()[0];
+        assert_eq!(cache.lookup(m, 1, 0.0), CacheLookup::Lead);
+        cache.commit_leader(m, 1, 1);
+        cache.on_completed(1, 5.0);
+        // Fresh within ttl of the fill; stale after.
+        assert_eq!(cache.lookup(m, 1, 105.0), CacheLookup::Hit);
+        assert_eq!(cache.lookup(m, 1, 105.1), CacheLookup::Lead);
+        assert_eq!(cache.stats().stale, 1);
+        // The re-lead is itself coalescable again.
+        assert_eq!(cache.lookup(m, 1, 106.0), CacheLookup::Coalesced);
+    }
+
+    #[test]
+    fn live_cache_orphaned_leader_is_recycled_after_ttl() {
+        let cache = ResultCache::new(CFG);
+        let m = ModelId::all()[0];
+        assert_eq!(cache.lookup(m, 3, 0.0), CacheLookup::Lead);
+        // Leader was shed upstream (no completion event ever arrives;
+        // ServeEvent::Shed carries no id). Within TTL waiters still
+        // coalesce; past it, a new leader is elected.
+        assert_eq!(cache.lookup(m, 3, 99.0), CacheLookup::Coalesced);
+        assert_eq!(cache.lookup(m, 3, 101.0), CacheLookup::Lead);
+        assert_eq!(cache.stats().orphaned, 1);
+    }
+
+    #[test]
+    fn live_cache_abort_leader_clears_the_placeholder() {
+        let cache = ResultCache::new(CFG);
+        let m = ModelId::all()[0];
+        assert_eq!(cache.lookup(m, 9, 0.0), CacheLookup::Lead);
+        cache.abort_leader(m, 9); // dispatch refused at the edge
+        // Next identical request leads immediately, not after orphan TTL.
+        assert_eq!(cache.lookup(m, 9, 1.0), CacheLookup::Lead);
+        assert_eq!(cache.stats().orphaned, 0);
+    }
+
+    #[test]
+    fn live_cache_capacity_evicts_fifo() {
+        let cache = ResultCache::new(CacheConfig {
+            ttl_ms: 1e9,
+            capacity: CACHE_SHARDS, // one entry per shard
+        });
+        let m = ModelId::all()[0];
+        // Two digests landing in the SAME shard: the second insert
+        // evicts the first.
+        let (a, b) = (0u64, CACHE_SHARDS as u64);
+        assert_eq!(ResultCache::shard_of(&(m as usize, a)),
+                   ResultCache::shard_of(&(m as usize, b)));
+        assert_eq!(cache.lookup(m, a, 0.0), CacheLookup::Lead);
+        assert_eq!(cache.lookup(m, b, 0.0), CacheLookup::Lead);
+        assert!(cache.stats().evictions >= 1);
+        // The evicted digest misses again.
+        assert_eq!(cache.lookup(m, a, 1.0), CacheLookup::Lead);
+    }
+
+    #[test]
+    fn live_cache_is_thread_safe_and_counts_every_lookup() {
+        let cache = Arc::new(ResultCache::new(CFG));
+        let m = ModelId::all()[1];
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || {
+                    for i in 0..250u64 {
+                        let digest = (t * 250 + i) % 10; // heavy overlap
+                        if cache.lookup(m, digest, i as f64)
+                            == CacheLookup::Lead
+                        {
+                            cache.commit_leader(m, digest, t * 1000 + i);
+                            cache.on_completed(t * 1000 + i, i as f64);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.served() + s.misses + s.stale + s.orphaned, 1000,
+                   "a lookup went uncounted: {s:?}");
+        assert!(s.served() > 0, "overlapping digests never deduped");
+    }
+
+    #[test]
+    fn virtual_cache_models_coalesce_then_hit_then_stale() {
+        let mut cache = VirtualCache::new(CFG);
+        let m = ModelId::all()[0];
+        assert_eq!(cache.lookup(m, 5, 0.0), CacheLookup::Lead);
+        cache.fill(m, 5, 20.0); // leader's modeled result lands at 20ms
+        // Before the fill: in flight, coalesced.
+        assert_eq!(cache.lookup(m, 5, 10.0), CacheLookup::Coalesced);
+        // After the fill, within TTL: hit.
+        assert_eq!(cache.lookup(m, 5, 30.0), CacheLookup::Hit);
+        assert_eq!(cache.lookup(m, 5, 120.0), CacheLookup::Hit);
+        // Past fill + TTL: stale, back to routing.
+        assert_eq!(cache.lookup(m, 5, 120.1), CacheLookup::Lead);
+        assert_eq!(cache.stats.stale, 1);
+    }
+
+    #[test]
+    fn virtual_cache_capacity_evicts_fifo() {
+        let mut cache =
+            VirtualCache::new(CacheConfig { ttl_ms: 1e9, capacity: 2 });
+        let m = ModelId::all()[0];
+        for d in 0..3u64 {
+            assert_eq!(cache.lookup(m, d, 0.0), CacheLookup::Lead);
+            cache.fill(m, d, 0.0);
+        }
+        assert_eq!(cache.stats.evictions, 1);
+        assert_eq!(cache.lookup(m, 0, 1.0), CacheLookup::Lead, "not evicted");
+        assert_eq!(cache.lookup(m, 2, 1.0), CacheLookup::Hit);
+    }
+
+    #[test]
+    fn digests_are_deterministic_and_repeat_fraction_scales_overlap() {
+        // Pure function of (seed, index): identical across calls.
+        for i in 0..100 {
+            assert_eq!(digest_for(42, i, 0.5), digest_for(42, i, 0.5));
+        }
+        // repeat_fraction 0: every digest unique.
+        let unique: std::collections::HashSet<u64> =
+            (0..1000).map(|i| digest_for(7, i, 0.0)).collect();
+        assert_eq!(unique.len(), 1000);
+        // repeat_fraction 1: every digest from the popular pool.
+        assert!((0..1000).all(|i| digest_for(7, i, 1.0) < u64::from(REPEAT_POOL)));
+        // Intermediate: repeats happen, uniques survive.
+        let mixed: Vec<u64> = (0..1000).map(|i| digest_for(7, i, 0.5)).collect();
+        let popular = mixed.iter().filter(|d| **d < u64::from(REPEAT_POOL)).count();
+        assert!(popular > 300 && popular < 700,
+                "repeat fraction badly skewed: {popular}/1000");
+    }
+}

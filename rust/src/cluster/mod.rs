@@ -1,5 +1,5 @@
 //! The heterogeneous edge-cluster tier: SLO-aware routing across
-//! multi-node serving pools.
+//! multi-node serving pools, behind a sharded, cached front-end.
 //!
 //! BCEdge evaluates on a zoo of heterogeneous edge platforms (Table V:
 //! Xavier NX / TX2 / Nano); this module crosses the node boundary the
@@ -7,51 +7,81 @@
 //! [`EdgeNode`] owns a full [`crate::serve::Server`] — workers, admission,
 //! rebalancer, hot-model replication — configured with its own
 //! [`crate::platform::PlatformSpec`] and network link, so nodes genuinely
-//! differ in drain rate and distance. A front-end [`Router`] places every
-//! request under a pluggable policy (round-robin,
-//! join-shortest-backlog, power-of-two-choices, SLO-aware), reading the
-//! per-node [`crate::serve::GaugeSnapshot`]s the nodes' workers publish;
-//! the SLO-aware policy prices estimated RTT + queue backlog + batch
-//! latency against remaining slack and sheds at the edge
+//! differ in drain rate and distance. The front-end places every request
+//! under a pluggable [`Router`] policy (round-robin,
+//! join-shortest-backlog, power-of-two-choices, SLO-aware); the
+//! SLO-aware policy prices estimated RTT + queue backlog + batch latency
+//! against remaining slack and sheds at the edge
 //! ([`crate::metrics::ShedReason::NoFeasibleNode`]) when no node can make
 //! the deadline.
+//!
+//! The front-end itself is three layers (ROADMAP open item 3):
+//!
+//! * **Gossiped views** ([`view`]) — a publisher refreshes an
+//!   epoch-stamped [`ClusterView`] slot per node every
+//!   [`FrontEndConfig::gossip_ms`]; routing reads a lock-free cached
+//!   copy instead of touching live gauges, with per-decision staleness
+//!   recorded. A stale view can pick a node that has since begun
+//!   draining: the node refuses, the front-end counts a **misroute**
+//!   and re-routes — gossip's cost is counted, never lost.
+//! * **Router shards** — [`FrontEndConfig::router_shards`] independent
+//!   [`Router`]s (per-client-group), each with its own round-robin
+//!   cursor and PCG stream split by shard id, all routing from the one
+//!   shared view. The virtual arm stays bit-deterministic for any fixed
+//!   `(seed, shards)`.
+//! * **Result cache** ([`cache`]) — a TTL'd, single-flight cache keyed
+//!   by `(model, input digest)` in front of routing: hits return
+//!   instantly (zero slack spent — RTT is charged into the e2e budget,
+//!   Eq. 2), identical in-flight requests coalesce onto one upstream
+//!   outcome.
 //!
 //! Two clock arms, mirroring the serving runtime:
 //!
 //! * **wall** — live: every node is a real [`crate::serve::Server`];
-//!   routing reads live gauge snapshots; a [`DrainScenario`] can take a
-//!   node out mid-run (routing stops, the node flushes through the
-//!   existing drain protocol, its accounted requests fold into cluster
-//!   totals) and bring it back (a fresh server incarnation in a disjoint
-//!   request-id window).
-//! * **virtual** — deterministic: the router places a pre-generated trace
-//!   using a leaky-bucket backlog model (per-node estimated work, drained
-//!   at the node's worker count), then each node serves its shard as its
-//!   own discrete-event simulation — same seed, same report, bit for bit.
+//!   shard threads route from the gossiped view; a [`DrainScenario`] can
+//!   take a node out mid-run (routing stops, the node flushes through
+//!   the existing drain protocol, its accounted requests fold into
+//!   cluster totals) and bring it back (a fresh server incarnation in a
+//!   disjoint request-id window).
+//! * **virtual** — deterministic: the router places a pre-generated
+//!   trace using a leaky-bucket backlog model whose *published* copy
+//!   only refreshes on gossip epoch boundaries, then each node serves
+//!   its shard as its own discrete-event simulation — same seed, same
+//!   shard count, same report, bit for bit.
 //!
-//! Conservation holds cluster-wide through every drain/rejoin:
-//! `outcomes + sheds + leftover == attempts`, outcome ids unique across
-//! nodes (each node incarnation stamps ids in its own window).
+//! Conservation holds cluster-wide through every drain/rejoin, extended
+//! for the cache tier:
+//! `outcomes + sheds + cache_served + leftover == attempts`, and
+//! `dispatched + router_sheds + cache_served == attempts`, with outcome
+//! ids unique across nodes (each node incarnation stamps ids in its own
+//! window).
 //!
 //! Entry point: [`run_cluster`], surfaced as `bcedge bench-cluster`.
 
+pub mod cache;
 pub mod netmodel;
 pub mod node;
 pub mod router;
+pub mod view;
 
+pub use cache::{CacheConfig, CacheLookup, CacheStats, ResultCache,
+                VirtualCache, digest_for};
 pub use netmodel::NetModel;
 pub use node::{EdgeNode, FinishedNode, NodeSpec, NodeState};
 pub use router::{NodeView, RoutePolicy, Router};
+pub use view::{ClusterView, NodePublished, StalenessStat, ViewReader};
 
 use crate::metrics::{Metrics, ShedReason};
 use crate::platform::PlatformSim;
 use crate::serve::worker::ServeEvent;
-use crate::serve::{ClockKind, LoadGenConfig, LoadMode, ServeConfig,
-                   run_trace};
+use crate::serve::{ClockKind, GaugeSnapshot, LoadGenConfig, LoadMode,
+                   ServeConfig, run_trace};
 use crate::util::rng::Pcg32;
 use crate::util::time::WallClock;
 use crate::workload::models::{ModelId, N_MODELS};
-use std::sync::mpsc;
+use crate::workload::request::Request;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 /// Take one node out of the cluster mid-run and bring it back: routing
@@ -70,6 +100,26 @@ pub struct DrainScenario {
     pub rejoin_at_ms: f64,
 }
 
+/// Front-end tier knobs: router sharding, gossip cadence, result cache.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontEndConfig {
+    /// Independent router shards (client groups). Each shard routes from
+    /// the shared gossiped view with its own cursor and PCG stream.
+    pub router_shards: usize,
+    /// Gossip period: how often each node's gauge snapshot is
+    /// republished into the shared [`ClusterView`], ms. Bounds routing
+    /// staleness.
+    pub gossip_ms: f64,
+    /// Optional deduplicating result cache in front of routing.
+    pub cache: Option<CacheConfig>,
+}
+
+impl Default for FrontEndConfig {
+    fn default() -> Self {
+        FrontEndConfig { router_shards: 1, gossip_ms: 5.0, cache: None }
+    }
+}
+
 /// Cluster-tier configuration.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -83,6 +133,8 @@ pub struct ClusterConfig {
     pub serve: ServeConfig,
     /// Optional mid-run node drain/rejoin.
     pub drain: Option<DrainScenario>,
+    /// Front-end tier: router shards, gossip cadence, result cache.
+    pub frontend: FrontEndConfig,
 }
 
 impl Default for ClusterConfig {
@@ -98,6 +150,7 @@ impl Default for ClusterConfig {
             policy: RoutePolicy::SloAware,
             serve: ServeConfig { clock: ClockKind::Wall, ..Default::default() },
             drain: None,
+            frontend: FrontEndConfig::default(),
         }
     }
 }
@@ -118,6 +171,22 @@ impl ClusterConfig {
             if d.at_ms < 0.0 || d.rejoin_at_ms <= d.at_ms {
                 return Err("drain window needs 0 <= drain-at < rejoin-at"
                     .into());
+            }
+        }
+        if self.frontend.router_shards == 0 {
+            return Err("--router-shards must be >= 1".into());
+        }
+        if !(self.frontend.gossip_ms > 0.0)
+            || !self.frontend.gossip_ms.is_finite()
+        {
+            return Err("--gossip-ms must be a positive number".into());
+        }
+        if let Some(c) = &self.frontend.cache {
+            if !(c.ttl_ms > 0.0) || !c.ttl_ms.is_finite() {
+                return Err("--cache-ttl-ms must be a positive number".into());
+            }
+            if c.capacity == 0 {
+                return Err("--cache-capacity must be >= 1".into());
             }
         }
         Ok(())
@@ -152,8 +221,37 @@ pub struct NodeBreakdown {
     pub segments: usize,
 }
 
+/// Front-end tier accounting, folded across every router shard.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontEndReport {
+    /// Router shards the run used.
+    pub shards: usize,
+    /// Gossip period, ms.
+    pub gossip_ms: f64,
+    /// Routing decisions made (requests that entered a router — cache-
+    /// served requests never do; misroute re-routes don't re-count).
+    pub decisions: u64,
+    /// Stale-view dispatches refused by a non-active node and re-routed.
+    pub misroutes: u64,
+    /// Mean view staleness per routing decision, ms.
+    pub staleness_mean_ms: f64,
+    /// Worst view staleness any decision routed on, ms.
+    pub staleness_max_ms: f64,
+    /// Cache dispositions (None when the cache was off).
+    pub cache: Option<CacheStats>,
+}
+
+impl FrontEndReport {
+    /// Requests terminated at the cache (hits + coalesced): the
+    /// `cache_served` term of the conservation identity.
+    pub fn cache_served(&self) -> u64 {
+        self.cache.map(|c| c.served()).unwrap_or(0)
+    }
+}
+
 /// Final report of a cluster run: merged metrics plus per-node
-/// breakdowns and the router's edge-shed accounting.
+/// breakdowns, front-end tier accounting, and the router's edge-shed
+/// accounting.
 pub struct ClusterReport {
     /// Cluster-merged metrics: every node's outcomes and sheds plus the
     /// router's [`ShedReason::NoFeasibleNode`] edge sheds.
@@ -172,6 +270,9 @@ pub struct ClusterReport {
     pub rejoins: u32,
     /// The routing policy the run used.
     pub policy: RoutePolicy,
+    /// Front-end tier accounting (shards, gossip staleness, misroutes,
+    /// cache dispositions).
+    pub frontend: FrontEndReport,
     /// Per-node accounting, in [`ClusterConfig::nodes`] order.
     pub per_node: Vec<NodeBreakdown>,
 }
@@ -185,6 +286,11 @@ impl ClusterReport {
     /// Requests the router shed at the edge (no feasible node).
     pub fn router_sheds(&self) -> u64 {
         self.metrics.shed_by_reason(ShedReason::NoFeasibleNode)
+    }
+
+    /// Requests the front-end cache terminated (hits + coalesced).
+    pub fn cache_served(&self) -> u64 {
+        self.frontend.cache_served()
     }
 
     /// Human-readable summary (the `bcedge bench-cluster` output).
@@ -207,6 +313,28 @@ impl ClusterReport {
             100.0 * m.shed_rate(),
             self.router_sheds(),
         );
+        println!(
+            "front-end: {} shard(s) | gossip {:.1} ms | staleness mean \
+             {:.2} ms max {:.2} ms | {} decisions | {} misroutes",
+            self.frontend.shards,
+            self.frontend.gossip_ms,
+            self.frontend.staleness_mean_ms,
+            self.frontend.staleness_max_ms,
+            self.frontend.decisions,
+            self.frontend.misroutes,
+        );
+        if let Some(c) = &self.frontend.cache {
+            println!(
+                "cache: {:.1}% hit-rate | {} hits | {} coalesced | \
+                 {} stale | {} orphaned | {} evicted",
+                100.0 * c.hit_rate(),
+                c.hits,
+                c.coalesced,
+                c.stale,
+                c.orphaned,
+                c.evictions,
+            );
+        }
         if self.drains > 0 {
             println!("lifecycle: {} drain(s), {} rejoin(s)", self.drains,
                      self.rejoins);
@@ -262,64 +390,180 @@ pub fn run_cluster(cfg: &ClusterConfig, load: &LoadGenConfig)
 // Wall-clock (live) driver
 // ---------------------------------------------------------------------
 
-/// The live cluster front-end: nodes + router + lifecycle bookkeeping.
-struct WallCluster {
-    nodes: Vec<EdgeNode>,
+/// What the front-end did with one offered request.
+enum FrontEndOutcome {
+    /// Routed and accepted by a node's ingress as this request id.
+    Dispatched(u64),
+    /// Terminated at the cache (hit or coalesced) — never routed.
+    CacheServed,
+    /// Refused: at the edge (no feasible node, recorded in the shard's
+    /// router metrics) or by the chosen node's own admission gate
+    /// (recorded in the node's metrics).
+    Shed(ShedReason),
+}
+
+/// One router shard of the live front-end: a private [`ViewReader`] over
+/// the shared gossiped view, its own policy state (cursor, PCG stream),
+/// its own link-jitter stream, and its own accounting. No lock is taken
+/// on the routing path; dispatch touches only the chosen node.
+struct FrontEndShard<'a> {
+    nodes: &'a [EdgeNode],
+    cluster_view: &'a ClusterView,
+    reader: ViewReader,
     router: Router,
     /// Link-jitter draws only (routing itself uses the router's stream).
     link_rng: Pcg32,
+    cache: Option<&'a ResultCache>,
     clock: WallClock,
-    drain: Option<DrainScenario>,
-    drains: u32,
-    rejoins: u32,
+    digest_seed: u64,
+    repeat_fraction: f64,
     /// Edge sheds (no feasible node), folded into the final metrics.
     router_metrics: Metrics,
     attempts: u64,
+    misroutes: u64,
+    staleness: StalenessStat,
     /// Reusable per-request routing views (the dispatch path allocates
     /// nothing in steady state).
     view_scratch: Vec<NodeView>,
 }
 
-impl WallCluster {
-    fn start(cfg: &ClusterConfig, seed: u64,
-             events_tx: Option<mpsc::Sender<ServeEvent>>) -> WallCluster {
-        let mut nodes: Vec<EdgeNode> = cfg
-            .nodes
-            .iter()
-            .enumerate()
-            .map(|(i, spec)| {
-                EdgeNode::new(spec.clone(), &cfg.serve, i, events_tx.clone())
-            })
-            .collect();
-        for node in &mut nodes {
-            node.start();
-        }
-        WallCluster {
+impl<'a> FrontEndShard<'a> {
+    fn new(shard: usize, cfg: &ClusterConfig, load: &LoadGenConfig,
+           nodes: &'a [EdgeNode], cluster_view: &'a ClusterView,
+           cache: Option<&'a ResultCache>, clock: WallClock)
+           -> FrontEndShard<'a> {
+        FrontEndShard {
             nodes,
-            router: Router::new(cfg.policy, seed ^ 0xC1_05_7E),
-            link_rng: Pcg32::seeded(seed ^ 0x11_4E),
-            clock: WallClock::new(),
-            drain: cfg.drain,
-            drains: 0,
-            rejoins: 0,
+            cluster_view,
+            reader: ViewReader::new(cluster_view),
+            router: Router::with_stream(cfg.policy, load.seed ^ 0xC1_05_7E,
+                                        shard as u64),
+            link_rng: Pcg32::new(load.seed ^ 0x11_4E, shard as u64),
+            cache,
+            clock,
+            digest_seed: load.seed,
+            repeat_fraction: load.repeat_fraction,
             router_metrics: Metrics::new(),
             attempts: 0,
-            view_scratch: Vec::with_capacity(cfg.nodes.len()),
+            misroutes: 0,
+            staleness: StalenessStat::default(),
+            view_scratch: Vec::with_capacity(nodes.len()),
         }
     }
 
-    fn now_ms(&self) -> f64 {
-        self.clock.now_ms()
+    /// Offer one request (trace index `index`, for its input digest):
+    /// cache first, then route from the gossiped view, charge the link,
+    /// dispatch — re-routing around stale-view misroutes — or shed at
+    /// the edge with a typed reason.
+    fn submit(&mut self, index: u64, model: ModelId, slo_ms: f64,
+              transmission_ms: f64) -> FrontEndOutcome {
+        self.attempts += 1;
+        let now = self.clock.now_ms();
+        let lead_digest = match self.cache {
+            Some(cache) => {
+                let digest =
+                    digest_for(self.digest_seed, index, self.repeat_fraction);
+                match cache.lookup(model, digest, now) {
+                    CacheLookup::Hit | CacheLookup::Coalesced => {
+                        return FrontEndOutcome::CacheServed;
+                    }
+                    CacheLookup::Lead => Some(digest),
+                }
+            }
+            None => None,
+        };
+        match self.route_and_dispatch(model, slo_ms, transmission_ms, now) {
+            Ok(id) => {
+                if let (Some(cache), Some(digest)) = (self.cache, lead_digest)
+                {
+                    cache.commit_leader(model, digest, id);
+                }
+                FrontEndOutcome::Dispatched(id)
+            }
+            Err(reason) => {
+                if let (Some(cache), Some(digest)) = (self.cache, lead_digest)
+                {
+                    cache.abort_leader(model, digest);
+                }
+                FrontEndOutcome::Shed(reason)
+            }
+        }
     }
 
-    /// Advance the drain/rejoin scenario against the cluster clock.
-    fn tick_lifecycle(&mut self) {
+    fn route_and_dispatch(&mut self, model: ModelId, slo_ms: f64,
+                          transmission_ms: f64, now: f64)
+                          -> Result<u64, ShedReason> {
+        self.reader.sync(self.cluster_view);
+        self.staleness.record(now - self.reader.oldest_published_ms());
+        self.view_scratch.clear();
+        for (i, node) in self.nodes.iter().enumerate() {
+            let p = self.reader.get(i);
+            self.view_scratch.push(if p.active {
+                NodeView {
+                    active: true,
+                    rtt_ms: node.spec.net.rtt_ms,
+                    backlog_ms: p.gauges.total_backlog_ms,
+                    service_est_ms: p.gauges.service_est_ms(model),
+                }
+            } else {
+                NodeView {
+                    active: false,
+                    rtt_ms: node.spec.net.rtt_ms,
+                    backlog_ms: f64::INFINITY,
+                    service_est_ms: f64::INFINITY,
+                }
+            });
+        }
+        loop {
+            match self
+                .router
+                .route(&self.view_scratch, slo_ms - transmission_ms)
+            {
+                Ok(i) => {
+                    let delay =
+                        self.nodes[i].spec.net.delay_ms(&mut self.link_rng);
+                    match self.nodes[i].try_dispatch(
+                        model, slo_ms, transmission_ms + delay)
+                    {
+                        Some(res) => return res,
+                        None => {
+                            // Stale view: the node left Active after the
+                            // last gossip tick. Count it, mask it, and
+                            // re-route on the corrected candidate set.
+                            self.misroutes += 1;
+                            self.view_scratch[i].active = false;
+                        }
+                    }
+                }
+                Err(reason) => {
+                    self.router_metrics.record_shed(model, reason);
+                    return Err(reason);
+                }
+            }
+        }
+    }
+}
+
+/// Drain/rejoin scenario bookkeeping, driven from the (single) cluster
+/// lifecycle thread.
+struct Lifecycle {
+    drain: Option<DrainScenario>,
+    drains: u32,
+    rejoins: u32,
+}
+
+impl Lifecycle {
+    fn new(drain: Option<DrainScenario>) -> Self {
+        Lifecycle { drain, drains: 0, rejoins: 0 }
+    }
+
+    /// Advance the scenario against the cluster clock.
+    fn tick(&mut self, nodes: &[EdgeNode], now_ms: f64) {
         let Some(d) = self.drain else { return };
-        let now = self.clock.now_ms();
-        let node = &mut self.nodes[d.node];
+        let node = &nodes[d.node];
         match node.state() {
             NodeState::Active => {
-                if self.drains == 0 && now >= d.at_ms {
+                if self.drains == 0 && now_ms >= d.at_ms {
                     node.begin_drain();
                     self.drains += 1;
                 }
@@ -329,7 +573,7 @@ impl WallCluster {
             }
             NodeState::Drained => {
                 if self.drains > 0 && self.rejoins == 0
-                    && now >= d.rejoin_at_ms
+                    && now_ms >= d.rejoin_at_ms
                 {
                     node.rejoin();
                     self.rejoins += 1;
@@ -337,74 +581,64 @@ impl WallCluster {
             }
         }
     }
+}
 
-    /// Refresh the per-request routing views from the nodes' live gauge
-    /// snapshots into the reusable scratch buffer.
-    fn refresh_views(&mut self, model: ModelId) {
-        self.view_scratch.clear();
-        for n in &self.nodes {
-            self.view_scratch.push(match n.snapshot() {
-                Some(snap) => NodeView {
-                    active: true,
-                    rtt_ms: n.spec.net.rtt_ms,
-                    backlog_ms: snap.total_backlog_ms,
-                    service_est_ms: snap.service_est_ms(model),
-                },
-                None => NodeView {
-                    active: false,
-                    rtt_ms: n.spec.net.rtt_ms,
-                    backlog_ms: f64::INFINITY,
-                    service_est_ms: f64::INFINITY,
-                },
-            });
-        }
+/// Publish every node's current state into the shared view (one gossip
+/// tick).
+fn publish_all(view: &ClusterView, nodes: &[EdgeNode], clock: &WallClock) {
+    for (i, n) in nodes.iter().enumerate() {
+        let now = clock.now_ms();
+        match n.snapshot() {
+            Some(g) => view.publish(i, true, g, now),
+            None => view.publish(i, false, GaugeSnapshot::default(), now),
+        };
     }
+}
 
-    /// Offer one request to the cluster: route, charge the link, dispatch
-    /// — or shed at the edge with a typed reason.
-    fn submit(&mut self, model: ModelId, slo_ms: f64, transmission_ms: f64)
-              -> Result<u64, ShedReason> {
-        self.attempts += 1;
-        self.refresh_views(model);
-        match self.router.route(&self.view_scratch, slo_ms - transmission_ms) {
-            Ok(i) => {
-                let delay = self.nodes[i].spec.net.delay_ms(&mut self.link_rng);
-                self.nodes[i].dispatch(model, slo_ms,
-                                       transmission_ms + delay)
-            }
-            Err(reason) => {
-                self.router_metrics.record_shed(model, reason);
-                Err(reason)
-            }
-        }
+/// Build and start the cluster's nodes.
+fn start_nodes(cfg: &ClusterConfig,
+               events_tx: Option<mpsc::Sender<ServeEvent>>) -> Vec<EdgeNode> {
+    let nodes: Vec<EdgeNode> = cfg
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            EdgeNode::new(spec.clone(), &cfg.serve, i, events_tx.clone())
+        })
+        .collect();
+    for node in &nodes {
+        node.start();
     }
+    nodes
+}
 
-    /// Stop every node (draining live servers, waiting out any pending
-    /// background drain) and merge the cluster report.
-    fn finish(self) -> ClusterReport {
-        let horizon_ms = self.clock.now_ms();
-        let policy = self.router.policy();
-        let mut metrics = self.router_metrics;
-        let mut leftover = 0usize;
-        let mut slots = 0u64;
-        let mut per_node = Vec::with_capacity(self.nodes.len());
-        for node in self.nodes {
-            let fin = node.finish();
-            merge_node(&mut metrics, &mut leftover, &mut slots,
-                       &mut per_node, fin);
-        }
-        ClusterReport {
-            metrics,
-            horizon_ms,
-            attempts: self.attempts,
-            leftover,
-            slots,
-            drains: self.drains,
-            rejoins: self.rejoins,
-            policy,
-            per_node,
-        }
+/// Fold the per-shard front-end accounting into one report (shard-index
+/// order, so the merge is deterministic). Consumes the shard structs —
+/// they borrow the nodes, and the nodes cannot be shut down and merged
+/// until those borrows end.
+fn merge_shards(cfg: &ClusterConfig, shards: Vec<FrontEndShard<'_>>)
+                -> (Metrics, u64, FrontEndReport) {
+    let mut metrics = Metrics::new();
+    let mut attempts = 0u64;
+    let mut misroutes = 0u64;
+    let mut staleness = StalenessStat::default();
+    let shard_count = shards.len();
+    for fe in shards {
+        metrics.merge(&fe.router_metrics);
+        attempts += fe.attempts;
+        misroutes += fe.misroutes;
+        staleness.merge(&fe.staleness);
     }
+    let frontend = FrontEndReport {
+        shards: shard_count,
+        gossip_ms: cfg.frontend.gossip_ms,
+        decisions: staleness.decisions,
+        misroutes,
+        staleness_mean_ms: staleness.mean_ms(),
+        staleness_max_ms: staleness.max_ms,
+        cache: None, // filled by finish_wall once the collector drains
+    };
+    (metrics, attempts, frontend)
 }
 
 /// Fold one finished node into the cluster totals and breakdown rows.
@@ -434,19 +668,102 @@ fn merge_node(metrics: &mut Metrics, leftover: &mut usize, slots: &mut u64,
     *slots += node_slots;
 }
 
-/// Open loop on the wall clock: pace the pre-drawn arrival process
-/// against the cluster clock, routing each request as it arrives. Sleeps
-/// are capped so the drain/rejoin scenario fires on time even through an
-/// arrival lull; late submission degrades to burstier — never lighter —
-/// offered load.
+/// Spawn the cache-fill collector: completion events from every node
+/// resolve pending cache leaders. Joined after the nodes shut down (all
+/// event senders dropped ends the loop).
+fn spawn_cache_collector(cache: &Arc<ResultCache>,
+                         rx: mpsc::Receiver<ServeEvent>, clock: WallClock)
+                         -> std::thread::JoinHandle<()> {
+    let cache = Arc::clone(cache);
+    std::thread::Builder::new()
+        .name("bcedge-cache-fill".into())
+        .spawn(move || {
+            for ev in rx {
+                if let ServeEvent::Completed(c) = ev {
+                    cache.on_completed(c.id, clock.now_ms());
+                }
+            }
+        })
+        .expect("spawn cache-fill collector")
+}
+
+/// Open loop on the wall clock: the trace is dealt round-robin across
+/// `router_shards` submitter threads, each pacing its slice against the
+/// shared cluster clock and routing from the gossiped view; a publisher
+/// thread refreshes the view every gossip period, and the main thread
+/// drives the drain/rejoin lifecycle.
 fn run_wall_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                  horizon_ms: f64) -> ClusterReport {
     let trace = load.generator().generate_horizon(horizon_ms);
-    let mut cluster = WallCluster::start(cfg, load.seed, None);
-    for r in &trace {
+    let k = cfg.frontend.router_shards;
+    let mut slices: Vec<Vec<(u64, Request)>> =
+        (0..k).map(|_| Vec::new()).collect();
+    for (i, r) in trace.into_iter().enumerate() {
+        slices[i % k].push((i as u64, r));
+    }
+
+    let cache = cfg.frontend.cache.map(|c| Arc::new(ResultCache::new(c)));
+    let (events_tx, events_rx) = match &cache {
+        Some(_) => {
+            let (tx, rx) = mpsc::channel();
+            (Some(tx), Some(rx))
+        }
+        None => (None, None),
+    };
+    let nodes = start_nodes(cfg, events_tx.clone());
+    let clock = WallClock::new();
+    let collector = match (&cache, events_rx) {
+        (Some(cache), Some(rx)) => {
+            Some(spawn_cache_collector(cache, rx, clock))
+        }
+        _ => None,
+    };
+    let cluster_view = ClusterView::new(nodes.len());
+    publish_all(&cluster_view, &nodes, &clock);
+
+    let stop_gossip = AtomicBool::new(false);
+    let mut lifecycle = Lifecycle::new(cfg.drain);
+    let shard_results: Vec<FrontEndShard> = std::thread::scope(|s| {
+        let gossip = s.spawn(|| {
+            while !stop_gossip.load(Ordering::Relaxed) {
+                publish_all(&cluster_view, &nodes, &clock);
+                std::thread::sleep(Duration::from_secs_f64(
+                    cfg.frontend.gossip_ms / 1e3,
+                ));
+            }
+        });
+        let handles: Vec<_> = slices
+            .into_iter()
+            .enumerate()
+            .map(|(shard, slice)| {
+                let mut fe = FrontEndShard::new(
+                    shard, cfg, load, &nodes, &cluster_view,
+                    cache.as_deref(), clock);
+                s.spawn(move || {
+                    for (index, r) in slice {
+                        let wait_ms = r.arrival_ms - fe.clock.now_ms();
+                        if wait_ms > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(
+                                wait_ms / 1e3,
+                            ));
+                        }
+                        // Rejections are accounted (router edge sheds in
+                        // the shard, node ingress sheds at the node);
+                        // nothing more to do.
+                        let _ = fe.submit(index, r.model, r.slo_ms,
+                                          r.transmission_ms);
+                    }
+                    fe
+                })
+            })
+            .collect();
+        // The main thread owns the lifecycle: capped sleeps so the
+        // drain/rejoin scenario fires on time even through an arrival
+        // lull, ticking to the horizon so a rejoin scheduled after the
+        // last arrival still happens inside the run.
         loop {
-            cluster.tick_lifecycle();
-            let wait_ms = r.arrival_ms - cluster.now_ms();
+            lifecycle.tick(&nodes, clock.now_ms());
+            let wait_ms = horizon_ms - clock.now_ms();
             if wait_ms <= 0.0 {
                 break;
             }
@@ -454,63 +771,109 @@ fn run_wall_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                 wait_ms.min(5.0) / 1e3,
             ));
         }
-        // Rejections are accounted (router edge sheds here, node ingress
-        // sheds at the node); nothing more to do.
-        let _ = cluster.submit(r.model, r.slo_ms, r.transmission_ms);
-    }
-    // Keep the lifecycle ticking to the horizon so a rejoin scheduled
-    // after the last arrival still happens inside the run.
-    loop {
-        cluster.tick_lifecycle();
-        let wait_ms = horizon_ms - cluster.now_ms();
-        if wait_ms <= 0.0 {
-            break;
-        }
-        std::thread::sleep(Duration::from_secs_f64(wait_ms.min(5.0) / 1e3));
-    }
-    cluster.finish()
+        let results = handles
+            .into_iter()
+            .map(|h| h.join().expect("front-end shard panicked"))
+            .collect();
+        stop_gossip.store(true, Ordering::Relaxed);
+        gossip.join().expect("gossip publisher panicked");
+        results
+    });
+
+    let horizon_actual = clock.now_ms();
+    drop(events_tx);
+    let (metrics, attempts, frontend) = merge_shards(cfg, shard_results);
+    finish_wall(cfg, nodes, metrics, attempts, frontend, cache, collector,
+                lifecycle, horizon_actual)
 }
 
 /// Closed loop on the wall clock: keep `concurrency` requests in flight
 /// across the whole cluster, launching the next the moment one
 /// terminates anywhere (completion or engine-gate shed — every node
-/// streams its terminal events into one channel).
+/// streams its terminal events into one channel). The feedback loop is
+/// inherently serial, so it runs one front-end shard and folds gossip
+/// publishing into the loop itself; cache hits complete instantly and
+/// never occupy an in-flight slot.
 fn run_wall_closed(cfg: &ClusterConfig, load: &LoadGenConfig,
                    horizon_ms: f64, concurrency: usize) -> ClusterReport {
     let (tx, rx) = mpsc::channel();
-    let mut cluster = WallCluster::start(cfg, load.seed, Some(tx));
+    let cache = cfg.frontend.cache.map(|c| Arc::new(ResultCache::new(c)));
+    let nodes = start_nodes(cfg, Some(tx.clone()));
+    let clock = WallClock::new();
+    let cluster_view = ClusterView::new(nodes.len());
+    publish_all(&cluster_view, &nodes, &clock);
+    let mut fe = FrontEndShard::new(0, cfg, load, &nodes, &cluster_view,
+                                    cache.as_deref(), clock);
+    let mut lifecycle = Lifecycle::new(cfg.drain);
     let mut rng = Pcg32::seeded(load.seed);
     let mut rr = 0usize;
     let slo_scale = load.slo_scale;
     // The SAME closed-loop client model as single-node bench-serve
     // (shared launcher: model rotation, transmission stamp, SLO scale),
-    // submitting through the router instead of one ingress. Requests
-    // every node refuses — or the router edge-sheds — free their slot.
-    let launch = |cluster: &mut WallCluster, rng: &mut Pcg32,
-                  rr: &mut usize| {
-        crate::serve::loadgen::launch_round_robin(
+    // submitting through the front-end instead of one ingress. Requests
+    // every node refuses — or the router edge-sheds — free their slot;
+    // cache-served requests are terminal instantly, so the launcher
+    // immediately offers the next one.
+    fn launch_one(fe: &mut FrontEndShard<'_>, rng: &mut Pcg32,
+                  rr: &mut usize, slo_scale: f64) -> Option<bool> {
+        let mut cache_served = false;
+        let accepted = crate::serve::loadgen::launch_round_robin(
             rng, rr, slo_scale,
-            |m, slo, tx_ms| cluster.submit(m, slo, tx_ms))
+            |m, slo, tx_ms| {
+                let index = fe.attempts;
+                match fe.submit(index, m, slo, tx_ms) {
+                    FrontEndOutcome::Dispatched(id) => Ok(id),
+                    FrontEndOutcome::CacheServed => {
+                        cache_served = true;
+                        Ok(u64::MAX)
+                    }
+                    FrontEndOutcome::Shed(reason) => Err(reason),
+                }
+            });
+        if accepted { Some(!cache_served) } else { None }
+    }
+    // Launch until one request actually occupies a slot (cache-served
+    // ones are already terminal), or until everything is refused.
+    let mut pump = |fe: &mut FrontEndShard<'_>, rng: &mut Pcg32,
+                    rr: &mut usize| -> bool {
+        loop {
+            match launch_one(fe, rng, rr, slo_scale) {
+                Some(true) => return true,
+                Some(false) => continue,
+                None => return false,
+            }
+        }
     };
     let mut in_flight = 0usize;
     for _ in 0..concurrency {
-        if launch(&mut cluster, &mut rng, &mut rr) {
+        if pump(&mut fe, &mut rng, &mut rr) {
             in_flight += 1;
         }
     }
-    while cluster.now_ms() < horizon_ms {
-        cluster.tick_lifecycle();
+    let mut last_gossip = clock.now_ms();
+    while clock.now_ms() < horizon_ms {
+        lifecycle.tick(&nodes, clock.now_ms());
+        let now = clock.now_ms();
+        if now - last_gossip >= cfg.frontend.gossip_ms {
+            publish_all(&cluster_view, &nodes, &clock);
+            last_gossip = now;
+        }
         match rx.recv_timeout(Duration::from_millis(20)) {
-            Ok(_terminal_event) => {
+            Ok(event) => {
+                if let (Some(cache), ServeEvent::Completed(c)) =
+                    (&cache, &event)
+                {
+                    cache.on_completed(c.id, clock.now_ms());
+                }
                 in_flight = in_flight.saturating_sub(1);
-                if launch(&mut cluster, &mut rng, &mut rr) {
+                if pump(&mut fe, &mut rng, &mut rr) {
                     in_flight += 1;
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 // Top back up (e.g. every node was refusing earlier).
                 while in_flight < concurrency
-                    && launch(&mut cluster, &mut rng, &mut rr)
+                    && pump(&mut fe, &mut rng, &mut rr)
                 {
                     in_flight += 1;
                 }
@@ -518,7 +881,52 @@ fn run_wall_closed(cfg: &ClusterConfig, load: &LoadGenConfig,
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
     }
-    cluster.finish()
+    let horizon_actual = clock.now_ms();
+    drop(tx);
+    let (metrics, attempts, frontend) = merge_shards(cfg, vec![fe]);
+    finish_wall(cfg, nodes, metrics, attempts, frontend, cache, None,
+                lifecycle, horizon_actual)
+}
+
+/// Stop every node (draining live servers, waiting out any pending
+/// background drain), join the cache collector, and merge the cluster
+/// report. Callers fold their shards via [`merge_shards`] first — the
+/// shard structs borrow the nodes this function consumes.
+#[allow(clippy::too_many_arguments)]
+fn finish_wall(cfg: &ClusterConfig, nodes: Vec<EdgeNode>,
+               mut metrics: Metrics, attempts: u64,
+               mut frontend: FrontEndReport,
+               cache: Option<Arc<ResultCache>>,
+               collector: Option<std::thread::JoinHandle<()>>,
+               lifecycle: Lifecycle, horizon_ms: f64) -> ClusterReport {
+    let mut leftover = 0usize;
+    let mut slots = 0u64;
+    let mut per_node = Vec::with_capacity(nodes.len());
+    for node in nodes {
+        let fin = node.finish();
+        merge_node(&mut metrics, &mut leftover, &mut slots, &mut per_node,
+                   fin);
+    }
+    // Every event sender is gone once the nodes are down: the collector
+    // drains its queue and exits; its final counters are authoritative.
+    if let Some(h) = collector {
+        h.join().expect("cache-fill collector panicked");
+    }
+    if let Some(c) = &cache {
+        frontend.cache = Some(c.stats());
+    }
+    ClusterReport {
+        metrics,
+        horizon_ms,
+        attempts,
+        leftover,
+        slots,
+        drains: lifecycle.drains,
+        rejoins: lifecycle.rejoins,
+        policy: cfg.policy,
+        frontend,
+        per_node,
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -527,7 +935,8 @@ fn run_wall_closed(cfg: &ClusterConfig, load: &LoadGenConfig,
 
 /// Open loop on the virtual clock: route the pre-generated trace with a
 /// deterministic per-node backlog model, then serve each node's shard as
-/// its own discrete-event simulation. Same seed ⇒ identical report.
+/// its own discrete-event simulation. Same seed (and shard count) ⇒
+/// identical report.
 ///
 /// The backlog model is a leaky bucket per node: dispatching a request
 /// adds its estimated per-request work (the platform's isolated latency
@@ -535,13 +944,31 @@ fn run_wall_closed(cfg: &ClusterConfig, load: &LoadGenConfig,
 /// drains at one ms of work per worker per millisecond of trace time —
 /// so a Nano node fills ~12× faster than a Xavier NX node and the
 /// gauge-driven policies see the heterogeneity without live feedback.
+///
+/// Gossip is modeled exactly: routers never read the live buckets, only
+/// a *published* copy refreshed at gossip-epoch boundaries
+/// (`⌊t/gossip_ms⌋`), so every decision routes on a view up to one
+/// gossip period stale — including the node-active flag. A stale pick of
+/// a node whose drain window has opened is counted as a misroute and
+/// re-routed, mirroring the live arm. The cache models the leader's fill
+/// at its dispatch estimate (RTT + backlog/drain + isolated latency):
+/// identical requests inside that span coalesce, later ones hit until
+/// TTL expiry.
 fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                     horizon_ms: f64) -> ClusterReport {
     let n = cfg.nodes.len();
+    let k = cfg.frontend.router_shards;
+    let gossip_ms = cfg.frontend.gossip_ms;
     let trace = load.generator().generate_horizon(horizon_ms);
     let attempts = trace.len() as u64;
-    let mut router = Router::new(cfg.policy, load.seed ^ 0xC1_05_7E);
-    let mut link_rng = Pcg32::seeded(load.seed ^ 0x11_4E);
+    let mut routers: Vec<Router> = (0..k)
+        .map(|s| Router::with_stream(cfg.policy, load.seed ^ 0xC1_05_7E,
+                                     s as u64))
+        .collect();
+    let mut link_rngs: Vec<Pcg32> = (0..k)
+        .map(|s| Pcg32::new(load.seed ^ 0x11_4E, s as u64))
+        .collect();
+    let mut vcache = cfg.frontend.cache.map(VirtualCache::new);
     let ref_batch = cfg.ref_batch();
     let sims: Vec<PlatformSim> = cfg
         .nodes
@@ -556,43 +983,105 @@ fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
         .iter()
         .map(|s| s.workers.clamp(1, N_MODELS) as f64)
         .collect();
+    let offline_at = |t: f64| -> Option<usize> {
+        cfg.drain
+            .filter(|d| t >= d.at_ms && t < d.rejoin_at_ms)
+            .map(|d| d.node)
+    };
+    // Truth state (decayed to each arrival) vs published state (frozen
+    // at the last gossip epoch boundary — what the routers see).
     let mut est_backlog = vec![0.0f64; n];
     let mut last_ms = vec![0.0f64; n];
-    let mut shards: Vec<Vec<crate::workload::request::Request>> =
-        (0..n).map(|_| Vec::new()).collect();
+    let mut pub_backlog = vec![0.0f64; n];
+    let mut pub_active = vec![true; n];
+    let mut pub_ms = 0.0f64;
+    let mut last_epoch: Option<u64> = None;
+    let mut shards: Vec<Vec<Request>> = (0..n).map(|_| Vec::new()).collect();
     let mut router_metrics = Metrics::new();
-    for r in &trace {
+    let mut misroutes = 0u64;
+    let mut staleness = StalenessStat::default();
+    let mut views: Vec<NodeView> = Vec::with_capacity(n);
+    for (idx, r) in trace.iter().enumerate() {
+        let t = r.arrival_ms;
+        // Gossip tick: republish at each new epoch boundary.
+        let epoch = (t / gossip_ms).floor() as u64;
+        if last_epoch != Some(epoch) {
+            let t_pub = epoch as f64 * gossip_ms;
+            for i in 0..n {
+                est_backlog[i] = (est_backlog[i]
+                    - (t_pub - last_ms[i]) * drain_rate[i])
+                    .max(0.0);
+                last_ms[i] = t_pub;
+                pub_backlog[i] = est_backlog[i];
+                pub_active[i] = offline_at(t_pub) != Some(i);
+            }
+            pub_ms = t_pub;
+            last_epoch = Some(epoch);
+        }
+        // Decay the truth buckets to the arrival instant.
         for i in 0..n {
             est_backlog[i] = (est_backlog[i]
-                - (r.arrival_ms - last_ms[i]) * drain_rate[i])
+                - (t - last_ms[i]) * drain_rate[i])
                 .max(0.0);
-            last_ms[i] = r.arrival_ms;
+            last_ms[i] = t;
         }
-        let offline = cfg
-            .drain
-            .filter(|d| r.arrival_ms >= d.at_ms && r.arrival_ms < d.rejoin_at_ms)
-            .map(|d| d.node);
-        let views: Vec<NodeView> = (0..n)
-            .map(|i| NodeView {
-                active: offline != Some(i),
-                rtt_ms: cfg.nodes[i].net.rtt_ms,
-                backlog_ms: est_backlog[i],
-                service_est_ms: est_backlog[i] / drain_rate[i]
-                    + sims[i].latency.isolated_ms(r.model, ref_batch),
-            })
-            .collect();
-        match router.route(&views, r.slo_ms - r.transmission_ms) {
-            Ok(i) => {
-                let mut routed = r.clone();
-                routed.transmission_ms +=
-                    cfg.nodes[i].net.delay_ms(&mut link_rng);
-                est_backlog[i] += sims[i]
-                    .latency
-                    .isolated_ms(r.model, ref_batch)
-                    / ref_batch as f64;
-                shards[i].push(routed);
+        // Cache front: hits and coalesces never reach a router.
+        let mut lead_digest = None;
+        if let Some(c) = vcache.as_mut() {
+            let digest = digest_for(load.seed, idx as u64,
+                                    load.repeat_fraction);
+            match c.lookup(r.model, digest, t) {
+                CacheLookup::Hit | CacheLookup::Coalesced => continue,
+                CacheLookup::Lead => lead_digest = Some(digest),
             }
-            Err(reason) => router_metrics.record_shed(r.model, reason),
+        }
+        staleness.record(t - pub_ms);
+        let offline_now = offline_at(t);
+        let shard = idx % k;
+        views.clear();
+        views.extend((0..n).map(|i| NodeView {
+            active: pub_active[i],
+            rtt_ms: cfg.nodes[i].net.rtt_ms,
+            backlog_ms: pub_backlog[i],
+            service_est_ms: pub_backlog[i] / drain_rate[i]
+                + sims[i].latency.isolated_ms(r.model, ref_batch),
+        }));
+        loop {
+            match routers[shard].route(&views, r.slo_ms - r.transmission_ms)
+            {
+                Ok(i) if offline_now == Some(i) => {
+                    // The published view lags the drain event: a real
+                    // node would refuse this dispatch. Count the
+                    // misroute and re-route on the corrected set.
+                    misroutes += 1;
+                    views[i].active = false;
+                }
+                Ok(i) => {
+                    let mut routed = r.clone();
+                    routed.transmission_ms +=
+                        cfg.nodes[i].net.delay_ms(&mut link_rngs[shard]);
+                    let service_est = est_backlog[i] / drain_rate[i]
+                        + sims[i].latency.isolated_ms(r.model, ref_batch);
+                    est_backlog[i] += sims[i]
+                        .latency
+                        .isolated_ms(r.model, ref_batch)
+                        / ref_batch as f64;
+                    shards[i].push(routed);
+                    if let (Some(c), Some(digest)) =
+                        (vcache.as_mut(), lead_digest)
+                    {
+                        c.fill(r.model, digest,
+                               t + cfg.nodes[i].net.rtt_ms + service_est);
+                    }
+                    break;
+                }
+                Err(reason) => {
+                    // A shed leader leaves no cache entry: the next
+                    // identical request leads afresh.
+                    router_metrics.record_shed(r.model, reason);
+                    break;
+                }
+            }
         }
     }
     // Serve the shards sequentially: each node is its own deterministic
@@ -632,6 +1121,15 @@ fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
         drains,
         rejoins,
         policy: cfg.policy,
+        frontend: FrontEndReport {
+            shards: k,
+            gossip_ms,
+            decisions: staleness.decisions,
+            misroutes,
+            staleness_mean_ms: staleness.mean_ms(),
+            staleness_max_ms: staleness.max_ms,
+            cache: vcache.map(|c| c.stats),
+        },
         per_node,
     }
 }
@@ -660,12 +1158,15 @@ mod tests {
                 ..Default::default()
             },
             drain,
+            frontend: FrontEndConfig::default(),
         }
     }
 
     fn assert_conserved(report: &ClusterReport) {
+        // Extended identity: the cache is a third terminal disposition.
         assert_eq!(report.metrics.outcomes().len() as u64
                        + report.metrics.shed_total()
+                       + report.cache_served()
                        + report.leftover as u64,
                    report.attempts,
                    "requests lost or double-counted cluster-wide");
@@ -674,10 +1175,13 @@ mod tests {
             assert!(seen.insert(o.id),
                     "request {} served twice across the cluster", o.id);
         }
-        // Router edge sheds + per-node dispatch cover every attempt.
+        // Router edge sheds + cache-served + per-node dispatch cover
+        // every attempt (misroutes re-route, so they never leak).
         let dispatched: u64 =
             report.per_node.iter().map(|n| n.dispatched).sum();
-        assert_eq!(dispatched + report.router_sheds(), report.attempts);
+        assert_eq!(dispatched + report.router_sheds()
+                       + report.cache_served(),
+                   report.attempts);
     }
 
     /// Satellite acceptance: virtual-clock cluster runs are conserved and
@@ -722,6 +1226,134 @@ mod tests {
         assert!(a.metrics.completed() > 0);
     }
 
+    /// Tentpole acceptance (virtual arm): sharded routing from the
+    /// gossiped view is bit-deterministic for any fixed `(seed, K)` —
+    /// every policy's state (cursor, PCG stream) is shard-local — and
+    /// the extended conservation identity holds with the cache on and a
+    /// repeat-heavy workload.
+    #[test]
+    fn virtual_sharded_cached_runs_are_bit_deterministic_per_shard_count() {
+        let mut cfg = hetero_cfg(RoutePolicy::PowerOfTwoChoices,
+                                 ClockKind::Virtual, None);
+        cfg.frontend.cache =
+            Some(CacheConfig { ttl_ms: 500.0, capacity: 4096 });
+        let load = LoadGenConfig {
+            rps: 200.0,
+            seconds: 10.0,
+            seed: 9,
+            slo_scale: 3.0,
+            repeat_fraction: 0.5,
+            ..Default::default()
+        };
+        let run_k = |k: usize| -> ClusterReport {
+            let mut c = cfg.clone();
+            c.frontend.router_shards = k;
+            run_cluster(&c, &load).unwrap()
+        };
+        for k in [1usize, 4] {
+            let a = run_k(k);
+            let b = run_k(k);
+            assert_conserved(&a);
+            assert_conserved(&b);
+            assert_eq!(a.metrics.outcomes(), b.metrics.outcomes(),
+                       "diverged on the same (seed, {k} shards)");
+            assert_eq!(a.frontend.cache, b.frontend.cache);
+            assert_eq!(a.slots, b.slots);
+            assert_eq!(a.frontend.shards, k);
+            // The repeat-heavy workload actually exercised the cache.
+            let cache = a.frontend.cache.unwrap();
+            assert!(cache.served() > 0, "cache never served ({k} shards)");
+            assert!(cache.hit_rate() > 0.1,
+                    "hit rate implausibly low: {}", cache.hit_rate());
+        }
+        // Every attempt either terminated at the cache or made exactly
+        // one routing decision — no request slipped between the tiers.
+        let one = run_k(1);
+        assert_eq!(one.frontend.cache.unwrap().served()
+                       + one.frontend.decisions,
+                   one.attempts);
+    }
+
+    /// Cache TTL semantics on the deterministic arm: with a TTL shorter
+    /// than the popular digests' re-arrival gap, entries expire and the
+    /// repeats return to routing (stale > 0) instead of being served
+    /// forever — and conservation still holds exactly.
+    #[test]
+    fn virtual_cache_ttl_expiry_returns_requests_to_routing() {
+        let mut cfg = hetero_cfg(RoutePolicy::JoinShortestBacklog,
+                                 ClockKind::Virtual, None);
+        let load = LoadGenConfig {
+            rps: 100.0,
+            seconds: 10.0,
+            seed: 5,
+            slo_scale: 3.0,
+            repeat_fraction: 0.9,
+            ..Default::default()
+        };
+        // Long TTL: popular digests mostly hit.
+        cfg.frontend.cache =
+            Some(CacheConfig { ttl_ms: 60_000.0, capacity: 4096 });
+        let long = run_cluster(&cfg, &load).unwrap();
+        assert_conserved(&long);
+        let long_stats = long.frontend.cache.unwrap();
+        assert!(long_stats.served() > 0);
+        assert_eq!(long_stats.stale, 0, "nothing should expire in 60s TTL");
+        // Short TTL: the same workload sees expiries, and every expired
+        // lookup re-routed (conservation would break if one were lost).
+        cfg.frontend.cache =
+            Some(CacheConfig { ttl_ms: 50.0, capacity: 4096 });
+        let short = run_cluster(&cfg, &load).unwrap();
+        assert_conserved(&short);
+        let short_stats = short.frontend.cache.unwrap();
+        assert!(short_stats.stale > 0,
+                "50ms TTL never expired under a 10s repeat-heavy trace");
+        assert!(short_stats.served() < long_stats.served(),
+                "shorter TTL cannot serve more");
+    }
+
+    /// Staleness injection: with a gossip period far larger than the
+    /// drain event's position in it, the published view keeps the
+    /// drained node active for up to a full epoch — every stale pick is
+    /// counted as a misroute and re-routed, none are lost, and the
+    /// recorded per-decision staleness actually reflects the lag.
+    #[test]
+    fn virtual_stale_view_counts_misroutes_across_a_drain() {
+        let drain = DrainScenario {
+            node: 0,
+            at_ms: 2_500.0,
+            rejoin_at_ms: 1e12,
+        };
+        let mut cfg = hetero_cfg(RoutePolicy::RoundRobin,
+                                 ClockKind::Virtual, Some(drain));
+        cfg.frontend.gossip_ms = 1_000.0;
+        let load = LoadGenConfig {
+            rps: 100.0,
+            seconds: 5.0,
+            seed: 13,
+            slo_scale: 3.0,
+            ..Default::default()
+        };
+        let report = run_cluster(&cfg, &load).unwrap();
+        assert_conserved(&report);
+        // Node 0 drains at 2.5s but stays published-active until the 3s
+        // epoch: round-robin keeps picking it for ~0.5s of arrivals.
+        assert!(report.frontend.misroutes > 10,
+                "no misroutes despite a 500ms stale window: {}",
+                report.frontend.misroutes);
+        assert!(report.per_node[0].dispatched > 0);
+        // Staleness is recorded per decision and bounded by the period.
+        assert!(report.frontend.staleness_max_ms <= 1_000.0 + 1e-9);
+        assert!(report.frontend.staleness_mean_ms > 0.0);
+        // And with gossip at the default 5ms the same scenario misroutes
+        // at most a handful of requests.
+        cfg.frontend.gossip_ms = 5.0;
+        let tight = run_cluster(&cfg, &load).unwrap();
+        assert_conserved(&tight);
+        assert!(tight.frontend.misroutes < report.frontend.misroutes / 4,
+                "tight gossip should shrink misroutes: {} vs {}",
+                tight.frontend.misroutes, report.frontend.misroutes);
+    }
+
     /// The drain window really gates routing: draining a node for the
     /// whole horizon leaves it with zero dispatched requests, and the
     /// remaining nodes absorb (or edge-shed) the full offered load.
@@ -764,6 +1396,7 @@ mod tests {
                 ..Default::default()
             },
             drain: None,
+            frontend: FrontEndConfig::default(),
         };
         let load = LoadGenConfig {
             rps: 40.0,
@@ -777,6 +1410,39 @@ mod tests {
         assert_eq!(report.router_sheds(), report.attempts,
                    "infeasible node still received dispatch");
         assert_eq!(report.metrics.outcomes().len(), 0);
+    }
+
+    /// Live sharded front-end smoke: four submitter threads route from
+    /// the gossiped view with the cache on; the cluster serves, the
+    /// extended identity holds, and the repeat-heavy workload produces
+    /// real cache service.
+    #[test]
+    fn wall_sharded_open_loop_with_cache_conserves() {
+        let mut cfg = hetero_cfg(RoutePolicy::JoinShortestBacklog,
+                                 ClockKind::Wall, None);
+        cfg.frontend.router_shards = 4;
+        cfg.frontend.gossip_ms = 2.0;
+        cfg.frontend.cache =
+            Some(CacheConfig { ttl_ms: 300.0, capacity: 4096 });
+        let load = LoadGenConfig {
+            rps: 400.0,
+            seconds: 0.5,
+            seed: 17,
+            slo_scale: 3.0,
+            repeat_fraction: 0.6,
+            ..Default::default()
+        };
+        let report = run_cluster(&cfg, &load).unwrap();
+        assert!(report.attempts > 100, "trace too small");
+        assert_conserved(&report);
+        assert!(report.metrics.completed() > 0, "cluster served nothing");
+        assert_eq!(report.frontend.shards, 4);
+        let cache = report.frontend.cache.unwrap();
+        assert!(cache.served() > 0, "repeat-heavy load never hit the cache");
+        // Every attempt either terminated at the cache or made exactly
+        // one routing decision.
+        assert_eq!(report.frontend.decisions + cache.served(),
+                   report.attempts);
     }
 
     /// Closed-loop wall-clock cluster smoke: terminal events from every
@@ -797,6 +1463,7 @@ mod tests {
                 ..Default::default()
             },
             drain: None,
+            frontend: FrontEndConfig::default(),
         };
         let load = LoadGenConfig {
             seconds: 0.3,

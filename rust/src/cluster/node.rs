@@ -16,13 +16,24 @@
 //! collected → `rejoin` starts a fresh server incarnation and dispatch
 //! resumes. Every incarnation gets a disjoint request-id window, so
 //! outcome ids stay unique cluster-wide through any number of rejoins.
+//!
+//! Concurrency contract: the node is `Sync` — many router shards
+//! dispatch through `&self` concurrently while the gossip publisher
+//! reads gauges — but *lifecycle transitions* (`start` / `begin_drain` /
+//! `poll_drained` / `rejoin`) are driven from the single cluster
+//! lifecycle thread. Dispatchers racing a drain are expected and safe:
+//! [`EdgeNode::try_dispatch`] refuses (returns `None`) once the state
+//! leaves `Active`, which the front-end counts as a stale-view misroute
+//! and re-routes.
 
 use crate::metrics::ShedReason;
 use crate::platform::PlatformSpec;
 use crate::serve::worker::ServeEvent;
 use crate::serve::{GaugeSnapshot, ServeConfig, ServeReport, Server};
 use crate::workload::models::ModelId;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Mutex, RwLock};
 
 use super::netmodel::NetModel;
 
@@ -59,6 +70,18 @@ pub enum NodeState {
     Drained,
 }
 
+const STATE_ACTIVE: u8 = 0;
+const STATE_DRAINING: u8 = 1;
+const STATE_DRAINED: u8 = 2;
+
+fn decode_state(v: u8) -> NodeState {
+    match v {
+        STATE_ACTIVE => NodeState::Active,
+        STATE_DRAINING => NodeState::Draining,
+        _ => NodeState::Drained,
+    }
+}
+
 /// Width of each (node, incarnation) request-id window: bits 40.. encode
 /// the node, bits 32..40 the incarnation, leaving 2^32 ids per serving
 /// segment.
@@ -71,17 +94,17 @@ pub struct EdgeNode {
     pub spec: NodeSpec,
     /// Requests the router dispatched here (including any the node's own
     /// ingress then shed — those are accounted in the node's metrics).
-    pub dispatched: u64,
+    dispatched: AtomicU64,
     cfg: ServeConfig,
-    state: NodeState,
-    server: Option<Server>,
-    drain_rx: Option<Receiver<ServeReport>>,
+    state: AtomicU8,
+    server: RwLock<Option<Server>>,
+    drain_rx: Mutex<Option<Receiver<ServeReport>>>,
     /// Reports of completed serving segments (one per drain, plus the
     /// final shutdown).
-    segments: Vec<ServeReport>,
+    segments: Mutex<Vec<ServeReport>>,
     events_tx: Option<Sender<ServeEvent>>,
     node_index: usize,
-    incarnations: u64,
+    incarnations: AtomicU64,
 }
 
 impl EdgeNode {
@@ -97,27 +120,32 @@ impl EdgeNode {
         };
         EdgeNode {
             spec,
-            dispatched: 0,
+            dispatched: AtomicU64::new(0),
             cfg,
-            state: NodeState::Drained,
-            server: None,
-            drain_rx: None,
-            segments: Vec::new(),
+            state: AtomicU8::new(STATE_DRAINED),
+            server: RwLock::new(None),
+            drain_rx: Mutex::new(None),
+            segments: Mutex::new(Vec::new()),
             events_tx,
             node_index,
-            incarnations: 0,
+            incarnations: AtomicU64::new(0),
         }
     }
 
     /// Current lifecycle state.
     pub fn state(&self) -> NodeState {
-        self.state
+        decode_state(self.state.load(Ordering::Acquire))
+    }
+
+    /// Requests the router dispatched here so far.
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::Relaxed)
     }
 
     /// Serving segments completed so far (drains; the live segment is
     /// not counted until [`EdgeNode::finish`]).
     pub fn segments_done(&self) -> usize {
-        self.segments.len()
+        self.segments.lock().unwrap().len()
     }
 
     /// The per-node trace-mode serving configuration (virtual-clock
@@ -128,49 +156,68 @@ impl EdgeNode {
 
     /// Start (or restart) the node's server. Each incarnation claims a
     /// fresh request-id window so ids never collide across nodes or
-    /// across a drain/rejoin cycle.
-    pub fn start(&mut self) {
-        assert!(self.server.is_none(), "node already running");
-        self.cfg.request_id_base = (self.node_index as u64 + 1)
-            * NODE_ID_STRIDE
-            + self.incarnations * INCARNATION_ID_STRIDE;
-        self.incarnations += 1;
-        self.server = Some(Server::start(&self.cfg, self.events_tx.clone()));
-        self.state = NodeState::Active;
+    /// across a drain/rejoin cycle. Lifecycle-thread only.
+    pub fn start(&self) {
+        let mut server = self.server.write().unwrap();
+        assert!(server.is_none(), "node already running");
+        let incarnation = self.incarnations.fetch_add(1, Ordering::Relaxed);
+        let cfg = ServeConfig {
+            request_id_base: (self.node_index as u64 + 1) * NODE_ID_STRIDE
+                + incarnation * INCARNATION_ID_STRIDE,
+            ..self.cfg.clone()
+        };
+        *server = Some(Server::start(&cfg, self.events_tx.clone()));
+        self.state.store(STATE_ACTIVE, Ordering::Release);
     }
 
     /// Export the node's live gauge snapshot (`None` unless active).
     pub fn snapshot(&self) -> Option<GaugeSnapshot> {
-        match self.state {
-            NodeState::Active => {
-                self.server.as_ref().map(|s| s.gauge_snapshot())
-            }
-            _ => None,
+        let server = self.server.read().unwrap();
+        if self.state() != NodeState::Active {
+            return None;
         }
+        server.as_ref().map(|s| s.gauge_snapshot())
     }
 
-    /// Dispatch one request to the node's ingress. The caller has
-    /// already charged the link delay into `transmission_ms`; rejections
-    /// (admission, backpressure) are typed and accounted in the node's
-    /// own metrics.
-    pub fn dispatch(&mut self, model: ModelId, slo_ms: f64,
-                    transmission_ms: f64) -> Result<u64, ShedReason> {
-        debug_assert_eq!(self.state, NodeState::Active,
-                         "router dispatched to a non-active node");
-        self.dispatched += 1;
-        self.server
-            .as_ref()
-            .expect("active node without a server")
-            .submit(model, slo_ms, transmission_ms)
+    /// Dispatch one request to the node's ingress — `None` when the node
+    /// is not accepting (draining/drained: the caller routed from a
+    /// stale view and should count a misroute and re-route). The caller
+    /// has already charged the link delay into `transmission_ms`;
+    /// `Some(Err(_))` rejections (admission, backpressure) are typed and
+    /// accounted in the node's own metrics. Safe from any thread.
+    pub fn try_dispatch(&self, model: ModelId, slo_ms: f64,
+                        transmission_ms: f64)
+                        -> Option<Result<u64, ShedReason>> {
+        // State is re-checked under the read guard: `begin_drain` flips
+        // it before taking the write lock, so a dispatcher that gets the
+        // guard with state still Active holds a live server.
+        let server = self.server.read().unwrap();
+        if self.state() != NodeState::Active {
+            return None;
+        }
+        let server = server.as_ref()?;
+        self.dispatched.fetch_add(1, Ordering::Relaxed);
+        Some(server.submit(model, slo_ms, transmission_ms))
     }
 
     /// Take the node out of the cluster: dispatch stops immediately (the
     /// state flips to `Draining`), and the server runs the existing drain
     /// protocol on a background thread — accepted backlog is flushed, not
     /// dropped. Poll [`EdgeNode::poll_drained`] for completion.
-    pub fn begin_drain(&mut self) {
-        assert_eq!(self.state, NodeState::Active, "can only drain an active node");
-        let server = self.server.take().expect("active node without a server");
+    /// Lifecycle-thread only.
+    pub fn begin_drain(&self) {
+        assert_eq!(self.state(), NodeState::Active,
+                   "can only drain an active node");
+        // Refuse new dispatch BEFORE taking the server, so in-flight
+        // `try_dispatch` read guards either finish against the live
+        // server or observe the state change and misroute.
+        self.state.store(STATE_DRAINING, Ordering::Release);
+        let server = self
+            .server
+            .write()
+            .unwrap()
+            .take()
+            .expect("active node without a server");
         let (tx, rx) = std::sync::mpsc::channel();
         std::thread::Builder::new()
             .name(format!("bcedge-node-drain-{}", self.node_index))
@@ -180,41 +227,42 @@ impl EdgeNode {
                 let _ = tx.send(server.shutdown());
             })
             .expect("spawn node drain thread");
-        self.drain_rx = Some(rx);
-        self.state = NodeState::Draining;
+        *self.drain_rx.lock().unwrap() = Some(rx);
     }
 
     /// Has an in-progress drain finished? Folds the flushed segment's
     /// report into the node's accounting when it has. Idempotent; `true`
-    /// once the node is `Drained`.
-    pub fn poll_drained(&mut self) -> bool {
-        match self.state {
+    /// once the node is `Drained`. Lifecycle-thread only.
+    pub fn poll_drained(&self) -> bool {
+        match self.state() {
             NodeState::Drained => true,
             NodeState::Active => false,
-            NodeState::Draining => match self
-                .drain_rx
-                .as_ref()
-                .expect("draining node without a report channel")
-                .try_recv()
-            {
-                Ok(report) => {
-                    self.segments.push(report);
-                    self.drain_rx = None;
-                    self.state = NodeState::Drained;
-                    true
+            NodeState::Draining => {
+                let mut drain_rx = self.drain_rx.lock().unwrap();
+                match drain_rx
+                    .as_ref()
+                    .expect("draining node without a report channel")
+                    .try_recv()
+                {
+                    Ok(report) => {
+                        self.segments.lock().unwrap().push(report);
+                        *drain_rx = None;
+                        self.state.store(STATE_DRAINED, Ordering::Release);
+                        true
+                    }
+                    Err(TryRecvError::Empty) => false,
+                    Err(TryRecvError::Disconnected) => {
+                        panic!("node drain thread died before reporting")
+                    }
                 }
-                Err(TryRecvError::Empty) => false,
-                Err(TryRecvError::Disconnected) => {
-                    panic!("node drain thread died before reporting")
-                }
-            },
+            }
         }
     }
 
     /// Bring a drained node back: a fresh server incarnation starts and
-    /// the router may dispatch again.
-    pub fn rejoin(&mut self) {
-        assert_eq!(self.state, NodeState::Drained,
+    /// the router may dispatch again. Lifecycle-thread only.
+    pub fn rejoin(&self) {
+        assert_eq!(self.state(), NodeState::Drained,
                    "can only rejoin a drained node");
         self.start();
     }
@@ -224,19 +272,18 @@ impl EdgeNode {
     /// unfinished background drain is waited for). Conservation: the
     /// segments jointly account every dispatched request as outcome,
     /// shed, or leftover.
-    pub fn finish(mut self) -> FinishedNode {
-        if let Some(rx) = self.drain_rx.take() {
-            let report = rx.recv().expect("node drain thread died");
-            self.segments.push(report);
-            self.state = NodeState::Drained;
+    pub fn finish(self) -> FinishedNode {
+        let mut segments = self.segments.into_inner().unwrap();
+        if let Some(rx) = self.drain_rx.into_inner().unwrap() {
+            segments.push(rx.recv().expect("node drain thread died"));
         }
-        if let Some(server) = self.server.take() {
-            self.segments.push(server.shutdown());
+        if let Some(server) = self.server.into_inner().unwrap() {
+            segments.push(server.shutdown());
         }
         FinishedNode {
             spec: self.spec,
-            dispatched: self.dispatched,
-            segments: self.segments,
+            dispatched: self.dispatched.into_inner(),
+            segments,
         }
     }
 }

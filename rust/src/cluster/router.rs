@@ -188,6 +188,15 @@ impl Router {
         Router { policy, cursor: 0, rng: Pcg32::seeded(seed) }
     }
 
+    /// A router on an explicit PCG stream: shard `stream` of a sharded
+    /// front-end. Each shard gets its own independent sampling sequence
+    /// from the same seed (and its own round-robin cursor), so routing
+    /// is deterministic for any fixed `(seed, shard count)` regardless
+    /// of how shards interleave in real time.
+    pub fn with_stream(policy: RoutePolicy, seed: u64, stream: u64) -> Self {
+        Router { policy, cursor: 0, rng: Pcg32::new(seed, stream) }
+    }
+
     /// The policy this router runs.
     pub fn policy(&self) -> RoutePolicy {
         self.policy
@@ -297,6 +306,34 @@ mod tests {
         let one = [view(true, 5.0, 0.0, 50.0)];
         assert_eq!(route_slo_aware(&one, 100.0), Some(0));
         assert_eq!(route_slo_aware(&one, 40.0), None);
+    }
+
+    #[test]
+    fn shard_streams_are_deterministic_and_independent() {
+        let views = [view(true, 1.0, 10.0, 1.0),
+                     view(true, 1.0, 11.0, 1.0),
+                     view(true, 1.0, 12.0, 1.0),
+                     view(true, 1.0, 13.0, 1.0)];
+        let draw = |r: &mut Router| -> Vec<usize> {
+            (0..64).map(|_| r.route(&views, 1e9).unwrap()).collect()
+        };
+        // Same (seed, stream): identical pick sequence, run to run.
+        let a = draw(&mut Router::with_stream(
+            RoutePolicy::PowerOfTwoChoices, 42, 3));
+        let b = draw(&mut Router::with_stream(
+            RoutePolicy::PowerOfTwoChoices, 42, 3));
+        assert_eq!(a, b);
+        // Different streams from the same seed: diverged sequences (the
+        // shards are not sampling in lockstep).
+        let c = draw(&mut Router::with_stream(
+            RoutePolicy::PowerOfTwoChoices, 42, 4));
+        assert_ne!(a, c, "shard streams collided");
+        // Round-robin cursors are shard-local: each shard starts at 0.
+        let mut s0 = Router::with_stream(RoutePolicy::RoundRobin, 1, 0);
+        let mut s1 = Router::with_stream(RoutePolicy::RoundRobin, 1, 1);
+        assert_eq!(s0.route(&views, 1e9), Ok(0));
+        assert_eq!(s1.route(&views, 1e9), Ok(0));
+        assert_eq!(s0.route(&views, 1e9), Ok(1));
     }
 
     #[test]

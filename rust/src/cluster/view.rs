@@ -1,0 +1,326 @@
+//! Gossiped cluster state: epoch-stamped, atomically-published gauge
+//! snapshots the sharded front-end routes from.
+//!
+//! The old front-end read `Server::gauge_snapshot()` live, per request,
+//! per node — one serial loop touching every node's gauges on every
+//! decision, the last single-threaded bottleneck in the system (ROADMAP
+//! open item 3). Related edge-serving work routes from per-node
+//! *summaries* instead of synchronous state, accepting bounded staleness
+//! in exchange for a lock-free dispatch path. This module is that
+//! contract:
+//!
+//! * A background publisher refreshes one [`ClusterView`] slot per node
+//!   every `--gossip-ms` (the gossip period). Each publish bumps the
+//!   slot's epoch.
+//! * Routers hold a private [`ViewReader`] that caches the last `Arc`
+//!   it saw per slot keyed by epoch: syncing is one relaxed atomic load
+//!   per node in steady state, and only takes the slot's `RwLock` on the
+//!   (rare) epoch change. No lock is held while routing.
+//! * Staleness is *bounded and observable*: every snapshot carries the
+//!   cluster-clock time it was published, so each routing decision can
+//!   record exactly how old its view was. A stale view can route to a
+//!   node that has since begun draining — the node refuses
+//!   (`EdgeNode::try_dispatch` returns `None`), the front-end counts a
+//!   **misroute**, masks the node, and re-routes. Nothing is lost; the
+//!   cost of gossip is counted, not hidden.
+//!
+//! `ArcSwap` would be the off-the-shelf shape here; this is the std-only
+//! equivalent (epoch atomic + `RwLock<Arc<_>>` with reader-side epoch
+//! caching), which is lock-free on the serving path whenever the epoch
+//! has not moved — i.e. for every request between two gossip ticks.
+
+use crate::serve::GaugeSnapshot;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One node's published state: what the front-end knows, as of
+/// `published_ms` on the cluster clock.
+#[derive(Clone, Debug)]
+pub struct NodePublished {
+    /// Monotone per-slot publish counter (0 = never published).
+    pub epoch: u64,
+    /// Cluster-clock time this snapshot was taken, ms.
+    pub published_ms: f64,
+    /// Was the node accepting dispatch when published?
+    pub active: bool,
+    /// The node's pool-wide gauges (meaningless when `!active`).
+    pub gauges: GaugeSnapshot,
+}
+
+impl Default for NodePublished {
+    fn default() -> Self {
+        NodePublished {
+            epoch: 0,
+            published_ms: 0.0,
+            active: false,
+            gauges: GaugeSnapshot::default(),
+        }
+    }
+}
+
+/// One atomically-published slot. Writers replace the `Arc` under the
+/// write lock *first*, then advance the epoch with `Release`: a reader
+/// that observes the new epoch (`Acquire`) is guaranteed to find a
+/// snapshot at least that new behind the lock.
+struct Slot {
+    epoch: AtomicU64,
+    snap: RwLock<Arc<NodePublished>>,
+}
+
+/// The shared, epoch-stamped view of every node, written by the gossip
+/// publisher and read by every router shard.
+pub struct ClusterView {
+    slots: Vec<Slot>,
+}
+
+impl ClusterView {
+    /// A view over `nodes` slots, all at epoch 0 (never published,
+    /// inactive) — routers see nothing until the first gossip tick.
+    pub fn new(nodes: usize) -> Self {
+        ClusterView {
+            slots: (0..nodes)
+                .map(|_| Slot {
+                    epoch: AtomicU64::new(0),
+                    snap: RwLock::new(Arc::new(NodePublished::default())),
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of node slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Publish node `i`'s state as of `now_ms`, returning the new epoch.
+    pub fn publish(&self, i: usize, active: bool, gauges: GaugeSnapshot,
+                   now_ms: f64) -> u64 {
+        let slot = &self.slots[i];
+        let epoch = slot.epoch.load(Ordering::Relaxed) + 1;
+        *slot.snap.write().unwrap() = Arc::new(NodePublished {
+            epoch,
+            published_ms: now_ms,
+            active,
+            gauges,
+        });
+        slot.epoch.store(epoch, Ordering::Release);
+        epoch
+    }
+
+    /// Node `i`'s current publish epoch (0 = never published).
+    pub fn epoch(&self, i: usize) -> u64 {
+        self.slots[i].epoch.load(Ordering::Acquire)
+    }
+}
+
+/// A router shard's private, epoch-cached handle on the shared view.
+/// [`ViewReader::sync`] is one `Acquire` load per slot when nothing
+/// changed — the slot lock is only touched on an epoch move, i.e. once
+/// per gossip tick, not once per request.
+pub struct ViewReader {
+    cached: Vec<(u64, Arc<NodePublished>)>,
+}
+
+impl ViewReader {
+    /// A reader over `view`, pre-synced to its current state.
+    pub fn new(view: &ClusterView) -> Self {
+        let mut r = ViewReader {
+            cached: view
+                .slots
+                .iter()
+                .map(|_| (0, Arc::new(NodePublished::default())))
+                .collect(),
+        };
+        r.sync(view);
+        r
+    }
+
+    /// Pull any slots whose epoch moved since the last sync. Key the
+    /// cache by the *snapshot's* own epoch (not the atomic we read): a
+    /// racing publisher may install epoch N+1 between our epoch load and
+    /// our lock acquisition, and caching the newer snapshot under the
+    /// older key would re-read it forever.
+    pub fn sync(&mut self, view: &ClusterView) {
+        for (i, slot) in view.slots.iter().enumerate() {
+            let e = slot.epoch.load(Ordering::Acquire);
+            if e != self.cached[i].0 {
+                let snap = slot.snap.read().unwrap().clone();
+                self.cached[i] = (snap.epoch, snap);
+            }
+        }
+    }
+
+    /// Number of node slots.
+    pub fn len(&self) -> usize {
+        self.cached.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cached.is_empty()
+    }
+
+    /// Node `i`'s last-synced published state.
+    pub fn get(&self, i: usize) -> &NodePublished {
+        &self.cached[i].1
+    }
+
+    /// The oldest `published_ms` across all slots — the staleness bound
+    /// for a decision made at `now` is `now - oldest_published_ms()`.
+    pub fn oldest_published_ms(&self) -> f64 {
+        self.cached
+            .iter()
+            .map(|(_, s)| s.published_ms)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Per-shard staleness accounting: how old the gossiped view was at each
+/// routing decision.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StalenessStat {
+    /// Decisions measured.
+    pub decisions: u64,
+    /// Sum of per-decision staleness, ms.
+    pub sum_ms: f64,
+    /// Worst per-decision staleness, ms.
+    pub max_ms: f64,
+}
+
+impl StalenessStat {
+    /// Record one decision made `age_ms` after the oldest slot publish.
+    pub fn record(&mut self, age_ms: f64) {
+        let age = age_ms.max(0.0);
+        self.decisions += 1;
+        self.sum_ms += age;
+        if age > self.max_ms {
+            self.max_ms = age;
+        }
+    }
+
+    /// Mean per-decision staleness, ms (0 with no decisions).
+    pub fn mean_ms(&self) -> f64 {
+        if self.decisions == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.decisions as f64
+        }
+    }
+
+    /// Fold another shard's accounting into this one.
+    pub fn merge(&mut self, other: &StalenessStat) {
+        self.decisions += other.decisions;
+        self.sum_ms += other.sum_ms;
+        self.max_ms = self.max_ms.max(other.max_ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_bumps_epoch_and_readers_see_it() {
+        let view = ClusterView::new(2);
+        assert_eq!(view.epoch(0), 0);
+        let mut reader = ViewReader::new(&view);
+        assert!(!reader.get(0).active, "unpublished slot reads active");
+
+        let mut snap = GaugeSnapshot::default();
+        snap.total_backlog_ms = 42.0;
+        assert_eq!(view.publish(0, true, snap, 10.0), 1);
+        assert_eq!(view.epoch(0), 1);
+
+        reader.sync(&view);
+        let p = reader.get(0);
+        assert!(p.active);
+        assert_eq!(p.epoch, 1);
+        assert_eq!(p.published_ms, 10.0);
+        assert_eq!(p.gauges.total_backlog_ms, 42.0);
+        // Slot 1 untouched.
+        assert!(!reader.get(1).active);
+    }
+
+    #[test]
+    fn sync_is_idempotent_and_tracks_latest_publish() {
+        let view = ClusterView::new(1);
+        let mut reader = ViewReader::new(&view);
+        view.publish(0, true, GaugeSnapshot::default(), 1.0);
+        view.publish(0, false, GaugeSnapshot::default(), 2.0);
+        reader.sync(&view);
+        assert_eq!(reader.get(0).epoch, 2);
+        assert!(!reader.get(0).active);
+        // No new publish: sync keeps the same snapshot.
+        reader.sync(&view);
+        assert_eq!(reader.get(0).epoch, 2);
+    }
+
+    #[test]
+    fn readers_are_independent_and_concurrent_with_publishes() {
+        let view = Arc::new(ClusterView::new(3));
+        let publisher = {
+            let view = Arc::clone(&view);
+            std::thread::spawn(move || {
+                for round in 0..200u64 {
+                    for i in 0..3 {
+                        view.publish(i, true, GaugeSnapshot::default(),
+                                     round as f64);
+                    }
+                }
+            })
+        };
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let view = Arc::clone(&view);
+                std::thread::spawn(move || {
+                    let mut r = ViewReader::new(&view);
+                    let mut last = [0u64; 3];
+                    for _ in 0..500 {
+                        r.sync(&view);
+                        for i in 0..3 {
+                            let e = r.get(i).epoch;
+                            assert!(e >= last[i], "epoch went backwards");
+                            last[i] = e;
+                        }
+                    }
+                })
+            })
+            .collect();
+        publisher.join().unwrap();
+        for h in readers {
+            h.join().unwrap();
+        }
+        let mut r = ViewReader::new(&view);
+        r.sync(&view);
+        assert_eq!(r.get(0).epoch, 200);
+    }
+
+    #[test]
+    fn staleness_stat_records_mean_and_max() {
+        let mut s = StalenessStat::default();
+        assert_eq!(s.mean_ms(), 0.0);
+        s.record(2.0);
+        s.record(6.0);
+        s.record(-1.0); // clock skew clamps to 0, never negative
+        assert_eq!(s.decisions, 3);
+        assert!((s.mean_ms() - 8.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.max_ms, 6.0);
+        let mut t = StalenessStat::default();
+        t.record(10.0);
+        t.merge(&s);
+        assert_eq!(t.decisions, 4);
+        assert_eq!(t.max_ms, 10.0);
+    }
+
+    #[test]
+    fn oldest_published_tracks_the_laggiest_slot() {
+        let view = ClusterView::new(2);
+        view.publish(0, true, GaugeSnapshot::default(), 5.0);
+        view.publish(1, true, GaugeSnapshot::default(), 9.0);
+        let reader = ViewReader::new(&view);
+        assert_eq!(reader.oldest_published_ms(), 5.0);
+    }
+}

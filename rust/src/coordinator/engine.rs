@@ -260,6 +260,15 @@ impl<D: Dispatcher> Engine<D> {
         self.router.queue(model).len()
     }
 
+    /// Tightest deadline among `model`'s routed requests, O(1) (`None`
+    /// when the queue is empty). The serving runtime's intake pass sizes
+    /// its per-wakeup stripe budget from this: a queue whose most urgent
+    /// deadline is nearly due gets a deeper intake stripe so the request
+    /// reaches the scheduler before the deadline passes.
+    pub fn min_deadline_ms(&self, model: ModelId) -> Option<f64> {
+        self.router.queue(model).min_deadline_ms()
+    }
+
     /// Does the engine hold any request for `model` — routed or still in
     /// the not-yet-ingested pending deque? The serving runtime uses this
     /// to detect backlog left behind after a shard migration.

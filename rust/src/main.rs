@@ -11,8 +11,10 @@
 //!   bench-cluster — drive the HETEROGENEOUS EDGE-CLUSTER tier: several
 //!                   nodes (each a full serving runtime on its own
 //!                   Table-V platform behind its own network link)
-//!                   behind a pluggable SLO-aware router, with an
-//!                   optional mid-run node drain/rejoin
+//!                   behind a SHARDED front-end — K router shards
+//!                   working from gossiped gauge snapshots, with an
+//!                   optional deduplicating result cache in front of
+//!                   routing and an optional mid-run node drain/rejoin
 //!   train         — offline SAC training on the platform simulator
 //!   sweep         — Fig. 1 style (batch × concurrency) sweep on the
 //!                   simulator
@@ -38,6 +40,8 @@
 //!   bcedge bench-cluster --nodes xavier-nx:2:2,tx2:2:6,nano:1:12 \
 //!          --policy slo-aware --rps 250 --seconds 5 --slo-scale 3
 //!   bcedge bench-cluster --policy round-robin --drain-node 1
+//!   bcedge bench-cluster --router-shards 4 --gossip-ms 5 \
+//!          --cache-ttl-ms 500 --cache-capacity 4096 --repeat-fraction 0.5
 //!   bcedge train --episodes 100 --out results/sac_policy.json
 //!   bcedge info
 
@@ -81,6 +85,8 @@ fn main() -> anyhow::Result<()> {
             eprintln!("  bench-cluster --nodes PLAT[:WORKERS[:RTT_MS]],... --policy round-robin|\\");
             eprintln!("        join-shortest-backlog|power-of-two|slo-aware --rps N --seconds N \\");
             eprintln!("        [--clock wall|virtual] [--mode open|closed] [--slo-scale X] \\");
+            eprintln!("        [--router-shards K] [--gossip-ms T] [--cache-ttl-ms T] \\");
+            eprintln!("        [--cache-capacity N] [--repeat-fraction F] \\");
             eprintln!("        [--drain-node I] [--drain-at-s T] [--rejoin-at-s T] + bench-serve knobs");
             eprintln!("  train --episodes N --rps N --platform xavier-nx|tx2|nano --out F");
             eprintln!("  sweep --model yolo");
@@ -282,6 +288,13 @@ fn loadgen_of(args: &Args, rps_default: f64, seconds_default: f64)
     if !slo_scale.is_finite() || slo_scale <= 0.0 {
         anyhow::bail!("--slo-scale must be a positive finite number");
     }
+    let repeat_fraction: f64 = args
+        .get_parse("repeat-fraction", 0.0)
+        .map_err(anyhow::Error::msg)?;
+    if !repeat_fraction.is_finite() || !(0.0..=1.0).contains(&repeat_fraction)
+    {
+        anyhow::bail!("--repeat-fraction must be in [0, 1]");
+    }
     Ok(LoadGenConfig {
         rps: args.get_parse("rps", rps_default).map_err(anyhow::Error::msg)?,
         seconds: args
@@ -291,6 +304,7 @@ fn loadgen_of(args: &Args, rps_default: f64, seconds_default: f64)
         envelope,
         mode,
         slo_scale,
+        repeat_fraction,
     })
 }
 
@@ -332,8 +346,8 @@ fn bench_serve(args: &Args) -> anyhow::Result<()> {
 /// stream through the chosen policy, optionally drain/rejoin a node
 /// mid-run, and print the cluster report.
 fn bench_cluster(args: &Args) -> anyhow::Result<()> {
-    use bcedge::cluster::{self, ClusterConfig, DrainScenario, NodeSpec,
-                          RoutePolicy};
+    use bcedge::cluster::{self, CacheConfig, ClusterConfig, DrainScenario,
+                          FrontEndConfig, NodeSpec, RoutePolicy};
     use bcedge::serve::ClockKind;
 
     let load = loadgen_of(args, 200.0, 5.0)?;
@@ -411,13 +425,38 @@ fn bench_cluster(args: &Args) -> anyhow::Result<()> {
             })
         }
     };
+    // Front-end tier: router shards, gossip cadence, result cache
+    // (--cache-ttl-ms 0 = cache off, the default).
+    let cache_ttl_ms: f64 = args
+        .get_parse("cache-ttl-ms", 0.0)
+        .map_err(anyhow::Error::msg)?;
+    let frontend = FrontEndConfig {
+        router_shards: args
+            .get_parse("router-shards", 1usize)
+            .map_err(anyhow::Error::msg)?,
+        gossip_ms: args
+            .get_parse("gossip-ms", 5.0)
+            .map_err(anyhow::Error::msg)?,
+        cache: if cache_ttl_ms > 0.0 {
+            Some(CacheConfig {
+                ttl_ms: cache_ttl_ms,
+                capacity: args
+                    .get_parse("cache-capacity", 65_536usize)
+                    .map_err(anyhow::Error::msg)?,
+            })
+        } else {
+            None
+        },
+    };
     // Per-node template: the node specs override platform/workers, so
     // --workers and --platform are ignored here in favour of --nodes.
     let serve_cfg = serve_config_of(args, clock, seed)?;
-    let cfg = ClusterConfig { nodes, policy, serve: serve_cfg, drain };
+    let cfg = ClusterConfig { nodes, policy, serve: serve_cfg, drain,
+                              frontend };
     println!(
         "bcedge bench-cluster — {} nodes, {} routing, {:?} clock, \
-         {:?} mode, {} rps × {}s, slo×{}",
+         {:?} mode, {} rps × {}s, slo×{}, {} router shard(s), \
+         gossip {} ms, cache {}",
         cfg.nodes.len(),
         policy.name(),
         clock,
@@ -425,6 +464,12 @@ fn bench_cluster(args: &Args) -> anyhow::Result<()> {
         load.rps,
         load.seconds,
         load.slo_scale,
+        frontend.router_shards,
+        frontend.gossip_ms,
+        match frontend.cache {
+            Some(c) => format!("ttl {} ms / cap {}", c.ttl_ms, c.capacity),
+            None => "off".to_string(),
+        },
     );
     for (i, n) in cfg.nodes.iter().enumerate() {
         println!("  node {i}: {} ×{} workers, rtt {} ms", n.platform.name,

@@ -30,6 +30,12 @@ use std::time::Duration;
 /// and the replica bitmasks' meaningful width.
 pub const MAX_POOL: usize = N_MODELS;
 
+/// A request counts as *urgent* for wake-target choice when its remaining
+/// slack is under this many estimated batch spans — roughly the point
+/// where one wrong queue position costs the deadline (see
+/// [`pick_replica`]).
+pub const URGENT_SLACK_BATCHES: f64 = 4.0;
+
 /// Lock-free per-(model, worker) serving gauges, published by workers
 /// each round and read by the ingress fast path and the rebalance
 /// controller. Latencies travel as f64 bit patterns in an `AtomicU64`.
@@ -277,17 +283,7 @@ impl OwnershipTable {
     /// index. The ingress stripes delivery wakeups across the replica
     /// set with this.
     pub fn nth_replica(&self, model: ModelId, n: u64) -> usize {
-        let mask = self.replica_mask(model);
-        if mask == 0 {
-            return 0;
-        }
-        let mut k = n % u64::from(mask.count_ones());
-        let mut rest = mask;
-        while k > 0 && rest.count_ones() > 1 {
-            rest &= rest - 1; // clear the lowest set bit
-            k -= 1;
-        }
-        rest.trailing_zeros() as usize
+        nth_of_mask(self.replica_mask(model), n)
     }
 
     /// Monotone stamp bumped by every map mutation (migration or replica
@@ -367,6 +363,59 @@ impl OwnershipTable {
         self.scale_downs.fetch_add(1, Ordering::Relaxed);
         Some(self.epoch.fetch_add(1, Ordering::AcqRel) + 1)
     }
+}
+
+/// The `n % popcount`-th set bit of `mask`, ascending (worker 0 for an
+/// empty mask). The striping primitive behind [`OwnershipTable::
+/// nth_replica`] and the non-urgent arm of [`pick_replica`].
+pub fn nth_of_mask(mask: u64, n: u64) -> usize {
+    if mask == 0 {
+        return 0;
+    }
+    let mut k = n % u64::from(mask.count_ones());
+    let mut rest = mask;
+    while k > 0 && rest.count_ones() > 1 {
+        rest &= rest - 1; // clear the lowest set bit
+        k -= 1;
+    }
+    rest.trailing_zeros() as usize
+}
+
+/// Deadline-aware wake-target choice for a replicated model: which
+/// member of `mask` should be rung for this delivery?
+///
+/// * Not urgent (plenty of slack): stripe by request id — `nth_of_mask`
+///   spreads deliveries evenly and keeps the choice O(popcount) with no
+///   gauge reads at all.
+/// * Urgent (slack within a few batch spans): ring the replica with the
+///   EMPTIEST per-worker lane (`lane_queues`, indexed by worker id; ties
+///   break to the lowest index). An urgent request parked behind the
+///   fullest lane would burn its remaining slack waiting for a stripe
+///   that a sibling replica could start immediately.
+///
+/// Pure — the submit path feeds it the live gauge lanes, tests feed it
+/// literals.
+pub fn pick_replica(mask: u64, lane_queues: &[usize], id: u64,
+                    urgent: bool) -> usize {
+    if mask == 0 {
+        return 0;
+    }
+    if urgent && mask.count_ones() > 1 {
+        let mut best = usize::MAX;
+        let mut best_q = usize::MAX;
+        let mut rest = mask;
+        while rest != 0 {
+            let w = rest.trailing_zeros() as usize;
+            rest &= rest - 1;
+            let q = lane_queues.get(w).copied().unwrap_or(0);
+            if q < best_q {
+                best_q = q;
+                best = w;
+            }
+        }
+        return best;
+    }
+    nth_of_mask(mask, id)
 }
 
 /// One model's shared intake slot: the ingress channel's receive side
@@ -529,14 +578,36 @@ impl Ingress {
         r.transmission_ms = transmission_ms;
         match self.senders[model as usize].try_send(r) {
             Ok(()) => {
-                // Ring one CURRENT replica, striping deliveries across
-                // the set by request id (the table may have changed since
-                // the channel was created — a stale read just wakes a
-                // worker that finds nothing, harmless).
-                let target = self
-                    .ownership
-                    .nth_replica(model, id)
-                    .min(self.worker_events.len() - 1);
+                // Ring one CURRENT replica (the table may have changed
+                // since the channel was created — a stale read just wakes
+                // a worker that finds nothing, harmless). Deliveries
+                // stripe across the set by request id; a request whose
+                // remaining slack is within a few batch spans instead
+                // rings the replica with the emptiest lane, so urgent
+                // work never parks behind the fullest queue.
+                let mask = self.ownership.replica_mask(model);
+                let slack = slo_ms - transmission_ms;
+                let batch = self.gauges.batch_ms(model);
+                let est = if batch.is_finite() && batch > 0.0 {
+                    batch
+                } else {
+                    self.isolated_ref_ms[model as usize]
+                };
+                let urgent = est > 0.0
+                    && slack < URGENT_SLACK_BATCHES * est;
+                let workers = self.worker_events.len();
+                let target = if urgent && mask.count_ones() > 1 {
+                    let mut lanes = vec![0usize; workers];
+                    for (w, lane) in lanes.iter_mut().enumerate() {
+                        if mask & (1u64 << w) != 0 {
+                            *lane = self.gauges.queue_len_for(model, w);
+                        }
+                    }
+                    pick_replica(mask, &lanes, id, true)
+                } else {
+                    pick_replica(mask, &[], id, false)
+                }
+                .min(workers - 1);
                 self.worker_events[target].notify();
                 Ok(id)
             }
@@ -600,6 +671,38 @@ impl Ingress {
 mod tests {
     use super::*;
     use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn nth_of_mask_stripes_over_set_bits() {
+        // mask {1, 4, 6}: n cycles over the members in ascending order.
+        let mask = (1 << 1) | (1 << 4) | (1 << 6);
+        assert_eq!(nth_of_mask(mask, 0), 1);
+        assert_eq!(nth_of_mask(mask, 1), 4);
+        assert_eq!(nth_of_mask(mask, 2), 6);
+        assert_eq!(nth_of_mask(mask, 3), 1);
+        assert_eq!(nth_of_mask(0, 7), 0);
+        assert_eq!(nth_of_mask(1 << 5, 1234), 5);
+    }
+
+    #[test]
+    fn pick_replica_routes_urgent_requests_to_the_emptiest_lane() {
+        let mask = (1 << 0) | (1 << 2) | (1 << 3);
+        let lanes = [9, 0, 4, 2, 0, 0];
+        // Urgent: the emptiest member lane wins (worker 3, queue 2 —
+        // worker 1's empty lane is NOT a replica and never considered).
+        assert_eq!(pick_replica(mask, &lanes, 0, true), 3);
+        // Ties break to the lowest worker index.
+        assert_eq!(pick_replica(mask, &[5, 0, 5, 5], 0, true), 0);
+        // Not urgent: id-striping, gauges ignored.
+        assert_eq!(pick_replica(mask, &lanes, 0, false), 0);
+        assert_eq!(pick_replica(mask, &lanes, 1, false), 2);
+        assert_eq!(pick_replica(mask, &lanes, 2, false), 3);
+        // Single replica: urgency changes nothing.
+        assert_eq!(pick_replica(1 << 2, &lanes, 9, true), 2);
+        // Lanes shorter than the pool read as empty, never panic.
+        assert_eq!(pick_replica((1 << 1) | (1 << 5), &[7, 3], 0, true), 5);
+        assert_eq!(pick_replica(0, &[], 3, true), 0);
+    }
 
     fn test_ingress(cap: usize, admission: Option<AdmissionConfig>)
                     -> (Ingress, Vec<std::sync::mpsc::Receiver<Request>>) {

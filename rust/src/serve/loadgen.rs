@@ -43,6 +43,12 @@ pub struct LoadGenConfig {
     /// Multiplier on every request's Table-IV SLO (1.0 = the paper's
     /// deadlines; see [`ShapedGenerator::with_slo_scale`]).
     pub slo_scale: f64,
+    /// Fraction of requests drawing their input from a small popular
+    /// pool (the rest are unique), for exercising the cluster tier's
+    /// result cache. 0.0 = every input unique (cache can never hit).
+    /// Digests are deterministic in `(seed, trace index)` — see
+    /// [`crate::cluster::digest_for`].
+    pub repeat_fraction: f64,
 }
 
 impl Default for LoadGenConfig {
@@ -54,6 +60,7 @@ impl Default for LoadGenConfig {
             envelope: RateEnvelope::Constant,
             mode: LoadMode::Open,
             slo_scale: 1.0,
+            repeat_fraction: 0.0,
         }
     }
 }

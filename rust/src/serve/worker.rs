@@ -126,6 +126,36 @@ const IDLE_PARK: Duration = Duration::from_millis(1);
 /// get before the surplus flush kicks in.
 const REPLICA_STRIPE: usize = 32;
 
+/// Size a striped replica's per-pass channel budget by deadline
+/// pressure. `min_slack_ms` is how much slack the replica's most urgent
+/// QUEUED request has left (`None` = empty queue); `est_batch_ms` prices
+/// one batch span. Plenty of slack (≥ 4 spans) keeps the base stripe —
+/// the spreading behaviour replication was built on; under 2 spans the
+/// stripe quadruples so channel arrivals reach the scheduler inside the
+/// deadline instead of waiting out extra passes; between them it
+/// doubles. Unpriceable batch estimates (NaN/zero — nothing profiled
+/// yet) keep the base stripe: no evidence, no deviation. Pure, so the
+/// policy is unit-testable without a pool.
+fn stripe_budget(base: usize, min_slack_ms: Option<f64>,
+                 est_batch_ms: f64) -> usize {
+    if !est_batch_ms.is_finite() || est_batch_ms <= 0.0 {
+        return base;
+    }
+    match min_slack_ms {
+        None => base,
+        Some(slack) => {
+            let spans = slack / est_batch_ms;
+            if spans >= 4.0 {
+                base
+            } else if spans >= 2.0 {
+                base * 2
+            } else {
+                base * 4
+            }
+        }
+    }
+}
+
 impl LiveWorker {
     /// The live serve loop. Returns after the drain flag is up, every
     /// owned channel has disconnected, and the engine has flushed its
@@ -259,8 +289,27 @@ impl LiveWorker {
                     done = false;
                 }
                 if !slot.closed {
-                    let mut budget =
-                        if striped { REPLICA_STRIPE } else { usize::MAX };
+                    // Deadline-aware stripe sizing: a striped replica
+                    // whose queued work's tightest deadline is within a
+                    // couple of batch spans pops a deeper stripe this
+                    // pass — urgent arrivals must reach the scheduler
+                    // before their slack is gone, and the fair-share
+                    // flush rebalances any overshoot next round.
+                    let mut budget = if striped {
+                        let batch = self.gauges.batch_ms(model);
+                        let est = if batch.is_finite() && batch > 0.0 {
+                            batch
+                        } else {
+                            self.isolated_ref_ms[idx]
+                        };
+                        let min_slack = self
+                            .engine
+                            .min_deadline_ms(model)
+                            .map(|d| d - self.engine.now_ms());
+                        stripe_budget(REPLICA_STRIPE, min_slack, est)
+                    } else {
+                        usize::MAX
+                    };
                     loop {
                         if budget == 0 {
                             done = false;
@@ -470,5 +519,29 @@ impl LiveWorker {
             }
         }
         outcomes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::stripe_budget;
+
+    #[test]
+    fn stripe_budget_scales_with_deadline_pressure() {
+        // Empty queue or comfortable slack: the base stripe.
+        assert_eq!(stripe_budget(32, None, 10.0), 32);
+        assert_eq!(stripe_budget(32, Some(100.0), 10.0), 32);
+        assert_eq!(stripe_budget(32, Some(40.0), 10.0), 32); // 4 spans
+        // Squeezed (2–4 spans): doubled.
+        assert_eq!(stripe_budget(32, Some(39.9), 10.0), 64);
+        assert_eq!(stripe_budget(32, Some(20.0), 10.0), 64);
+        // Critical (< 2 spans, including already-late): quadrupled.
+        assert_eq!(stripe_budget(32, Some(19.9), 10.0), 128);
+        assert_eq!(stripe_budget(32, Some(0.0), 10.0), 128);
+        assert_eq!(stripe_budget(32, Some(-5.0), 10.0), 128);
+        // Unpriceable batch estimate: no evidence, no deviation.
+        assert_eq!(stripe_budget(32, Some(1.0), f64::NAN), 32);
+        assert_eq!(stripe_budget(32, Some(1.0), 0.0), 32);
+        assert_eq!(stripe_budget(32, Some(1.0), f64::INFINITY), 32);
     }
 }

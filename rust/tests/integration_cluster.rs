@@ -54,6 +54,7 @@ fn slo_routing_beats_round_robin_on_heterogeneous_cluster() {
                 at_ms: 600.0,
                 rejoin_at_ms: 1_200.0,
             }),
+            frontend: Default::default(),
         };
         let load = LoadGenConfig {
             rps: 180.0,
