@@ -18,7 +18,11 @@
 //!    gossiped 12-node [`ClusterView`] at 1/4/16 router shards, with the
 //!    deduplicating result cache off and on, while a publisher thread
 //!    keeps re-publishing slots (the contention the sharded design must
-//!    shrug off: per-decision cost should stay flat as shards grow).
+//!    shrug off: per-decision cost should stay flat as shards grow);
+//! 5. **telemetry overhead** — the section-1 serving run with request
+//!    tracing off / 1-in-64 sampled / tracing every request, so the
+//!    observability off-switch's zero-cost claim (and full tracing's
+//!    price) is a measured number, not an assertion.
 //!
 //! Writes `BENCH_hotpath.json` at the repo root (falling back to the
 //! crate root when run elsewhere). Compare across commits by re-running
@@ -55,6 +59,31 @@ fn serving_run(rps_per_model: f64, horizon_ms: f64) -> (u64, f64) {
     let clock = VirtualClock::new();
     let dispatcher = SimDispatcher::new(PlatformSim::xavier_nx(), clock);
     let mut engine = Engine::new(dispatcher, EngineConfig::default());
+    let mut gen = PoissonGenerator::new(rps_per_model * 6.0, 0xBE);
+    engine.submit(gen.generate_horizon(horizon_ms));
+    let mut rng = Pcg32::seeded(0x5AC);
+    let mut sched = sac_sched::sac(ActionSpace::standard(), &mut rng);
+    let t0 = std::time::Instant::now();
+    let slots = engine.run(&mut sched, horizon_ms);
+    (slots, t0.elapsed().as_secs_f64())
+}
+
+/// The serving run with an [`bcedge::telemetry::EngineTracer`] attached
+/// at `1/sample` (0 = tracing off): what observability costs the hot
+/// path. Identical workload and seeds to [`serving_run`].
+fn serving_run_traced(rps_per_model: f64, horizon_ms: f64, sample: u64)
+                      -> (u64, f64) {
+    use bcedge::telemetry::{EngineTracer, TelemetryConfig};
+    let clock = VirtualClock::new();
+    let dispatcher = SimDispatcher::new(PlatformSim::xavier_nx(), clock);
+    let mut engine = Engine::new(dispatcher, EngineConfig::default());
+    if sample > 0 {
+        let tcfg = TelemetryConfig {
+            trace_sample: sample,
+            ..Default::default()
+        };
+        engine.set_tracer(Some(EngineTracer::new(&tcfg, 0)));
+    }
     let mut gen = PoissonGenerator::new(rps_per_model * 6.0, 0xBE);
     engine.submit(gen.generate_horizon(horizon_ms));
     let mut rng = Pcg32::seeded(0x5AC);
@@ -482,6 +511,42 @@ fn main() {
             ("throughput_ratio_16_over_1", num(flatness)),
         ]),
     ));
+
+    // ---------------------------------------------------------------
+    // 5. Telemetry overhead (observability PR): the same full serving
+    //    run with tracing off / 1-in-64 sampled / every request. The
+    //    off row IS section 1's configuration (tracer = None), so the
+    //    sampled and full rows price the id-keyed sampling gate and the
+    //    span bookkeeping against it.
+    // ---------------------------------------------------------------
+    banner("telemetry overhead (serving run: tracing off/sampled/full)");
+    let mut tele = Vec::new();
+    let mut base_sps = 0.0f64;
+    for (label, sample) in [("off", 0u64), ("sampled_64", 64), ("full", 1)]
+    {
+        let (slots, wall_s) = serving_run_traced(30.0, 120_000.0, sample);
+        let sps = slots as f64 / wall_s.max(1e-9);
+        if sample == 0 {
+            base_sps = sps;
+        }
+        let overhead_pct = if sample == 0 {
+            0.0
+        } else {
+            100.0 * (base_sps / sps.max(1e-9) - 1.0)
+        };
+        println!(
+            "{label:>10}  {slots:>7} slots  {sps:>12.0} slots/s  \
+             overhead {overhead_pct:>6.2}%"
+        );
+        tele.push(obj(vec![
+            ("mode", s(label)),
+            ("trace_sample", num(sample as f64)),
+            ("slots", num(slots as f64)),
+            ("slots_per_sec", num(sps)),
+            ("overhead_pct_vs_off", num(overhead_pct)),
+        ]));
+    }
+    sections.push(("telemetry_overhead", arr(tele)));
 
     // ---------------------------------------------------------------
     // Emit BENCH_hotpath.json at the repo root.

@@ -73,6 +73,8 @@ pub use view::{ClusterView, NodePublished, StalenessStat, ViewReader};
 
 use crate::metrics::{Metrics, ShedReason};
 use crate::platform::PlatformSim;
+use crate::telemetry::{RequestTrace, TraceReport, TraceRing, TraceVerdict,
+                       TRACE_RING_CAP};
 use crate::serve::worker::ServeEvent;
 use crate::serve::{ClockKind, GaugeSnapshot, LoadGenConfig, LoadMode,
                    ServeConfig, run_trace};
@@ -275,6 +277,11 @@ pub struct ClusterReport {
     pub frontend: FrontEndReport,
     /// Per-node accounting, in [`ClusterConfig::nodes`] order.
     pub per_node: Vec<NodeBreakdown>,
+    /// Sampled request-lifecycle traces from every tier — engine spans
+    /// (per node/worker) plus front-end-terminal records (cache
+    /// dispositions, edge sheds) — and the folded SAC action histogram.
+    /// Empty unless `--trace-sample` > 0.
+    pub telemetry: TraceReport,
 }
 
 impl ClusterReport {
@@ -422,6 +429,12 @@ struct FrontEndShard<'a> {
     attempts: u64,
     misroutes: u64,
     staleness: StalenessStat,
+    shard_id: u32,
+    /// Trace-index sampling stride for front-end span records (0 = off).
+    /// Requests terminated before a node assigns an id — cache hits,
+    /// coalesces, edge sheds — are sampled by trace index instead.
+    trace_sample: u64,
+    fe_ring: TraceRing,
     /// Reusable per-request routing views (the dispatch path allocates
     /// nothing in steady state).
     view_scratch: Vec<NodeView>,
@@ -447,8 +460,29 @@ impl<'a> FrontEndShard<'a> {
             attempts: 0,
             misroutes: 0,
             staleness: StalenessStat::default(),
+            shard_id: shard as u32,
+            trace_sample: cfg.serve.telemetry.trace_sample,
+            fe_ring: TraceRing::new(TRACE_RING_CAP),
             view_scratch: Vec::with_capacity(nodes.len()),
         }
+    }
+
+    /// Record a front-end-terminal span (cache hit/coalesce, edge or
+    /// node-ingress shed) when the trace index is sampled in. These
+    /// requests never reach an engine, so the front-end is the only
+    /// place they can be traced.
+    fn record_frontend(&mut self, index: u64, model: ModelId,
+                       verdict: TraceVerdict, arrival_ms: f64, slo_ms: f64,
+                       net_ms: f64) {
+        if self.trace_sample == 0 || index % self.trace_sample != 0 {
+            return;
+        }
+        let mut t = RequestTrace::stub(index, model, verdict);
+        t.shard = self.shard_id;
+        t.arrival_ms = arrival_ms;
+        t.slo_ms = slo_ms;
+        t.net_ms = net_ms;
+        self.fe_ring.push(t);
     }
 
     /// Offer one request (trace index `index`, for its input digest):
@@ -464,7 +498,16 @@ impl<'a> FrontEndShard<'a> {
                 let digest =
                     digest_for(self.digest_seed, index, self.repeat_fraction);
                 match cache.lookup(model, digest, now) {
-                    CacheLookup::Hit | CacheLookup::Coalesced => {
+                    CacheLookup::Hit => {
+                        self.record_frontend(index, model,
+                                             TraceVerdict::CacheHit, now,
+                                             slo_ms, transmission_ms);
+                        return FrontEndOutcome::CacheServed;
+                    }
+                    CacheLookup::Coalesced => {
+                        self.record_frontend(index, model,
+                                             TraceVerdict::CacheCoalesced,
+                                             now, slo_ms, transmission_ms);
                         return FrontEndOutcome::CacheServed;
                     }
                     CacheLookup::Lead => Some(digest),
@@ -485,6 +528,9 @@ impl<'a> FrontEndShard<'a> {
                 {
                     cache.abort_leader(model, digest);
                 }
+                self.record_frontend(index, model,
+                                     TraceVerdict::Shed(reason), now, slo_ms,
+                                     transmission_ms);
                 FrontEndOutcome::Shed(reason)
             }
         }
@@ -617,14 +663,17 @@ fn start_nodes(cfg: &ClusterConfig,
 /// they borrow the nodes, and the nodes cannot be shut down and merged
 /// until those borrows end.
 fn merge_shards(cfg: &ClusterConfig, shards: Vec<FrontEndShard<'_>>)
-                -> (Metrics, u64, FrontEndReport) {
+                -> (Metrics, u64, FrontEndReport, TraceReport) {
     let mut metrics = Metrics::new();
     let mut attempts = 0u64;
     let mut misroutes = 0u64;
     let mut staleness = StalenessStat::default();
+    let mut telemetry = TraceReport::default();
     let shard_count = shards.len();
-    for fe in shards {
-        metrics.merge(&fe.router_metrics);
+    for mut fe in shards {
+        telemetry.traces.extend(fe.fe_ring.drain());
+        telemetry.dropped += fe.fe_ring.dropped();
+        metrics.absorb(fe.router_metrics);
         attempts += fe.attempts;
         misroutes += fe.misroutes;
         staleness.merge(&fe.staleness);
@@ -638,17 +687,20 @@ fn merge_shards(cfg: &ClusterConfig, shards: Vec<FrontEndShard<'_>>)
         staleness_max_ms: staleness.max_ms,
         cache: None, // filled by finish_wall once the collector drains
     };
-    (metrics, attempts, frontend)
+    (metrics, attempts, frontend, telemetry)
 }
 
 /// Fold one finished node into the cluster totals and breakdown rows.
 fn merge_node(metrics: &mut Metrics, leftover: &mut usize, slots: &mut u64,
-              per_node: &mut Vec<NodeBreakdown>, fin: FinishedNode) {
+              per_node: &mut Vec<NodeBreakdown>,
+              telemetry: &mut TraceReport, fin: FinishedNode) {
     let mut nm = Metrics::new();
     let mut node_leftover = 0usize;
     let mut node_slots = 0u64;
-    for seg in &fin.segments {
-        nm.merge(&seg.metrics);
+    let segments = fin.segments.len();
+    for seg in fin.segments {
+        nm.absorb(seg.metrics);
+        telemetry.merge(seg.telemetry);
         node_leftover += seg.leftover;
         node_slots += seg.slots;
     }
@@ -661,9 +713,9 @@ fn merge_node(metrics: &mut Metrics, leftover: &mut usize, slots: &mut u64,
         violation_rate: nm.violation_rate(),
         sheds: nm.shed_total(),
         leftover: node_leftover,
-        segments: fin.segments.len(),
+        segments,
     });
-    metrics.merge(&nm);
+    metrics.absorb(nm);
     *leftover += node_leftover;
     *slots += node_slots;
 }
@@ -782,9 +834,10 @@ fn run_wall_open(cfg: &ClusterConfig, load: &LoadGenConfig,
 
     let horizon_actual = clock.now_ms();
     drop(events_tx);
-    let (metrics, attempts, frontend) = merge_shards(cfg, shard_results);
-    finish_wall(cfg, nodes, metrics, attempts, frontend, cache, collector,
-                lifecycle, horizon_actual)
+    let (metrics, attempts, frontend, telemetry) =
+        merge_shards(cfg, shard_results);
+    finish_wall(cfg, nodes, metrics, attempts, frontend, telemetry, cache,
+                collector, lifecycle, horizon_actual)
 }
 
 /// Closed loop on the wall clock: keep `concurrency` requests in flight
@@ -883,9 +936,10 @@ fn run_wall_closed(cfg: &ClusterConfig, load: &LoadGenConfig,
     }
     let horizon_actual = clock.now_ms();
     drop(tx);
-    let (metrics, attempts, frontend) = merge_shards(cfg, vec![fe]);
-    finish_wall(cfg, nodes, metrics, attempts, frontend, cache, None,
-                lifecycle, horizon_actual)
+    let (metrics, attempts, frontend, telemetry) =
+        merge_shards(cfg, vec![fe]);
+    finish_wall(cfg, nodes, metrics, attempts, frontend, telemetry, cache,
+                None, lifecycle, horizon_actual)
 }
 
 /// Stop every node (draining live servers, waiting out any pending
@@ -896,6 +950,7 @@ fn run_wall_closed(cfg: &ClusterConfig, load: &LoadGenConfig,
 fn finish_wall(cfg: &ClusterConfig, nodes: Vec<EdgeNode>,
                mut metrics: Metrics, attempts: u64,
                mut frontend: FrontEndReport,
+               mut telemetry: TraceReport,
                cache: Option<Arc<ResultCache>>,
                collector: Option<std::thread::JoinHandle<()>>,
                lifecycle: Lifecycle, horizon_ms: f64) -> ClusterReport {
@@ -905,7 +960,7 @@ fn finish_wall(cfg: &ClusterConfig, nodes: Vec<EdgeNode>,
     for node in nodes {
         let fin = node.finish();
         merge_node(&mut metrics, &mut leftover, &mut slots, &mut per_node,
-                   fin);
+                   &mut telemetry, fin);
     }
     // Every event sender is gone once the nodes are down: the collector
     // drains its queue and exits; its final counters are authoritative.
@@ -926,6 +981,7 @@ fn finish_wall(cfg: &ClusterConfig, nodes: Vec<EdgeNode>,
         policy: cfg.policy,
         frontend,
         per_node,
+        telemetry,
     }
 }
 
@@ -1001,6 +1057,22 @@ fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
     let mut misroutes = 0u64;
     let mut staleness = StalenessStat::default();
     let mut views: Vec<NodeView> = Vec::with_capacity(n);
+    // Front-end-terminal trace records (cache dispositions, edge sheds),
+    // sampled by trace index exactly like the wall arm's shards.
+    let trace_sample = cfg.serve.telemetry.trace_sample;
+    let mut fe_ring = TraceRing::new(TRACE_RING_CAP);
+    fn record_fe(ring: &mut TraceRing, sample: u64, idx: u64, shard: usize,
+                 r: &Request, verdict: TraceVerdict) {
+        if sample == 0 || idx % sample != 0 {
+            return;
+        }
+        let mut tr = RequestTrace::stub(idx, r.model, verdict);
+        tr.shard = shard as u32;
+        tr.arrival_ms = r.arrival_ms;
+        tr.slo_ms = r.slo_ms;
+        tr.net_ms = r.transmission_ms;
+        ring.push(tr);
+    }
     for (idx, r) in trace.iter().enumerate() {
         let t = r.arrival_ms;
         // Gossip tick: republish at each new epoch boundary.
@@ -1031,7 +1103,16 @@ fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
             let digest = digest_for(load.seed, idx as u64,
                                     load.repeat_fraction);
             match c.lookup(r.model, digest, t) {
-                CacheLookup::Hit | CacheLookup::Coalesced => continue,
+                CacheLookup::Hit => {
+                    record_fe(&mut fe_ring, trace_sample, idx as u64,
+                              idx % k, r, TraceVerdict::CacheHit);
+                    continue;
+                }
+                CacheLookup::Coalesced => {
+                    record_fe(&mut fe_ring, trace_sample, idx as u64,
+                              idx % k, r, TraceVerdict::CacheCoalesced);
+                    continue;
+                }
                 CacheLookup::Lead => lead_digest = Some(digest),
             }
         }
@@ -1079,6 +1160,8 @@ fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                     // A shed leader leaves no cache entry: the next
                     // identical request leads afresh.
                     router_metrics.record_shed(r.model, reason);
+                    record_fe(&mut fe_ring, trace_sample, idx as u64, shard,
+                              r, TraceVerdict::Shed(reason));
                     break;
                 }
             }
@@ -1087,19 +1170,26 @@ fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
     // Serve the shards sequentially: each node is its own deterministic
     // simulation, and a fixed merge order keeps the report bit-stable.
     let mut metrics = router_metrics;
+    let mut telemetry = TraceReport {
+        traces: fe_ring.drain(),
+        dropped: fe_ring.dropped(),
+        ..Default::default()
+    };
     let mut leftover = 0usize;
     let mut slots = 0u64;
     let mut per_node = Vec::with_capacity(n);
     for (i, shard) in shards.into_iter().enumerate() {
-        let node_cfg = ServeConfig {
+        let mut node_cfg = ServeConfig {
             platform: cfg.nodes[i].platform.clone(),
             workers: cfg.nodes[i].workers,
             clock: ClockKind::Virtual,
             ..cfg.serve.clone()
         };
+        node_cfg.telemetry.node_label = i as u32;
         let dispatched = shard.len() as u64;
         let report = run_trace(&node_cfg, shard, horizon_ms);
         merge_node(&mut metrics, &mut leftover, &mut slots, &mut per_node,
+                   &mut telemetry,
                    FinishedNode {
                        spec: cfg.nodes[i].clone(),
                        dispatched,
@@ -1131,6 +1221,7 @@ fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
             cache: vcache.map(|c| c.stats),
         },
         per_node,
+        telemetry,
     }
 }
 
@@ -1224,6 +1315,60 @@ mod tests {
         assert!(a.per_node[0].dispatched > a.per_node[2].dispatched,
                 "routing ignored the heterogeneity: {:?}", dispatched(&a));
         assert!(a.metrics.completed() > 0);
+    }
+
+    /// Tentpole acceptance (cluster tracing): with `--trace-sample` on,
+    /// the virtual cached run emits engine spans AND front-end-terminal
+    /// records (cache dispositions), bit-identically across runs, without
+    /// perturbing the outcome stream; completed spans sum to e2e and stay
+    /// attributable per node through the merge.
+    #[test]
+    fn virtual_cluster_traces_cover_every_tier_deterministically() {
+        use crate::telemetry::TraceVerdict;
+        let mut cfg =
+            hetero_cfg(RoutePolicy::SloAware, ClockKind::Virtual, None);
+        cfg.frontend.cache =
+            Some(CacheConfig { ttl_ms: 500.0, capacity: 4096 });
+        cfg.frontend.router_shards = 2;
+        let load = LoadGenConfig {
+            rps: 150.0,
+            seconds: 15.0,
+            seed: 7,
+            slo_scale: 3.0,
+            repeat_fraction: 0.5,
+            ..Default::default()
+        };
+        let plain = run_cluster(&cfg, &load).unwrap();
+        assert!(plain.telemetry.traces.is_empty(),
+                "tracing on without --trace-sample");
+        cfg.serve.telemetry.trace_sample = 8;
+        let a = run_cluster(&cfg, &load).unwrap();
+        let b = run_cluster(&cfg, &load).unwrap();
+        assert_conserved(&a);
+        assert_eq!(a.metrics.outcomes(), plain.metrics.outcomes(),
+                   "tracing perturbed the cluster run");
+        assert_eq!(a.telemetry.traces, b.telemetry.traces,
+                   "traced cluster runs diverged on the same seed");
+        let completed = a.telemetry.traces.iter()
+            .filter(|t| t.verdict == TraceVerdict::Completed)
+            .count();
+        let cache_records = a.telemetry.traces.iter()
+            .filter(|t| matches!(t.verdict, TraceVerdict::CacheHit
+                                 | TraceVerdict::CacheCoalesced))
+            .count();
+        assert!(completed > 0, "no engine spans sampled");
+        assert!(cache_records > 0, "no cache dispositions sampled");
+        for t in &a.telemetry.traces {
+            if t.verdict == TraceVerdict::Completed {
+                assert!((t.span_sum_ms() - t.e2e_ms).abs() < 1e-6,
+                        "spans don't sum to e2e for id {}", t.id);
+            }
+        }
+        let nodes: HashSet<u32> = a.telemetry.traces.iter()
+            .filter(|t| t.verdict == TraceVerdict::Completed)
+            .map(|t| t.node)
+            .collect();
+        assert!(nodes.len() > 1, "all spans from one node: {nodes:?}");
     }
 
     /// Tentpole acceptance (virtual arm): sharded routing from the

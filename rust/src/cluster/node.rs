@@ -113,11 +113,14 @@ impl EdgeNode {
     /// hints); the spec's platform and worker count override it.
     pub fn new(spec: NodeSpec, base: &ServeConfig, node_index: usize,
                events_tx: Option<Sender<ServeEvent>>) -> Self {
-        let cfg = ServeConfig {
+        let mut cfg = ServeConfig {
             platform: spec.platform.clone(),
             workers: spec.workers,
             ..base.clone()
         };
+        // Trace records and metrics snapshots carry the node id, so the
+        // front-end's merged stream stays attributable per node.
+        cfg.telemetry.node_label = node_index as u32;
         EdgeNode {
             spec,
             dispatched: AtomicU64::new(0),

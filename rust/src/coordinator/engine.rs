@@ -45,6 +45,7 @@ use crate::predictor::{InterferencePredictor, PredictorSample};
 use crate::profiler::{ProfileSample, Profiler};
 use crate::rl::spaces::ActionSpace;
 use crate::runtime::executor::{BatchJob, Dispatcher, ExecError};
+use crate::telemetry::{EngineTracer, TraceReport};
 use crate::util::rng::Pcg32;
 use crate::workload::models::{ModelId, ModelSpec, N_MODELS};
 use crate::workload::request::Request;
@@ -177,6 +178,11 @@ pub struct Engine<D: Dispatcher> {
     slots_run: u64,
     scratch: RoundScratch,
     gate: Option<Box<dyn IngressGate>>,
+    /// Request-lifecycle tracer (PR #7), inert like the gate: `None` —
+    /// the default — keeps ingest/account/decide byte-identical to the
+    /// untraced engine; `Some` stamps ingest times and emits sampled
+    /// span records + raw action histograms into worker-local buffers.
+    tracer: Option<EngineTracer>,
     /// Cross-worker gauge hints (see [`SchedCtx::cluster_backlog_ms`]).
     /// Both stay 0.0 unless a serving-runtime worker injects them, so the
     /// bare engine's decision context is hint-free by construction.
@@ -215,6 +221,7 @@ impl<D: Dispatcher> Engine<D> {
             cfg,
             scratch: RoundScratch::default(),
             gate: None,
+            tracer: None,
             cluster_backlog_ms: 0.0,
             cluster_share: 0.0,
             replica_share: [0.0; N_MODELS],
@@ -226,6 +233,23 @@ impl<D: Dispatcher> Engine<D> {
     /// serving runtime existed.
     pub fn set_ingress_gate(&mut self, gate: Option<Box<dyn IngressGate>>) {
         self.gate = gate;
+    }
+
+    /// Install (or clear) the request-lifecycle tracer. With `None` —
+    /// the default — the hot path is exactly the untraced engine
+    /// (one untaken branch per request / decision).
+    pub fn set_tracer(&mut self, tracer: Option<EngineTracer>) {
+        self.tracer = tracer;
+    }
+
+    /// Drain everything the tracer has collected so far (sampled span
+    /// records, the raw action histogram, drop counters). Empty report
+    /// when tracing is off; the tracer stays installed.
+    pub fn take_telemetry(&mut self) -> TraceReport {
+        self.tracer
+            .as_mut()
+            .map(EngineTracer::take_report)
+            .unwrap_or_default()
     }
 
     /// Queue future arrivals (must be sorted by arrival time).
@@ -362,7 +386,12 @@ impl<D: Dispatcher> Engine<D> {
             }
             let r = self.pending.pop_front().unwrap();
             match &mut self.gate {
-                None => self.router.route(r),
+                None => {
+                    if let Some(tr) = &mut self.tracer {
+                        tr.on_ingest(r.id, now);
+                    }
+                    self.router.route(r)
+                }
                 Some(gate) => {
                     let snap = IngressSnapshot {
                         now_ms: now,
@@ -374,9 +403,17 @@ impl<D: Dispatcher> Engine<D> {
                     };
                     match gate.decide(&r, &snap) {
                         Some(reason) => {
+                            if let Some(tr) = &mut self.tracer {
+                                tr.on_shed(&r, now, reason);
+                            }
                             self.metrics.record_shed(r.model, reason);
                         }
-                        None => self.router.route(r),
+                        None => {
+                            if let Some(tr) = &mut self.tracer {
+                                tr.on_ingest(r.id, now);
+                            }
+                            self.router.route(r)
+                        }
                     }
                 }
             }
@@ -608,6 +645,10 @@ impl<D: Dispatcher> Engine<D> {
                             violated: v,
                             dropped: false,
                         });
+                        if let Some(tr) = &mut self.tracer {
+                            tr.on_complete(r, t_dispatch, lat_ms,
+                                           a.requests.len(), a.padded, v);
+                        }
                     }
                     // Profile + predictor ground truth.
                     let isolated =
@@ -722,6 +763,10 @@ impl<D: Dispatcher> Engine<D> {
         for &model in &busy {
             let ctx = self.ctx_for(model);
             let (b, m_c) = scheduler.decide(&ctx, &mut rng);
+            if let Some(tr) = &mut self.tracer {
+                // Raw pre-veto decision: what the policy asked for.
+                tr.record_action(b, m_c);
+            }
             let buf = self.scratch.spare_plans.pop().unwrap_or_default();
             let plan = self.plan_slot(model, b, m_c, &ctx, buf);
             let start = jobs.len();

@@ -32,6 +32,10 @@
 //!   and a node drain/rejoin lifecycle behind `bcedge bench-cluster`;
 //! * [`profiler`], [`metrics`] — §IV-E performance profiler and experiment
 //!   instrumentation;
+//! * [`telemetry`] — request-lifecycle span tracing (deterministic
+//!   id-keyed sampling into bounded rings, JSON-lines out) and streaming
+//!   telemetry (mergeable log-bucket latency/slack histograms, live
+//!   counter snapshots) behind a zero-cost-when-off `TelemetryConfig`;
 //! * [`nn`], [`util`] — from-scratch substrates (tensor/MLP/Adam, RNG,
 //!   JSON, CLI, stats, clocks, thread pool, property testing): the offline
 //!   build environment provides no third-party crates beyond `xla`.
@@ -50,6 +54,7 @@ pub mod coordinator;
 pub mod predictor;
 pub mod profiler;
 pub mod metrics;
+pub mod telemetry;
 pub mod serve;
 pub mod cluster;
 

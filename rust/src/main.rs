@@ -72,8 +72,9 @@ fn main() -> anyhow::Result<()> {
         Some("train") => train(&args),
         Some("sweep") => sweep(&args),
         Some("info") => info(&args),
+        Some("validate-telemetry") => validate_telemetry(&args),
         _ => {
-            eprintln!("usage: bcedge <serve|bench-serve|bench-cluster|train|sweep|info> [options]");
+            eprintln!("usage: bcedge <serve|bench-serve|bench-cluster|train|sweep|info|validate-telemetry> [options]");
             eprintln!("  serve --backend sim|real --rps N --seconds N \\");
             eprintln!("        --scheduler sac|tac|deeprt|fixed [--policy F] [--no-predictor]");
             eprintln!("  bench-serve --workers N --rps N --seconds N [--clock virtual|wall] \\");
@@ -88,9 +89,12 @@ fn main() -> anyhow::Result<()> {
             eprintln!("        [--router-shards K] [--gossip-ms T] [--cache-ttl-ms T] \\");
             eprintln!("        [--cache-capacity N] [--repeat-fraction F] \\");
             eprintln!("        [--drain-node I] [--drain-at-s T] [--rejoin-at-s T] + bench-serve knobs");
+            eprintln!("  (bench-serve/bench-cluster observability) [--trace-out F] [--trace-sample N] \\");
+            eprintln!("        [--metrics-out F] [--metrics-interval-ms T]");
             eprintln!("  train --episodes N --rps N --platform xavier-nx|tx2|nano --out F");
             eprintln!("  sweep --model yolo");
             eprintln!("  info  [--artifacts DIR]");
+            eprintln!("  validate-telemetry [--metrics F] [--trace F]");
             eprintln!("full flags table: rust/ARCHITECTURE.md");
             std::process::exit(2);
         }
@@ -213,6 +217,62 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Observability knobs shared by bench-serve and bench-cluster:
+/// `--trace-out F` (sampled span records, JSON-lines), `--trace-sample N`
+/// (deterministic 1/N id-keyed sampling; defaults to 64 when a trace
+/// file is requested, 0 = off otherwise), `--metrics-out F` (streaming
+/// counter snapshots + the final conservation snapshot), and
+/// `--metrics-interval-ms T` (publisher cadence). Truncates the metrics
+/// stream so each run starts a fresh file.
+fn telemetry_of(args: &Args)
+                -> anyhow::Result<bcedge::telemetry::TelemetryConfig> {
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let default_sample: u64 = if trace_out.is_some() { 64 } else { 0 };
+    let cfg = bcedge::telemetry::TelemetryConfig {
+        trace_out,
+        trace_sample: args
+            .get_parse("trace-sample", default_sample)
+            .map_err(anyhow::Error::msg)?,
+        metrics_out: args.get("metrics-out").map(str::to_string),
+        metrics_interval_ms: args
+            .get_parse("metrics-interval-ms", 500.0)
+            .map_err(anyhow::Error::msg)?,
+        node_label: 0,
+    };
+    if let Some(path) = &cfg.metrics_out {
+        bcedge::telemetry::init_jsonl(path)?;
+    }
+    Ok(cfg)
+}
+
+/// Flush a run's sampled traces and final counter snapshot to the
+/// `--trace-out` / `--metrics-out` streams.
+fn flush_telemetry(tcfg: &bcedge::telemetry::TelemetryConfig,
+                   horizon_ms: f64, attempts: u64, cache_served: u64,
+                   leftover: u64, metrics: &bcedge::metrics::Metrics,
+                   telemetry: &bcedge::telemetry::TraceReport)
+                   -> anyhow::Result<()> {
+    if let Some(path) = &tcfg.trace_out {
+        bcedge::telemetry::write_trace_file(path, &telemetry.traces)?;
+        println!("traces: {} sampled spans (1/{}) -> {path}{}",
+                 telemetry.traces.len(),
+                 tcfg.trace_sample.max(1),
+                 if telemetry.dropped > 0 {
+                     format!(" ({} dropped)", telemetry.dropped)
+                 } else {
+                     String::new()
+                 });
+    }
+    if let Some(path) = &tcfg.metrics_out {
+        let line = bcedge::telemetry::final_snapshot(
+            horizon_ms, attempts, cache_served, leftover, metrics,
+            telemetry);
+        bcedge::telemetry::append_jsonl(path, &line)?;
+        println!("metrics stream -> {path}");
+    }
+    Ok(())
+}
+
 /// Shared serving-runtime knobs for bench-serve and bench-cluster:
 /// scheduler, admission, queue capacity, rebalance/replication, gauge
 /// hints. Clock defaults differ per subcommand, so it is a parameter.
@@ -258,6 +318,7 @@ fn serve_config_of(args: &Args, clock: bcedge::serve::ClockKind,
             .map_err(anyhow::Error::msg)?,
         rebalance,
         cluster_hints: !args.flag("no-gauge-hints"),
+        telemetry: telemetry_of(args)?,
         ..Default::default()
     })
 }
@@ -338,6 +399,14 @@ fn bench_serve(args: &Args) -> anyhow::Result<()> {
     let report = serve::loadgen::run(&serve_cfg, &load)
         .map_err(anyhow::Error::msg)?;
     report.print();
+    // Single-node conservation from counters alone (no cache tier):
+    // attempts = recorded outcomes + sheds + leftover.
+    let attempts = report.metrics.recorded_outcomes()
+        + report.metrics.shed_total()
+        + report.leftover as u64;
+    flush_telemetry(&serve_cfg.telemetry, report.horizon_ms, attempts, 0,
+                    report.leftover as u64, &report.metrics,
+                    &report.telemetry)?;
     Ok(())
 }
 
@@ -478,6 +547,104 @@ fn bench_cluster(args: &Args) -> anyhow::Result<()> {
     let report = cluster::run_cluster(&cfg, &load)
         .map_err(anyhow::Error::msg)?;
     report.print();
+    flush_telemetry(&cfg.serve.telemetry, report.horizon_ms,
+                    report.attempts, report.cache_served(),
+                    report.leftover as u64, &report.metrics,
+                    &report.telemetry)?;
+    Ok(())
+}
+
+/// Validate JSON-lines telemetry streams (the CI smoke gate):
+/// `--metrics F` — every line parses, and the final snapshot satisfies
+/// the conservation identity recomputed from counters alone
+/// (`completed + sheds + cache_served + leftover == attempts`);
+/// `--trace F` — every line parses, and completed spans sum to their
+/// end-to-end latency within clock resolution.
+fn validate_telemetry(args: &Args) -> anyhow::Result<()> {
+    use bcedge::util::json::{parse, Json};
+    if args.get("metrics").is_none() && args.get("trace").is_none() {
+        anyhow::bail!(
+            "validate-telemetry needs --metrics F and/or --trace F");
+    }
+    if let Some(path) = args.get("metrics") {
+        let text = std::fs::read_to_string(path)?;
+        let mut snapshots = 0usize;
+        let mut fin: Option<Json> = None;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = parse(line).map_err(|e| {
+                anyhow::anyhow!("{path}:{}: bad JSON: {e}", i + 1)
+            })?;
+            match v.get("kind").and_then(|k| k.as_str()) {
+                Some("snapshot") => snapshots += 1,
+                Some("final") => fin = Some(v),
+                other => {
+                    anyhow::bail!("{path}:{}: unknown kind {other:?}", i + 1)
+                }
+            }
+        }
+        let fin = fin
+            .ok_or_else(|| anyhow::anyhow!("{path}: no final snapshot"))?;
+        let field = |k: &str| -> anyhow::Result<f64> {
+            fin.get(k).and_then(|v| v.as_f64()).ok_or_else(|| {
+                anyhow::anyhow!("{path}: final snapshot missing {k}")
+            })
+        };
+        let attempts = field("attempts")?;
+        let completed = field("completed")?;
+        let sheds = field("sheds")?;
+        let cache_served = field("cache_served")?;
+        let leftover = field("leftover")?;
+        // Counters are exact in f64 up to 2^53, so the sum is exact.
+        if completed + sheds + cache_served + leftover != attempts {
+            anyhow::bail!(
+                "{path}: conservation broken: {completed} completed + \
+                 {sheds} sheds + {cache_served} cache_served + {leftover} \
+                 leftover != {attempts} attempts");
+        }
+        println!(
+            "{path}: OK — {snapshots} snapshot(s) + final; conservation \
+             holds ({completed} + {sheds} + {cache_served} + {leftover} == \
+             {attempts})");
+    }
+    if let Some(path) = args.get("trace") {
+        let text = std::fs::read_to_string(path)?;
+        let mut spans = 0usize;
+        let mut completed = 0usize;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = parse(line).map_err(|e| {
+                anyhow::anyhow!("{path}:{}: bad JSON: {e}", i + 1)
+            })?;
+            spans += 1;
+            if v.get("verdict").and_then(|k| k.as_str())
+                != Some("completed")
+            {
+                continue;
+            }
+            let field = |k: &str| -> anyhow::Result<f64> {
+                v.get(k).and_then(|x| x.as_f64()).ok_or_else(|| {
+                    anyhow::anyhow!("{path}:{}: trace missing {k}", i + 1)
+                })
+            };
+            let sum = field("ingress_wait_ms")? + field("batch_wait_ms")?
+                + field("infer_ms")? + field("net_ms")?;
+            let e2e = field("e2e_ms")?;
+            if (sum - e2e).abs() > 1e-6 {
+                anyhow::bail!(
+                    "{path}:{}: spans sum to {sum} but e2e is {e2e}",
+                    i + 1);
+            }
+            completed += 1;
+        }
+        println!(
+            "{path}: OK — {spans} trace line(s), {completed} completed \
+             span(s) sum to e2e");
+    }
     Ok(())
 }
 

@@ -2,6 +2,7 @@
 //! throughput/latency timelines (Figs. 8/9), SLO-violation accounting
 //! (Figs. 14/15), utility tracking (Figs. 7/11), CSV export.
 
+use crate::telemetry::LogHistogram;
 use crate::util::stats::{percentile, Summary};
 use crate::workload::models::{ModelId, N_MODELS};
 
@@ -98,6 +99,22 @@ pub struct Metrics {
     /// Widest replica set any model reached (0 outside the live worker
     /// pool; 1 = replication never triggered).
     peak_replicas: u64,
+    /// Streaming counters maintained alongside `outcomes` so every rate
+    /// the reports print is recomputable in O(1) without walking (or
+    /// even keeping) the outcome vec. The vec itself survives as the
+    /// exact-percentile / bit-identity test oracle.
+    recorded: u64,
+    dropped: u64,
+    violated_total: u64,
+    per_model_outcomes: [u64; N_MODELS],
+    per_model_violated: [u64; N_MODELS],
+    /// Log-bucket e2e latency histogram over completed requests
+    /// (mergeable; constant memory; ≈26 % bucket width — see
+    /// [`crate::telemetry::LogHistogram`]).
+    latency_hist: LogHistogram,
+    /// Log-bucket slack histogram (`slo − e2e` at completion, completed
+    /// requests); violated requests clamp into bucket 0.
+    slack_hist: LogHistogram,
 }
 
 impl Metrics {
@@ -106,6 +123,19 @@ impl Metrics {
     }
 
     pub fn record(&mut self, o: RequestOutcome) {
+        self.recorded += 1;
+        let m = o.model as usize;
+        self.per_model_outcomes[m] += 1;
+        if o.violated {
+            self.violated_total += 1;
+            self.per_model_violated[m] += 1;
+        }
+        if o.dropped {
+            self.dropped += 1;
+        } else {
+            self.latency_hist.add(o.e2e_ms);
+            self.slack_hist.add(o.slo_ms - o.e2e_ms);
+        }
         self.outcomes.push(o);
     }
 
@@ -196,10 +226,21 @@ impl Metrics {
         self.peak_replicas
     }
 
-    /// Fold another run's (or worker's) metrics into this one.
+    /// Fold another run's (or worker's) metrics into this one by
+    /// reference (clones the outcome/utility vecs). Prefer
+    /// [`Metrics::absorb`] when the other side is owned — report folding
+    /// on the worker/node paths moves instead of cloning.
     pub fn merge(&mut self, other: &Metrics) {
-        self.outcomes.extend(other.outcomes.iter().cloned());
-        self.utility_samples.extend(other.utility_samples.iter().copied());
+        self.absorb(other.clone());
+    }
+
+    /// Fold another metrics value in by value: outcome and utility vecs
+    /// are appended (moved, no per-element clones), counters are summed,
+    /// peaks are maxed, histograms merge element-wise. `a.absorb(b)` is
+    /// observationally identical to `a.merge(&b)`.
+    pub fn absorb(&mut self, mut other: Metrics) {
+        self.outcomes.append(&mut other.outcomes);
+        self.utility_samples.append(&mut other.utility_samples);
         for (dst, src) in self.shed.iter_mut().zip(&other.shed) {
             for (d, s) in dst.iter_mut().zip(src) {
                 *d += s;
@@ -212,6 +253,25 @@ impl Metrics {
         self.scale_ups += other.scale_ups;
         self.scale_downs += other.scale_downs;
         self.peak_replicas = self.peak_replicas.max(other.peak_replicas);
+        self.recorded += other.recorded;
+        self.dropped += other.dropped;
+        self.violated_total += other.violated_total;
+        for (d, s) in self
+            .per_model_outcomes
+            .iter_mut()
+            .zip(&other.per_model_outcomes)
+        {
+            *d += s;
+        }
+        for (d, s) in self
+            .per_model_violated
+            .iter_mut()
+            .zip(&other.per_model_violated)
+        {
+            *d += s;
+        }
+        self.latency_hist.merge(&other.latency_hist);
+        self.slack_hist.merge(&other.slack_hist);
     }
 
     pub fn record_utility(&mut self, t_ms: f64, model: ModelId, u: f64) {
@@ -225,27 +285,57 @@ impl Metrics {
     }
 
     pub fn completed(&self) -> usize {
-        self.outcomes.iter().filter(|o| !o.dropped).count()
+        (self.recorded - self.dropped) as usize
     }
 
-    /// Overall SLO violation rate (violations + drops) / total.
+    /// Total recorded outcomes (completed + dropped) — O(1), no vec walk.
+    pub fn recorded_outcomes(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Total SLO violations (late + dropped) across all models — O(1).
+    pub fn violations_total(&self) -> u64 {
+        self.violated_total
+    }
+
+    /// Recorded outcomes for one model — O(1).
+    pub fn outcomes_for(&self, model: ModelId) -> u64 {
+        self.per_model_outcomes[model as usize]
+    }
+
+    /// SLO violations for one model — O(1).
+    pub fn violations_for(&self, model: ModelId) -> u64 {
+        self.per_model_violated[model as usize]
+    }
+
+    /// Overall SLO violation rate (violations + drops) / total. O(1)
+    /// from the streaming counters.
     pub fn violation_rate(&self) -> f64 {
-        if self.outcomes.is_empty() {
+        if self.recorded == 0 {
             return 0.0;
         }
-        self.outcomes.iter().filter(|o| o.violated).count() as f64
-            / self.outcomes.len() as f64
+        self.violated_total as f64 / self.recorded as f64
     }
 
-    /// Violation rate per model.
+    /// Violation rate per model — one counter read, no per-call
+    /// allocation or outcome-vec scan.
     pub fn violation_rate_for(&self, model: ModelId) -> f64 {
-        let of_model: Vec<_> =
-            self.outcomes.iter().filter(|o| o.model == model).collect();
-        if of_model.is_empty() {
+        let of_model = self.per_model_outcomes[model as usize];
+        if of_model == 0 {
             return 0.0;
         }
-        of_model.iter().filter(|o| o.violated).count() as f64
-            / of_model.len() as f64
+        self.per_model_violated[model as usize] as f64 / of_model as f64
+    }
+
+    /// The streaming e2e latency histogram (completed requests).
+    pub fn latency_hist(&self) -> &LogHistogram {
+        &self.latency_hist
+    }
+
+    /// The streaming slack histogram (`slo − e2e`, completed requests;
+    /// violations clamp into bucket 0).
+    pub fn slack_hist(&self) -> &LogHistogram {
+        &self.slack_hist
     }
 
     /// Mean end-to-end latency, optionally per model.
@@ -259,7 +349,10 @@ impl Metrics {
         s.mean()
     }
 
-    /// Latency percentile over completed requests.
+    /// Exact latency percentile over completed requests (sorts a copy of
+    /// the outcome vec — kept as the test oracle for the streaming
+    /// histogram path; reports use
+    /// [`Metrics::latency_percentile_streaming`]).
     pub fn latency_percentile(&self, q: f64) -> f64 {
         let xs: Vec<f64> = self
             .outcomes
@@ -268,6 +361,13 @@ impl Metrics {
             .map(|o| o.e2e_ms)
             .collect();
         percentile(&xs, q)
+    }
+
+    /// Streaming latency percentile from the log-bucket histogram — O(1)
+    /// memory, no allocation, within one bucket width (≈26 %) of
+    /// [`Metrics::latency_percentile`].
+    pub fn latency_percentile_streaming(&self, q: f64) -> f64 {
+        self.latency_hist.quantile(q)
     }
 
     /// Aggregate throughput over [0, horizon_ms], requests/s.
@@ -464,6 +564,92 @@ mod tests {
         assert_eq!(a.scale_ups(), 4);
         assert_eq!(a.scale_downs(), 3);
         assert_eq!(a.peak_replicas(), 3);
+    }
+
+    #[test]
+    fn absorb_matches_merge_and_is_associative() {
+        let mk = |seed: u64| -> Metrics {
+            let mut m = Metrics::new();
+            for i in 0..40u64 {
+                let model = ModelId::from_index(((seed + i) % 6) as usize);
+                let e2e = 10.0 + ((seed * 37 + i * 13) % 90) as f64;
+                m.record(outcome(model, 100.0 + i as f64 * 10.0, e2e, 58.0));
+            }
+            m.record_shed(ModelId::Res, ShedReason::QueueFull);
+            m.record_utility(0.0, ModelId::Res, seed as f64);
+            m
+        };
+        let (a, b, c) = (mk(1), mk(2), mk(3));
+        // absorb ≡ merge.
+        let mut via_merge = a.clone();
+        via_merge.merge(&b);
+        let mut via_absorb = a.clone();
+        via_absorb.absorb(b.clone());
+        assert_eq!(via_merge.outcomes(), via_absorb.outcomes());
+        assert_eq!(via_merge.violations_total(),
+                   via_absorb.violations_total());
+        assert_eq!(via_merge.latency_hist().count(),
+                   via_absorb.latency_hist().count());
+        assert_eq!(via_merge.latency_percentile_streaming(0.99),
+                   via_absorb.latency_percentile_streaming(0.99));
+        // Associativity across a worker/node fold: (a+b)+c vs a+(b+c).
+        let mut left = a.clone();
+        left.absorb(b.clone());
+        left.absorb(c.clone());
+        let mut bc = b.clone();
+        bc.absorb(c.clone());
+        let mut right = a.clone();
+        right.absorb(bc);
+        assert_eq!(left.recorded_outcomes(), right.recorded_outcomes());
+        assert_eq!(left.violations_total(), right.violations_total());
+        assert_eq!(left.shed_total(), right.shed_total());
+        assert_eq!(left.latency_percentile_streaming(0.5),
+                   right.latency_percentile_streaming(0.5));
+        assert_eq!(left.slack_hist().count(), right.slack_hist().count());
+        for m in ModelId::all() {
+            assert_eq!(left.outcomes_for(m), right.outcomes_for(m));
+            assert_eq!(left.violations_for(m), right.violations_for(m));
+            assert!((left.violation_rate_for(m) - right.violation_rate_for(m))
+                        .abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn streaming_counters_match_outcome_vec_recompute() {
+        let mut m = Metrics::new();
+        for i in 0..500u64 {
+            let model = ModelId::from_index((i % 6) as usize);
+            let e2e = 5.0 + (i * 31 % 200) as f64;
+            m.record(outcome(model, i as f64, e2e, 58.0));
+        }
+        // O(1) counters vs the vec the old implementation walked.
+        assert_eq!(m.recorded_outcomes(), m.outcomes().len() as u64);
+        let violated =
+            m.outcomes().iter().filter(|o| o.violated).count() as u64;
+        assert_eq!(m.violations_total(), violated);
+        for model in ModelId::all() {
+            let of_model =
+                m.outcomes().iter().filter(|o| o.model == model).count();
+            assert_eq!(m.outcomes_for(model), of_model as u64);
+            let expect = if of_model == 0 {
+                0.0
+            } else {
+                m.outcomes()
+                    .iter()
+                    .filter(|o| o.model == model && o.violated)
+                    .count() as f64 / of_model as f64
+            };
+            assert!((m.violation_rate_for(model) - expect).abs() < 1e-12);
+        }
+        // Streaming percentile within one bucket width of the exact
+        // oracle (the histogram's documented error bound).
+        let g = LogHistogram::growth();
+        for q in [0.5, 0.9, 0.99] {
+            let exact = m.latency_percentile(q);
+            let (lo, hi) = m.latency_hist().quantile_bounds(q);
+            assert!(exact >= lo / g - 1e-9 && exact <= hi * g + 1e-9,
+                    "q={q}: exact {exact} outside [{lo}, {hi}] ± one bucket");
+        }
     }
 
     #[test]

@@ -34,6 +34,14 @@
 //! * [`loadgen`] — open- and closed-loop load generation over constant /
 //!   MMPP-bursty / diurnal rate envelopes (`bcedge bench-serve`).
 //!
+//! Observability rides along the same seams ([`crate::telemetry`]):
+//! each worker's engine optionally carries an
+//! [`crate::telemetry::EngineTracer`] (deterministic id-keyed span
+//! sampling, inert when `--trace-sample` is 0), workers fold their
+//! completion/shed deltas into a shared [`crate::telemetry::TelemetryHub`]
+//! when `--metrics-out` is set, and a publisher thread snapshots the hub
+//! every `--metrics-interval-ms`.
+//!
 //! The module ↔ paper-section map, the request lifecycle, the pinned
 //! invariants, and the consolidated CLI flags table live in
 //! `rust/ARCHITECTURE.md`.

@@ -41,6 +41,8 @@ use crate::coordinator::{Engine, EngineConfig, Scheduler};
 use crate::metrics::{Metrics, ShedReason};
 use crate::platform::{PlatformSim, PlatformSpec};
 use crate::runtime::executor::SimDispatcher;
+use crate::telemetry::{self, EngineTracer, TelemetryConfig, TelemetryHub,
+                       TraceReport};
 use crate::util::rng::Pcg32;
 use crate::util::time::{Clock, ClockSource, VirtualClock, WallClock};
 use crate::workload::models::{ModelId, N_MODELS};
@@ -161,6 +163,11 @@ pub struct ServeConfig {
     /// every drain/rejoin incarnation) a disjoint id window so outcome
     /// ids stay unique cluster-wide without coordination.
     pub request_id_base: u64,
+    /// Request-lifecycle tracing + streaming telemetry knobs. Default is
+    /// fully off, which keeps every path bit-identical to a build
+    /// without the telemetry layer (pinned by the seed-equivalence
+    /// test).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for ServeConfig {
@@ -176,6 +183,7 @@ impl Default for ServeConfig {
             rebalance: Some(RebalanceConfig::default()),
             cluster_hints: true,
             request_id_base: 0,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -196,7 +204,12 @@ impl ServeConfig {
         cfg.seed ^= worker as u64; // worker 0: unchanged (seed equivalence)
         cfg.max_total_instances = self.platform.max_instances;
         let sim = PlatformSim::new(self.platform.clone());
-        Engine::new(SimDispatcher::with_clock(sim, clock), cfg)
+        let mut engine = Engine::new(SimDispatcher::with_clock(sim, clock), cfg);
+        if self.telemetry.tracing_on() {
+            engine.set_tracer(Some(EngineTracer::new(&self.telemetry,
+                                                     worker as u32)));
+        }
+        engine
     }
 
     /// Reference batch pricing backlog estimates (shared with admission).
@@ -598,6 +611,9 @@ pub struct ServeReport {
     /// Requests still queued when the horizon expired (trace mode; the
     /// live drain protocol flushes to zero).
     pub leftover: usize,
+    /// Sampled span records + action histograms folded across the pool
+    /// (empty when tracing is off).
+    pub telemetry: TraceReport,
 }
 
 impl ServeReport {
@@ -618,8 +634,8 @@ impl ServeReport {
             "achieved {:.1} rps | e2e p50 {:.2} ms p99 {:.2} ms | \
              SLO violations {:.2}% | shed {:.2}%",
             self.achieved_rps(),
-            m.latency_percentile(0.5),
-            m.latency_percentile(0.99),
+            m.latency_percentile_streaming(0.5),
+            m.latency_percentile_streaming(0.99),
             100.0 * m.violation_rate(),
             100.0 * m.shed_rate(),
         );
@@ -658,14 +674,17 @@ impl ServeReport {
 fn merge_results(results: Vec<WorkerResult>, horizon_ms: f64,
                  workers: usize) -> ServeReport {
     let mut metrics = Metrics::new();
+    let mut telemetry = TraceReport::default();
     let mut slots = 0;
     let mut leftover = 0;
     for r in results {
-        metrics.merge(&r.metrics);
+        // Worker results are owned: fold by move, no outcome clones.
+        metrics.absorb(r.metrics);
+        telemetry.merge(r.telemetry);
         slots += r.slots;
         leftover += r.leftover;
     }
-    ServeReport { metrics, horizon_ms, workers, slots, leftover }
+    ServeReport { metrics, horizon_ms, workers, slots, leftover, telemetry }
 }
 
 /// Serve a pre-generated trace across the worker pool and report.
@@ -726,6 +745,13 @@ pub struct Server {
     rebalance_wake: Arc<WakeEvent>,
     rebalance_handle: Option<std::thread::JoinHandle<()>>,
     rebalance_stats: Arc<RebalanceStats>,
+    telemetry_stop: Arc<AtomicBool>,
+    telemetry_wake: Arc<WakeEvent>,
+    /// Publisher thread appending live counter snapshots to
+    /// `--metrics-out` every `--metrics-interval-ms` (spawned only when
+    /// the flag is set — otherwise the pool carries no telemetry hub at
+    /// all).
+    telemetry_handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -763,6 +789,13 @@ impl Server {
         }
         let intake: Arc<Vec<Mutex<ModelIntake>>> = Arc::new(slots);
         let cluster_hints = cfg.cluster_hints && workers > 1;
+        // Live telemetry hub: only materialized when a publisher will
+        // read it, so the default pool carries no extra atomics.
+        let telemetry_hub = if cfg.telemetry.metrics_out.is_some() {
+            Some(Arc::new(TelemetryHub::new(cfg.telemetry.node_label)))
+        } else {
+            None
+        };
         let handles = (0..workers)
             .map(|i| {
                 let engine = cfg.build_engine(
@@ -782,6 +815,7 @@ impl Server {
                     cluster_hints,
                     closed: closed.clone(),
                     events_tx: events_tx.clone(),
+                    hub: telemetry_hub.clone(),
                 };
                 let spec = cfg.scheduler;
                 let engine_cfg = cfg.engine.clone();
@@ -820,6 +854,37 @@ impl Server {
             }
             _ => None,
         };
+        let telemetry_stop = Arc::new(AtomicBool::new(false));
+        let telemetry_wake = Arc::new(WakeEvent::new());
+        let telemetry_handle = match (&telemetry_hub, &cfg.telemetry.metrics_out)
+        {
+            (Some(hub), Some(path)) => {
+                let hub = hub.clone();
+                let path = path.clone();
+                let stop = telemetry_stop.clone();
+                let wake = telemetry_wake.clone();
+                let pub_clock = clock.clone();
+                let interval = std::time::Duration::from_secs_f64(
+                    cfg.telemetry.metrics_interval_ms.max(10.0) / 1e3,
+                );
+                Some(
+                    std::thread::Builder::new()
+                        .name("bcedge-telemetry".into())
+                        .spawn(move || loop {
+                            wake.wait_timeout(interval);
+                            if stop.load(Ordering::Acquire) {
+                                break;
+                            }
+                            let now = pub_clock.now_ms();
+                            let snap = hub.snapshot_json(now);
+                            let _ = telemetry::append_jsonl(&path, &snap);
+                            eprintln!("{}", hub.status_line(now));
+                        })
+                        .expect("spawn telemetry publisher"),
+                )
+            }
+            _ => None,
+        };
         let ingress = Ingress::new(senders, worker_events, ownership.clone(),
                                    gauges, cfg.admission, isolated_ref_ms,
                                    cfg.request_id_base);
@@ -835,6 +900,9 @@ impl Server {
             rebalance_wake,
             rebalance_handle,
             rebalance_stats,
+            telemetry_stop,
+            telemetry_wake,
+            telemetry_handle,
         }
     }
 
@@ -892,7 +960,17 @@ impl Server {
             rebalance_wake,
             rebalance_handle,
             rebalance_stats,
+            telemetry_stop,
+            telemetry_wake,
+            telemetry_handle,
         } = self;
+        // 0. Stop the telemetry publisher first: the final snapshot is
+        //    written by the caller from merged metrics, not this thread.
+        telemetry_stop.store(true, Ordering::Release);
+        telemetry_wake.notify();
+        if let Some(h) = telemetry_handle {
+            h.join().expect("telemetry publisher panicked");
+        }
         // 1. Freeze the ownership table: no migrations during the drain.
         rebalance_stop.store(true, Ordering::Release);
         rebalance_wake.notify();
@@ -992,6 +1070,60 @@ mod tests {
             assert_eq!(report.leftover, engine.total_queued());
             assert_eq!(report.metrics.shed_total(), 0);
         }
+    }
+
+    /// Tentpole acceptance: deterministic id-keyed trace sampling.
+    /// Tracing on must not perturb the virtual run (outcome stream, slot
+    /// count, and shed totals stay identical to the untraced run), the
+    /// sampled completed-id set is exactly `id % N == 0` over the
+    /// outcomes, per-stage spans sum to end-to-end, and two traced runs
+    /// agree trace-for-trace.
+    #[test]
+    fn tracing_samples_deterministically_and_leaves_outcomes_untouched() {
+        use crate::telemetry::TraceVerdict;
+        use std::collections::BTreeSet;
+        let mut gen = PoissonGenerator::new(150.0, 99);
+        let trace = gen.generate_horizon(15_000.0);
+        let horizon = 40_000.0;
+        let base_cfg = fixed_cfg(2, Some(AdmissionConfig::default()));
+        let plain = run_trace(&base_cfg, trace.clone(), horizon);
+        assert!(plain.telemetry.traces.is_empty(), "tracing on by default");
+
+        let traced_cfg = ServeConfig {
+            telemetry: TelemetryConfig {
+                trace_sample: 4,
+                ..Default::default()
+            },
+            ..base_cfg.clone()
+        };
+        let a = run_trace(&traced_cfg, trace.clone(), horizon);
+        assert_eq!(a.metrics.outcomes(), plain.metrics.outcomes(),
+                   "tracing perturbed the outcome stream");
+        assert_eq!(a.slots, plain.slots);
+        assert_eq!(a.metrics.shed_total(), plain.metrics.shed_total());
+        let b = run_trace(&traced_cfg, trace, horizon);
+        assert_eq!(a.telemetry.traces, b.telemetry.traces,
+                   "traced runs diverged on the same seed");
+
+        let completed: BTreeSet<u64> = a.telemetry.traces.iter()
+            .filter(|t| t.verdict == TraceVerdict::Completed)
+            .map(|t| t.id)
+            .collect();
+        let expected: BTreeSet<u64> = a.metrics.outcomes().iter()
+            .filter(|o| o.id % 4 == 0)
+            .map(|o| o.id)
+            .collect();
+        assert_eq!(completed, expected,
+                   "sampled id set is not exactly id % 4 == 0");
+        assert!(!completed.is_empty(), "sampled set empty — vacuous test");
+        for t in &a.telemetry.traces {
+            if t.verdict == TraceVerdict::Completed {
+                assert!((t.span_sum_ms() - t.e2e_ms).abs() < 1e-6,
+                        "spans don't sum to e2e for id {}", t.id);
+                assert!(t.batch >= 1);
+            }
+        }
+        assert!(!a.telemetry.actions.is_empty(), "no decisions recorded");
     }
 
     #[test]

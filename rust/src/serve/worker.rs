@@ -30,6 +30,7 @@ use super::ingress::{ModelIntake, OwnershipTable, SharedGauges, WakeEvent};
 use crate::coordinator::{Engine, Scheduler};
 use crate::metrics::Metrics;
 use crate::runtime::executor::SimDispatcher;
+use crate::telemetry::{TelemetryHub, TraceReport};
 use crate::workload::models::{ModelId, N_MODELS};
 use crate::workload::request::Request;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -45,6 +46,9 @@ pub struct WorkerResult {
     /// Requests still queued when the worker stopped (horizon expired
     /// before the backlog drained).
     pub leftover: usize,
+    /// Sampled span records + raw action histogram this worker's tracer
+    /// collected (empty when tracing is off).
+    pub telemetry: TraceReport,
 }
 
 /// A request completion.
@@ -76,10 +80,12 @@ pub fn run_trace_worker(mut engine: Engine<SimDispatcher>,
                         horizon_ms: f64) -> WorkerResult {
     engine.submit(shard);
     let slots = engine.run(scheduler, horizon_ms);
+    let telemetry = engine.take_telemetry();
     WorkerResult {
         slots,
         leftover: engine.total_queued(),
         metrics: std::mem::take(&mut engine.metrics),
+        telemetry,
     }
 }
 
@@ -111,6 +117,10 @@ pub struct LiveWorker {
     /// other workers and serve whatever we hold.
     pub closed: Arc<AtomicBool>,
     pub events_tx: Option<std::sync::mpsc::Sender<ServeEvent>>,
+    /// Live telemetry counters shared with the server's publisher
+    /// thread (`None` unless `--metrics-out` is set — the hot path then
+    /// carries no atomics at all).
+    pub hub: Option<Arc<TelemetryHub>>,
 }
 
 /// How long an idle live worker parks before re-polling its channels
@@ -219,10 +229,12 @@ impl LiveWorker {
                 None => self.worker_events[self.id].wait_timeout(IDLE_PARK),
             }
         }
+        let telemetry = self.engine.take_telemetry();
         WorkerResult {
             slots,
             leftover: self.engine.total_queued(),
             metrics: std::mem::take(&mut self.engine.metrics),
+            telemetry,
         }
     }
 
@@ -493,14 +505,22 @@ impl LiveWorker {
     }
 
     /// Stream request-terminal events recorded since the last round —
-    /// completions AND engine-gate sheds — to the load-generator clients.
-    /// Returns the new outcome high-water mark; `sheds_seen` tracks the
-    /// per-model shed counts already reported.
+    /// completions AND engine-gate sheds — to the load-generator clients,
+    /// and bump the shared telemetry hub with the same deltas so the
+    /// publisher thread's live snapshots track the pool without walking
+    /// any metrics. Returns the new outcome high-water mark; `sheds_seen`
+    /// tracks the per-model shed counts already reported.
     fn notify_events(&self, reported: usize,
                      sheds_seen: &mut [u64; N_MODELS]) -> usize {
         let outcomes = self.engine.metrics.outcomes();
+        let fresh = &outcomes[reported..];
+        if let Some(hub) = &self.hub {
+            let violated =
+                fresh.iter().filter(|o| o.violated).count() as u64;
+            hub.add_completed(fresh.len() as u64, violated);
+        }
         if let Some(tx) = &self.events_tx {
-            for o in &outcomes[reported..] {
+            for o in fresh {
                 // A dropped receiver just means nobody is listening.
                 let _ = tx.send(ServeEvent::Completed(CompletionEvent {
                     id: o.id,
@@ -509,13 +529,22 @@ impl LiveWorker {
                     violated: o.violated,
                 }));
             }
+        }
+        if self.events_tx.is_some() || self.hub.is_some() {
             for m in ModelId::all() {
                 let seen = &mut sheds_seen[m as usize];
                 let now = self.engine.metrics.shed_for(m);
-                for _ in *seen..now {
-                    let _ = tx.send(ServeEvent::Shed { model: m });
+                if now > *seen {
+                    if let Some(hub) = &self.hub {
+                        hub.add_shed(now - *seen);
+                    }
+                    if let Some(tx) = &self.events_tx {
+                        for _ in *seen..now {
+                            let _ = tx.send(ServeEvent::Shed { model: m });
+                        }
+                    }
+                    *seen = now;
                 }
-                *seen = now;
             }
         }
         outcomes.len()

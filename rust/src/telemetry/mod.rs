@@ -1,0 +1,922 @@
+//! Request-lifecycle tracing + streaming telemetry (the observability
+//! layer).
+//!
+//! Every claim the repro makes — utility, violation rate, shed
+//! accounting, conservation — used to be computed *after* a run from the
+//! unbounded outcome vec in [`crate::metrics::Metrics`]. This module adds
+//! the during-the-run view, in three pieces:
+//!
+//! * **Span records** ([`RequestTrace`]): where a request spent its
+//!   budget — ingress-queue wait (arrival → engine ingest), batch
+//!   assembly wait (ingest → dispatch), inference span (dispatch →
+//!   completion, serialization included), and the network RTT charged
+//!   into Eq. 2 — plus the admission/cache verdict, the batch it joined,
+//!   and worker/node/shard labels. By construction the four spans sum to
+//!   the reported e2e latency exactly (see [`RequestTrace::span_sum_ms`]).
+//!   Collection is **deterministic id-keyed sampling**: a request is
+//!   sampled iff `id % N == 0` for `--trace-sample N`, so the virtual arm
+//!   stays bit-reproducible and two runs of the same seed sample the
+//!   same id set. Sampled traces land in bounded per-worker rings
+//!   ([`TraceRing`]) and are flushed as JSON-lines to `--trace-out`.
+//! * **Streaming aggregates**: fixed-size log-bucketed latency/slack
+//!   histograms ([`LogHistogram`], mergeable across workers and nodes
+//!   like `Metrics::merge`), per-model outcome/violation counters, and
+//!   SAC action histograms — all snapshot-able without touching the
+//!   outcome vec, which survives only as the exact-percentile test
+//!   oracle. Live wall-clock runs publish [`TelemetryHub`] counters to a
+//!   `--metrics-out` JSON-lines stream every `--metrics-interval-ms`;
+//!   every run appends one `kind: "final"` line from which the
+//!   conservation identity `completed + sheds + cache_served + leftover
+//!   == attempts` is recomputable from counters alone.
+//! * **A zero-cost off switch** ([`TelemetryConfig`], default fully
+//!   off): the engine's tracer seam is an `Option` exactly like its
+//!   ingress gate, so disabled telemetry keeps the bare engine and the
+//!   `--workers 1` virtual arm bit-identical (pinned by the
+//!   seed-equivalence test) and the `telemetry_overhead` bench section
+//!   measures the off / sampled / full cost directly.
+
+use crate::metrics::{Metrics, ShedReason};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::workload::models::{ModelId, N_MODELS};
+use crate::workload::request::Request;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Telemetry knobs, threaded through [`crate::serve::ServeConfig`] into
+/// every worker engine and cluster node. Default is fully off — the
+/// engine takes no tracer, workers take no hub, and the hot path is
+/// bit-identical to a build without this module.
+#[derive(Clone, Debug)]
+pub struct TelemetryConfig {
+    /// JSON-lines destination for sampled [`RequestTrace`] records
+    /// (`--trace-out`). `None` keeps traces in memory only (they still
+    /// ride the reports when sampling is on).
+    pub trace_out: Option<String>,
+    /// Deterministic sampling rate: a request is traced iff
+    /// `id % trace_sample == 0`. `0` disables tracing entirely; `1`
+    /// traces every request.
+    pub trace_sample: u64,
+    /// JSON-lines destination for metrics snapshots (`--metrics-out`).
+    pub metrics_out: Option<String>,
+    /// Live snapshot cadence for the wall-clock publisher thread, ms
+    /// (`--metrics-interval-ms`). Virtual runs emit only the final line.
+    pub metrics_interval_ms: f64,
+    /// Cluster node index stamped into traces and snapshot lines
+    /// (set by the cluster tier; `0` for single-node serving).
+    pub node_label: u32,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            trace_out: None,
+            trace_sample: 0,
+            metrics_out: None,
+            metrics_interval_ms: 500.0,
+            node_label: 0,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    /// Is span tracing on at all?
+    pub fn tracing_on(&self) -> bool {
+        self.trace_sample > 0
+    }
+
+    /// Deterministic id-keyed sampling decision. Stable across runs,
+    /// workers, and node id-window striding (ids are offset by multiples
+    /// of `2^32`, so `id % N` stays well-defined per id, and the same id
+    /// always gets the same verdict).
+    pub fn sampled(&self, id: u64) -> bool {
+        self.trace_sample > 0 && id % self.trace_sample == 0
+    }
+}
+
+/// Terminal disposition of a traced request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceVerdict {
+    /// Dispatched, inferred, completed (violated or not — see the flag).
+    Completed,
+    /// Refused with a typed reason: at the cluster edge
+    /// ([`ShedReason::NoFeasibleNode`]), by a node's admission gate, or
+    /// by the engine-side ingress gate.
+    Shed(ShedReason),
+    /// Terminated at the front-end result cache: a fresh hit.
+    CacheHit,
+    /// Terminated at the cache: coalesced onto an in-flight leader.
+    CacheCoalesced,
+}
+
+impl TraceVerdict {
+    /// Stable string label (the `verdict` field of the JSON line).
+    pub fn label(&self) -> &'static str {
+        match self {
+            TraceVerdict::Completed => "completed",
+            TraceVerdict::Shed(r) => r.label(),
+            TraceVerdict::CacheHit => "cache-hit",
+            TraceVerdict::CacheCoalesced => "cache-coalesced",
+        }
+    }
+}
+
+/// One sampled request's lifecycle, spans in milliseconds.
+///
+/// For `verdict == Completed` the identity
+/// `ingress_wait_ms + batch_wait_ms + infer_ms + net_ms == e2e_ms`
+/// holds by construction (the spans are differences of the same three
+/// timestamps the engine's accounting uses), up to floating-point
+/// re-association — the validator allows 1e-6 ms. Shed and cache records
+/// carry only the spans that happened (the rest are zero).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestTrace {
+    /// Request id (cluster-unique). Front-end cache/edge records, which
+    /// terminate before a node assigns an id, use the trace index.
+    pub id: u64,
+    /// The model requested.
+    pub model: ModelId,
+    /// Terminal disposition.
+    pub verdict: TraceVerdict,
+    /// Cluster node index (0 for single-node serving).
+    pub node: u32,
+    /// Worker index inside the node's pool.
+    pub worker: u32,
+    /// Front-end router shard (meaningful for cache/edge records).
+    pub shard: u32,
+    /// Arrival timestamp on the serving clock, ms.
+    pub arrival_ms: f64,
+    /// Network RTT charged into the e2e budget (Eq. 2 transmission).
+    pub net_ms: f64,
+    /// Arrival → engine ingest (time spent in the ingress queue).
+    pub ingress_wait_ms: f64,
+    /// Ingest → dispatch (time waiting for a batch to assemble).
+    pub batch_wait_ms: f64,
+    /// Dispatch → completion (inference + serialization span).
+    pub infer_ms: f64,
+    /// End-to-end latency as accounted against the SLO.
+    pub e2e_ms: f64,
+    /// The request's SLO budget, ms.
+    pub slo_ms: f64,
+    /// Real requests in the batch this request joined.
+    pub batch: usize,
+    /// Batch size after artifact padding (0 when not dispatched).
+    pub padded: usize,
+    /// Did the request miss its SLO?
+    pub violated: bool,
+}
+
+impl RequestTrace {
+    /// A record that never reached dispatch (shed / cache-served):
+    /// everything zero except what the caller fills in.
+    pub fn stub(id: u64, model: ModelId, verdict: TraceVerdict) -> Self {
+        RequestTrace {
+            id,
+            model,
+            verdict,
+            node: 0,
+            worker: 0,
+            shard: 0,
+            arrival_ms: 0.0,
+            net_ms: 0.0,
+            ingress_wait_ms: 0.0,
+            batch_wait_ms: 0.0,
+            infer_ms: 0.0,
+            e2e_ms: 0.0,
+            slo_ms: 0.0,
+            batch: 0,
+            padded: 0,
+            violated: false,
+        }
+    }
+
+    /// Sum of the four per-stage spans — equals `e2e_ms` (within clock
+    /// resolution) for completed requests.
+    pub fn span_sum_ms(&self) -> f64 {
+        self.ingress_wait_ms + self.batch_wait_ms + self.infer_ms
+            + self.net_ms
+    }
+
+    /// One JSON-lines record (deterministic key order).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("id", num(self.id as f64)),
+            ("model", s(self.model.name())),
+            ("verdict", s(self.verdict.label())),
+            ("node", num(self.node as f64)),
+            ("worker", num(self.worker as f64)),
+            ("shard", num(self.shard as f64)),
+            ("arrival_ms", num(self.arrival_ms)),
+            ("net_ms", num(self.net_ms)),
+            ("ingress_wait_ms", num(self.ingress_wait_ms)),
+            ("batch_wait_ms", num(self.batch_wait_ms)),
+            ("infer_ms", num(self.infer_ms)),
+            ("e2e_ms", num(self.e2e_ms)),
+            ("slo_ms", num(self.slo_ms)),
+            ("batch", num(self.batch as f64)),
+            ("padded", num(self.padded as f64)),
+            ("violated", Json::Bool(self.violated)),
+        ])
+    }
+}
+
+/// Default per-worker trace ring capacity: at 1/64 sampling this holds
+/// the last ~4M requests' worth of samples — overflow evicts oldest and
+/// counts, never blocks the hot path.
+pub const TRACE_RING_CAP: usize = 65_536;
+
+/// Cap on in-flight sampled-request bookkeeping per worker. Overflow
+/// stops *tracking* new samples (counted), never touches the request.
+const PENDING_CAP: usize = 8_192;
+
+/// Bounded ring of sampled traces: push is O(1), overflow evicts the
+/// oldest record and bumps a drop counter.
+#[derive(Clone, Debug)]
+pub struct TraceRing {
+    buf: VecDeque<RequestTrace>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// A ring holding at most `cap` records (min 1).
+    pub fn new(cap: usize) -> Self {
+        TraceRing { buf: VecDeque::new(), cap: cap.max(1), dropped: 0 }
+    }
+
+    /// Append, evicting the oldest record when full.
+    pub fn push(&mut self, t: RequestTrace) {
+        if self.buf.len() >= self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(t);
+    }
+
+    /// Records currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Is the ring empty?
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Records evicted by overflow so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take every held record (oldest first), leaving the ring empty.
+    pub fn drain(&mut self) -> Vec<RequestTrace> {
+        self.buf.drain(..).collect()
+    }
+}
+
+/// Everything one engine's tracer collected, folded worker → node →
+/// cluster alongside `Metrics`.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    /// Sampled span records, in completion order per worker.
+    pub traces: Vec<RequestTrace>,
+    /// Raw SAC/scheduler action histogram: `(batch, m_c) → decisions`
+    /// (pre-veto, so it shows what the policy asked for).
+    pub actions: BTreeMap<(usize, usize), u64>,
+    /// Trace records lost to ring overflow or pending-map caps.
+    pub dropped: u64,
+}
+
+impl TraceReport {
+    /// Fold another report in (by value — no clones).
+    pub fn merge(&mut self, mut other: TraceReport) {
+        self.traces.append(&mut other.traces);
+        for (k, v) in other.actions {
+            *self.actions.entry(k).or_insert(0) += v;
+        }
+        self.dropped += other.dropped;
+    }
+
+    /// The action histogram as a JSON array of `{batch, m_c, count}`.
+    pub fn actions_json(&self) -> Json {
+        arr(self.actions.iter().map(|(&(b, m_c), &count)| {
+            obj(vec![
+                ("batch", num(b as f64)),
+                ("m_c", num(m_c as f64)),
+                ("count", num(count as f64)),
+            ])
+        }))
+    }
+}
+
+/// Per-engine tracer: the engine holds `Option<EngineTracer>` (default
+/// `None`, mirroring its ingress-gate seam) so disabled tracing costs
+/// one untaken branch per request and keeps the seed-equivalence
+/// invariant bit-for-bit. All state is worker-local — no locks, no
+/// atomics on the hot path.
+#[derive(Clone, Debug)]
+pub struct EngineTracer {
+    sample: u64,
+    worker: u32,
+    node: u32,
+    /// `(id, t_ingest)` for sampled requests awaiting completion. Linear
+    /// scan on completion — at 1/64 sampling this holds a handful of
+    /// entries; entries survive OOM requeues (removed only on
+    /// completion).
+    pending: Vec<(u64, f64)>,
+    ring: TraceRing,
+    actions: BTreeMap<(usize, usize), u64>,
+    pending_overflow: u64,
+}
+
+impl EngineTracer {
+    /// Tracer for one worker; `cfg.trace_sample == 0` is treated as 1
+    /// (callers only install a tracer when tracing is on).
+    pub fn new(cfg: &TelemetryConfig, worker: u32) -> Self {
+        EngineTracer {
+            sample: cfg.trace_sample.max(1),
+            worker,
+            node: cfg.node_label,
+            pending: Vec::new(),
+            ring: TraceRing::new(TRACE_RING_CAP),
+            actions: BTreeMap::new(),
+            pending_overflow: 0,
+        }
+    }
+
+    /// Deterministic sampling verdict for `id`.
+    pub fn sampled(&self, id: u64) -> bool {
+        id % self.sample == 0
+    }
+
+    /// A request left the ingress queue and entered the engine's router
+    /// at `now_ms` — the ingress-wait / batch-wait boundary.
+    pub fn on_ingest(&mut self, id: u64, now_ms: f64) {
+        if !self.sampled(id) {
+            return;
+        }
+        if self.pending.len() >= PENDING_CAP {
+            self.pending_overflow += 1;
+            return;
+        }
+        self.pending.push((id, now_ms));
+    }
+
+    /// The engine-side ingress gate refused a request at ingest time.
+    pub fn on_shed(&mut self, r: &Request, now_ms: f64, reason: ShedReason) {
+        if !self.sampled(r.id) {
+            return;
+        }
+        let mut t = RequestTrace::stub(r.id, r.model,
+                                       TraceVerdict::Shed(reason));
+        t.node = self.node;
+        t.worker = self.worker;
+        t.arrival_ms = r.arrival_ms;
+        t.net_ms = r.transmission_ms;
+        t.ingress_wait_ms = now_ms - r.arrival_ms;
+        t.slo_ms = r.slo_ms;
+        self.ring.push(t);
+    }
+
+    /// A request completed: dispatched at `t_dispatch`, inference (plus
+    /// serialization) took `infer_ms`, in a batch of `batch` real
+    /// requests padded to `padded`. Computes the same e2e the metrics
+    /// path records, split into spans.
+    pub fn on_complete(&mut self, r: &Request, t_dispatch: f64,
+                       infer_ms: f64, batch: usize, padded: usize,
+                       violated: bool) {
+        if !self.sampled(r.id) {
+            return;
+        }
+        let t_ingest = match self.pending.iter().position(|&(id, _)| id == r.id)
+        {
+            Some(i) => self.pending.swap_remove(i).1,
+            // Pending cap overflowed when this id ingested: charge the
+            // whole wait to batch assembly rather than lose the record.
+            None => r.arrival_ms,
+        };
+        let completion = t_dispatch + infer_ms;
+        self.ring.push(RequestTrace {
+            id: r.id,
+            model: r.model,
+            verdict: TraceVerdict::Completed,
+            node: self.node,
+            worker: self.worker,
+            shard: 0,
+            arrival_ms: r.arrival_ms,
+            net_ms: r.transmission_ms,
+            ingress_wait_ms: t_ingest - r.arrival_ms,
+            batch_wait_ms: t_dispatch - t_ingest,
+            infer_ms,
+            e2e_ms: completion - r.arrival_ms + r.transmission_ms,
+            slo_ms: r.slo_ms,
+            batch,
+            padded,
+            violated,
+        });
+    }
+
+    /// Record one raw scheduler decision (pre-veto `(batch, m_c)`).
+    pub fn record_action(&mut self, batch: usize, m_c: usize) {
+        *self.actions.entry((batch, m_c)).or_insert(0) += 1;
+    }
+
+    /// Drain everything collected so far into a report (the tracer
+    /// stays installed and keeps collecting).
+    pub fn take_report(&mut self) -> TraceReport {
+        TraceReport {
+            dropped: self.ring.dropped() + self.pending_overflow,
+            traces: self.ring.drain(),
+            actions: std::mem::take(&mut self.actions),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Streaming histograms
+// ---------------------------------------------------------------------
+
+/// Log-bucket count for [`LogHistogram`].
+pub const HIST_BUCKETS: usize = 64;
+/// Lowest bucket edge, ms: everything at or below lands in bucket 0.
+pub const HIST_LO_MS: f64 = 0.05;
+/// Highest bucket edge, ms: everything above lands in the top bucket.
+pub const HIST_HI_MS: f64 = 1e5;
+
+fn ln_growth() -> f64 {
+    (HIST_HI_MS / HIST_LO_MS).ln() / (HIST_BUCKETS - 1) as f64
+}
+
+/// Fixed-size log-bucketed histogram of non-negative millisecond values.
+///
+/// 64 buckets span 0.05 ms … 100 s with geometric growth `g =
+/// (HI/LO)^(1/63) ≈ 1.26`, so any quantile read is within one bucket
+/// width — a ≈26 % relative band — of the exact value (see
+/// [`LogHistogram::growth`]). Mergeable by element-wise addition, like
+/// `Metrics::merge`; constant memory regardless of run length. Negative
+/// or sub-`LO` values clamp into bucket 0 (slack histograms put every
+/// violated request there).
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: [u64; HIST_BUCKETS],
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: [0; HIST_BUCKETS],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    /// The geometric bucket growth factor (the relative error bound of
+    /// any quantile read is one factor of this either side).
+    pub fn growth() -> f64 {
+        ln_growth().exp()
+    }
+
+    /// Upper edge of bucket `i` (`HIST_LO_MS` for bucket 0).
+    fn edge(i: usize) -> f64 {
+        HIST_LO_MS * (ln_growth() * i as f64).exp()
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if !(v > HIST_LO_MS) {
+            return 0; // covers v <= LO, zero, negatives, and NaN
+        }
+        let i = ((v / HIST_LO_MS).ln() / ln_growth()).ceil() as usize;
+        i.min(HIST_BUCKETS - 1)
+    }
+
+    /// Add one observation.
+    pub fn add(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        self.counts[Self::bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of the recorded observations (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
+    }
+
+    /// Largest recorded observation (0 when empty).
+    pub fn max_ms(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.max }
+    }
+
+    /// Element-wise merge (same bucket layout by construction).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The bucket index holding the `q`-quantile observation
+    /// (nearest-rank), or `None` when empty.
+    fn quantile_bucket(&self, q: f64) -> Option<usize> {
+        if self.total == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64)
+            .max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some(i);
+            }
+        }
+        Some(HIST_BUCKETS - 1)
+    }
+
+    /// Streaming `q`-quantile estimate: the upper edge of the bucket
+    /// holding the nearest-rank observation, clamped to the observed
+    /// max. Exact value is within one bucket width (see
+    /// [`LogHistogram::quantile_bounds`]); 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        match self.quantile_bucket(q) {
+            Some(i) => Self::edge(i).min(self.max),
+            None => 0.0,
+        }
+    }
+
+    /// `(lower, upper)` edges of the bucket the `q`-quantile fell in —
+    /// the error bound the tests assert the exact oracle against.
+    pub fn quantile_bounds(&self, q: f64) -> (f64, f64) {
+        match self.quantile_bucket(q) {
+            Some(0) => (0.0, HIST_LO_MS),
+            Some(i) => (Self::edge(i - 1), Self::edge(i)),
+            None => (0.0, 0.0),
+        }
+    }
+
+    /// Bucket counts + moments as JSON (the snapshot wire format).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", num(self.total as f64)),
+            ("sum_ms", num(self.sum)),
+            ("min_ms", num(if self.total == 0 { 0.0 } else { self.min })),
+            ("max_ms", num(self.max_ms())),
+            ("p50_ms", num(self.quantile(0.5))),
+            ("p99_ms", num(self.quantile(0.99))),
+            ("buckets",
+             arr(self.counts.iter().map(|&c| num(c as f64)))),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live counters + snapshot lines
+// ---------------------------------------------------------------------
+
+/// Shared live counters for the wall-clock publisher thread: workers
+/// bump them as outcomes land (relaxed atomics, off the lock-free hot
+/// path), the publisher snapshots them every `--metrics-interval-ms`.
+/// Engine-side counters only — ingress fast-path sheds (refused before
+/// an id exists) fold in at shutdown via the final snapshot.
+#[derive(Debug)]
+pub struct TelemetryHub {
+    node: u32,
+    completed: AtomicU64,
+    violated: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl TelemetryHub {
+    /// A hub stamped with the cluster node index (0 single-node).
+    pub fn new(node: u32) -> Self {
+        TelemetryHub {
+            node,
+            completed: AtomicU64::new(0),
+            violated: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold a batch of freshly recorded outcomes in.
+    pub fn add_completed(&self, n: u64, violated: u64) {
+        if n > 0 {
+            self.completed.fetch_add(n, Ordering::Relaxed);
+        }
+        if violated > 0 {
+            self.violated.fetch_add(violated, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold freshly observed engine-side sheds in.
+    pub fn add_shed(&self, n: u64) {
+        if n > 0 {
+            self.shed.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// One `kind: "snapshot"` JSON line at `t_ms` on the serving clock.
+    pub fn snapshot_json(&self, t_ms: f64) -> Json {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let violated = self.violated.load(Ordering::Relaxed);
+        let shed = self.shed.load(Ordering::Relaxed);
+        obj(vec![
+            ("kind", s("snapshot")),
+            ("node", num(self.node as f64)),
+            ("t_ms", num(t_ms)),
+            ("completed", num(completed as f64)),
+            ("violated", num(violated as f64)),
+            ("sheds", num(shed as f64)),
+        ])
+    }
+
+    /// Compact human-readable status (the live one-liner).
+    pub fn status_line(&self, t_ms: f64) -> String {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let violated = self.violated.load(Ordering::Relaxed);
+        let shed = self.shed.load(Ordering::Relaxed);
+        let viol_pct = if completed == 0 {
+            0.0
+        } else {
+            100.0 * violated as f64 / completed as f64
+        };
+        format!(
+            "[telemetry] node {} t={:.1}s completed={} viol={:.2}% shed={}",
+            self.node,
+            t_ms / 1e3,
+            completed,
+            viol_pct,
+            shed,
+        )
+    }
+}
+
+/// The end-of-run `kind: "final"` snapshot: every term of the
+/// conservation identity as a counter (`completed + sheds + cache_served
+/// + leftover == attempts` — recomputable with no outcome vec), the
+/// streaming latency/slack histograms, per-model and per-reason
+/// breakdowns, and the SAC action histogram.
+pub fn final_snapshot(horizon_ms: f64, attempts: u64, cache_served: u64,
+                      leftover: u64, metrics: &Metrics,
+                      telemetry: &TraceReport) -> Json {
+    let per_model = arr(ModelId::all().into_iter().map(|m| {
+        obj(vec![
+            ("model", s(m.name())),
+            ("completed", num(metrics.outcomes_for(m) as f64)),
+            ("violated", num(metrics.violations_for(m) as f64)),
+            ("shed", num(metrics.shed_for(m) as f64)),
+        ])
+    }));
+    let sheds_by_reason = Json::Obj(
+        ShedReason::all()
+            .into_iter()
+            .map(|r| {
+                (r.label().to_string(),
+                 num(metrics.shed_by_reason(r) as f64))
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("kind", s("final")),
+        ("horizon_ms", num(horizon_ms)),
+        ("attempts", num(attempts as f64)),
+        ("completed", num(metrics.recorded_outcomes() as f64)),
+        ("violated", num(metrics.violations_total() as f64)),
+        ("violation_rate", num(metrics.violation_rate())),
+        ("sheds", num(metrics.shed_total() as f64)),
+        ("sheds_by_reason", sheds_by_reason),
+        ("cache_served", num(cache_served as f64)),
+        ("leftover", num(leftover as f64)),
+        ("shed_rate", num(metrics.shed_rate())),
+        ("latency", metrics.latency_hist().to_json()),
+        ("slack", metrics.slack_hist().to_json()),
+        ("per_model", per_model),
+        ("actions", telemetry.actions_json()),
+        ("traces_dropped", num(telemetry.dropped as f64)),
+    ])
+}
+
+// ---------------------------------------------------------------------
+// JSON-lines file plumbing
+// ---------------------------------------------------------------------
+
+/// Truncate (or create) a JSON-lines file at run start.
+pub fn init_jsonl(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, "")
+}
+
+/// Append one JSON line (single `write_all` on an append-mode fd, so
+/// concurrent per-node publishers interleave whole lines).
+pub fn append_jsonl(path: &str, line: &Json) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    let mut text = line.to_string();
+    text.push('\n');
+    f.write_all(text.as_bytes())
+}
+
+/// Write every sampled trace as JSON-lines (truncating).
+pub fn write_trace_file(path: &str, traces: &[RequestTrace])
+                        -> std::io::Result<()> {
+    let mut out = String::new();
+    for t in traces {
+        out.push_str(&t.to_json().to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::stats::percentile;
+
+    #[test]
+    fn sampling_is_deterministic_and_id_keyed() {
+        let cfg = TelemetryConfig { trace_sample: 64, ..Default::default() };
+        let a: Vec<u64> = (0..10_000).filter(|&id| cfg.sampled(id)).collect();
+        let b: Vec<u64> = (0..10_000).filter(|&id| cfg.sampled(id)).collect();
+        assert_eq!(a, b, "same rate must sample the same id set");
+        assert_eq!(a.len(), 10_000 / 64 + 1);
+        assert!(a.iter().all(|id| id % 64 == 0));
+        // Node id-window striding (multiples of 2^32) keeps per-id
+        // verdicts stable: the verdict depends only on the id.
+        let strided = (1u64 << 40) + 128;
+        assert_eq!(cfg.sampled(strided), strided % 64 == 0);
+        // Off and full-rate extremes.
+        let off = TelemetryConfig::default();
+        assert!(!off.tracing_on());
+        assert!(!off.sampled(0));
+        let full = TelemetryConfig { trace_sample: 1, ..Default::default() };
+        assert!((0..100).all(|id| full.sampled(id)));
+    }
+
+    #[test]
+    fn trace_ring_is_bounded_and_counts_drops() {
+        let mut ring = TraceRing::new(4);
+        for id in 0..10u64 {
+            ring.push(RequestTrace::stub(id, ModelId::Yolo,
+                                         TraceVerdict::Completed));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let drained = ring.drain();
+        assert!(ring.is_empty());
+        // Oldest evicted first: the survivors are the newest four.
+        let ids: Vec<u64> = drained.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn histogram_quantiles_match_exact_oracle_within_one_bucket() {
+        // Log-uniform data spanning the histogram's whole range.
+        let mut rng = Pcg32::seeded(0x7E1E);
+        let lo_ln = 0.1f64.ln();
+        let hi_ln = 5_000.0f64.ln();
+        let xs: Vec<f64> = (0..10_000)
+            .map(|_| (lo_ln + (hi_ln - lo_ln) * rng.next_f64()).exp())
+            .collect();
+        let mut hist = LogHistogram::default();
+        for &x in &xs {
+            hist.add(x);
+        }
+        assert_eq!(hist.count(), xs.len() as u64);
+        let g = LogHistogram::growth();
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let exact = percentile(&xs, q);
+            let est = hist.quantile(q);
+            let (lo, hi) = hist.quantile_bounds(q);
+            assert!(lo <= est + 1e-12 && est <= hi * (1.0 + 1e-12),
+                    "estimate {est} outside its own bucket [{lo}, {hi}]");
+            // Within one bucket width of the oracle, either side.
+            assert!(exact >= lo / g - 1e-9 && exact <= hi * g + 1e-9,
+                    "q={q}: exact {exact} vs bucket [{lo}, {hi}] (g={g})");
+        }
+        // Sub-LO and negative values clamp into bucket 0.
+        let mut h0 = LogHistogram::default();
+        h0.add(-5.0);
+        h0.add(0.0);
+        h0.add(0.01);
+        assert_eq!(h0.count(), 3);
+        assert!(h0.quantile(0.99) <= HIST_LO_MS);
+        // Empty histogram answers zeros.
+        let empty = LogHistogram::default();
+        assert_eq!(empty.quantile(0.5), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_order_free() {
+        let mk = |seed: u64, n: usize| -> LogHistogram {
+            let mut rng = Pcg32::seeded(seed);
+            let mut h = LogHistogram::default();
+            for _ in 0..n {
+                h.add(rng.next_f64() * 400.0);
+            }
+            h
+        };
+        let (a, b, c) = (mk(1, 500), mk(2, 800), mk(3, 300));
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a + (b + c)
+        let mut right_inner = b.clone();
+        right_inner.merge(&c);
+        let mut right = a.clone();
+        right.merge(&right_inner);
+        assert_eq!(left.counts, right.counts);
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.quantile(0.9), right.quantile(0.9));
+        assert!((left.mean() - right.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracer_span_sum_equals_e2e_and_survives_pending_reuse() {
+        let cfg = TelemetryConfig { trace_sample: 2, ..Default::default() };
+        let mut tracer = EngineTracer::new(&cfg, 3);
+        let mut r = Request::new(4, ModelId::Res, 100.0);
+        r.slo_ms = 80.0;
+        r.transmission_ms = 2.5;
+        tracer.on_ingest(r.id, 101.0);
+        tracer.record_action(8, 2);
+        tracer.record_action(8, 2);
+        tracer.on_complete(&r, 110.0, 30.0, 5, 8, false);
+        // Unsampled ids (odd) leave no record at all.
+        let mut r_odd = Request::new(5, ModelId::Res, 100.0);
+        r_odd.slo_ms = 80.0;
+        tracer.on_ingest(r_odd.id, 101.0);
+        tracer.on_complete(&r_odd, 110.0, 30.0, 5, 8, false);
+        let report = tracer.take_report();
+        assert_eq!(report.traces.len(), 1);
+        let t = &report.traces[0];
+        assert_eq!(t.id, 4);
+        assert_eq!(t.worker, 3);
+        assert_eq!(t.verdict, TraceVerdict::Completed);
+        assert!((t.ingress_wait_ms - 1.0).abs() < 1e-9);
+        assert!((t.batch_wait_ms - 9.0).abs() < 1e-9);
+        assert!((t.infer_ms - 30.0).abs() < 1e-9);
+        // The span identity: ingress + batch + infer + net == e2e.
+        assert!((t.span_sum_ms() - t.e2e_ms).abs() < 1e-9,
+                "spans {} != e2e {}", t.span_sum_ms(), t.e2e_ms);
+        assert_eq!(report.actions.get(&(8, 2)), Some(&2));
+        // The report drained: a second take is empty.
+        assert!(tracer.take_report().traces.is_empty());
+    }
+
+    #[test]
+    fn trace_json_round_trips_through_the_parser() {
+        let mut t = RequestTrace::stub(128, ModelId::Bert,
+                                       TraceVerdict::Shed(
+                                           ShedReason::DeadlineUnmeetable));
+        t.ingress_wait_ms = 4.25;
+        t.slo_ms = 60.0;
+        let line = t.to_json().to_string();
+        let parsed = crate::util::json::parse(&line).expect("line parses");
+        assert_eq!(parsed.get("id").and_then(Json::as_f64), Some(128.0));
+        assert_eq!(parsed.get("model").and_then(Json::as_str), Some("bert"));
+        assert_eq!(parsed.get("verdict").and_then(Json::as_str),
+                   Some("deadline-unmeetable"));
+        assert_eq!(parsed.get("ingress_wait_ms").and_then(Json::as_f64),
+                   Some(4.25));
+    }
+
+    #[test]
+    fn hub_snapshot_counts_and_formats() {
+        let hub = TelemetryHub::new(2);
+        hub.add_completed(10, 3);
+        hub.add_shed(4);
+        hub.add_completed(0, 0); // no-op
+        let snap = hub.snapshot_json(1_500.0);
+        assert_eq!(snap.get("kind").and_then(Json::as_str), Some("snapshot"));
+        assert_eq!(snap.get("node").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(snap.get("completed").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(snap.get("violated").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(snap.get("sheds").and_then(Json::as_f64), Some(4.0));
+        let line = hub.status_line(1_500.0);
+        assert!(line.contains("completed=10"), "{line}");
+        assert!(line.contains("30.00%"), "{line}");
+    }
+}
