@@ -26,12 +26,15 @@
 //! `outcomes + sheds + cache_served + leftover == attempts` and
 //! `dispatched + router_sheds + cache_served == attempts`.
 //!
-//! Two implementations, one per clock arm, sharing [`CacheStats`]:
-//! [`ResultCache`] is sharded and thread-safe for the live wall-clock
-//! driver (per-shard mutexes, atomic counters, a pending-id map filled
-//! by the completion event stream); [`VirtualCache`] is single-threaded
-//! and deterministic for the virtual arm, modeling the leader's fill
-//! time from the same backlog estimate the router prices with.
+//! One implementation serves BOTH clock arms: [`ResultCache`] is sharded
+//! and thread-safe for the live wall-clock driver (per-shard mutexes,
+//! atomic counters, a pending-id map filled by the completion event
+//! stream), and — driven single-threadedly from the event heap, with
+//! leader fills applied at actual completion times — fully deterministic
+//! under the virtual fabric ([`super::fabric`]). [`VirtualCache`], which
+//! self-estimated the leader's fill time instead of observing it, is
+//! retired from the decision path and kept only as a standalone model
+//! (its fill-estimation tests double as a TTL/coalescing oracle).
 
 use crate::util::rng::Pcg32;
 use crate::workload::models::ModelId;
@@ -312,10 +315,12 @@ struct VirtualEntry {
     fill_ms: f64,
 }
 
-/// Deterministic single-threaded cache for the virtual-clock arm. Same
-/// disposition semantics as [`ResultCache`], with the leader's fill time
-/// *modeled* (the router's own RTT + backlog estimate at dispatch) since
-/// virtual node simulations run after the whole trace is routed.
+/// RETIRED from the decision path: the virtual arm now drives the real
+/// [`ResultCache`] from the event heap, filling leaders at actual
+/// completion times. This standalone model — same disposition semantics,
+/// with the leader's fill time *estimated* (RTT + backlog at dispatch)
+/// instead of observed — survives only as a self-contained TTL /
+/// coalescing / eviction oracle for the unit tests below.
 pub struct VirtualCache {
     ttl_ms: f64,
     capacity: usize,

@@ -1,0 +1,503 @@
+//! Fabric-backed virtual arm of the cluster tier: drain/rejoin
+//! lifecycle, gossip publisher ticks, arrival routing, and every node's
+//! serving pool as logical processes on ONE [`EventHeap`]
+//! (see [`crate::sim`]).
+//!
+//! This retires the leaky-bucket backlog estimator the old virtual
+//! driver routed against. Routers now read the SAME live gauges a
+//! node's own admission path exports — published into the shared
+//! [`ClusterView`] at gossip ticks via
+//! [`ServeFabric::gauge_snapshot`] — and the wall arm's real
+//! [`Router`] / [`ViewReader`] / [`ResultCache`] stack runs unchanged.
+//! Because every side effect is a timestamped event on the heap, the
+//! whole dynamic stack (migration, replication, drain/rejoin, sharded
+//! cached routing) replays bit-identically from a seed.
+//!
+//! Process-id map (ties at one timestamp fire in pid order):
+//!
+//! | pid           | process                                           |
+//! |---------------|---------------------------------------------------|
+//! | `0`           | drain/rejoin lifecycle                            |
+//! | `1`           | gossip publisher tick                             |
+//! | `2`           | arrival routing (the trace, one event at a time)  |
+//! | `B_i`         | node `i`'s rebalance controller                   |
+//! | `B_i + 1 + w` | node `i`, worker `w` activation                   |
+//!
+//! with `B_i = 3 + Σ_{j<i} (1 + workers_j)`. The order encodes the
+//! semantics: lifecycle before gossip (a drain at a tick's instant
+//! publishes as inactive), gossip before arrivals (a boundary arrival
+//! routes on the fresh view), arrivals before worker activations (the
+//! serve fabric's deliver-then-activate order, node pids all ≥ 3).
+//!
+//! The drain window gates ROUTING only, exactly like the old virtual
+//! semantics: a drained node's pool keeps serving everything it was
+//! dealt (truth-offline picks from a stale view count as misroutes and
+//! re-route; nothing is lost). Conservation therefore extends across
+//! the tiers unchanged:
+//! `outcomes + sheds + cache_served + leftover == attempts` and
+//! `dispatched + router_sheds + cache_served == attempts`.
+
+use super::cache::{digest_for, CacheLookup, ResultCache};
+use super::node::FinishedNode;
+use super::router::{NodeView, Router};
+use super::view::{ClusterView, StalenessStat, ViewReader};
+use super::{merge_node, ClusterConfig, ClusterReport, FrontEndReport};
+use crate::metrics::Metrics;
+use crate::serve::fabric::ServeFabric;
+use crate::serve::{ClockKind, GaugeSnapshot, LoadGenConfig, ServeConfig};
+use crate::sim::EventHeap;
+use crate::telemetry::{RequestTrace, TraceReport, TraceRing, TraceVerdict,
+                       TRACE_RING_CAP};
+use crate::util::rng::Pcg32;
+use crate::workload::request::Request;
+
+/// Drain/rejoin lifecycle process id.
+const PID_LIFECYCLE: u32 = 0;
+/// Gossip publisher process id.
+const PID_GOSSIP: u32 = 1;
+/// Arrival-routing process id.
+const PID_ARRIVAL: u32 = 2;
+
+/// Event payloads of the cluster tier's fabric.
+enum Ev {
+    /// Flip the drained node's truth state (false = drain, true =
+    /// rejoin).
+    Lifecycle { rejoin: bool },
+    /// Gossip tick `j` (fires at `j × gossip_ms` for `j ≥ 0`).
+    Gossip { j: u64 },
+    /// Route trace request `idx` (the arrival stream keeps exactly one
+    /// Arrival in the heap; the trace is already in timestamp order).
+    Arrival { idx: u64, r: Request },
+    /// Node `node`'s rebalance epoch `k`.
+    Rebalance { node: usize, k: u64 },
+    /// Run one scheduling round on node `node`, worker `w`.
+    Activate { node: usize, w: usize },
+}
+
+/// Front-end-terminal trace record (cache dispositions, edge sheds),
+/// sampled by trace index exactly like the wall arm's shards.
+fn record_fe(ring: &mut TraceRing, sample: u64, idx: u64, shard: usize,
+             r: &Request, verdict: TraceVerdict) {
+    if sample == 0 || idx % sample != 0 {
+        return;
+    }
+    let mut tr = RequestTrace::stub(idx, r.model, verdict);
+    tr.shard = shard as u32;
+    tr.arrival_ms = r.arrival_ms;
+    tr.slo_ms = r.slo_ms;
+    tr.net_ms = r.transmission_ms;
+    ring.push(tr);
+}
+
+/// Open loop on the virtual clock: the whole cluster as one
+/// discrete-event simulation. Same seed (and shard count) ⇒ identical
+/// report, bit for bit — including migration, replication, drain/rejoin,
+/// and cached sharded routing, all live on the heap.
+pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
+                               horizon_ms: f64) -> ClusterReport {
+    let n = cfg.nodes.len();
+    let k = cfg.frontend.router_shards;
+    let gossip_ms = cfg.frontend.gossip_ms;
+    let trace = load.generator().generate_horizon(horizon_ms);
+    let attempts = trace.len() as u64;
+
+    // One serve fabric per node: the node's whole dynamic pool
+    // (workers, rebalancer, replication) as logical processes.
+    let mut fabrics: Vec<ServeFabric> = cfg
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let mut node_cfg = ServeConfig {
+                platform: spec.platform.clone(),
+                workers: spec.workers,
+                clock: ClockKind::Virtual,
+                ..cfg.serve.clone()
+            };
+            node_cfg.telemetry.node_label = i as u32;
+            ServeFabric::new(&node_cfg, horizon_ms)
+        })
+        .collect();
+    // Per-node pid bases (see the module-doc pid map).
+    let pid_base: Vec<u32> = {
+        let mut bases = Vec::with_capacity(n);
+        let mut next = 3u32;
+        for f in &fabrics {
+            bases.push(next);
+            next += 1 + f.worker_count() as u32;
+        }
+        bases
+    };
+
+    // The wall arm's front-end stack, verbatim: shared view, per-shard
+    // readers/routers/link RNGs (same seed split), shared result cache.
+    let view = ClusterView::new(n);
+    let mut readers: Vec<ViewReader> =
+        (0..k).map(|_| ViewReader::new(&view)).collect();
+    let mut routers: Vec<Router> = (0..k)
+        .map(|s| Router::with_stream(cfg.policy, load.seed ^ 0xC1_05_7E,
+                                     s as u64))
+        .collect();
+    let mut link_rngs: Vec<Pcg32> = (0..k)
+        .map(|s| Pcg32::new(load.seed ^ 0x11_4E, s as u64))
+        .collect();
+    let cache = cfg.frontend.cache.map(ResultCache::new);
+
+    let mut heap: EventHeap<Ev> = EventHeap::new();
+    let mut trace_iter = trace.into_iter();
+    if let Some(first) = trace_iter.next() {
+        heap.schedule_ms(first.arrival_ms, PID_ARRIVAL,
+                         Ev::Arrival { idx: 0, r: first });
+    }
+    if horizon_ms > 0.0 {
+        heap.schedule_ms(0.0, PID_GOSSIP, Ev::Gossip { j: 0 });
+    }
+    if let Some(d) = cfg.drain {
+        if d.at_ms < horizon_ms {
+            heap.schedule_ms(d.at_ms, PID_LIFECYCLE,
+                             Ev::Lifecycle { rejoin: false });
+            if d.rejoin_at_ms < horizon_ms {
+                heap.schedule_ms(d.rejoin_at_ms, PID_LIFECYCLE,
+                                 Ev::Lifecycle { rejoin: true });
+            }
+        }
+    }
+    let epoch_ms = cfg
+        .serve
+        .rebalance
+        .map(|r| r.epoch_ms.max(1))
+        .unwrap_or(u64::MAX);
+    for (i, f) in fabrics.iter().enumerate() {
+        if f.has_rebalancer() && (epoch_ms as f64) < horizon_ms {
+            heap.schedule_ms(epoch_ms as f64, pid_base[i],
+                             Ev::Rebalance { node: i, k: 1 });
+        }
+    }
+
+    let mut truth_active = vec![true; n];
+    let mut drains = 0u32;
+    let mut rejoins = 0u32;
+    let mut dispatched = vec![0u64; n];
+    let mut router_metrics = Metrics::new();
+    let mut misroutes = 0u64;
+    let mut staleness = StalenessStat::default();
+    let mut views: Vec<NodeView> = Vec::with_capacity(n);
+    let mut wake: Vec<usize> = Vec::new();
+    let trace_sample = cfg.serve.telemetry.trace_sample;
+    let mut fe_ring = TraceRing::new(TRACE_RING_CAP);
+
+    while let Some(firing) = heap.pop() {
+        match firing.event {
+            Ev::Lifecycle { rejoin } => {
+                let d = cfg.drain.expect("lifecycle event without scenario");
+                truth_active[d.node] = rejoin;
+                if rejoin {
+                    rejoins += 1;
+                } else {
+                    drains += 1;
+                }
+            }
+            Ev::Gossip { j } => {
+                let t = j as f64 * gossip_ms;
+                for i in 0..n {
+                    if truth_active[i] {
+                        view.publish(i, true, fabrics[i].gauge_snapshot(), t);
+                    } else {
+                        view.publish(i, false, GaugeSnapshot::default(), t);
+                    }
+                }
+                let next = (j + 1) as f64 * gossip_ms;
+                if gossip_ms > 0.0 && next < horizon_ms {
+                    heap.schedule_ms(next, PID_GOSSIP, Ev::Gossip { j: j + 1 });
+                }
+            }
+            Ev::Arrival { idx, r } => {
+                let t = r.arrival_ms;
+                let model = r.model;
+                let shard = (idx as usize) % k;
+                // Cache front: hits and coalesces never reach a router.
+                let mut lead_digest = None;
+                let mut cache_served = false;
+                if let Some(c) = cache.as_ref() {
+                    let digest = digest_for(load.seed, idx,
+                                            load.repeat_fraction);
+                    match c.lookup(model, digest, t) {
+                        CacheLookup::Hit => {
+                            record_fe(&mut fe_ring, trace_sample, idx, shard,
+                                      &r, TraceVerdict::CacheHit);
+                            cache_served = true;
+                        }
+                        CacheLookup::Coalesced => {
+                            record_fe(&mut fe_ring, trace_sample, idx, shard,
+                                      &r, TraceVerdict::CacheCoalesced);
+                            cache_served = true;
+                        }
+                        CacheLookup::Lead => lead_digest = Some(digest),
+                    }
+                }
+                if !cache_served {
+                    // Route from the gossiped view, mirroring the wall
+                    // arm's `route_and_dispatch`: sync, record staleness,
+                    // price every node from its published snapshot, and
+                    // mask + re-route on truth-offline misroutes.
+                    readers[shard].sync(&view);
+                    staleness
+                        .record(t - readers[shard].oldest_published_ms());
+                    views.clear();
+                    for i in 0..n {
+                        let p = readers[shard].get(i);
+                        views.push(if p.active {
+                            NodeView {
+                                active: true,
+                                rtt_ms: cfg.nodes[i].net.rtt_ms,
+                                backlog_ms: p.gauges.total_backlog_ms,
+                                service_est_ms: p.gauges.service_est_ms(model),
+                            }
+                        } else {
+                            NodeView {
+                                active: false,
+                                rtt_ms: cfg.nodes[i].net.rtt_ms,
+                                backlog_ms: f64::INFINITY,
+                                service_est_ms: f64::INFINITY,
+                            }
+                        });
+                    }
+                    loop {
+                        match routers[shard]
+                            .route(&views, r.slo_ms - r.transmission_ms)
+                        {
+                            Ok(i) if !truth_active[i] => {
+                                // The published view lags the drain
+                                // event: a real node would refuse this
+                                // dispatch. Count the misroute and
+                                // re-route on the corrected set.
+                                misroutes += 1;
+                                views[i].active = false;
+                            }
+                            Ok(i) => {
+                                let mut routed = r.clone();
+                                routed.transmission_ms += cfg.nodes[i]
+                                    .net
+                                    .delay_ms(&mut link_rngs[shard]);
+                                if let (Some(c), Some(digest)) =
+                                    (cache.as_ref(), lead_digest)
+                                {
+                                    c.commit_leader(model, digest, routed.id);
+                                }
+                                dispatched[i] += 1;
+                                fabrics[i].deliver(routed, &mut wake);
+                                for w in wake.drain(..) {
+                                    heap.schedule_us(
+                                        firing.time_us,
+                                        pid_base[i] + 1 + w as u32,
+                                        Ev::Activate { node: i, w },
+                                    );
+                                }
+                                break;
+                            }
+                            Err(reason) => {
+                                // A shed leader leaves no cache entry:
+                                // the next identical request leads
+                                // afresh.
+                                router_metrics.record_shed(model, reason);
+                                if let (Some(c), Some(digest)) =
+                                    (cache.as_ref(), lead_digest)
+                                {
+                                    c.abort_leader(model, digest);
+                                }
+                                record_fe(&mut fe_ring, trace_sample, idx,
+                                          shard, &r,
+                                          TraceVerdict::Shed(reason));
+                                break;
+                            }
+                        }
+                    }
+                }
+                if let Some(next) = trace_iter.next() {
+                    heap.schedule_ms(next.arrival_ms, PID_ARRIVAL,
+                                     Ev::Arrival { idx: idx + 1, r: next });
+                }
+            }
+            Ev::Rebalance { node, k: ek } => {
+                fabrics[node].rebalance_tick(&mut wake);
+                for w in wake.drain(..) {
+                    heap.schedule_us(firing.time_us,
+                                     pid_base[node] + 1 + w as u32,
+                                     Ev::Activate { node, w });
+                }
+                let next = (ek + 1).saturating_mul(epoch_ms);
+                if (next as f64) < horizon_ms {
+                    heap.schedule_ms(next as f64, pid_base[node],
+                                     Ev::Rebalance { node, k: ek + 1 });
+                }
+            }
+            Ev::Activate { node, w } => {
+                if let Some(at_us) = fabrics[node].activate(w) {
+                    heap.schedule_us(at_us, pid_base[node] + 1 + w as u32,
+                                     Ev::Activate { node, w });
+                }
+                // Completion feed: resolve pending cache leaders at
+                // their ACTUAL completion times (the wall arm's
+                // collector, without the thread).
+                if let Some(c) = cache.as_ref() {
+                    fabrics[node].for_new_outcomes(|o| {
+                        c.on_completed(o.id, o.completed_ms);
+                    });
+                }
+            }
+        }
+    }
+
+    // Fold the nodes in index order — a fixed merge order keeps the
+    // report bit-stable.
+    let mut metrics = router_metrics;
+    let mut telemetry = TraceReport {
+        traces: fe_ring.drain(),
+        dropped: fe_ring.dropped(),
+        ..Default::default()
+    };
+    let mut leftover = 0usize;
+    let mut slots = 0u64;
+    let mut per_node = Vec::with_capacity(n);
+    for (i, fab) in fabrics.into_iter().enumerate() {
+        let report = fab.finish(horizon_ms);
+        merge_node(&mut metrics, &mut leftover, &mut slots, &mut per_node,
+                   &mut telemetry,
+                   FinishedNode {
+                       spec: cfg.nodes[i].clone(),
+                       dispatched: dispatched[i],
+                       segments: vec![report],
+                   });
+    }
+    ClusterReport {
+        metrics,
+        horizon_ms,
+        attempts,
+        leftover,
+        slots,
+        drains,
+        rejoins,
+        policy: cfg.policy,
+        frontend: FrontEndReport {
+            shards: k,
+            gossip_ms,
+            decisions: staleness.decisions,
+            misroutes,
+            staleness_mean_ms: staleness.mean_ms(),
+            staleness_max_ms: staleness.max_ms,
+            cache: cache.map(|c| c.stats()),
+        },
+        per_node,
+        telemetry,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_cluster, FrontEndConfig, NodeSpec, RoutePolicy};
+    use super::*;
+    use crate::platform::{PlatformSim, PlatformSpec};
+    use crate::serve::SchedulerSpec;
+    use crate::workload::models::N_MODELS;
+
+    /// The RETIRED leaky-bucket backlog estimator, kept briefly as a
+    /// test oracle: until this PR it was the virtual router's only load
+    /// signal (dispatch adds per-request work, the bucket drains one ms
+    /// of work per worker per ms of trace time). The decision path now
+    /// reads live gauges; the oracle survives only to cross-check that
+    /// live-gauge routing still sees the heterogeneity the bucket
+    /// modeled.
+    struct LeakyBucket {
+        level_ms: f64,
+        last_ms: f64,
+        drain_rate: f64,
+    }
+
+    impl LeakyBucket {
+        fn new(drain_rate: f64) -> Self {
+            LeakyBucket { level_ms: 0.0, last_ms: 0.0, drain_rate }
+        }
+
+        fn decay_to(&mut self, t: f64) {
+            self.level_ms =
+                (self.level_ms - (t - self.last_ms) * self.drain_rate)
+                    .max(0.0);
+            self.last_ms = t;
+        }
+
+        fn push(&mut self, work_ms: f64) {
+            self.level_ms += work_ms;
+        }
+    }
+
+    /// Differential oracle: replay the same trace through the retired
+    /// leaky-bucket model under greedy join-shortest-backlog, and check
+    /// the live-gauge fabric agrees with it on load ORDERING — the fast
+    /// NX node carries more than the Nano. (The bucket is gone from the
+    /// decision path; this pins that removing it did not invert what
+    /// the routing layer knows about node heterogeneity.)
+    #[test]
+    fn retired_leaky_bucket_oracle_agrees_with_live_gauge_routing() {
+        let cfg = ClusterConfig {
+            nodes: vec![
+                NodeSpec::new(PlatformSpec::xavier_nx(), 2, 2.0),
+                NodeSpec::new(PlatformSpec::jetson_nano(), 1, 12.0),
+            ],
+            policy: RoutePolicy::JoinShortestBacklog,
+            serve: ServeConfig {
+                clock: ClockKind::Virtual,
+                scheduler: SchedulerSpec::Fixed { batch: 4, m_c: 2 },
+                admission: None,
+                queue_capacity: 4096,
+                ..Default::default()
+            },
+            drain: None,
+            frontend: FrontEndConfig::default(),
+        };
+        let load = LoadGenConfig {
+            rps: 120.0,
+            seconds: 10.0,
+            seed: 21,
+            slo_scale: 3.0,
+            ..Default::default()
+        };
+        let report = run_cluster(&cfg, &load).unwrap();
+
+        let trace = load.generator().generate_horizon(load.seconds * 1e3);
+        let sims: Vec<PlatformSim> = cfg
+            .nodes
+            .iter()
+            .map(|s| PlatformSim::new(s.platform.clone()))
+            .collect();
+        let ref_batch = cfg.ref_batch();
+        let mut buckets: Vec<LeakyBucket> = cfg
+            .nodes
+            .iter()
+            .map(|s| LeakyBucket::new(s.workers.clamp(1, N_MODELS) as f64))
+            .collect();
+        let mut oracle = vec![0u64; cfg.nodes.len()];
+        for r in &trace {
+            for b in buckets.iter_mut() {
+                b.decay_to(r.arrival_ms);
+            }
+            let mut pick = 0usize;
+            for i in 1..buckets.len() {
+                if buckets[i].level_ms < buckets[pick].level_ms {
+                    pick = i;
+                }
+            }
+            buckets[pick].push(
+                sims[pick].latency.isolated_ms(r.model, ref_batch)
+                    / ref_batch as f64,
+            );
+            oracle[pick] += 1;
+        }
+        assert!(oracle[0] > oracle[1],
+                "the oracle itself lost the heterogeneity: {oracle:?}");
+        assert!(report.per_node[0].dispatched > report.per_node[1].dispatched,
+                "live-gauge routing disagrees with the retired oracle: \
+                 fabric {:?} vs oracle {oracle:?}",
+                report.per_node.iter().map(|p| p.dispatched)
+                    .collect::<Vec<_>>());
+    }
+}

@@ -43,11 +43,15 @@
 //!   the existing drain protocol, its accounted requests fold into
 //!   cluster totals) and bring it back (a fresh server incarnation in a
 //!   disjoint request-id window).
-//! * **virtual** — deterministic: the router places a pre-generated
-//!   trace using a leaky-bucket backlog model whose *published* copy
-//!   only refreshes on gossip epoch boundaries, then each node serves
-//!   its shard as its own discrete-event simulation — same seed, same
-//!   shard count, same report, bit for bit.
+//! * **virtual** — deterministic: the whole cluster runs as ONE
+//!   discrete-event simulation on the fabric ([`crate::sim`]) — the
+//!   drain/rejoin lifecycle, gossip publisher ticks, arrival routing,
+//!   and every node's serving pool (workers, rebalancer, replication)
+//!   are logical processes on a single event heap. Routing reads the
+//!   SAME live gauges a node's admission path exports, published at
+//!   gossip ticks; the wall arm's router/view/cache stack runs
+//!   unchanged. Same seed, same shard count, same report, bit for bit
+//!   (`fabric`).
 //!
 //! Conservation holds cluster-wide through every drain/rejoin, extended
 //! for the cache tier:
@@ -59,6 +63,7 @@
 //! Entry point: [`run_cluster`], surfaced as `bcedge bench-cluster`.
 
 pub mod cache;
+mod fabric;
 pub mod netmodel;
 pub mod node;
 pub mod router;
@@ -72,15 +77,14 @@ pub use router::{NodeView, RoutePolicy, Router};
 pub use view::{ClusterView, NodePublished, StalenessStat, ViewReader};
 
 use crate::metrics::{Metrics, ShedReason};
-use crate::platform::PlatformSim;
 use crate::telemetry::{RequestTrace, TraceReport, TraceRing, TraceVerdict,
                        TRACE_RING_CAP};
 use crate::serve::worker::ServeEvent;
 use crate::serve::{ClockKind, GaugeSnapshot, LoadGenConfig, LoadMode,
-                   ServeConfig, run_trace};
+                   ServeConfig, INCARNATION_ID_STRIDE};
 use crate::util::rng::Pcg32;
 use crate::util::time::WallClock;
-use crate::workload::models::{ModelId, N_MODELS};
+use crate::workload::models::ModelId;
 use crate::workload::request::Request;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -158,6 +162,15 @@ impl Default for ClusterConfig {
 }
 
 impl ClusterConfig {
+    /// Start a validated-construction builder seeded with the defaults.
+    /// [`ClusterConfigBuilder::build`] runs every check `run_cluster`
+    /// performs plus the cross-tier ones only a builder can see early:
+    /// per-node spec sanity, the request-id window grid, and trace-sample
+    /// divisibility against the id-window stride.
+    pub fn builder() -> ClusterConfigBuilder {
+        ClusterConfigBuilder { cfg: ClusterConfig::default() }
+    }
+
     fn validate(&self) -> Result<(), String> {
         if self.nodes.is_empty() {
             return Err("cluster needs at least one node".into());
@@ -197,6 +210,84 @@ impl ClusterConfig {
     /// The admission reference batch every estimate is priced at.
     fn ref_batch(&self) -> usize {
         self.serve.admission.map(|a| a.ref_batch).unwrap_or(8).max(1)
+    }
+}
+
+/// Validated constructor for [`ClusterConfig`]: chain setters, then
+/// [`build`](Self::build).
+#[derive(Clone, Debug)]
+pub struct ClusterConfigBuilder {
+    cfg: ClusterConfig,
+}
+
+impl ClusterConfigBuilder {
+    /// Replace the node set (the default Table-V trio).
+    pub fn nodes(mut self, nodes: Vec<NodeSpec>) -> Self {
+        self.cfg.nodes = nodes;
+        self
+    }
+
+    /// Front-end routing policy.
+    pub fn policy(mut self, policy: RoutePolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    /// Per-node serving template (platform/workers overridden per node).
+    pub fn serve(mut self, serve: ServeConfig) -> Self {
+        self.cfg.serve = serve;
+        self
+    }
+
+    /// Optional mid-run node drain/rejoin.
+    pub fn drain(mut self, drain: Option<DrainScenario>) -> Self {
+        self.cfg.drain = drain;
+        self
+    }
+
+    /// Front-end tier: router shards, gossip cadence, result cache.
+    pub fn frontend(mut self, frontend: FrontEndConfig) -> Self {
+        self.cfg.frontend = frontend;
+        self
+    }
+
+    /// Validate and return the configuration.
+    pub fn build(self) -> Result<ClusterConfig, String> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        for (i, n) in cfg.nodes.iter().enumerate() {
+            if n.workers == 0 {
+                return Err(format!("node {i} needs >= 1 worker"));
+            }
+            if !n.net.rtt_ms.is_finite() || n.net.rtt_ms < 0.0 {
+                return Err(format!(
+                    "node {i} needs a non-negative finite RTT"
+                ));
+            }
+        }
+        // The cluster tier owns request-id window assignment: every
+        // (node, incarnation) claims `(n+1) * NODE_ID_STRIDE + inc *
+        // INCARNATION_ID_STRIDE`, so a nonzero template base would
+        // collide with some node's window.
+        if cfg.serve.request_id_base != 0 {
+            return Err(
+                "cluster serve template must keep request_id_base 0 — \
+                 nodes assign their own disjoint id windows"
+                    .into(),
+            );
+        }
+        // Same divisibility rule ServeConfigBuilder enforces for custom
+        // bases, applied unconditionally here because cluster ids are
+        // always windowed.
+        let sample = cfg.serve.telemetry.trace_sample;
+        if sample > 0 && INCARNATION_ID_STRIDE % sample != 0 {
+            return Err(format!(
+                "--trace-sample {sample} does not divide the id-window \
+                 stride 2^32 (use a power of two) — per-node trace \
+                 density would skew"
+            ));
+        }
+        Ok(cfg)
     }
 }
 
@@ -377,7 +468,7 @@ pub fn run_cluster(cfg: &ClusterConfig, load: &LoadGenConfig)
     let horizon_ms = load.seconds * 1e3;
     match (load.mode, cfg.serve.clock) {
         (LoadMode::Open, ClockKind::Virtual) => {
-            Ok(run_virtual_open(cfg, load, horizon_ms))
+            Ok(fabric::run_virtual_open(cfg, load, horizon_ms))
         }
         (LoadMode::Open, ClockKind::Wall) => {
             Ok(run_wall_open(cfg, load, horizon_ms))
@@ -985,246 +1076,6 @@ fn finish_wall(cfg: &ClusterConfig, nodes: Vec<EdgeNode>,
     }
 }
 
-// ---------------------------------------------------------------------
-// Virtual-clock (deterministic) driver
-// ---------------------------------------------------------------------
-
-/// Open loop on the virtual clock: route the pre-generated trace with a
-/// deterministic per-node backlog model, then serve each node's shard as
-/// its own discrete-event simulation. Same seed (and shard count) ⇒
-/// identical report.
-///
-/// The backlog model is a leaky bucket per node: dispatching a request
-/// adds its estimated per-request work (the platform's isolated latency
-/// at the reference batch, amortized over the batch), and the bucket
-/// drains at one ms of work per worker per millisecond of trace time —
-/// so a Nano node fills ~12× faster than a Xavier NX node and the
-/// gauge-driven policies see the heterogeneity without live feedback.
-///
-/// Gossip is modeled exactly: routers never read the live buckets, only
-/// a *published* copy refreshed at gossip-epoch boundaries
-/// (`⌊t/gossip_ms⌋`), so every decision routes on a view up to one
-/// gossip period stale — including the node-active flag. A stale pick of
-/// a node whose drain window has opened is counted as a misroute and
-/// re-routed, mirroring the live arm. The cache models the leader's fill
-/// at its dispatch estimate (RTT + backlog/drain + isolated latency):
-/// identical requests inside that span coalesce, later ones hit until
-/// TTL expiry.
-fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
-                    horizon_ms: f64) -> ClusterReport {
-    let n = cfg.nodes.len();
-    let k = cfg.frontend.router_shards;
-    let gossip_ms = cfg.frontend.gossip_ms;
-    let trace = load.generator().generate_horizon(horizon_ms);
-    let attempts = trace.len() as u64;
-    let mut routers: Vec<Router> = (0..k)
-        .map(|s| Router::with_stream(cfg.policy, load.seed ^ 0xC1_05_7E,
-                                     s as u64))
-        .collect();
-    let mut link_rngs: Vec<Pcg32> = (0..k)
-        .map(|s| Pcg32::new(load.seed ^ 0x11_4E, s as u64))
-        .collect();
-    let mut vcache = cfg.frontend.cache.map(VirtualCache::new);
-    let ref_batch = cfg.ref_batch();
-    let sims: Vec<PlatformSim> = cfg
-        .nodes
-        .iter()
-        .map(|s| PlatformSim::new(s.platform.clone()))
-        .collect();
-    // Match the serving pool's own clamp ([`ServeConfig`] runs at most
-    // N_MODELS workers), so the routing model never credits a node with
-    // more drain rate than its simulation will actually have.
-    let drain_rate: Vec<f64> = cfg
-        .nodes
-        .iter()
-        .map(|s| s.workers.clamp(1, N_MODELS) as f64)
-        .collect();
-    let offline_at = |t: f64| -> Option<usize> {
-        cfg.drain
-            .filter(|d| t >= d.at_ms && t < d.rejoin_at_ms)
-            .map(|d| d.node)
-    };
-    // Truth state (decayed to each arrival) vs published state (frozen
-    // at the last gossip epoch boundary — what the routers see).
-    let mut est_backlog = vec![0.0f64; n];
-    let mut last_ms = vec![0.0f64; n];
-    let mut pub_backlog = vec![0.0f64; n];
-    let mut pub_active = vec![true; n];
-    let mut pub_ms = 0.0f64;
-    let mut last_epoch: Option<u64> = None;
-    let mut shards: Vec<Vec<Request>> = (0..n).map(|_| Vec::new()).collect();
-    let mut router_metrics = Metrics::new();
-    let mut misroutes = 0u64;
-    let mut staleness = StalenessStat::default();
-    let mut views: Vec<NodeView> = Vec::with_capacity(n);
-    // Front-end-terminal trace records (cache dispositions, edge sheds),
-    // sampled by trace index exactly like the wall arm's shards.
-    let trace_sample = cfg.serve.telemetry.trace_sample;
-    let mut fe_ring = TraceRing::new(TRACE_RING_CAP);
-    fn record_fe(ring: &mut TraceRing, sample: u64, idx: u64, shard: usize,
-                 r: &Request, verdict: TraceVerdict) {
-        if sample == 0 || idx % sample != 0 {
-            return;
-        }
-        let mut tr = RequestTrace::stub(idx, r.model, verdict);
-        tr.shard = shard as u32;
-        tr.arrival_ms = r.arrival_ms;
-        tr.slo_ms = r.slo_ms;
-        tr.net_ms = r.transmission_ms;
-        ring.push(tr);
-    }
-    for (idx, r) in trace.iter().enumerate() {
-        let t = r.arrival_ms;
-        // Gossip tick: republish at each new epoch boundary.
-        let epoch = (t / gossip_ms).floor() as u64;
-        if last_epoch != Some(epoch) {
-            let t_pub = epoch as f64 * gossip_ms;
-            for i in 0..n {
-                est_backlog[i] = (est_backlog[i]
-                    - (t_pub - last_ms[i]) * drain_rate[i])
-                    .max(0.0);
-                last_ms[i] = t_pub;
-                pub_backlog[i] = est_backlog[i];
-                pub_active[i] = offline_at(t_pub) != Some(i);
-            }
-            pub_ms = t_pub;
-            last_epoch = Some(epoch);
-        }
-        // Decay the truth buckets to the arrival instant.
-        for i in 0..n {
-            est_backlog[i] = (est_backlog[i]
-                - (t - last_ms[i]) * drain_rate[i])
-                .max(0.0);
-            last_ms[i] = t;
-        }
-        // Cache front: hits and coalesces never reach a router.
-        let mut lead_digest = None;
-        if let Some(c) = vcache.as_mut() {
-            let digest = digest_for(load.seed, idx as u64,
-                                    load.repeat_fraction);
-            match c.lookup(r.model, digest, t) {
-                CacheLookup::Hit => {
-                    record_fe(&mut fe_ring, trace_sample, idx as u64,
-                              idx % k, r, TraceVerdict::CacheHit);
-                    continue;
-                }
-                CacheLookup::Coalesced => {
-                    record_fe(&mut fe_ring, trace_sample, idx as u64,
-                              idx % k, r, TraceVerdict::CacheCoalesced);
-                    continue;
-                }
-                CacheLookup::Lead => lead_digest = Some(digest),
-            }
-        }
-        staleness.record(t - pub_ms);
-        let offline_now = offline_at(t);
-        let shard = idx % k;
-        views.clear();
-        views.extend((0..n).map(|i| NodeView {
-            active: pub_active[i],
-            rtt_ms: cfg.nodes[i].net.rtt_ms,
-            backlog_ms: pub_backlog[i],
-            service_est_ms: pub_backlog[i] / drain_rate[i]
-                + sims[i].latency.isolated_ms(r.model, ref_batch),
-        }));
-        loop {
-            match routers[shard].route(&views, r.slo_ms - r.transmission_ms)
-            {
-                Ok(i) if offline_now == Some(i) => {
-                    // The published view lags the drain event: a real
-                    // node would refuse this dispatch. Count the
-                    // misroute and re-route on the corrected set.
-                    misroutes += 1;
-                    views[i].active = false;
-                }
-                Ok(i) => {
-                    let mut routed = r.clone();
-                    routed.transmission_ms +=
-                        cfg.nodes[i].net.delay_ms(&mut link_rngs[shard]);
-                    let service_est = est_backlog[i] / drain_rate[i]
-                        + sims[i].latency.isolated_ms(r.model, ref_batch);
-                    est_backlog[i] += sims[i]
-                        .latency
-                        .isolated_ms(r.model, ref_batch)
-                        / ref_batch as f64;
-                    shards[i].push(routed);
-                    if let (Some(c), Some(digest)) =
-                        (vcache.as_mut(), lead_digest)
-                    {
-                        c.fill(r.model, digest,
-                               t + cfg.nodes[i].net.rtt_ms + service_est);
-                    }
-                    break;
-                }
-                Err(reason) => {
-                    // A shed leader leaves no cache entry: the next
-                    // identical request leads afresh.
-                    router_metrics.record_shed(r.model, reason);
-                    record_fe(&mut fe_ring, trace_sample, idx as u64, shard,
-                              r, TraceVerdict::Shed(reason));
-                    break;
-                }
-            }
-        }
-    }
-    // Serve the shards sequentially: each node is its own deterministic
-    // simulation, and a fixed merge order keeps the report bit-stable.
-    let mut metrics = router_metrics;
-    let mut telemetry = TraceReport {
-        traces: fe_ring.drain(),
-        dropped: fe_ring.dropped(),
-        ..Default::default()
-    };
-    let mut leftover = 0usize;
-    let mut slots = 0u64;
-    let mut per_node = Vec::with_capacity(n);
-    for (i, shard) in shards.into_iter().enumerate() {
-        let mut node_cfg = ServeConfig {
-            platform: cfg.nodes[i].platform.clone(),
-            workers: cfg.nodes[i].workers,
-            clock: ClockKind::Virtual,
-            ..cfg.serve.clone()
-        };
-        node_cfg.telemetry.node_label = i as u32;
-        let dispatched = shard.len() as u64;
-        let report = run_trace(&node_cfg, shard, horizon_ms);
-        merge_node(&mut metrics, &mut leftover, &mut slots, &mut per_node,
-                   &mut telemetry,
-                   FinishedNode {
-                       spec: cfg.nodes[i].clone(),
-                       dispatched,
-                       segments: vec![report],
-                   });
-    }
-    let (drains, rejoins) = match cfg.drain {
-        Some(d) if d.at_ms < horizon_ms => {
-            (1, u32::from(d.rejoin_at_ms < horizon_ms))
-        }
-        _ => (0, 0),
-    };
-    ClusterReport {
-        metrics,
-        horizon_ms,
-        attempts,
-        leftover,
-        slots,
-        drains,
-        rejoins,
-        policy: cfg.policy,
-        frontend: FrontEndReport {
-            shards: k,
-            gossip_ms,
-            decisions: staleness.decisions,
-            misroutes,
-            staleness_mean_ms: staleness.mean_ms(),
-            staleness_max_ms: staleness.max_ms,
-            cache: vcache.map(|c| c.stats),
-        },
-        per_node,
-        telemetry,
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1275,6 +1126,63 @@ mod tests {
                    report.attempts);
     }
 
+    /// The builder accepts the defaults and rejects empty clusters,
+    /// malformed drain windows, degenerate front-end knobs, template
+    /// configs that fight the id-window grid, and sampling rates that
+    /// skew per-node trace density.
+    #[test]
+    fn cluster_builder_validates() {
+        assert!(ClusterConfig::builder().build().is_ok());
+        assert!(ClusterConfig::builder().nodes(vec![]).build().is_err());
+        assert!(ClusterConfig::builder()
+            .drain(Some(DrainScenario {
+                node: 9,
+                at_ms: 1.0,
+                rejoin_at_ms: 2.0,
+            }))
+            .build()
+            .is_err());
+        assert!(ClusterConfig::builder()
+            .drain(Some(DrainScenario {
+                node: 0,
+                at_ms: 5.0,
+                rejoin_at_ms: 5.0,
+            }))
+            .build()
+            .is_err());
+        assert!(ClusterConfig::builder()
+            .frontend(FrontEndConfig {
+                router_shards: 0,
+                ..Default::default()
+            })
+            .build()
+            .is_err());
+        assert!(ClusterConfig::builder()
+            .frontend(FrontEndConfig {
+                gossip_ms: 0.0,
+                ..Default::default()
+            })
+            .build()
+            .is_err());
+        // Nodes assign their own id windows; a nonzero template base
+        // would collide with one of them.
+        assert!(ClusterConfig::builder()
+            .serve(ServeConfig {
+                request_id_base: INCARNATION_ID_STRIDE,
+                ..Default::default()
+            })
+            .build()
+            .is_err());
+        // Cluster ids are always windowed: 1/N sampling must divide the
+        // stride even though the template base is 0.
+        let mut sampled = ServeConfig::default();
+        sampled.telemetry.trace_sample = 100;
+        assert!(ClusterConfig::builder().serve(sampled).build().is_err());
+        let mut pow2 = ServeConfig::default();
+        pow2.telemetry.trace_sample = 64;
+        assert!(ClusterConfig::builder().serve(pow2).build().is_ok());
+    }
+
     /// Satellite acceptance: virtual-clock cluster runs are conserved and
     /// bit-deterministic from the seed — identical outcomes, slots, and
     /// per-node dispatch counts across two runs — with unique outcome ids
@@ -1311,7 +1219,8 @@ mod tests {
         assert_eq!(a.drains, 1);
         assert_eq!(a.rejoins, 1);
         // The fast node carries the bulk under join-shortest-backlog
-        // (its leaky bucket drains ~9× faster than the Nano's fills).
+        // (its gossiped backlog gauge drains ~9× faster than the Nano's
+        // fills).
         assert!(a.per_node[0].dispatched > a.per_node[2].dispatched,
                 "routing ignored the heterogeneity: {:?}", dispatched(&a));
         assert!(a.metrics.completed() > 0);

@@ -82,11 +82,10 @@ fn decode_state(v: u8) -> NodeState {
     }
 }
 
-/// Width of each (node, incarnation) request-id window: bits 40.. encode
-/// the node, bits 32..40 the incarnation, leaving 2^32 ids per serving
-/// segment.
-const NODE_ID_STRIDE: u64 = 1 << 40;
-const INCARNATION_ID_STRIDE: u64 = 1 << 32;
+// Id-window strides (bits 40.. encode the node, bits 32..40 the
+// incarnation) live next to `ServeConfig::request_id_base`, whose
+// builder validates custom bases against the same grid.
+use crate::serve::{INCARNATION_ID_STRIDE, NODE_ID_STRIDE};
 
 /// One live (or drained) cluster node.
 pub struct EdgeNode {

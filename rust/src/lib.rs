@@ -36,6 +36,11 @@
 //!   id-keyed sampling into bounded rings, JSON-lines out) and streaming
 //!   telemetry (mergeable log-bucket latency/slack histograms, live
 //!   counter snapshots) behind a zero-cost-when-off `TelemetryConfig`;
+//! * [`sim`] — the virtual-time fabric: one discrete-event heap of
+//!   timestamped logical-process events with deterministic tie-breaking
+//!   `(time, pid, seq)`, driving the serve and cluster virtual arms so
+//!   the full dynamic stack (migration, replication, gauge-driven
+//!   routing, drain/rejoin) replays bit-identically from a seed;
 //! * [`nn`], [`util`] — from-scratch substrates (tensor/MLP/Adam, RNG,
 //!   JSON, CLI, stats, clocks, thread pool, property testing): the offline
 //!   build environment provides no third-party crates beyond `xla`.
@@ -55,6 +60,7 @@ pub mod predictor;
 pub mod profiler;
 pub mod metrics;
 pub mod telemetry;
+pub mod sim;
 pub mod serve;
 pub mod cluster;
 

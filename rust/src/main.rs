@@ -303,24 +303,24 @@ fn serve_config_of(args: &Args, clock: bcedge::serve::ClockKind,
             ..Default::default()
         })
     };
-    Ok(ServeConfig {
-        workers: args.get_parse("workers", 4).map_err(anyhow::Error::msg)?,
-        clock,
-        platform: platform_of(args)?,
-        scheduler,
-        admission: if args.flag("no-admission") {
+    ServeConfig::builder()
+        .workers(args.get_parse("workers", 4).map_err(anyhow::Error::msg)?)
+        .clock(clock)
+        .platform(platform_of(args)?)
+        .scheduler(scheduler)
+        .admission(if args.flag("no-admission") {
             None
         } else {
             Some(bcedge::serve::AdmissionConfig::default())
-        },
-        queue_capacity: args
-            .get_parse("queue-cap", 256)
-            .map_err(anyhow::Error::msg)?,
-        rebalance,
-        cluster_hints: !args.flag("no-gauge-hints"),
-        telemetry: telemetry_of(args)?,
-        ..Default::default()
-    })
+        })
+        .queue_capacity(
+            args.get_parse("queue-cap", 256).map_err(anyhow::Error::msg)?,
+        )
+        .rebalance(rebalance)
+        .cluster_hints(!args.flag("no-gauge-hints"))
+        .telemetry(telemetry_of(args)?)
+        .build()
+        .map_err(anyhow::Error::msg)
 }
 
 /// Shared load-generation knobs (rate, horizon, envelope, client model,
@@ -344,29 +344,26 @@ fn loadgen_of(args: &Args, rps_default: f64, seconds_default: f64)
         "diurnal" => RateEnvelope::diurnal(),
         other => anyhow::bail!("unknown envelope {other}"),
     };
-    let slo_scale: f64 =
-        args.get_parse("slo-scale", 1.0).map_err(anyhow::Error::msg)?;
-    if !slo_scale.is_finite() || slo_scale <= 0.0 {
-        anyhow::bail!("--slo-scale must be a positive finite number");
-    }
-    let repeat_fraction: f64 = args
-        .get_parse("repeat-fraction", 0.0)
-        .map_err(anyhow::Error::msg)?;
-    if !repeat_fraction.is_finite() || !(0.0..=1.0).contains(&repeat_fraction)
-    {
-        anyhow::bail!("--repeat-fraction must be in [0, 1]");
-    }
-    Ok(LoadGenConfig {
-        rps: args.get_parse("rps", rps_default).map_err(anyhow::Error::msg)?,
-        seconds: args
-            .get_parse("seconds", seconds_default)
-            .map_err(anyhow::Error::msg)?,
-        seed: args.get_parse("seed", 7u64).map_err(anyhow::Error::msg)?,
-        envelope,
-        mode,
-        slo_scale,
-        repeat_fraction,
-    })
+    LoadGenConfig::builder()
+        .rps(args
+            .get_parse("rps", rps_default)
+            .map_err(anyhow::Error::msg)?)
+        .seconds(
+            args.get_parse("seconds", seconds_default)
+                .map_err(anyhow::Error::msg)?,
+        )
+        .seed(args.get_parse("seed", 7u64).map_err(anyhow::Error::msg)?)
+        .envelope(envelope)
+        .mode(mode)
+        .slo_scale(
+            args.get_parse("slo-scale", 1.0).map_err(anyhow::Error::msg)?,
+        )
+        .repeat_fraction(
+            args.get_parse("repeat-fraction", 0.0)
+                .map_err(anyhow::Error::msg)?,
+        )
+        .build()
+        .map_err(anyhow::Error::msg)
 }
 
 /// Drive the concurrent serving runtime with the built-in load generator.
@@ -520,8 +517,14 @@ fn bench_cluster(args: &Args) -> anyhow::Result<()> {
     // Per-node template: the node specs override platform/workers, so
     // --workers and --platform are ignored here in favour of --nodes.
     let serve_cfg = serve_config_of(args, clock, seed)?;
-    let cfg = ClusterConfig { nodes, policy, serve: serve_cfg, drain,
-                              frontend };
+    let cfg = ClusterConfig::builder()
+        .nodes(nodes)
+        .policy(policy)
+        .serve(serve_cfg)
+        .drain(drain)
+        .frontend(frontend)
+        .build()
+        .map_err(anyhow::Error::msg)?;
     println!(
         "bcedge bench-cluster — {} nodes, {} routing, {:?} clock, \
          {:?} mode, {} rps × {}s, slo×{}, {} router shard(s), \

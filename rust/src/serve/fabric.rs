@@ -1,0 +1,540 @@
+//! Fabric-backed virtual arm of the serving runtime: the worker pool,
+//! the rebalance controller's epochs, and the arrival stream as logical
+//! processes on one [`EventHeap`] (see [`crate::sim`]).
+//!
+//! The wall arm keeps real threads; this arm replaces them with a
+//! deterministic discrete-event loop, which is what lets trace mode run
+//! the FULL dynamic stack — migration, hot-model replication,
+//! urgency-aware replica routing on live [`SharedGauges`] — and still
+//! replay bit-identically from a seed.
+//!
+//! Process-id map (ties at one timestamp fire in pid order):
+//!
+//! | pid     | process                                              |
+//! |---------|------------------------------------------------------|
+//! | `0`     | arrival delivery (the trace, one event at a time)    |
+//! | `1`     | rebalance controller epoch tick                      |
+//! | `2 + w` | worker `w` activation (one engine scheduling round)  |
+//!
+//! Delivery before worker activation at the same instant mirrors the
+//! bare engine, whose per-round `ingest()` pulls every arrival at or
+//! before "now" *before* scheduling the round.
+//!
+//! Three invariants carry the whole design:
+//!
+//! * **Engines self-advance; the fabric only picks activation order.**
+//!   A worker's engine still drives its own [`VirtualClock`] through
+//!   `wait_until`/dispatch exactly as the bare engine does — the fabric
+//!   never writes a worker clock. With one worker this makes the arm
+//!   literally the bare engine's step sequence (the seed-equivalence
+//!   test in [`super::server`] pins it).
+//! * **At most one scheduled activation per worker.** A worker is
+//!   either `idle` (no activation in the heap; the next delivery or
+//!   handoff to it schedules one) or has exactly one pending activation
+//!   (scheduled at its previous round's local end time). `done` workers
+//!   (local clock past the horizon — the same check `Engine::run` makes
+//!   between rounds) are never activated again; late deliveries pile up
+//!   as leftover, exactly like un-ingested pending in a bare run.
+//! * **Handoffs are atomic at the epoch.** Where live workers flush
+//!   into [`ModelIntake`](super::ingress::ModelIntake) slots and owners
+//!   drain them over subsequent passes, the fabric resolves the same
+//!   transfer eagerly inside the rebalance tick: ex-members flush
+//!   everything, survivors of a widened set shed their above-fair-share
+//!   surplus, and the flushed backlog lands on the least-loaded members
+//!   (ties to the lowest worker index). Requests only ever move, so the
+//!   conservation identity (outcomes + sheds + leftover == attempts)
+//!   holds through every rewrite.
+
+use super::admission::AdmissionGate;
+use super::ingress::{pick_replica, GaugeSnapshot, OwnershipTable,
+                     SharedGauges, URGENT_SLACK_BATCHES};
+use super::server::{merge_results, RebalanceStats, Rebalancer, ServeConfig,
+                    ServeReport};
+use super::worker::WorkerResult;
+use crate::coordinator::{Engine, Scheduler, SlotOutcome};
+use crate::metrics::RequestOutcome;
+use crate::runtime::executor::SimDispatcher;
+use crate::sim::EventHeap;
+use crate::util::time::{ClockSource, VirtualClock};
+use crate::workload::models::{ModelId, N_MODELS};
+use crate::workload::request::Request;
+use std::sync::Arc;
+
+/// Arrival-delivery process id.
+pub(crate) const PID_DELIVER: u32 = 0;
+/// Rebalance-controller process id.
+pub(crate) const PID_REBALANCE: u32 = 1;
+
+/// Worker `w`'s process id.
+pub(crate) fn pid_of_worker(w: usize) -> u32 {
+    2 + w as u32
+}
+
+/// Event payloads of the serve tier's fabric.
+enum Ev {
+    /// Deliver the next trace request (the arrival stream keeps exactly
+    /// one Deliver in the heap — its own timestamp order is the trace
+    /// order, so one at a time is enough and keeps the heap tiny).
+    Deliver(Request),
+    /// Rebalance epoch `k` (ticks at `k × epoch_ms` for `k ≥ 1`).
+    Rebalance { k: u64 },
+    /// Run one scheduling round on worker `w`.
+    Activate(usize),
+}
+
+/// One worker as a logical process: its engine (self-advancing its own
+/// clock), its scheduler, and the two fabric flags.
+struct WorkerProc {
+    engine: Engine<SimDispatcher>,
+    scheduler: Box<dyn Scheduler>,
+    clock: VirtualClock,
+    /// Reusable slot-outcome buffer for `step_into` (cleared per round).
+    outcomes: Vec<SlotOutcome>,
+    /// High-water mark into `engine.metrics.outcomes()` for
+    /// [`ServeFabric::for_new_outcomes`] (the cluster tier's completion
+    /// stream; unused cursors cost nothing).
+    outcome_cursor: usize,
+    slots: u64,
+    /// No activation scheduled; the next delivery/handoff schedules one.
+    idle: bool,
+    /// Local clock reached the horizon; never activate again.
+    done: bool,
+}
+
+/// The serve tier's virtual arm as a set of logical processes. Owns the
+/// same control-plane pieces `Server::start` wires between threads —
+/// [`SharedGauges`], [`OwnershipTable`], the [`Rebalancer`] — but drives
+/// them from fabric events instead of a controller thread.
+///
+/// Also the per-node building block of the cluster fabric: the cluster
+/// driver embeds one `ServeFabric` per node, delivers routed requests
+/// into it, and reads its gauges for gossip snapshots.
+pub(crate) struct ServeFabric {
+    procs: Vec<WorkerProc>,
+    gauges: Arc<SharedGauges>,
+    ownership: Arc<OwnershipTable>,
+    rebalancer: Option<Rebalancer>,
+    stats: Arc<RebalanceStats>,
+    /// Replica mask per model as of the last applied handoff — diffed
+    /// against the table after each tick to detect migrations/scaling.
+    prev_mask: [u64; N_MODELS],
+    isolated_ref_ms: [f64; N_MODELS],
+    ref_batch: usize,
+    /// Cross-worker gauge hints into `SchedCtx` (multi-worker only, same
+    /// gate as the live pool — single-worker runs stay bit-identical to
+    /// the bare engine).
+    hints: bool,
+    horizon_ms: f64,
+    workers: usize,
+    /// Reusable handoff scratch (the fabric's stand-in for the live
+    /// `ModelIntake` slots).
+    handoff_buf: Vec<Request>,
+}
+
+impl ServeFabric {
+    pub(crate) fn new(cfg: &ServeConfig, horizon_ms: f64) -> Self {
+        let workers = cfg.worker_count();
+        let gauges = Arc::new(SharedGauges::new());
+        let ownership = Arc::new(OwnershipTable::new_static(workers));
+        let isolated_ref_ms = cfg.isolated_ref_table();
+        let ref_batch = cfg.ref_batch();
+        let stats = Arc::new(RebalanceStats::default());
+        let rebalancer = match cfg.rebalance {
+            Some(rcfg) if workers > 1 => Some(Rebalancer::fabric_controller(
+                rcfg,
+                workers,
+                gauges.clone(),
+                ownership.clone(),
+                isolated_ref_ms,
+                ref_batch,
+                stats.clone(),
+            )),
+            _ => None,
+        };
+        let procs = (0..workers)
+            .map(|i| {
+                let clock = VirtualClock::new();
+                let mut engine =
+                    cfg.build_engine(i, ClockSource::Virtual(clock.clone()));
+                if let Some(adm) = cfg.admission {
+                    engine.set_ingress_gate(Some(Box::new(
+                        AdmissionGate::new(adm),
+                    )));
+                }
+                let scheduler = cfg.scheduler.build(&cfg.engine, i);
+                WorkerProc {
+                    engine,
+                    scheduler,
+                    clock,
+                    outcomes: Vec::new(),
+                    outcome_cursor: 0,
+                    slots: 0,
+                    idle: true,
+                    done: false,
+                }
+            })
+            .collect();
+        let prev_mask =
+            std::array::from_fn(|i| ownership.replica_mask(ModelId::from_index(i)));
+        ServeFabric {
+            procs,
+            gauges,
+            ownership,
+            rebalancer,
+            stats,
+            prev_mask,
+            isolated_ref_ms,
+            ref_batch,
+            hints: cfg.cluster_hints && workers > 1,
+            horizon_ms,
+            workers,
+            handoff_buf: Vec::new(),
+        }
+    }
+
+    pub(crate) fn has_rebalancer(&self) -> bool {
+        self.rebalancer.is_some()
+    }
+
+    pub(crate) fn worker_count(&self) -> usize {
+        self.workers
+    }
+
+    /// Export the pool-wide gauge state for cluster gossip, priced
+    /// exactly as the live `Ingress::gauge_snapshot` prices it — same
+    /// replica division, same profiled-batch-else-isolated fallback —
+    /// so edge-of-cluster routing reads the numbers a live node would
+    /// publish, not a side-channel estimate.
+    pub(crate) fn gauge_snapshot(&self) -> GaugeSnapshot {
+        let ref_batch = self.ref_batch.max(1);
+        let mut snap = GaugeSnapshot { ref_batch, ..Default::default() };
+        for m in ModelId::all() {
+            let i = m as usize;
+            let replicas = self.ownership.replica_count(m);
+            snap.queue_per_replica[i] = self.gauges.queue_len(m) / replicas;
+            let batch = self.gauges.batch_ms(m);
+            snap.est_batch_ms[i] = if batch.is_finite() && batch > 0.0 {
+                batch
+            } else {
+                self.isolated_ref_ms[i]
+            };
+            snap.backlog_ms[i] = self.gauges.backlog_ms(
+                m, self.isolated_ref_ms[i], ref_batch);
+            snap.total_backlog_ms += snap.backlog_ms[i];
+        }
+        snap
+    }
+
+    /// Route one arrival to a worker, exactly as the live
+    /// `Ingress::submit` picks its wake target: the id-affine member of
+    /// the replica set, except urgent requests (slack below
+    /// [`URGENT_SLACK_BATCHES`] estimated batch spans) which go to the
+    /// emptiest replica lane. Workers that received work while idle are
+    /// appended to `wake` for the driver to schedule.
+    pub(crate) fn deliver(&mut self, r: Request, wake: &mut Vec<usize>) {
+        let m = r.model;
+        let mask = self.ownership.replica_mask(m);
+        let batch = self.gauges.batch_ms(m);
+        let est = if batch.is_finite() && batch > 0.0 {
+            batch
+        } else {
+            self.isolated_ref_ms[m as usize]
+        };
+        let slack = r.slo_ms - r.transmission_ms;
+        let urgent = est > 0.0 && slack < URGENT_SLACK_BATCHES * est;
+        let target = if urgent && mask.count_ones() > 1 {
+            let mut lanes = vec![0usize; self.workers];
+            for (w, lane) in lanes.iter_mut().enumerate() {
+                if mask & (1u64 << w) != 0 {
+                    *lane = self.gauges.queue_len_for(m, w);
+                }
+            }
+            pick_replica(mask, &lanes, r.id, true)
+        } else {
+            pick_replica(mask, &[], r.id, false)
+        }
+        .min(self.workers - 1);
+        self.push_to(target, r, wake);
+    }
+
+    fn push_to(&mut self, w: usize, r: Request, wake: &mut Vec<usize>) {
+        let proc = &mut self.procs[w];
+        proc.engine.push_request(r);
+        if proc.idle && !proc.done {
+            proc.idle = false;
+            wake.push(w);
+        }
+    }
+
+    /// Run one scheduling round on worker `w`, mirroring one pass of
+    /// `LiveWorker::run`: replica shares in, `step_into`, gauges out,
+    /// cluster hints out. Returns the worker's local end-of-round time
+    /// (µs) to schedule its next activation at, or `None` when it went
+    /// idle or retired at the horizon.
+    pub(crate) fn activate(&mut self, w: usize) -> Option<u64> {
+        if self.procs[w].done {
+            self.procs[w].idle = true;
+            return None;
+        }
+        // Same between-rounds check as `Engine::run`, against the
+        // worker's LOCAL clock: a round whose wait crosses the horizon
+        // still runs (the bare engine serves it too); the worker retires
+        // on the next activation.
+        if self.procs[w].engine.now_ms() >= self.horizon_ms {
+            let proc = &mut self.procs[w];
+            proc.done = true;
+            proc.idle = true;
+            return None;
+        }
+        if self.hints {
+            self.update_replica_shares(w);
+        }
+        let proc = &mut self.procs[w];
+        let served = {
+            let WorkerProc { engine, scheduler, outcomes, .. } = proc;
+            engine.step_into(scheduler.as_mut(), outcomes)
+        };
+        let next = match served {
+            Some(n) => {
+                proc.slots += n as u64;
+                Some(proc.clock.now_us())
+            }
+            None => {
+                proc.idle = true;
+                None
+            }
+        };
+        self.publish_gauges(w);
+        if self.hints {
+            self.update_cluster_hints(w);
+        }
+        next
+    }
+
+    /// Publish worker `w`'s per-model gauges, exactly as
+    /// `LiveWorker::publish_gauges` does — minus the intake-slot handoff
+    /// term, which the fabric's eager handoffs make always-empty.
+    fn publish_gauges(&self, w: usize) {
+        let proc = &self.procs[w];
+        for m in ModelId::all() {
+            let queue = proc.engine.queue_len(m);
+            let involved = self.ownership.is_replica(m, w)
+                || proc.engine.holds_model(m);
+            let latency = if involved {
+                proc.engine.profiler.mean_latency_ms(m)
+            } else {
+                f64::NAN
+            };
+            self.gauges.publish(m, w, queue, latency);
+        }
+    }
+
+    fn update_replica_shares(&mut self, w: usize) {
+        if self.workers < 2 {
+            return;
+        }
+        for m in ModelId::all() {
+            let count = self.ownership.replica_count(m);
+            let share =
+                count.saturating_sub(1) as f64 / (self.workers - 1) as f64;
+            self.procs[w].engine.set_replica_share(m, share);
+        }
+    }
+
+    fn update_cluster_hints(&mut self, w: usize) {
+        let mut total = 0.0;
+        let mut local = 0.0;
+        for m in ModelId::all() {
+            let i = m as usize;
+            total += self.gauges.backlog_ms(m, self.isolated_ref_ms[i],
+                                            self.ref_batch);
+            local += self.gauges.backlog_ms_for(m, w, self.isolated_ref_ms[i],
+                                                self.ref_batch);
+        }
+        let share = if total > 0.0 { local / total } else { 0.0 };
+        self.procs[w].engine.set_cluster_hints(total, share);
+    }
+
+    /// One rebalance epoch: run the controller's tick against the live
+    /// gauges, then resolve whatever ownership rewrites it made as
+    /// atomic-at-the-epoch handoffs. No-op without a controller.
+    pub(crate) fn rebalance_tick(&mut self, wake: &mut Vec<usize>) {
+        let Some(rb) = self.rebalancer.as_mut() else { return };
+        rb.tick();
+        for m in ModelId::all() {
+            self.apply_handoffs(m, wake);
+        }
+    }
+
+    /// Diff `model`'s replica mask against the last applied one and move
+    /// the backlog accordingly. Requests only ever move between engines —
+    /// never dropped — so conservation holds through every rewrite.
+    fn apply_handoffs(&mut self, m: ModelId, wake: &mut Vec<usize>) {
+        let idx = m as usize;
+        let new_mask = self.ownership.replica_mask(m);
+        let old_mask = self.prev_mask[idx];
+        if new_mask == old_mask {
+            return;
+        }
+        self.prev_mask[idx] = new_mask;
+        let mut buf = std::mem::take(&mut self.handoff_buf);
+        // Ex-members (migration source, scale-down victim) flush
+        // everything they hold, queued and pending alike.
+        let mut removed = old_mask & !new_mask;
+        while removed != 0 {
+            let w = removed.trailing_zeros() as usize;
+            removed &= removed - 1;
+            if w < self.procs.len() {
+                self.procs[w].engine.drain_model_into(m, &mut buf);
+            }
+        }
+        let members: Vec<usize> = (0..self.procs.len())
+            .filter(|&w| new_mask & (1u64 << w) != 0)
+            .collect();
+        if members.is_empty() {
+            self.handoff_buf = buf;
+            return;
+        }
+        // A widened set rebalances immediately: surviving members shed
+        // their above-fair-share surplus for the new replica to pick up
+        // (the live pool's share_excess flush, resolved eagerly).
+        if (new_mask & !old_mask) != 0 && members.len() > 1 {
+            let total: usize = members
+                .iter()
+                .map(|&w| self.procs[w].engine.queue_len(m))
+                .sum::<usize>()
+                + buf.len();
+            let share = total / members.len();
+            for &w in &members {
+                if old_mask & (1u64 << w) != 0
+                    && self.procs[w].engine.queue_len(m) > share
+                {
+                    self.procs[w]
+                        .engine
+                        .drain_model_excess_into(m, share, &mut buf);
+                }
+            }
+        }
+        // The flushed backlog lands on the least-loaded members, ties to
+        // the lowest worker index (the fair-share pickup, eagerly).
+        if !buf.is_empty() {
+            let mut lanes: Vec<(usize, usize)> = members
+                .iter()
+                .map(|&w| (w, self.procs[w].engine.queue_len(m)))
+                .collect();
+            for r in buf.drain(..) {
+                let mut k = 0;
+                for j in 1..lanes.len() {
+                    if lanes[j].1 < lanes[k].1 {
+                        k = j;
+                    }
+                }
+                lanes[k].1 += 1;
+                let w = lanes[k].0;
+                self.push_to(w, r, wake);
+            }
+        }
+        self.handoff_buf = buf;
+    }
+
+    /// Stream every request outcome recorded since the last call (across
+    /// all workers, in worker order) — the cluster tier's completion
+    /// feed for its result cache.
+    pub(crate) fn for_new_outcomes(&mut self,
+                                   mut f: impl FnMut(&RequestOutcome)) {
+        for proc in &mut self.procs {
+            let outcomes = proc.engine.metrics.outcomes();
+            for o in &outcomes[proc.outcome_cursor..] {
+                f(o);
+            }
+            proc.outcome_cursor = outcomes.len();
+        }
+    }
+
+    /// Fold the workers into the run report, mirroring `run_trace`'s
+    /// merge plus (when a controller ran) the rebalance/replication
+    /// counters `Server::shutdown` records.
+    pub(crate) fn finish(self, horizon_ms: f64) -> ServeReport {
+        let workers = self.workers;
+        let had_rebalancer = self.rebalancer.is_some();
+        let results: Vec<WorkerResult> = self
+            .procs
+            .into_iter()
+            .map(|mut p| {
+                let telemetry = p.engine.take_telemetry();
+                WorkerResult {
+                    slots: p.slots,
+                    leftover: p.engine.total_queued(),
+                    metrics: std::mem::take(&mut p.engine.metrics),
+                    telemetry,
+                }
+            })
+            .collect();
+        let mut report = merge_results(results, horizon_ms, workers);
+        if had_rebalancer {
+            report.metrics.record_rebalance(
+                self.stats.epochs(),
+                self.ownership.migrations(),
+                self.stats.peak_imbalance_ms(),
+            );
+            report.metrics.record_replication(
+                self.ownership.scale_ups(),
+                self.ownership.scale_downs(),
+                self.ownership.peak_replicas() as u64,
+            );
+        }
+        report
+    }
+}
+
+/// The virtual arm of [`super::server::run_trace`]: serve a sorted
+/// arrival trace through the fabric. Deterministic — same config, trace,
+/// and horizon produce a bit-identical report.
+pub(crate) fn run_trace_fabric(cfg: &ServeConfig, requests: Vec<Request>,
+                               horizon_ms: f64) -> ServeReport {
+    let mut fabric = ServeFabric::new(cfg, horizon_ms);
+    let mut heap: EventHeap<Ev> = EventHeap::new();
+    let mut trace = requests.into_iter();
+    if let Some(first) = trace.next() {
+        heap.schedule_ms(first.arrival_ms, PID_DELIVER, Ev::Deliver(first));
+    }
+    let epoch_ms = cfg
+        .rebalance
+        .map(|r| r.epoch_ms.max(1))
+        .unwrap_or(u64::MAX);
+    if fabric.has_rebalancer() && (epoch_ms as f64) < horizon_ms {
+        heap.schedule_ms(epoch_ms as f64, PID_REBALANCE, Ev::Rebalance { k: 1 });
+    }
+    let mut wake: Vec<usize> = Vec::new();
+    while let Some(firing) = heap.pop() {
+        match firing.event {
+            Ev::Deliver(r) => {
+                fabric.deliver(r, &mut wake);
+                if let Some(next) = trace.next() {
+                    heap.schedule_ms(next.arrival_ms, PID_DELIVER,
+                                     Ev::Deliver(next));
+                }
+            }
+            Ev::Rebalance { k } => {
+                fabric.rebalance_tick(&mut wake);
+                let next = (k + 1).saturating_mul(epoch_ms);
+                if (next as f64) < horizon_ms {
+                    heap.schedule_ms(next as f64, PID_REBALANCE,
+                                     Ev::Rebalance { k: k + 1 });
+                }
+            }
+            Ev::Activate(w) => {
+                if let Some(at_us) = fabric.activate(w) {
+                    heap.schedule_us(at_us, pid_of_worker(w), Ev::Activate(w));
+                }
+            }
+        }
+        // Workers that received work while idle activate at this event's
+        // timestamp (delivery pid < worker pids, so a same-instant
+        // activation still sees every same-instant arrival first).
+        for w in wake.drain(..) {
+            heap.schedule_us(firing.time_us, pid_of_worker(w), Ev::Activate(w));
+        }
+    }
+    fabric.finish(horizon_ms)
+}

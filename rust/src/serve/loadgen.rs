@@ -66,11 +66,96 @@ impl Default for LoadGenConfig {
 }
 
 impl LoadGenConfig {
+    /// Start a validated-construction builder seeded with the defaults
+    /// ([`LoadGenConfigBuilder::build`] rejects non-positive rates and
+    /// horizons, out-of-range repeat fractions, and zero-concurrency
+    /// closed loops).
+    pub fn builder() -> LoadGenConfigBuilder {
+        LoadGenConfigBuilder { cfg: LoadGenConfig::default() }
+    }
+
     /// Build the config's arrival generator (shared by single-node and
     /// cluster drivers so the offered load cannot drift between them).
     pub fn generator(&self) -> ShapedGenerator {
         ShapedGenerator::new(self.rps, self.envelope, self.seed)
             .with_slo_scale(self.slo_scale)
+    }
+}
+
+/// Validated constructor for [`LoadGenConfig`]: chain setters, then
+/// [`build`](Self::build).
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenConfigBuilder {
+    cfg: LoadGenConfig,
+}
+
+impl LoadGenConfigBuilder {
+    /// Base offered rate, requests/second.
+    pub fn rps(mut self, rps: f64) -> Self {
+        self.cfg.rps = rps;
+        self
+    }
+
+    /// Serving horizon, seconds.
+    pub fn seconds(mut self, seconds: f64) -> Self {
+        self.cfg.seconds = seconds;
+        self
+    }
+
+    /// One seed pins the arrival trace, digests, schedulers, and router
+    /// streams.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Arrival-rate envelope (constant / bursty / diurnal).
+    pub fn envelope(mut self, envelope: RateEnvelope) -> Self {
+        self.cfg.envelope = envelope;
+        self
+    }
+
+    /// Client model (open or closed loop).
+    pub fn mode(mut self, mode: LoadMode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    /// Multiplier on every request's Table-IV SLO.
+    pub fn slo_scale(mut self, slo_scale: f64) -> Self {
+        self.cfg.slo_scale = slo_scale;
+        self
+    }
+
+    /// Fraction of requests drawing inputs from the popular pool.
+    pub fn repeat_fraction(mut self, fraction: f64) -> Self {
+        self.cfg.repeat_fraction = fraction;
+        self
+    }
+
+    /// Validate and return the configuration.
+    pub fn build(self) -> Result<LoadGenConfig, String> {
+        let cfg = self.cfg;
+        if !cfg.rps.is_finite() || cfg.rps <= 0.0 {
+            return Err("--rps must be a positive finite number".into());
+        }
+        if !cfg.seconds.is_finite() || cfg.seconds <= 0.0 {
+            return Err("--seconds must be a positive finite number".into());
+        }
+        if !cfg.slo_scale.is_finite() || cfg.slo_scale <= 0.0 {
+            return Err("--slo-scale must be a positive finite number".into());
+        }
+        if !cfg.repeat_fraction.is_finite()
+            || !(0.0..=1.0).contains(&cfg.repeat_fraction)
+        {
+            return Err("--repeat-fraction must be in [0, 1]".into());
+        }
+        if let LoadMode::Closed { concurrency } = cfg.mode {
+            if concurrency == 0 {
+                return Err("--concurrency must be >= 1".into());
+            }
+        }
+        Ok(cfg)
     }
 }
 
@@ -194,6 +279,31 @@ mod tests {
             admission: Some(AdmissionConfig::default()),
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn loadgen_builder_validates() {
+        assert!(LoadGenConfig::builder().build().is_ok());
+        assert!(LoadGenConfig::builder().rps(0.0).build().is_err());
+        assert!(LoadGenConfig::builder().seconds(-1.0).build().is_err());
+        assert!(LoadGenConfig::builder().slo_scale(0.0).build().is_err());
+        assert!(LoadGenConfig::builder()
+            .repeat_fraction(1.5)
+            .build()
+            .is_err());
+        assert!(LoadGenConfig::builder()
+            .mode(LoadMode::Closed { concurrency: 0 })
+            .build()
+            .is_err());
+        let cfg = LoadGenConfig::builder()
+            .rps(90.0)
+            .seconds(2.0)
+            .seed(11)
+            .repeat_fraction(0.5)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.seed, 11);
+        assert_eq!(cfg.rps, 90.0);
     }
 
     #[test]

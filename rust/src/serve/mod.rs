@@ -32,7 +32,13 @@
 //!   map → stop intake → flush queues → join workers → merged
 //!   [`crate::metrics::Metrics`]);
 //! * [`loadgen`] — open- and closed-loop load generation over constant /
-//!   MMPP-bursty / diurnal rate envelopes (`bcedge bench-serve`).
+//!   MMPP-bursty / diurnal rate envelopes (`bcedge bench-serve`);
+//! * `fabric` — the virtual arm of [`server::run_trace`] on the
+//!   discrete-event fabric ([`crate::sim`]): workers, arrivals, and
+//!   rebalance epochs as logical processes on one event heap, running
+//!   the SAME dynamic control plane as live serving (resharding,
+//!   replication, urgency-aware replica routing on live gauges)
+//!   bit-reproducibly from a seed.
 //!
 //! Observability rides along the same seams ([`crate::telemetry`]):
 //! each worker's engine optionally carries an
@@ -47,6 +53,7 @@
 //! `rust/ARCHITECTURE.md`.
 
 pub mod admission;
+pub(crate) mod fabric;
 pub mod ingress;
 pub mod loadgen;
 pub mod server;
@@ -55,7 +62,8 @@ pub mod worker;
 pub use admission::{AdmissionConfig, AdmissionGate};
 pub use ingress::{GaugeSnapshot, Ingress, ModelIntake, OwnershipTable,
                   SharedGauges};
-pub use loadgen::{LoadGenConfig, LoadMode};
+pub use loadgen::{LoadGenConfig, LoadGenConfigBuilder, LoadMode};
 pub use server::{ClockKind, RebalanceConfig, SchedulerSpec, ServeConfig,
-                 ServeReport, Server, run_trace};
+                 ServeConfigBuilder, ServeReport, Server, run_trace,
+                 INCARNATION_ID_STRIDE, NODE_ID_STRIDE};
 pub use worker::{CompletionEvent, ServeEvent};

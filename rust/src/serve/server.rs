@@ -2,18 +2,21 @@
 //! dynamic resharding + drain protocol, composed behind two entry points:
 //!
 //! * [`run_trace`] — serve a pre-generated arrival trace across the
-//!   worker pool (virtual or wall clock). With `workers == 1`, a virtual
-//!   clock, and no admission, this reproduces the single-threaded
+//!   worker pool. The virtual arm runs on the discrete-event fabric
+//!   ([`super::fabric`]) with the SAME dynamic control plane as live
+//!   serving — resharding, replication, urgency-aware replica routing
+//!   on live gauges — deterministically. With `workers == 1`, a virtual
+//!   clock, and no admission, it reproduces the single-threaded
 //!   [`Engine`] run bit-for-bit (enforced by the seed-equivalence test
 //!   below) — the serving layer adds concurrency without forking the
-//!   engine's semantics. Trace shards are static (resharding needs live
-//!   gauges).
+//!   engine's semantics.
 //! * [`Server::start`] / [`Server::shutdown`] — a live wall-clock server:
 //!   submit requests from any thread through the bounded ingress, workers
 //!   drain their shards in parallel, shutdown stops intake, flushes every
 //!   queue, joins the workers, and emits the final merged [`Metrics`].
 //!
-//! Live shards are DYNAMIC: a rebalance controller reads the
+//! Shards are DYNAMIC (live and virtual-trace alike): a rebalance
+//! controller reads the
 //! per-(model, worker) [`SharedGauges`] each epoch (queue depth ×
 //! rolling batch latency = estimated backlog-ms) and rewrites the
 //! [`OwnershipTable`] along both of the paper's control axes:
@@ -44,7 +47,7 @@ use crate::runtime::executor::SimDispatcher;
 use crate::telemetry::{self, EngineTracer, TelemetryConfig, TelemetryHub,
                        TraceReport};
 use crate::util::rng::Pcg32;
-use crate::util::time::{Clock, ClockSource, VirtualClock, WallClock};
+use crate::util::time::{Clock, ClockSource, WallClock};
 use crate::workload::models::{ModelId, N_MODELS};
 use crate::workload::request::Request;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -134,6 +137,19 @@ impl Default for RebalanceConfig {
     }
 }
 
+/// Width of each node's request-id window: ids `(n+1) * NODE_ID_STRIDE ..`
+/// belong to cluster node `n`. Bits 40.. encode the node, bits 32..40 the
+/// incarnation, leaving [`INCARNATION_ID_STRIDE`] ids per serving segment.
+/// Single-node serving keeps base `0` (below every node window).
+pub const NODE_ID_STRIDE: u64 = 1 << 40;
+
+/// Width of each (node, incarnation) request-id window: every serving
+/// segment stamps at most `2^32` ids, so a custom
+/// [`ServeConfig::request_id_base`] must sit on a multiple of this stride
+/// to stay disjoint from the cluster tier's windows (checked by
+/// [`ServeConfigBuilder::build`]).
+pub const INCARNATION_ID_STRIDE: u64 = 1 << 32;
+
 /// Serving-runtime configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -189,16 +205,26 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
-    fn worker_count(&self) -> usize {
+    /// Start a validated-construction builder seeded with the defaults.
+    /// Prefer this over struct-literal construction at API boundaries:
+    /// [`ServeConfigBuilder::build`] rejects configurations the runtime
+    /// would silently misbehave under (zero workers/capacity, id bases
+    /// off the cluster window grid, sampling rates that skew per-window
+    /// trace density, inverted replication hysteresis).
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
+    }
+
+    pub(crate) fn worker_count(&self) -> usize {
         self.workers.clamp(1, N_MODELS)
     }
 
     /// Worker index owning `model`.
-    fn owner(&self, model: ModelId) -> usize {
+    pub(crate) fn owner(&self, model: ModelId) -> usize {
         model as usize % self.worker_count()
     }
 
-    fn build_engine(&self, worker: usize, clock: ClockSource)
+    pub(crate) fn build_engine(&self, worker: usize, clock: ClockSource)
                     -> Engine<SimDispatcher> {
         let mut cfg = self.engine.clone();
         cfg.seed ^= worker as u64; // worker 0: unchanged (seed equivalence)
@@ -213,16 +239,150 @@ impl ServeConfig {
     }
 
     /// Reference batch pricing backlog estimates (shared with admission).
-    fn ref_batch(&self) -> usize {
+    pub(crate) fn ref_batch(&self) -> usize {
         self.admission.map(|a| a.ref_batch).unwrap_or(8).max(1)
     }
 
-    fn isolated_ref_table(&self) -> [f64; N_MODELS] {
+    pub(crate) fn isolated_ref_table(&self) -> [f64; N_MODELS] {
         let ref_batch = self.ref_batch();
         let sim = PlatformSim::new(self.platform.clone());
         std::array::from_fn(|i| {
             sim.latency.isolated_ms(ModelId::from_index(i), ref_batch)
         })
+    }
+}
+
+/// Validated constructor for [`ServeConfig`]: chain setters, then
+/// [`build`](Self::build). Every CLI entry point goes through this, so a
+/// bad flag combination fails with a message at startup instead of
+/// producing a quietly wrong run.
+#[derive(Clone, Debug)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    /// Worker threads in the pool.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    /// Clock arm (virtual = deterministic trace mode, wall = live).
+    pub fn clock(mut self, clock: ClockKind) -> Self {
+        self.cfg.clock = clock;
+        self
+    }
+
+    /// Table-V platform preset the workers simulate.
+    pub fn platform(mut self, platform: PlatformSpec) -> Self {
+        self.cfg.platform = platform;
+        self
+    }
+
+    /// Per-worker scheduler (SAC / DeepRT / fixed).
+    pub fn scheduler(mut self, scheduler: SchedulerSpec) -> Self {
+        self.cfg.scheduler = scheduler;
+        self
+    }
+
+    /// SLO-aware admission control; `None` queues every request.
+    pub fn admission(mut self, admission: Option<AdmissionConfig>) -> Self {
+        self.cfg.admission = admission;
+        self
+    }
+
+    /// Per-model ingress channel bound.
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.cfg.queue_capacity = capacity;
+        self
+    }
+
+    /// Dynamic resharding + replication controller; `None` pins the
+    /// static modulo shard map.
+    pub fn rebalance(mut self, rebalance: Option<RebalanceConfig>) -> Self {
+        self.cfg.rebalance = rebalance;
+        self
+    }
+
+    /// Feed cross-worker gauge summaries into the schedulers.
+    pub fn cluster_hints(mut self, on: bool) -> Self {
+        self.cfg.cluster_hints = on;
+        self
+    }
+
+    /// First request id the ingress assigns. Must sit on a multiple of
+    /// [`INCARNATION_ID_STRIDE`] (the cluster id-window grid).
+    pub fn request_id_base(mut self, base: u64) -> Self {
+        self.cfg.request_id_base = base;
+        self
+    }
+
+    /// Tracing + streaming-telemetry knobs.
+    pub fn telemetry(mut self, telemetry: TelemetryConfig) -> Self {
+        self.cfg.telemetry = telemetry;
+        self
+    }
+
+    /// Validate and return the configuration.
+    pub fn build(self) -> Result<ServeConfig, String> {
+        let cfg = self.cfg;
+        if cfg.workers == 0 {
+            return Err("--workers must be >= 1".into());
+        }
+        if cfg.queue_capacity == 0 {
+            return Err("--queue-cap must be >= 1".into());
+        }
+        if cfg.request_id_base % INCARNATION_ID_STRIDE != 0 {
+            return Err(format!(
+                "request_id_base {} is not a multiple of the id-window \
+                 stride 2^32 — it would overlap a cluster node's \
+                 (node, incarnation) window",
+                cfg.request_id_base
+            ));
+        }
+        // Id-keyed 1/N sampling is uniform across id windows only when N
+        // divides the window stride; otherwise each node/incarnation
+        // window starts at a different phase of `id % N` and trace
+        // density skews per node.
+        if cfg.request_id_base != 0
+            && cfg.telemetry.trace_sample > 0
+            && INCARNATION_ID_STRIDE % cfg.telemetry.trace_sample != 0
+        {
+            return Err(format!(
+                "--trace-sample {} does not divide the id-window stride \
+                 2^32 (use a power of two) — windowed ids would be \
+                 sampled at uneven per-node density",
+                cfg.telemetry.trace_sample
+            ));
+        }
+        if let Some(r) = &cfg.rebalance {
+            if r.epoch_ms == 0 {
+                return Err("--rebalance-epoch-ms must be >= 1".into());
+            }
+            if r.max_replicas == 0 {
+                return Err("--max-replicas must be >= 1".into());
+            }
+            if !r.ratio.is_finite() || r.ratio < 1.0 {
+                return Err("rebalance ratio must be finite and >= 1".into());
+            }
+            if !r.min_gap_ms.is_finite() || r.min_gap_ms < 0.0 {
+                return Err("rebalance min_gap_ms must be finite and >= 0"
+                    .into());
+            }
+            if !r.scale_up_backlog_ms.is_finite()
+                || !r.scale_down_backlog_ms.is_finite()
+                || r.scale_down_backlog_ms < 0.0
+                || r.scale_up_backlog_ms <= r.scale_down_backlog_ms
+            {
+                return Err(
+                    "replication thresholds need 0 <= scale_down < scale_up \
+                     (the band between them is the hysteresis)"
+                        .into(),
+                );
+            }
+        }
+        Ok(cfg)
     }
 }
 
@@ -421,13 +581,17 @@ fn backlog_spread_ms(totals: &[f64]) -> f64 {
 
 /// Controller-side counters surfaced in the final report's metrics.
 #[derive(Default)]
-struct RebalanceStats {
+pub(crate) struct RebalanceStats {
     epochs: AtomicU64,
     /// Worst max−min backlog spread seen, as f64 bits (monotone max).
     peak_imbalance_bits: AtomicU64,
 }
 
 impl RebalanceStats {
+    pub(crate) fn epochs(&self) -> u64 {
+        self.epochs.load(Ordering::Relaxed)
+    }
+
     fn observe_imbalance(&self, spread_ms: f64) {
         if !spread_ms.is_finite() {
             return;
@@ -446,15 +610,18 @@ impl RebalanceStats {
         }
     }
 
-    fn peak_imbalance_ms(&self) -> f64 {
+    pub(crate) fn peak_imbalance_ms(&self) -> f64 {
         f64::from_bits(self.peak_imbalance_bits.load(Ordering::Relaxed))
     }
 }
 
-/// The rebalance controller: one thread reading gauges each epoch and
-/// rewriting the ownership table (the only writer it has) — replica
-/// scaling first, whole-model migration when no set is widened.
-struct Rebalancer {
+/// The rebalance controller: reads gauges each epoch and rewrites the
+/// ownership table (the only writer it has) — replica scaling first,
+/// whole-model migration when no set is widened. The live pool runs it
+/// on its own thread ([`Rebalancer::run`]); the virtual fabric holds one
+/// and calls [`Rebalancer::tick`] at epoch events — same policy state,
+/// no thread.
+pub(crate) struct Rebalancer {
     cfg: RebalanceConfig,
     gauges: Arc<SharedGauges>,
     ownership: Arc<OwnershipTable>,
@@ -475,6 +642,36 @@ struct Rebalancer {
 }
 
 impl Rebalancer {
+    /// Controller for the fabric's virtual arm: identical policy state,
+    /// driven by fabric epoch events instead of a thread. The wake
+    /// events and stop flag exist only to satisfy the struct (ticks
+    /// notify them; nobody waits) — `worker_events.len()` doubles as
+    /// the pool size `tick` reads, exactly as in the live pool.
+    pub(crate) fn fabric_controller(
+        cfg: RebalanceConfig,
+        workers: usize,
+        gauges: Arc<SharedGauges>,
+        ownership: Arc<OwnershipTable>,
+        isolated_ref_ms: [f64; N_MODELS],
+        ref_batch: usize,
+        stats: Arc<RebalanceStats>,
+    ) -> Self {
+        Rebalancer {
+            cfg,
+            gauges,
+            ownership,
+            worker_events: (0..workers)
+                .map(|_| Arc::new(WakeEvent::new()))
+                .collect(),
+            isolated_ref_ms,
+            ref_batch,
+            stop: Arc::new(AtomicBool::new(false)),
+            wake: Arc::new(WakeEvent::new()),
+            stats,
+            migration_cooldown: [0; N_MODELS],
+        }
+    }
+
     fn run(mut self) {
         loop {
             self.wake
@@ -486,7 +683,7 @@ impl Rebalancer {
         }
     }
 
-    fn tick(&mut self) {
+    pub(crate) fn tick(&mut self) {
         let workers = self.worker_events.len().min(MAX_POOL);
         let mut backlog = [[0.0f64; MAX_POOL]; N_MODELS];
         let mut model_total = [0.0f64; N_MODELS];
@@ -671,8 +868,8 @@ impl ServeReport {
     }
 }
 
-fn merge_results(results: Vec<WorkerResult>, horizon_ms: f64,
-                 workers: usize) -> ServeReport {
+pub(crate) fn merge_results(results: Vec<WorkerResult>, horizon_ms: f64,
+                            workers: usize) -> ServeReport {
     let mut metrics = Metrics::new();
     let mut telemetry = TraceReport::default();
     let mut slots = 0;
@@ -689,14 +886,25 @@ fn merge_results(results: Vec<WorkerResult>, horizon_ms: f64,
 
 /// Serve a pre-generated trace across the worker pool and report.
 /// Requests must be sorted by arrival time (generator order).
+///
+/// The virtual arm runs on the discrete-event fabric
+/// ([`super::fabric`]): workers, arrivals, and rebalance epochs are
+/// logical processes on one event heap, so the FULL dynamic stack —
+/// migration, replication, urgency-aware replica routing on live gauges
+/// — runs in trace mode and replays bit-identically from a seed. The
+/// wall arm keeps real threads on static modulo shards (wall trace runs
+/// exist to pace real execution, not to exercise the control plane).
 pub fn run_trace(cfg: &ServeConfig, requests: Vec<Request>,
                  horizon_ms: f64) -> ServeReport {
+    if cfg.clock == ClockKind::Virtual {
+        return super::fabric::run_trace_fabric(cfg, requests, horizon_ms);
+    }
     let workers = cfg.worker_count();
     let mut shards: Vec<Vec<Request>> = (0..workers).map(|_| Vec::new()).collect();
     for r in requests {
         shards[cfg.owner(r.model)].push(r);
     }
-    let wall = WallClock::new(); // shared origin if the run is wall-clocked
+    let wall = WallClock::new(); // shared origin across the pool
     let results: Vec<WorkerResult> = std::thread::scope(|s| {
         let handles: Vec<_> = shards
             .into_iter()
@@ -704,12 +912,7 @@ pub fn run_trace(cfg: &ServeConfig, requests: Vec<Request>,
             .map(|(i, shard)| {
                 let wall = wall.clone();
                 s.spawn(move || {
-                    let clock = match cfg.clock {
-                        ClockKind::Virtual => {
-                            ClockSource::Virtual(VirtualClock::new())
-                        }
-                        ClockKind::Wall => ClockSource::Wall(wall),
-                    };
+                    let clock = ClockSource::Wall(wall);
                     let mut engine = cfg.build_engine(i, clock);
                     if let Some(adm) = cfg.admission {
                         engine.set_ingress_gate(Some(Box::new(
@@ -1032,6 +1235,55 @@ mod tests {
             admission,
             ..Default::default()
         }
+    }
+
+    /// The builder accepts the defaults and rejects configurations off
+    /// the request-id window grid, sampling rates that skew per-window
+    /// trace density, and degenerate pool/controller knobs.
+    #[test]
+    fn serve_builder_validates() {
+        assert!(ServeConfig::builder().build().is_ok());
+        assert!(ServeConfig::builder().workers(0).build().is_err());
+        assert!(ServeConfig::builder().queue_capacity(0).build().is_err());
+
+        // Id base must sit on a multiple of the incarnation stride.
+        assert!(ServeConfig::builder().request_id_base(123).build().is_err());
+        assert!(ServeConfig::builder()
+            .request_id_base(3 * NODE_ID_STRIDE + 2 * INCARNATION_ID_STRIDE)
+            .build()
+            .is_ok());
+
+        // With windowed ids, 1/N sampling must divide the window stride.
+        let sampled = |n: u64| TelemetryConfig {
+            trace_sample: n,
+            ..Default::default()
+        };
+        assert!(ServeConfig::builder()
+            .request_id_base(NODE_ID_STRIDE)
+            .telemetry(sampled(100))
+            .build()
+            .is_err());
+        assert!(ServeConfig::builder()
+            .request_id_base(NODE_ID_STRIDE)
+            .telemetry(sampled(64))
+            .build()
+            .is_ok());
+        // Base 0 (single-node): any rate is fine, ids are contiguous.
+        assert!(ServeConfig::builder().telemetry(sampled(100)).build().is_ok());
+
+        // Replication hysteresis must not be inverted.
+        let bad = RebalanceConfig {
+            scale_up_backlog_ms: 10.0,
+            scale_down_backlog_ms: 50.0,
+            ..Default::default()
+        };
+        assert!(ServeConfig::builder().rebalance(Some(bad)).build().is_err());
+        let zero_epoch = RebalanceConfig { epoch_ms: 0, ..Default::default() };
+        assert!(ServeConfig::builder()
+            .rebalance(Some(zero_epoch))
+            .build()
+            .is_err());
+        assert!(ServeConfig::builder().rebalance(None).build().is_ok());
     }
 
     /// Acceptance criterion: with one worker, a virtual clock, and no

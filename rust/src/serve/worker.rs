@@ -9,9 +9,11 @@
 //!
 //! Two intake modes share the engine code path:
 //!
-//! * **trace** — the worker's whole arrival shard is known up front
-//!   (virtual-clock benches, seed-equivalence tests): submit + run. The
-//!   shard map is static here; resharding needs live gauges.
+//! * **trace** — the worker's whole arrival shard is known up front:
+//!   submit + run. Wall-clock trace runs use this per-thread path on
+//!   static modulo shards; virtual trace runs instead go through the
+//!   fabric (`super::fabric`), where deliveries arrive per-event and the
+//!   same dynamic resharding/replication below applies.
 //! * **live** — requests stream in over the per-model ingress channels
 //!   (wall clock): drain the channels of currently-assigned models,
 //!   serve a round, publish gauges, park when idle, exit once intake is

@@ -1,0 +1,325 @@
+//! The virtual-time fabric: one discrete-event scheduler for the whole
+//! distributed system.
+//!
+//! Before this module existed, every virtual-clock arm coordinated time
+//! its own way — the bare engine self-advanced a `VirtualClock`, each
+//! serve worker ran its trace shard to completion on a private clock,
+//! and the virtual cluster arm priced routing against a leaky-bucket
+//! backlog estimate because no live gauges existed at routing time. None
+//! of the dynamic machinery (migration, replication, gauge-driven
+//! routing) could run deterministically, because nothing interleaved the
+//! components in a defined order.
+//!
+//! The fabric fixes that with the classic discrete-event simulation
+//! contract:
+//!
+//! * **Logical processes.** Every active component — a worker, the
+//!   rebalancer's epoch ticker, a gossip publisher, the node lifecycle,
+//!   the arrival stream — is a logical process identified by a small
+//!   integer `pid`.
+//! * **One event heap.** All processes schedule timestamped events into
+//!   a single [`EventHeap`]. Timestamps are integer **microseconds**
+//!   (`ceil(ms × 1000)`, exactly the quantization
+//!   [`VirtualClock::advance_to_ms`] applies), so heap order and clock
+//!   readings can never disagree by a rounding epsilon.
+//! * **Deterministic tie-breaking.** Events fire in `(time_us, pid,
+//!   seq)` order — time first, then process id, then scheduling
+//!   sequence. Two events at the same instant always fire in the same
+//!   order on every run, which is what makes the full dynamic stack
+//!   bit-reproducible from a seed.
+//! * **The clock is a view.** A [`SimFabric`] owns a [`VirtualClock`]
+//!   that is advanced to each popped event's timestamp. Components read
+//!   it; only the fabric writes it. (Engine-local clocks still
+//!   self-advance *within* one activation — the fabric decides *when*
+//!   each activation happens, which preserves the bare engine's
+//!   bit-exact behavior for a single worker.)
+//!
+//! The serve tier ([`crate::serve`]) and the cluster tier
+//! ([`crate::cluster`]) both drive their virtual arms from this module;
+//! the wall arms keep real threads and real clocks. See
+//! `rust/ARCHITECTURE.md` § "Virtual-time fabric" for the
+//! process-id map of each tier.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::time::{Clock, VirtualClock};
+
+/// Convert a millisecond timestamp to the fabric's integer-microsecond
+/// timeline. Rounds UP, exactly like [`VirtualClock::advance_to_ms`]:
+/// after advancing to an event's time, `now_ms() >= t_ms` must hold or
+/// event loops would spin on an epsilon forever.
+#[inline]
+pub fn us_of_ms(t_ms: f64) -> u64 {
+    (t_ms * 1e3).ceil() as u64
+}
+
+/// One scheduled event: fire `event` for process `pid` at `time_us`.
+/// Ordering ignores the payload entirely — `(time_us, pid, seq)` is the
+/// whole contract, so payload types never need `Ord`.
+struct Entry<E> {
+    time_us: u64,
+    pid: u32,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_us == other.time_us
+            && self.pid == other.pid
+            && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse so the EARLIEST
+        // (time, pid, seq) triple is popped first.
+        (other.time_us, other.pid, other.seq)
+            .cmp(&(self.time_us, self.pid, self.seq))
+    }
+}
+
+/// A popped event, with its timestamp in both units.
+pub struct Firing<E> {
+    /// Fabric time of the event, integer microseconds.
+    pub time_us: u64,
+    /// The logical process the event belongs to.
+    pub pid: u32,
+    /// The event payload.
+    pub event: E,
+}
+
+impl<E> Firing<E> {
+    /// Event time in milliseconds (µs / 1000 — the same reading a
+    /// [`VirtualClock`] advanced to this event would report).
+    pub fn time_ms(&self) -> f64 {
+        self.time_us as f64 / 1e3
+    }
+}
+
+/// The single event heap at the heart of the fabric: a priority queue of
+/// timestamped logical-process events with deterministic tie-breaking.
+///
+/// `E` is the (per-tier) event payload enum. The heap itself knows
+/// nothing about workers or nodes — it only guarantees the ordering
+/// contract: events fire in ascending `(time_us, pid, seq)` order, where
+/// `seq` is the global scheduling sequence number (assigned at
+/// `schedule_*` time), so insertion order breaks any remaining tie.
+pub struct EventHeap<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> EventHeap<E> {
+    pub fn new() -> Self {
+        EventHeap { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `event` for process `pid` at `t_ms` (quantized to the
+    /// microsecond timeline via [`us_of_ms`]).
+    pub fn schedule_ms(&mut self, t_ms: f64, pid: u32, event: E) {
+        self.schedule_us(us_of_ms(t_ms), pid, event);
+    }
+
+    /// Schedule at an exact microsecond timestamp. Use this when the
+    /// timestamp came from a clock reading ([`VirtualClock::now_us`]) —
+    /// round-tripping through milliseconds could re-quantize it upward
+    /// and skew the timeline by a microsecond per hop.
+    pub fn schedule_us(&mut self, time_us: u64, pid: u32, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { time_us, pid, seq, event });
+    }
+
+    /// Pop the next event in `(time_us, pid, seq)` order.
+    pub fn pop(&mut self) -> Option<Firing<E>> {
+        self.heap.pop().map(|e| Firing {
+            time_us: e.time_us,
+            pid: e.pid,
+            event: e.event,
+        })
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time_us(&self) -> Option<u64> {
+        self.heap.peek().map(|e| e.time_us)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for EventHeap<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// An [`EventHeap`] plus the fabric clock: a [`VirtualClock`] advanced
+/// to each popped event's timestamp, making it a *view* of fabric
+/// progress rather than a counter any component bumps on its own.
+///
+/// Drivers loop `while let Some(firing) = fabric.pop()` and dispatch on
+/// the payload; everything that needs "now" (gauge publication stamps,
+/// staleness measurements, lifecycle checks) reads `fabric.clock()`.
+pub struct SimFabric<E> {
+    heap: EventHeap<E>,
+    clock: VirtualClock,
+}
+
+impl<E> SimFabric<E> {
+    pub fn new() -> Self {
+        SimFabric { heap: EventHeap::new(), clock: VirtualClock::new() }
+    }
+
+    /// The fabric clock. Read-only by convention: only [`SimFabric::pop`]
+    /// advances it.
+    pub fn clock(&self) -> &VirtualClock {
+        &self.clock
+    }
+
+    /// Current fabric time, ms.
+    pub fn now_ms(&self) -> f64 {
+        self.clock.now_ms()
+    }
+
+    pub fn schedule_ms(&mut self, t_ms: f64, pid: u32, event: E) {
+        self.heap.schedule_ms(t_ms, pid, event);
+    }
+
+    pub fn schedule_us(&mut self, time_us: u64, pid: u32, event: E) {
+        self.heap.schedule_us(time_us, pid, event);
+    }
+
+    /// Pop the next event and advance the fabric clock to its timestamp.
+    pub fn pop(&mut self) -> Option<Firing<E>> {
+        let firing = self.heap.pop()?;
+        self.clock.advance_to_us(firing.time_us);
+        Some(firing)
+    }
+
+    pub fn peek_time_us(&self) -> Option<u64> {
+        self.heap.peek_time_us()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<E> Default for SimFabric<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut h = EventHeap::new();
+        h.schedule_ms(5.0, 0, "late");
+        h.schedule_ms(1.0, 0, "early");
+        h.schedule_ms(3.0, 0, "mid");
+        let order: Vec<&str> = std::iter::from_fn(|| h.pop())
+            .map(|f| f.event)
+            .collect();
+        assert_eq!(order, ["early", "mid", "late"]);
+    }
+
+    #[test]
+    fn equal_times_break_on_pid_then_seq() {
+        let mut h = EventHeap::new();
+        // Same timestamp, different pids, scheduled out of pid order.
+        h.schedule_ms(2.0, 3, "w3");
+        h.schedule_ms(2.0, 0, "deliver");
+        h.schedule_ms(2.0, 1, "w1-a");
+        h.schedule_ms(2.0, 1, "w1-b"); // same pid: seq breaks the tie
+        let order: Vec<&str> = std::iter::from_fn(|| h.pop())
+            .map(|f| f.event)
+            .collect();
+        assert_eq!(order, ["deliver", "w1-a", "w1-b", "w3"]);
+    }
+
+    #[test]
+    fn microsecond_quantization_matches_virtual_clock() {
+        // schedule_ms must quantize exactly like advance_to_ms, or an
+        // engine advanced to an event's time could read an earlier µs
+        // than the heap thinks the event fired at.
+        let mut h = EventHeap::new();
+        let t = 123.456_789; // not µs-aligned
+        h.schedule_ms(t, 0, ());
+        let fired = h.pop().unwrap();
+        let clock = VirtualClock::new();
+        clock.advance_to_ms(t);
+        assert_eq!(fired.time_us, clock.now_us());
+        assert!(fired.time_ms() >= t);
+    }
+
+    #[test]
+    fn fabric_clock_tracks_popped_events() {
+        let mut f = SimFabric::new();
+        f.schedule_ms(10.0, 1, "a");
+        f.schedule_ms(4.0, 2, "b");
+        assert_eq!(f.now_ms(), 0.0);
+        let b = f.pop().unwrap();
+        assert_eq!(b.event, "b");
+        assert_eq!(f.now_ms(), 4.0);
+        let a = f.pop().unwrap();
+        assert_eq!(a.event, "a");
+        assert_eq!(f.now_ms(), 10.0);
+        assert!(f.pop().is_none());
+        // Draining never rewinds the view.
+        assert_eq!(f.now_ms(), 10.0);
+    }
+
+    #[test]
+    fn schedule_us_is_exact() {
+        let mut h = EventHeap::new();
+        h.schedule_us(1_000_001, 0, ());
+        assert_eq!(h.peek_time_us(), Some(1_000_001));
+        assert_eq!(h.pop().unwrap().time_us, 1_000_001);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn identical_schedules_replay_identically() {
+        // Two heaps fed the same schedule pop the same sequence — the
+        // determinism the cluster fabric's bit-identity tests lean on.
+        let feed = |h: &mut EventHeap<u32>| {
+            for i in 0..100u32 {
+                h.schedule_ms(((i * 7) % 13) as f64, i % 5, i);
+            }
+        };
+        let (mut a, mut b) = (EventHeap::new(), EventHeap::new());
+        feed(&mut a);
+        feed(&mut b);
+        let drain = |h: &mut EventHeap<u32>| -> Vec<(u64, u32, u32)> {
+            std::iter::from_fn(|| h.pop())
+                .map(|f| (f.time_us, f.pid, f.event))
+                .collect()
+        };
+        assert_eq!(drain(&mut a), drain(&mut b));
+    }
+}

@@ -99,6 +99,31 @@ impl VirtualClock {
         }
     }
 
+    /// Advance to an absolute time on the raw microsecond timeline
+    /// (monotonicity enforced). The fabric ([`crate::sim`]) schedules in
+    /// integer µs; driving the clock in the same unit avoids a
+    /// µs→ms→µs float round-trip re-quantizing event times.
+    pub fn advance_to_us(&self, target: u64) {
+        let mut cur = self.micros.load(Ordering::Relaxed);
+        while cur < target {
+            match self.micros.compare_exchange_weak(
+                cur,
+                target,
+                Ordering::SeqCst,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Raw microsecond reading — the exact integer the clock stores, for
+    /// callers (the fabric) that schedule on the µs timeline.
+    pub fn now_us(&self) -> u64 {
+        self.micros.load(Ordering::SeqCst)
+    }
+
     /// Advance by a delta.
     pub fn advance_ms(&self, dt_ms: f64) {
         assert!(dt_ms >= 0.0, "time cannot flow backwards");

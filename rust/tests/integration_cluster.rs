@@ -2,8 +2,9 @@
 //! routing against the heterogeneity-blind baseline, with a mid-run node
 //! drain/rejoin and cluster-wide request conservation.
 
-use bcedge::cluster::{ClusterConfig, ClusterReport, DrainScenario, NodeSpec,
-                      RoutePolicy, run_cluster};
+use bcedge::cluster::{CacheConfig, ClusterConfig, ClusterReport,
+                      DrainScenario, FrontEndConfig, NodeSpec, RoutePolicy,
+                      run_cluster};
 use bcedge::metrics::ShedReason;
 use bcedge::platform::PlatformSpec;
 use bcedge::serve::{ClockKind, LoadGenConfig, SchedulerSpec, ServeConfig};
@@ -126,4 +127,158 @@ fn slo_routing_beats_round_robin_on_heterogeneous_cluster() {
             "slo-aware routing did not help: {:.3} vs round-robin {:.3}",
             slo.metrics.violation_rate(),
             rr.metrics.violation_rate());
+}
+
+/// The Table-V trio behind increasingly distant links.
+fn trio() -> Vec<NodeSpec> {
+    vec![
+        NodeSpec::new(PlatformSpec::xavier_nx(), 2, 2.0),
+        NodeSpec::new(PlatformSpec::jetson_tx2(), 2, 6.0),
+        NodeSpec::new(PlatformSpec::jetson_nano(), 1, 12.0),
+    ]
+}
+
+fn assert_cluster_conserved(report: &ClusterReport, label: &str) {
+    assert_eq!(report.metrics.outcomes().len() as u64
+                   + report.metrics.shed_total()
+                   + report.cache_served()
+                   + report.leftover as u64,
+               report.attempts,
+               "{label}: requests lost or double-counted");
+    let dispatched: u64 = report.per_node.iter().map(|n| n.dispatched).sum();
+    assert_eq!(dispatched + report.router_sheds() + report.cache_served(),
+               report.attempts, "{label}: dispatch split broken");
+    let mut seen = HashSet::new();
+    for o in report.metrics.outcomes() {
+        assert!(seen.insert(o.id), "{label}: request {} served twice", o.id);
+    }
+}
+
+/// Fabric acceptance (differential): the SAME scenario — nodes, policy,
+/// scheduler, seed — run once on each clock arm. Both arms conserve
+/// every request, and the virtual fabric's violation rate lands within
+/// tolerance of the live wall run's: the event-heap simulation is a
+/// faithful stand-in for the threaded stack, not a different system that
+/// happens to share flags. (Tolerance is loose because the wall arm
+/// genuinely schedules threads — CI jitter shifts batch boundaries — but
+/// both arms simulate the same Table-V latencies, so the rates cannot
+/// drift structurally.)
+#[test]
+fn virtual_fabric_tracks_wall_arm_within_tolerance() {
+    let run = |clock: ClockKind| -> ClusterReport {
+        let serve = ServeConfig::builder()
+            .clock(clock)
+            .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
+            .admission(None)
+            .queue_capacity(4096)
+            .build()
+            .unwrap();
+        let cfg = ClusterConfig::builder()
+            .nodes(trio())
+            .policy(RoutePolicy::SloAware)
+            .serve(serve)
+            .build()
+            .unwrap();
+        let load = LoadGenConfig::builder()
+            .rps(150.0)
+            .seconds(2.0)
+            .seed(1234)
+            .slo_scale(3.0)
+            .build()
+            .unwrap();
+        run_cluster(&cfg, &load).unwrap()
+    };
+    let wall = run(ClockKind::Wall);
+    let virt = run(ClockKind::Virtual);
+    assert_cluster_conserved(&wall, "wall");
+    assert_cluster_conserved(&virt, "virtual");
+    assert!(wall.metrics.completed() > 0 && virt.metrics.completed() > 0);
+    // Same offered load reaches both arms.
+    assert_eq!(wall.attempts, virt.attempts,
+               "arms disagreed on the arrival trace");
+    let (vw, vv) =
+        (wall.metrics.violation_rate(), virt.metrics.violation_rate());
+    assert!((vw - vv).abs() < 0.2,
+            "violation rates diverged across clock arms: wall {vw:.3} \
+             vs virtual {vv:.3}");
+}
+
+/// Fabric acceptance (tentpole): the FULL dynamic stack — migration +
+/// replication epochs, a mid-run drain/rejoin, sharded routing from the
+/// gossiped view, and the result cache — runs bit-identically across two
+/// virtual runs for every (seed, shard count) tried. Before the fabric,
+/// the virtual arm silently pinned shards static and skipped the
+/// rebalancer; this pins that the carve-out is gone.
+#[test]
+fn full_dynamic_stack_is_bit_identical_per_seed_and_shards() {
+    for (seed, shards) in [(7u64, 1usize), (7, 3), (41, 2)] {
+        let cfg = ClusterConfig::builder()
+            .nodes(trio())
+            .policy(RoutePolicy::PowerOfTwoChoices)
+            .serve(
+                ServeConfig::builder()
+                    .clock(ClockKind::Virtual)
+                    .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
+                    .queue_capacity(1024)
+                    .build()
+                    .unwrap(),
+            )
+            .drain(Some(DrainScenario {
+                node: 0,
+                at_ms: 3_000.0,
+                rejoin_at_ms: 6_000.0,
+            }))
+            .frontend(FrontEndConfig {
+                router_shards: shards,
+                gossip_ms: 5.0,
+                cache: Some(CacheConfig { ttl_ms: 500.0, capacity: 4096 }),
+            })
+            .build()
+            .unwrap();
+        let load = LoadGenConfig::builder()
+            .rps(200.0)
+            .seconds(10.0)
+            .seed(seed)
+            .slo_scale(3.0)
+            .repeat_fraction(0.5)
+            .build()
+            .unwrap();
+        let tag = format!("seed {seed} / {shards} shard(s)");
+        let a = run_cluster(&cfg, &load).unwrap();
+        let b = run_cluster(&cfg, &load).unwrap();
+        assert_cluster_conserved(&a, &tag);
+
+        // Every dynamic subsystem genuinely ran.
+        assert_eq!(a.drains, 1, "{tag}: node never drained");
+        assert_eq!(a.rejoins, 1, "{tag}: node never rejoined");
+        assert!(a.metrics.rebalance_epochs() > 0,
+                "{tag}: rebalance controller never ticked");
+        assert!(a.cache_served() > 0, "{tag}: cache never served");
+        assert_eq!(a.frontend.shards, shards);
+        assert!(a.frontend.decisions > 0);
+
+        // Bit-identical across runs: outcome stream, scheduling slots,
+        // routing, control-plane actions, and cache dispositions.
+        assert_eq!(a.metrics.outcomes(), b.metrics.outcomes(),
+                   "{tag}: outcome streams diverged");
+        assert_eq!(a.slots, b.slots, "{tag}: slot counts diverged");
+        assert_eq!(a.attempts, b.attempts);
+        assert_eq!(a.leftover, b.leftover, "{tag}: leftover diverged");
+        let dispatched = |r: &ClusterReport| -> Vec<u64> {
+            r.per_node.iter().map(|n| n.dispatched).collect()
+        };
+        assert_eq!(dispatched(&a), dispatched(&b),
+                   "{tag}: per-node dispatch diverged");
+        assert_eq!(a.frontend.decisions, b.frontend.decisions,
+                   "{tag}: routing decisions diverged");
+        assert_eq!(a.frontend.misroutes, b.frontend.misroutes,
+                   "{tag}: misroutes diverged");
+        assert_eq!(a.frontend.cache, b.frontend.cache,
+                   "{tag}: cache stats diverged");
+        assert_eq!(a.metrics.migrations(), b.metrics.migrations(),
+                   "{tag}: migrations diverged");
+        assert_eq!((a.metrics.scale_ups(), a.metrics.scale_downs()),
+                   (b.metrics.scale_ups(), b.metrics.scale_downs()),
+                   "{tag}: replication actions diverged");
+    }
 }
