@@ -38,7 +38,9 @@ use bcedge::nn::mlp::{BackwardScratch, ForwardCache};
 use bcedge::nn::tensor::Mat;
 use bcedge::nn::Mlp;
 use bcedge::platform::PlatformSim;
-use bcedge::predictor::{InterferencePredictor, PredictorSample};
+use bcedge::predictor::{AdmissionMode, AdmissionQuantile,
+                        InterferencePredictor, PredictorSample};
+use bcedge::serve::AdmissionConfig;
 use bcedge::profiler::{ProfileSample, Profiler};
 use bcedge::rl::env::{Agent, Transition};
 use bcedge::rl::sac::{DiscreteSac, SacConfig};
@@ -154,6 +156,7 @@ fn router_run(view: &ClusterView, shards: usize, cache: Option<&ResultCache>,
                                 backlog_ms: p.gauges.total_backlog_ms,
                                 service_est_ms: p.gauges
                                     .service_est_ms(model),
+                                predicted_e2e_ms: f64::NAN,
                             });
                         }
                         let pick = router.route(&views, 1e9);
@@ -364,6 +367,59 @@ fn main() {
             ("train_step_alloc_us", num(t_train_alloc.mean_us)),
             ("train_step_speedup",
              num(t_train_alloc.mean_us / t_train.mean_us.max(1e-9))),
+        ]),
+    ));
+
+    // ---------------------------------------------------------------
+    // 2d. Headroom admission pricing (predictive PR): what one ingress
+    //     decision costs on the snapshot formula vs the predictive
+    //     headroom path (warm mean / warm p95 / cold fallback). The
+    //     predictive path is pure float arithmetic over published gauge
+    //     lanes — it must price within the same order as snapshot, or
+    //     the per-request admission gate becomes the new hot spot.
+    // ---------------------------------------------------------------
+    banner("headroom admission: snapshot vs predictive pricing");
+    let snap_cfg = AdmissionConfig::default();
+    let warm_cfg = AdmissionConfig {
+        mode: AdmissionMode::Predictive,
+        ..Default::default()
+    };
+    let p95_cfg = AdmissionConfig {
+        mode: AdmissionMode::Predictive,
+        quantile: AdmissionQuantile::P95,
+        ..Default::default()
+    };
+    let (queue, mean_ms, isolated_ms, slack_ms) = (24usize, 18.0, 15.0, 400.0);
+    let h_snap = time_fn("admission snapshot decide", 200, 4000, || {
+        std::hint::black_box(
+            snap_cfg.decide(queue, mean_ms, isolated_ms, slack_ms));
+    });
+    let h_warm = time_fn("admission predictive (warm, mean)", 200, 4000, || {
+        std::hint::black_box(warm_cfg.decide_predictive(
+            queue, mean_ms, isolated_ms, slack_ms, 1.35, 1.6));
+    });
+    let h_p95 = time_fn("admission predictive (warm, p95)", 200, 4000, || {
+        std::hint::black_box(p95_cfg.decide_predictive(
+            queue, mean_ms, isolated_ms, slack_ms, 1.35, 1.6));
+    });
+    let h_cold = time_fn("admission predictive (cold fallback)", 200, 4000,
+                         || {
+        std::hint::black_box(warm_cfg.decide_predictive(
+            queue, mean_ms, isolated_ms, slack_ms, f64::NAN, f64::NAN));
+    });
+    println!("{}", h_snap.row());
+    println!("{}", h_warm.row());
+    println!("{}", h_p95.row());
+    println!("{}", h_cold.row());
+    sections.push((
+        "predictor_headroom",
+        obj(vec![
+            ("snapshot_us", num(h_snap.mean_us)),
+            ("predictive_mean_us", num(h_warm.mean_us)),
+            ("predictive_p95_us", num(h_p95.mean_us)),
+            ("predictive_cold_fallback_us", num(h_cold.mean_us)),
+            ("predictive_over_snapshot",
+             num(h_warm.mean_us / h_snap.mean_us.max(1e-9))),
         ]),
     ));
 

@@ -41,7 +41,9 @@ use super::cache::{digest_for, CacheLookup, ResultCache};
 use super::node::FinishedNode;
 use super::router::{NodeView, Router};
 use super::view::{ClusterView, StalenessStat, ViewReader};
-use super::{merge_node, ClusterConfig, ClusterReport, FrontEndReport};
+use super::{count_routing_fallback, merge_node, predicted_e2e,
+            predictive_quantile, ClusterConfig, ClusterReport,
+            FrontEndReport};
 use crate::metrics::Metrics;
 use crate::serve::fabric::ServeFabric;
 use crate::serve::{ClockKind, GaugeSnapshot, LoadGenConfig, ServeConfig};
@@ -185,6 +187,9 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
     let mut wake: Vec<usize> = Vec::new();
     let trace_sample = cfg.serve.telemetry.trace_sample;
     let mut fe_ring = TraceRing::new(TRACE_RING_CAP);
+    let quantile = predictive_quantile(cfg);
+    let mut headroom_decisions = 0u64;
+    let mut headroom_fallbacks = 0u64;
 
     while let Some(firing) = heap.pop() {
         match firing.event {
@@ -252,6 +257,9 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                                 rtt_ms: cfg.nodes[i].net.rtt_ms,
                                 backlog_ms: p.gauges.total_backlog_ms,
                                 service_est_ms: p.gauges.service_est_ms(model),
+                                predicted_e2e_ms: predicted_e2e(
+                                    quantile, &p.gauges, model,
+                                    cfg.nodes[i].net.rtt_ms),
                             }
                         } else {
                             NodeView {
@@ -259,8 +267,15 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                                 rtt_ms: cfg.nodes[i].net.rtt_ms,
                                 backlog_ms: f64::INFINITY,
                                 service_est_ms: f64::INFINITY,
+                                predicted_e2e_ms: f64::NAN,
                             }
                         });
+                    }
+                    if quantile.is_some() {
+                        headroom_decisions += 1;
+                        if count_routing_fallback(&views) {
+                            headroom_fallbacks += 1;
+                        }
                     }
                     loop {
                         match routers[shard]
@@ -351,6 +366,7 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
     // Fold the nodes in index order — a fixed merge order keeps the
     // report bit-stable.
     let mut metrics = router_metrics;
+    metrics.record_headroom(headroom_decisions, headroom_fallbacks);
     let mut telemetry = TraceReport {
         traces: fe_ring.drain(),
         dropped: fe_ring.dropped(),
@@ -385,6 +401,8 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
             misroutes,
             staleness_mean_ms: staleness.mean_ms(),
             staleness_max_ms: staleness.max_ms,
+            headroom_decisions,
+            headroom_fallbacks,
             cache: cache.map(|c| c.stats()),
         },
         per_node,

@@ -77,6 +77,7 @@ pub use router::{NodeView, RoutePolicy, Router};
 pub use view::{ClusterView, NodePublished, StalenessStat, ViewReader};
 
 use crate::metrics::{Metrics, ShedReason};
+use crate::predictor::{AdmissionMode, AdmissionQuantile};
 use crate::telemetry::{RequestTrace, TraceReport, TraceRing, TraceVerdict,
                        TRACE_RING_CAP};
 use crate::serve::worker::ServeEvent;
@@ -330,6 +331,12 @@ pub struct FrontEndReport {
     pub staleness_mean_ms: f64,
     /// Worst view staleness any decision routed on, ms.
     pub staleness_max_ms: f64,
+    /// Routing decisions priced by the gossiped predictor lanes (0 in
+    /// snapshot mode or under non-SLO-aware policies).
+    pub headroom_decisions: u64,
+    /// Predictive decisions where ≥ 1 active candidate had no finite
+    /// prediction and was priced by the snapshot oracle instead.
+    pub headroom_fallbacks: u64,
     /// Cache dispositions (None when the cache was off).
     pub cache: Option<CacheStats>,
 }
@@ -421,6 +428,13 @@ impl ClusterReport {
             self.frontend.decisions,
             self.frontend.misroutes,
         );
+        if self.frontend.headroom_decisions > 0 {
+            println!(
+                "headroom routing: {} decisions | {} snapshot fallbacks",
+                self.frontend.headroom_decisions,
+                self.frontend.headroom_fallbacks,
+            );
+        }
         if let Some(c) = &self.frontend.cache {
             println!(
                 "cache: {:.1}% hit-rate | {} hits | {} coalesced | \
@@ -529,6 +543,13 @@ struct FrontEndShard<'a> {
     /// Reusable per-request routing views (the dispatch path allocates
     /// nothing in steady state).
     view_scratch: Vec<NodeView>,
+    /// `Some(quantile)` iff SLO-aware routing should price nodes by
+    /// their gossiped predictor lanes (predictive admission on).
+    predictive_quantile: Option<AdmissionQuantile>,
+    /// Predictive routing decisions and per-decision snapshot fallbacks
+    /// (≥ 1 active candidate had no finite prediction).
+    headroom_decisions: u64,
+    headroom_fallbacks: u64,
 }
 
 impl<'a> FrontEndShard<'a> {
@@ -555,6 +576,9 @@ impl<'a> FrontEndShard<'a> {
             trace_sample: cfg.serve.telemetry.trace_sample,
             fe_ring: TraceRing::new(TRACE_RING_CAP),
             view_scratch: Vec::with_capacity(nodes.len()),
+            predictive_quantile: predictive_quantile(cfg),
+            headroom_decisions: 0,
+            headroom_fallbacks: 0,
         }
     }
 
@@ -641,6 +665,9 @@ impl<'a> FrontEndShard<'a> {
                     rtt_ms: node.spec.net.rtt_ms,
                     backlog_ms: p.gauges.total_backlog_ms,
                     service_est_ms: p.gauges.service_est_ms(model),
+                    predicted_e2e_ms: predicted_e2e(
+                        self.predictive_quantile, &p.gauges, model,
+                        node.spec.net.rtt_ms),
                 }
             } else {
                 NodeView {
@@ -648,8 +675,15 @@ impl<'a> FrontEndShard<'a> {
                     rtt_ms: node.spec.net.rtt_ms,
                     backlog_ms: f64::INFINITY,
                     service_est_ms: f64::INFINITY,
+                    predicted_e2e_ms: f64::NAN,
                 }
             });
+        }
+        if self.predictive_quantile.is_some() {
+            self.headroom_decisions += 1;
+            if count_routing_fallback(&self.view_scratch) {
+                self.headroom_fallbacks += 1;
+            }
         }
         loop {
             match self
@@ -679,6 +713,42 @@ impl<'a> FrontEndShard<'a> {
             }
         }
     }
+}
+
+/// The routing tier prices nodes by their gossiped predictor lanes only
+/// when the serve template runs predictive admission AND the policy is
+/// SLO-aware (the only policy that reads e2e estimates). Returns the
+/// quantile to price at, `None` for pure snapshot routing.
+fn predictive_quantile(cfg: &ClusterConfig) -> Option<AdmissionQuantile> {
+    if cfg.policy != RoutePolicy::SloAware {
+        return None;
+    }
+    cfg.serve
+        .admission
+        .filter(|a| matches!(a.mode, AdmissionMode::Predictive))
+        .map(|a| a.quantile)
+}
+
+/// Predicted end-to-end completion for one candidate node (RTT charged
+/// in), or NaN when predictive routing is off or the node's gossiped
+/// predictor lanes are cold — `estimated_e2e_ms` then falls back to the
+/// snapshot price for that node.
+fn predicted_e2e(quantile: Option<AdmissionQuantile>, gauges: &GaugeSnapshot,
+                 model: ModelId, rtt_ms: f64) -> f64 {
+    match quantile {
+        Some(q) => gauges
+            .predicted_service_ms(model, q)
+            .map(|s| rtt_ms + s)
+            .unwrap_or(f64::NAN),
+        None => f64::NAN,
+    }
+}
+
+/// One routing decision counts as a snapshot fallback when any active
+/// candidate lacked a finite prediction — some node was priced by the
+/// snapshot oracle instead of the predictor.
+fn count_routing_fallback(views: &[NodeView]) -> bool {
+    views.iter().any(|v| v.active && !v.predicted_e2e_ms.is_finite())
 }
 
 /// Drain/rejoin scenario bookkeeping, driven from the (single) cluster
@@ -758,6 +828,8 @@ fn merge_shards(cfg: &ClusterConfig, shards: Vec<FrontEndShard<'_>>)
     let mut metrics = Metrics::new();
     let mut attempts = 0u64;
     let mut misroutes = 0u64;
+    let mut headroom_decisions = 0u64;
+    let mut headroom_fallbacks = 0u64;
     let mut staleness = StalenessStat::default();
     let mut telemetry = TraceReport::default();
     let shard_count = shards.len();
@@ -767,8 +839,11 @@ fn merge_shards(cfg: &ClusterConfig, shards: Vec<FrontEndShard<'_>>)
         metrics.absorb(fe.router_metrics);
         attempts += fe.attempts;
         misroutes += fe.misroutes;
+        headroom_decisions += fe.headroom_decisions;
+        headroom_fallbacks += fe.headroom_fallbacks;
         staleness.merge(&fe.staleness);
     }
+    metrics.record_headroom(headroom_decisions, headroom_fallbacks);
     let frontend = FrontEndReport {
         shards: shard_count,
         gossip_ms: cfg.frontend.gossip_ms,
@@ -776,6 +851,8 @@ fn merge_shards(cfg: &ClusterConfig, shards: Vec<FrontEndShard<'_>>)
         misroutes,
         staleness_mean_ms: staleness.mean_ms(),
         staleness_max_ms: staleness.max_ms,
+        headroom_decisions,
+        headroom_fallbacks,
         cache: None, // filled by finish_wall once the collector drains
     };
     (metrics, attempts, frontend, telemetry)

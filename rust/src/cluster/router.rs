@@ -86,11 +86,24 @@ pub struct NodeView {
     /// (profiled, or the platform's isolated estimate before any profile
     /// — heterogeneous drain rates show up here).
     pub service_est_ms: f64,
+    /// Predicted end-to-end completion (RTT + interference-predicted
+    /// service), ms — filled only under predictive admission, from the
+    /// node's gossiped predictor lanes. NaN when no prediction exists
+    /// (snapshot mode, cold predictor, ex-drainer lanes), in which case
+    /// the snapshot estimate above prices the node as before.
+    pub predicted_e2e_ms: f64,
 }
 
-/// Estimated end-to-end cost of placing the request on `view`'s node, ms.
+/// Estimated end-to-end cost of placing the request on `view`'s node, ms:
+/// the predictor's headroom estimate when the node published one, the
+/// snapshot estimate (RTT + gauge-priced service) otherwise. The
+/// per-decision fallback mirrors `AdmissionConfig::decide_predictive`.
 pub fn estimated_e2e_ms(view: &NodeView) -> f64 {
-    view.rtt_ms + view.service_est_ms
+    if view.predicted_e2e_ms.is_finite() && view.predicted_e2e_ms > 0.0 {
+        view.predicted_e2e_ms
+    } else {
+        view.rtt_ms + view.service_est_ms
+    }
 }
 
 /// Round-robin over active nodes: the first active node at or after the
@@ -228,7 +241,25 @@ mod tests {
 
     fn view(active: bool, rtt: f64, backlog: f64, service: f64) -> NodeView {
         NodeView { active, rtt_ms: rtt, backlog_ms: backlog,
-                   service_est_ms: service }
+                   service_est_ms: service, predicted_e2e_ms: f64::NAN }
+    }
+
+    #[test]
+    fn slo_aware_prefers_predicted_e2e_when_published() {
+        // Snapshot pricing says node 0 is cheapest (2 + 20 = 22 vs 62),
+        // but its predictor says interference pushes it to 90 ms.
+        let mut views = [view(true, 2.0, 0.0, 20.0),
+                         view(true, 2.0, 0.0, 60.0)];
+        views[0].predicted_e2e_ms = 90.0;
+        assert_eq!(route_slo_aware(&views, 100.0), Some(1));
+        // The prediction also gates feasibility: with 70 ms slack node 0
+        // is predicted-infeasible, node 1 (snapshot-priced) still fits.
+        assert_eq!(route_slo_aware(&views, 70.0), Some(1));
+        // Non-finite or non-positive predictions fall back per node to
+        // the snapshot estimate — never poison the comparison.
+        views[0].predicted_e2e_ms = f64::NAN;
+        views[1].predicted_e2e_ms = -1.0;
+        assert_eq!(route_slo_aware(&views, 100.0), Some(0));
     }
 
     #[test]

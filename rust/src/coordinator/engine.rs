@@ -97,6 +97,14 @@ pub struct IngressSnapshot {
     /// Isolated latency estimate at the gate's reference batch size, ms —
     /// the optimistic cold-start fallback.
     pub isolated_ref_ms: f64,
+    /// The engine predictor's inflation estimate for one more reference
+    /// batch of this model under current utilization; NaN when the
+    /// predictor is off, colder than the gate's warmup, or the gate never
+    /// asked ([`IngressGate::predictor_warmup`] == `usize::MAX`).
+    pub predicted_inflation: f64,
+    /// The predictor's observed dispersion p95 (NaN under the same
+    /// conditions); quantile-aware gates widen the prediction by it.
+    pub p95_factor: f64,
 }
 
 /// Admission hook consulted as requests move from arrivals into the
@@ -107,10 +115,25 @@ pub trait IngressGate: Send {
     /// Reference batch size for the snapshot's isolated-latency estimate.
     fn ref_batch(&self) -> usize;
 
+    /// Minimum predictor samples before this gate wants predictions in
+    /// its snapshots. The default `usize::MAX` means "never probe the
+    /// predictor" — snapshot-only gates (and ad-hoc test gates) keep the
+    /// pre-headroom ingest path untouched.
+    fn predictor_warmup(&self) -> usize {
+        usize::MAX
+    }
+
     /// `Some(reason)` sheds the request at ingress (recorded in
     /// [`Metrics`] as a shed, not a violation); `None` admits it.
     fn decide(&mut self, r: &Request, snap: &IngressSnapshot)
               -> Option<ShedReason>;
+
+    /// Per-decision headroom accounting: (decisions priced under the
+    /// predictive mode, snapshot fallbacks among them). Zero for gates
+    /// that never price headroom.
+    fn headroom_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Result of one scheduling slot.
@@ -385,36 +408,46 @@ impl<D: Dispatcher> Engine<D> {
                 break;
             }
             let r = self.pending.pop_front().unwrap();
-            match &mut self.gate {
+            let Some(g) = &self.gate else {
+                if let Some(tr) = &mut self.tracer {
+                    tr.on_ingest(r.id, now);
+                }
+                self.router.route(r);
+                continue;
+            };
+            let (warmup, ref_batch) = (g.predictor_warmup(), g.ref_batch());
+            // Predictions are pure probes of gauge/utilization state —
+            // no RNG — so a cold or snapshot-mode gate leaves the ingest
+            // stream bit-identical to the pre-headroom path.
+            let (predicted_inflation, p95_factor) = if warmup == usize::MAX {
+                (f64::NAN, f64::NAN)
+            } else {
+                (self.predict_inflation(r.model, ref_batch, 1, warmup),
+                 self.inflation_p95_factor(warmup))
+            };
+            let snap = IngressSnapshot {
+                now_ms: now,
+                queue_len: self.router.queue(r.model).len(),
+                mean_batch_ms: self.profiler.mean_latency_ms(r.model),
+                isolated_ref_ms: self
+                    .dispatcher
+                    .isolated_estimate_ms(r.model, ref_batch),
+                predicted_inflation,
+                p95_factor,
+            };
+            let gate = self.gate.as_mut().unwrap();
+            match gate.decide(&r, &snap) {
+                Some(reason) => {
+                    if let Some(tr) = &mut self.tracer {
+                        tr.on_shed(&r, now, reason);
+                    }
+                    self.metrics.record_shed(r.model, reason);
+                }
                 None => {
                     if let Some(tr) = &mut self.tracer {
                         tr.on_ingest(r.id, now);
                     }
                     self.router.route(r)
-                }
-                Some(gate) => {
-                    let snap = IngressSnapshot {
-                        now_ms: now,
-                        queue_len: self.router.queue(r.model).len(),
-                        mean_batch_ms: self.profiler.mean_latency_ms(r.model),
-                        isolated_ref_ms: self
-                            .dispatcher
-                            .isolated_estimate_ms(r.model, gate.ref_batch()),
-                    };
-                    match gate.decide(&r, &snap) {
-                        Some(reason) => {
-                            if let Some(tr) = &mut self.tracer {
-                                tr.on_shed(&r, now, reason);
-                            }
-                            self.metrics.record_shed(r.model, reason);
-                        }
-                        None => {
-                            if let Some(tr) = &mut self.tracer {
-                                tr.on_ingest(r.id, now);
-                            }
-                            self.router.route(r)
-                        }
-                    }
                 }
             }
         }
@@ -517,6 +550,49 @@ impl<D: Dispatcher> Engine<D> {
             }
         }
         (b, m_c)
+    }
+
+    /// Predicted latency-inflation factor for `m_c` more instance-batches
+    /// of `batch` × `model` under the CURRENT utilization — a pure probe
+    /// of the online §IV-F predictor (no RNG, no state change), the price
+    /// predictive admission and routing build headroom from. NaN when
+    /// the predictor is disabled or holds fewer than `min_samples`
+    /// ground-truth observations (the caller's fallback trigger).
+    pub fn predict_inflation(&self, model: ModelId, batch: usize,
+                             m_c: usize, min_samples: usize) -> f64 {
+        let Some(p) = &self.predictor else { return f64::NAN };
+        if p.samples() < min_samples {
+            return f64::NAN;
+        }
+        let (compute_demand, mem_pressure, active) =
+            self.dispatcher.utilization();
+        let spec = ModelSpec::get(model);
+        p.predict(&PredictorSample {
+            memory_pressure: mem_pressure,
+            compute_demand: compute_demand + spec.compute_demand * m_c as f64,
+            active_instances: active + m_c,
+            concurrency: m_c,
+            batch,
+            inflation: 1.0,
+        })
+    }
+
+    /// The predictor's observed dispersion p95 — how far reality has
+    /// recently strayed above its point estimates. NaN when the predictor
+    /// is disabled, colder than `min_samples`, or before the first
+    /// dispersion refresh; decision points clamp it to ≥ 1.
+    pub fn inflation_p95_factor(&self, min_samples: usize) -> f64 {
+        let Some(p) = &self.predictor else { return f64::NAN };
+        if p.samples() < min_samples {
+            return f64::NAN;
+        }
+        p.dispersion_p95()
+    }
+
+    /// Per-decision headroom accounting from the installed ingress gate:
+    /// (decisions priced predictively, snapshot fallbacks among them).
+    pub fn gate_headroom_stats(&self) -> (u64, u64) {
+        self.gate.as_ref().map_or((0, 0), |g| g.headroom_stats())
     }
 
     /// Execute one scheduling slot for a single model with an explicit

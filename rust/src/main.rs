@@ -82,7 +82,9 @@ fn main() -> anyhow::Result<()> {
             eprintln!("        --mode open|closed [--concurrency K] --envelope constant|bursty|diurnal \\");
             eprintln!("        --scheduler sac|deeprt|fixed [--no-admission] [--queue-cap N] [--seed S] \\");
             eprintln!("        [--rebalance-epoch-ms N] [--no-rebalance] [--no-gauge-hints] \\");
-            eprintln!("        [--max-replicas N] [--no-replication] [--slo-scale X]");
+            eprintln!("        [--max-replicas N] [--no-replication] [--slo-scale X] \\");
+            eprintln!("        [--admission snapshot|predictive] [--admission-quantile mean|p95] \\");
+            eprintln!("        [--predictor-warmup N]");
             eprintln!("  bench-cluster --nodes PLAT[:WORKERS[:RTT_MS]],... --policy round-robin|\\");
             eprintln!("        join-shortest-backlog|power-of-two|slo-aware --rps N --seconds N \\");
             eprintln!("        [--clock wall|virtual] [--mode open|closed] [--slo-scale X] \\");
@@ -311,7 +313,7 @@ fn serve_config_of(args: &Args, clock: bcedge::serve::ClockKind,
         .admission(if args.flag("no-admission") {
             None
         } else {
-            Some(bcedge::serve::AdmissionConfig::default())
+            Some(admission_of(args)?)
         })
         .queue_capacity(
             args.get_parse("queue-cap", 256).map_err(anyhow::Error::msg)?,
@@ -321,6 +323,28 @@ fn serve_config_of(args: &Args, clock: bcedge::serve::ClockKind,
         .telemetry(telemetry_of(args)?)
         .build()
         .map_err(anyhow::Error::msg)
+}
+
+/// Admission knobs: `--admission snapshot|predictive` picks the pricing
+/// source, `--admission-quantile mean|p95` the predictive risk posture,
+/// `--predictor-warmup N` the observation count before the predictor is
+/// trusted (cold decisions fall back to the snapshot formula).
+fn admission_of(args: &Args)
+                -> anyhow::Result<bcedge::serve::AdmissionConfig> {
+    use bcedge::predictor::{AdmissionMode, AdmissionQuantile};
+    let mut cfg = bcedge::serve::AdmissionConfig::default();
+    let mode = args.get_or("admission", AdmissionMode::Snapshot.name());
+    cfg.mode = AdmissionMode::from_name(mode)
+        .ok_or_else(|| anyhow::anyhow!("unknown --admission {mode}"))?;
+    let quantile =
+        args.get_or("admission-quantile", AdmissionQuantile::Mean.name());
+    cfg.quantile = AdmissionQuantile::from_name(quantile).ok_or_else(|| {
+        anyhow::anyhow!("unknown --admission-quantile {quantile}")
+    })?;
+    cfg.predictor_warmup = args
+        .get_parse("predictor-warmup", cfg.predictor_warmup)
+        .map_err(anyhow::Error::msg)?;
+    Ok(cfg)
 }
 
 /// Shared load-generation knobs (rate, horizon, envelope, client model,
@@ -606,6 +630,15 @@ fn validate_telemetry(args: &Args) -> anyhow::Result<()> {
                 "{path}: conservation broken: {completed} completed + \
                  {sheds} sheds + {cache_served} cache_served + {leftover} \
                  leftover != {attempts} attempts");
+        }
+        // Headroom counters are conservation-neutral but must be
+        // internally sane: a fallback IS a decision.
+        let headroom_decisions = field("headroom_decisions")?;
+        let headroom_fallbacks = field("headroom_fallbacks")?;
+        if headroom_fallbacks > headroom_decisions {
+            anyhow::bail!(
+                "{path}: headroom counters broken: {headroom_fallbacks} \
+                 fallbacks > {headroom_decisions} decisions");
         }
         println!(
             "{path}: OK — {snapshots} snapshot(s) + final; conservation \

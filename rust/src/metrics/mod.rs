@@ -99,6 +99,13 @@ pub struct Metrics {
     /// Widest replica set any model reached (0 outside the live worker
     /// pool; 1 = replication never triggered).
     peak_replicas: u64,
+    /// Admission/routing decisions priced under the predictive headroom
+    /// mode (0 in snapshot mode). Conservation-neutral: every decision
+    /// still lands in exactly one of outcomes/sheds/cache/leftover.
+    headroom_decisions: u64,
+    /// Among `headroom_decisions`, those where a cold/NaN predictor made
+    /// the station fall back to the snapshot formula.
+    headroom_fallbacks: u64,
     /// Streaming counters maintained alongside `outcomes` so every rate
     /// the reports print is recomputable in O(1) without walking (or
     /// even keeping) the outcome vec. The vec itself survives as the
@@ -226,6 +233,24 @@ impl Metrics {
         self.peak_replicas
     }
 
+    /// Account one station's predictive-headroom decisions and the
+    /// snapshot fallbacks among them (`fallbacks <= decisions`).
+    pub fn record_headroom(&mut self, decisions: u64, fallbacks: u64) {
+        debug_assert!(fallbacks <= decisions);
+        self.headroom_decisions += decisions;
+        self.headroom_fallbacks += fallbacks;
+    }
+
+    /// Decisions priced under the predictive headroom mode.
+    pub fn headroom_decisions(&self) -> u64 {
+        self.headroom_decisions
+    }
+
+    /// Cold/NaN-predictor snapshot fallbacks among headroom decisions.
+    pub fn headroom_fallbacks(&self) -> u64 {
+        self.headroom_fallbacks
+    }
+
     /// Fold another run's (or worker's) metrics into this one by
     /// reference (clones the outcome/utility vecs). Prefer
     /// [`Metrics::absorb`] when the other side is owned — report folding
@@ -253,6 +278,8 @@ impl Metrics {
         self.scale_ups += other.scale_ups;
         self.scale_downs += other.scale_downs;
         self.peak_replicas = self.peak_replicas.max(other.peak_replicas);
+        self.headroom_decisions += other.headroom_decisions;
+        self.headroom_fallbacks += other.headroom_fallbacks;
         self.recorded += other.recorded;
         self.dropped += other.dropped;
         self.violated_total += other.violated_total;

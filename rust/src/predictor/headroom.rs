@@ -1,0 +1,166 @@
+//! Pure headroom math for predictive admission & routing (ROADMAP open
+//! item 2; the SLO-aware design of SNIPPETS Snippet 3): price a
+//! request's completion from the interference predictor's inflation
+//! estimate and admit/route iff **headroom** = predicted e2e −
+//! remaining slack ≤ 0.
+//!
+//! Everything here is a pure function of its arguments — no RNG, no
+//! clocks, no shared state — which is what keeps the virtual arms
+//! bit-deterministic per `(seed, shards)` and lets the property layer
+//! (`tests/prop_headroom.rs`) pin the algebra: monotone in queue depth
+//! and RTT, antitone in slack, mean-infeasible ⇒ p95-infeasible, and
+//! fallback engages iff the predictor reports cold/NaN.
+
+/// Which pricing the admission and slo-aware routing decision paths use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Today's formula: queue depth × rolling-batch-latency snapshot.
+    Snapshot,
+    /// Headroom from the online interference predictor, with
+    /// [`AdmissionMode::Snapshot`] as the per-decision fallback whenever
+    /// the predictor is cold or reports NaN.
+    Predictive,
+}
+
+impl AdmissionMode {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "snapshot" => Some(AdmissionMode::Snapshot),
+            "predictive" => Some(AdmissionMode::Predictive),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionMode::Snapshot => "snapshot",
+            AdmissionMode::Predictive => "predictive",
+        }
+    }
+}
+
+/// Which latency quantile predictive pricing targets: admit-if-mean-
+/// feasible, or admit-if-p95-feasible (the prediction widened by the
+/// predictor's observed dispersion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionQuantile {
+    Mean,
+    P95,
+}
+
+impl AdmissionQuantile {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "mean" => Some(AdmissionQuantile::Mean),
+            "p95" => Some(AdmissionQuantile::P95),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionQuantile::Mean => "mean",
+            AdmissionQuantile::P95 => "p95",
+        }
+    }
+}
+
+/// Batches a new arrival waits behind, counting its own. Matches the
+/// snapshot formula in `serve::admission` exactly, so the predictive and
+/// snapshot paths price queue depth identically and differ only in the
+/// per-batch cost.
+pub fn batches_ahead(queue_len: usize, ref_batch: usize) -> usize {
+    queue_len / ref_batch.max(1) + 1
+}
+
+/// Quantile-adjusted predicted per-batch cost: `isolated × inflation`
+/// (× the dispersion p95 at [`AdmissionQuantile::P95`]). `None` means
+/// the predictor is cold or failed — non-finite or non-positive
+/// inflation (e.g. the NaN an all-ex-drainer gauge lane aggregates to),
+/// or a non-finite product — and the caller must fall back to the
+/// snapshot formula. The p95 factor is clamped to ≥ 1 and an unknown
+/// (NaN) factor degrades to exactly 1 (mean pricing), so a
+/// configuration infeasible at `mean` is always infeasible at `p95`.
+pub fn predicted_batch_cost_ms(isolated_ref_ms: f64, inflation: f64,
+                               p95_factor: f64, q: AdmissionQuantile)
+                               -> Option<f64> {
+    if !(inflation.is_finite() && inflation > 0.0) {
+        return None;
+    }
+    let factor = match q {
+        AdmissionQuantile::Mean => 1.0,
+        // f64::max ignores NaN, so an unknown factor yields exactly 1.
+        AdmissionQuantile::P95 => 1.0f64.max(p95_factor),
+    };
+    let cost = isolated_ref_ms * inflation * factor;
+    (cost.is_finite() && cost > 0.0).then_some(cost)
+}
+
+/// Headroom = predicted e2e − remaining slack:
+/// `rtt + batches_ahead(queue) × batch_cost − slack`. Feasible iff
+/// ≤ 0. Monotone nondecreasing in `queue_len`, strictly increasing in
+/// `rtt_ms`, strictly decreasing in `slack_ms` (pinned by the property
+/// layer).
+pub fn headroom_ms(queue_len: usize, ref_batch: usize, batch_cost_ms: f64,
+                   rtt_ms: f64, slack_ms: f64) -> f64 {
+    rtt_ms + batches_ahead(queue_len, ref_batch) as f64 * batch_cost_ms
+        - slack_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_and_quantile_names_round_trip() {
+        for m in [AdmissionMode::Snapshot, AdmissionMode::Predictive] {
+            assert_eq!(AdmissionMode::from_name(m.name()), Some(m));
+        }
+        for q in [AdmissionQuantile::Mean, AdmissionQuantile::P95] {
+            assert_eq!(AdmissionQuantile::from_name(q.name()), Some(q));
+        }
+        assert_eq!(AdmissionMode::from_name("oracle"), None);
+        assert_eq!(AdmissionQuantile::from_name("p99"), None);
+    }
+
+    #[test]
+    fn cold_predictor_yields_no_cost() {
+        use AdmissionQuantile::*;
+        for q in [Mean, P95] {
+            assert_eq!(predicted_batch_cost_ms(20.0, f64::NAN, 1.2, q), None);
+            assert_eq!(predicted_batch_cost_ms(20.0, 0.0, 1.2, q), None);
+            assert_eq!(predicted_batch_cost_ms(20.0, -1.0, 1.2, q), None);
+            assert_eq!(
+                predicted_batch_cost_ms(f64::NAN, 1.5, 1.2, q), None,
+                "non-finite isolated table must force the fallback");
+        }
+    }
+
+    #[test]
+    fn p95_is_at_least_mean_and_nan_factor_degrades_to_mean() {
+        let mean =
+            predicted_batch_cost_ms(20.0, 1.5, 1.3, AdmissionQuantile::Mean)
+                .unwrap();
+        let p95 =
+            predicted_batch_cost_ms(20.0, 1.5, 1.3, AdmissionQuantile::P95)
+                .unwrap();
+        assert!(p95 >= mean);
+        // Sub-1 and NaN dispersion both clamp to the mean cost exactly.
+        for f in [0.4, f64::NAN] {
+            let c =
+                predicted_batch_cost_ms(20.0, 1.5, f, AdmissionQuantile::P95)
+                    .unwrap();
+            assert_eq!(c, mean);
+        }
+    }
+
+    #[test]
+    fn headroom_signs_match_feasibility() {
+        // 1 batch ahead × 20 ms + 2 ms rtt = 22 ms predicted e2e.
+        assert!(headroom_ms(0, 8, 20.0, 2.0, 30.0) < 0.0);
+        assert!(headroom_ms(0, 8, 20.0, 2.0, 22.0) == 0.0);
+        assert!(headroom_ms(0, 8, 20.0, 2.0, 15.0) > 0.0);
+        // Queue depth enters in ref_batch quanta.
+        assert_eq!(headroom_ms(16, 8, 20.0, 0.0, 0.0), 60.0);
+    }
+}

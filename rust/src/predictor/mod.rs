@@ -3,8 +3,11 @@
 //! execution, plus the linear-regression baseline it is compared against
 //! in Fig. 13.
 
+pub mod headroom;
 pub mod linreg;
 pub mod nn_predictor;
 
+pub use headroom::{batches_ahead, headroom_ms, predicted_batch_cost_ms,
+                   AdmissionMode, AdmissionQuantile};
 pub use linreg::LinearPredictor;
 pub use nn_predictor::{InterferencePredictor, PredictorSample, FEATURES};

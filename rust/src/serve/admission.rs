@@ -22,6 +22,8 @@
 
 use crate::coordinator::engine::{IngressGate, IngressSnapshot};
 use crate::metrics::ShedReason;
+use crate::predictor::{headroom_ms, predicted_batch_cost_ms, AdmissionMode,
+                       AdmissionQuantile};
 use crate::workload::request::Request;
 
 /// Tunables for the admission decision.
@@ -34,11 +36,31 @@ pub struct AdmissionConfig {
     /// requests (optimistic bound); raise it to shed earlier under
     /// overload at the cost of occasional false sheds.
     pub safety: f64,
+    /// Snapshot (today's formula) or predictive (headroom from the
+    /// interference predictor, snapshot as the per-decision fallback).
+    pub mode: AdmissionMode,
+    /// Latency quantile predictive pricing targets (ignored under
+    /// [`AdmissionMode::Snapshot`]).
+    pub quantile: AdmissionQuantile,
+    /// Ground-truth samples a worker's predictor must hold before its
+    /// predictions are trusted at any decision point; below it, every
+    /// station publishes/receives NaN and falls back to the snapshot
+    /// formula. `usize::MAX` pins the predictor cold forever (the
+    /// differential tests' lever).
+    pub predictor_warmup: usize,
 }
 
 impl Default for AdmissionConfig {
     fn default() -> Self {
-        AdmissionConfig { ref_batch: 8, safety: 1.0 }
+        AdmissionConfig {
+            ref_batch: 8,
+            safety: 1.0,
+            mode: AdmissionMode::Snapshot,
+            quantile: AdmissionQuantile::Mean,
+            // Matches the engine's own veto threshold: enough samples
+            // that the net has trained past its random init.
+            predictor_warmup: 128,
+        }
     }
 }
 
@@ -69,6 +91,45 @@ impl AdmissionConfig {
         }
     }
 
+    /// Predictive decision (ROADMAP open item 2): price the request's
+    /// completion as `batches_ahead × isolated × predicted-inflation`
+    /// (widened by the dispersion p95 at the `p95` quantile) and shed
+    /// iff headroom > 0. `predicted_inflation` / `p95_factor` come from
+    /// the deciding station — the engine's own predictor probe at the
+    /// gate, the gossiped gauge lanes at the ingress fast path — with
+    /// NaN meaning cold/failed, in which case the decision falls back to
+    /// [`AdmissionConfig::decide`], the snapshot oracle, bit-for-bit.
+    /// The returned flag reports that fallback (counted,
+    /// conservation-neutral). Dead-on-arrival requests (slack ≤ 0) shed
+    /// identically on both paths and count as headroom decisions, not
+    /// fallbacks.
+    pub fn decide_predictive(&self, queue_len: usize, mean_batch_ms: f64,
+                             isolated_ref_ms: f64, slack_ms: f64,
+                             predicted_inflation: f64, p95_factor: f64)
+                             -> (Result<(), ShedReason>, bool) {
+        if slack_ms <= 0.0 {
+            return (Err(ShedReason::DeadlineUnmeetable), false);
+        }
+        match predicted_batch_cost_ms(isolated_ref_ms, predicted_inflation,
+                                      p95_factor, self.quantile) {
+            Some(cost) => {
+                let h = headroom_ms(queue_len, self.ref_batch,
+                                    cost * self.safety, 0.0, slack_ms);
+                let d = if h > 0.0 {
+                    Err(ShedReason::DeadlineUnmeetable)
+                } else {
+                    Ok(())
+                };
+                (d, false)
+            }
+            None => (
+                self.decide(queue_len, mean_batch_ms, isolated_ref_ms,
+                            slack_ms),
+                true,
+            ),
+        }
+    }
+
     /// Remaining completion budget for `r` at decision time `now_ms`.
     /// E2e latency is measured from arrival and includes the transmission
     /// already spent (Eq. 2), so the budget shrinks by both.
@@ -78,15 +139,20 @@ impl AdmissionConfig {
 }
 
 /// [`IngressGate`] adapter: the admission controller as the engine's
-/// ingest-time hook, with exact queue state from the snapshot.
-#[derive(Clone, Copy, Debug, Default)]
+/// ingest-time hook, with exact queue state from the snapshot. Under
+/// [`AdmissionMode::Predictive`] it also tallies per-decision headroom
+/// usage vs snapshot fallbacks, harvested into
+/// [`crate::metrics::Metrics`] at worker teardown.
+#[derive(Clone, Debug, Default)]
 pub struct AdmissionGate {
     pub cfg: AdmissionConfig,
+    headroom_decisions: u64,
+    headroom_fallbacks: u64,
 }
 
 impl AdmissionGate {
     pub fn new(cfg: AdmissionConfig) -> Self {
-        AdmissionGate { cfg }
+        AdmissionGate { cfg, headroom_decisions: 0, headroom_fallbacks: 0 }
     }
 }
 
@@ -95,13 +161,44 @@ impl IngressGate for AdmissionGate {
         self.cfg.ref_batch
     }
 
+    fn predictor_warmup(&self) -> usize {
+        match self.cfg.mode {
+            // Snapshot mode never consults the predictor: an infinite
+            // warmup keeps the engine from probing it at all.
+            AdmissionMode::Snapshot => usize::MAX,
+            AdmissionMode::Predictive => self.cfg.predictor_warmup,
+        }
+    }
+
     fn decide(&mut self, r: &Request, snap: &IngressSnapshot)
               -> Option<ShedReason> {
         let slack = AdmissionConfig::slack_ms(r, snap.now_ms);
-        self.cfg
-            .decide(snap.queue_len, snap.mean_batch_ms, snap.isolated_ref_ms,
-                    slack)
-            .err()
+        match self.cfg.mode {
+            AdmissionMode::Snapshot => self
+                .cfg
+                .decide(snap.queue_len, snap.mean_batch_ms,
+                        snap.isolated_ref_ms, slack)
+                .err(),
+            AdmissionMode::Predictive => {
+                let (d, fell_back) = self.cfg.decide_predictive(
+                    snap.queue_len,
+                    snap.mean_batch_ms,
+                    snap.isolated_ref_ms,
+                    slack,
+                    snap.predicted_inflation,
+                    snap.p95_factor,
+                );
+                self.headroom_decisions += 1;
+                if fell_back {
+                    self.headroom_fallbacks += 1;
+                }
+                d.err()
+            }
+        }
+    }
+
+    fn headroom_stats(&self) -> (u64, u64) {
+        (self.headroom_decisions, self.headroom_fallbacks)
     }
 }
 
@@ -119,7 +216,8 @@ mod tests {
 
     #[test]
     fn deep_queue_times_batch_latency_sheds() {
-        let cfg = AdmissionConfig { ref_batch: 8, safety: 1.0 };
+        let cfg =
+            AdmissionConfig { ref_batch: 8, safety: 1.0, ..Default::default() };
         // 40 queued → 6 batches ahead (incl. ours) × 25 ms = 150 ms > 100.
         assert_eq!(cfg.decide(40, 25.0, 20.0, 100.0),
                    Err(ShedReason::DeadlineUnmeetable));
@@ -129,7 +227,8 @@ mod tests {
 
     #[test]
     fn cold_start_falls_back_to_isolated_estimate() {
-        let cfg = AdmissionConfig { ref_batch: 8, safety: 1.0 };
+        let cfg =
+            AdmissionConfig { ref_batch: 8, safety: 1.0, ..Default::default() };
         // No profile yet: NaN mean → isolated 60 ms per batch, 2 batches.
         assert_eq!(cfg.decide(8, f64::NAN, 60.0, 100.0),
                    Err(ShedReason::DeadlineUnmeetable));
@@ -153,9 +252,68 @@ mod tests {
     }
 
     #[test]
+    fn predictive_with_warm_predictor_prices_headroom() {
+        let cfg = AdmissionConfig {
+            mode: AdmissionMode::Predictive,
+            ..Default::default()
+        };
+        // 8 queued → 2 batches × (20 isolated × 1.5 inflation) = 60 ms.
+        let (d, fb) = cfg.decide_predictive(8, 95.0, 20.0, 70.0, 1.5, 1.0);
+        assert!(d.is_ok() && !fb, "feasible headroom admitted, no fallback");
+        // Note the snapshot path would have shed this (2 × 95 = 190 > 70):
+        // the predictor sees through a stale rolling mean.
+        assert!(cfg.decide(8, 95.0, 20.0, 70.0).is_err());
+        let (d, fb) = cfg.decide_predictive(8, 10.0, 20.0, 50.0, 1.5, 1.0);
+        assert!(d.is_err() && !fb, "60 ms predicted > 50 ms slack sheds");
+    }
+
+    #[test]
+    fn predictive_p95_sheds_no_later_than_mean() {
+        let p95 = AdmissionConfig {
+            mode: AdmissionMode::Predictive,
+            quantile: AdmissionQuantile::P95,
+            ..Default::default()
+        };
+        let mean = AdmissionConfig {
+            mode: AdmissionMode::Predictive,
+            ..Default::default()
+        };
+        // 2 × 20 × 1.5 = 60 ms at mean; × 1.4 dispersion = 84 at p95.
+        let (dm, _) = mean.decide_predictive(8, 10.0, 20.0, 70.0, 1.5, 1.4);
+        let (dp, _) = p95.decide_predictive(8, 10.0, 20.0, 70.0, 1.5, 1.4);
+        assert!(dm.is_ok() && dp.is_err(),
+                "p95 pricing must be the stricter admit");
+    }
+
+    #[test]
+    fn predictive_cold_falls_back_to_snapshot_bitwise() {
+        let cfg = AdmissionConfig {
+            mode: AdmissionMode::Predictive,
+            ..Default::default()
+        };
+        for (q, mean, iso, slack) in [
+            (0usize, f64::NAN, 20.0, 100.0),
+            (40, 25.0, 20.0, 100.0),
+            (8, f64::NAN, 60.0, 100.0),
+            (8, 40.0, 40.0, 100.0),
+        ] {
+            let (d, fb) =
+                cfg.decide_predictive(q, mean, iso, slack, f64::NAN, 1.0);
+            assert!(fb, "cold predictor must report fallback");
+            assert_eq!(d, cfg.decide(q, mean, iso, slack),
+                       "fallback diverged from the snapshot oracle");
+        }
+        // Dead on arrival is decided before the predictor: no fallback.
+        let (d, fb) = cfg.decide_predictive(0, 1.0, 1.0, 0.0, 1.5, 1.0);
+        assert!(d.is_err() && !fb);
+    }
+
+    #[test]
     fn safety_factor_sheds_earlier() {
-        let lax = AdmissionConfig { ref_batch: 8, safety: 1.0 };
-        let strict = AdmissionConfig { ref_batch: 8, safety: 2.0 };
+        let lax =
+            AdmissionConfig { ref_batch: 8, safety: 1.0, ..Default::default() };
+        let strict =
+            AdmissionConfig { ref_batch: 8, safety: 2.0, ..Default::default() };
         assert!(lax.decide(8, 40.0, 40.0, 100.0).is_ok()); // 80 ≤ 100
         assert!(strict.decide(8, 40.0, 40.0, 100.0).is_err()); // 160 > 100
     }

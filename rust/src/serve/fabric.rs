@@ -46,6 +46,7 @@
 //!   holds through every rewrite.
 
 use super::admission::AdmissionGate;
+use crate::predictor::AdmissionMode;
 use super::ingress::{pick_replica, GaugeSnapshot, OwnershipTable,
                      SharedGauges, URGENT_SLACK_BATCHES};
 use super::server::{merge_results, RebalanceStats, Rebalancer, ServeConfig,
@@ -129,6 +130,9 @@ pub(crate) struct ServeFabric {
     /// Reusable handoff scratch (the fabric's stand-in for the live
     /// `ModelIntake` slots).
     handoff_buf: Vec<Request>,
+    /// `Some(predictor_warmup)` iff predictive admission is on — gates
+    /// the prediction-lane publishes exactly like the live worker.
+    predictive_warmup: Option<usize>,
 }
 
 impl ServeFabric {
@@ -189,6 +193,10 @@ impl ServeFabric {
             horizon_ms,
             workers,
             handoff_buf: Vec::new(),
+            predictive_warmup: cfg
+                .admission
+                .filter(|c| matches!(c.mode, AdmissionMode::Predictive))
+                .map(|c| c.predictor_warmup),
         }
     }
 
@@ -221,7 +229,10 @@ impl ServeFabric {
             snap.backlog_ms[i] = self.gauges.backlog_ms(
                 m, self.isolated_ref_ms[i], ref_batch);
             snap.total_backlog_ms += snap.backlog_ms[i];
+            snap.predicted_inflation[i] = self.gauges.predicted_inflation(m);
+            snap.isolated_ms[i] = self.isolated_ref_ms[i];
         }
+        snap.p95_factor = self.gauges.p95_factor();
         snap
     }
 
@@ -326,6 +337,20 @@ impl ServeFabric {
                 f64::NAN
             };
             self.gauges.publish(m, w, queue, latency);
+            if let Some(warmup) = self.predictive_warmup {
+                let inflation = if involved {
+                    proc.engine
+                        .predict_inflation(m, self.ref_batch, 1, warmup)
+                } else {
+                    f64::NAN
+                };
+                self.gauges.publish_prediction(
+                    m,
+                    w,
+                    inflation,
+                    proc.engine.inflation_p95_factor(warmup),
+                );
+            }
         }
     }
 
@@ -462,6 +487,8 @@ impl ServeFabric {
             .into_iter()
             .map(|mut p| {
                 let telemetry = p.engine.take_telemetry();
+                let (decisions, fallbacks) = p.engine.gate_headroom_stats();
+                p.engine.metrics.record_headroom(decisions, fallbacks);
                 WorkerResult {
                     slots: p.slots,
                     leftover: p.engine.total_queued(),

@@ -17,6 +17,7 @@
 //! gate, where the local queue depth is authoritative.
 
 use super::admission::AdmissionConfig;
+use crate::predictor::AdmissionMode;
 use crate::metrics::{Metrics, ShedReason, N_SHED_REASONS};
 use crate::workload::models::{ModelId, N_MODELS};
 use crate::workload::request::Request;
@@ -49,6 +50,18 @@ pub const URGENT_SLACK_BATCHES: f64 = 4.0;
 pub struct SharedGauges {
     queue_len: [[AtomicUsize; MAX_POOL]; N_MODELS],
     batch_ms_bits: [[AtomicU64; MAX_POOL]; N_MODELS],
+    /// Per-(model, worker) predicted-inflation lanes: each involved
+    /// worker's engine publishes its interference predictor's inflation
+    /// estimate for one more reference batch (NaN = uninvolved lane,
+    /// cold predictor, or snapshot-mode run). Predictive admission and
+    /// slo-aware routing price headroom from the finite-lane mean; an
+    /// all-NaN model (e.g. every replica an ex-drainer) aggregates to
+    /// NaN, which is exactly the fallback trigger.
+    pred_inflation_bits: [[AtomicU64; MAX_POOL]; N_MODELS],
+    /// Per-worker predictor dispersion p95 (NaN = unknown); the
+    /// aggregate takes the max over finite lanes — the conservative
+    /// pool-wide tail factor.
+    p95_factor_bits: [AtomicU64; MAX_POOL],
 }
 
 impl Default for SharedGauges {
@@ -59,6 +72,12 @@ impl Default for SharedGauges {
             }),
             batch_ms_bits: std::array::from_fn(|_| {
                 std::array::from_fn(|_| AtomicU64::new(f64::NAN.to_bits()))
+            }),
+            pred_inflation_bits: std::array::from_fn(|_| {
+                std::array::from_fn(|_| AtomicU64::new(f64::NAN.to_bits()))
+            }),
+            p95_factor_bits: std::array::from_fn(|_| {
+                AtomicU64::new(f64::NAN.to_bits())
             }),
         }
     }
@@ -154,6 +173,46 @@ impl SharedGauges {
     pub fn is_active(&self, model: ModelId) -> bool {
         self.queue_len(model) > 0 || self.batch_ms(model).is_finite()
     }
+
+    /// Publish one worker's predicted-inflation lane for `model` and its
+    /// predictor's dispersion p95 (NaN = no prediction / unknown).
+    pub fn publish_prediction(&self, model: ModelId, worker: usize,
+                              inflation: f64, p95_factor: f64) {
+        let w = worker.min(MAX_POOL - 1);
+        self.pred_inflation_bits[model as usize][w]
+            .store(inflation.to_bits(), Ordering::Relaxed);
+        self.p95_factor_bits[w].store(p95_factor.to_bits(),
+                                      Ordering::Relaxed);
+    }
+
+    /// Pool-wide predicted inflation for `model`: the mean over workers
+    /// with a live (finite, positive) prediction lane; NaN when none —
+    /// the predictive decision paths' fallback trigger.
+    pub fn predicted_inflation(&self, model: ModelId) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for bits in &self.pred_inflation_bits[model as usize] {
+            let v = f64::from_bits(bits.load(Ordering::Relaxed));
+            if v.is_finite() && v > 0.0 {
+                sum += v;
+                n += 1;
+            }
+        }
+        if n == 0 { f64::NAN } else { sum / n as f64 }
+    }
+
+    /// Pool-wide dispersion p95: the max over workers with a live lane
+    /// (the conservative tail estimate); NaN when none.
+    pub fn p95_factor(&self) -> f64 {
+        let mut best = f64::NAN;
+        for bits in &self.p95_factor_bits {
+            let v = f64::from_bits(bits.load(Ordering::Relaxed));
+            if v.is_finite() && (best.is_nan() || v > best) {
+                best = v;
+            }
+        }
+        best
+    }
 }
 
 /// One coherent export of a server's pool-wide serving state, read
@@ -180,6 +239,17 @@ pub struct GaugeSnapshot {
     pub total_backlog_ms: f64,
     /// Reference batch the estimates are priced at.
     pub ref_batch: usize,
+    /// Pool-wide predicted inflation per model (finite-lane mean of the
+    /// workers' interference-predictor lanes; NaN = every lane cold or
+    /// the run is snapshot-mode). Rides the gossip stream so cluster
+    /// routing prices the same headroom node-local admission does.
+    pub predicted_inflation: [f64; N_MODELS],
+    /// This node's isolated latency table at the reference batch, ms —
+    /// the per-(model, platform) base the predicted inflation scales.
+    pub isolated_ms: [f64; N_MODELS],
+    /// Pool-wide predictor dispersion p95 (max over worker lanes; NaN =
+    /// unknown), the p95-quantile widening factor.
+    pub p95_factor: f64,
 }
 
 impl Default for GaugeSnapshot {
@@ -190,6 +260,9 @@ impl Default for GaugeSnapshot {
             backlog_ms: [0.0; N_MODELS],
             total_backlog_ms: 0.0,
             ref_batch: 1,
+            predicted_inflation: [f64::NAN; N_MODELS],
+            isolated_ms: [f64::NAN; N_MODELS],
+            p95_factor: f64::NAN,
         }
     }
 }
@@ -204,6 +277,27 @@ impl GaugeSnapshot {
         let batches_ahead =
             self.queue_per_replica[i] / self.ref_batch.max(1) + 1;
         batches_ahead as f64 * self.est_batch_ms[i]
+    }
+
+    /// Predictive completion estimate for one new request of `model`, ms
+    /// (excluding network): the same batches-ahead bound priced at
+    /// `isolated × predicted inflation` (× the dispersion p95 at the
+    /// `p95` quantile) instead of the rolling snapshot. `None` when this
+    /// node's predictor lanes are cold/NaN — the caller falls back to
+    /// [`GaugeSnapshot::service_est_ms`], the snapshot oracle.
+    pub fn predicted_service_ms(&self, model: ModelId,
+                                quantile: crate::predictor::AdmissionQuantile)
+                                -> Option<f64> {
+        let i = model as usize;
+        let cost = crate::predictor::predicted_batch_cost_ms(
+            self.isolated_ms[i],
+            self.predicted_inflation[i],
+            self.p95_factor,
+            quantile,
+        )?;
+        let batches_ahead =
+            self.queue_per_replica[i] / self.ref_batch.max(1) + 1;
+        Some(batches_ahead as f64 * cost)
     }
 }
 
@@ -489,6 +583,10 @@ pub struct Ingress {
     /// Requests refused at the ingress itself (the engine gate accounts
     /// its own sheds); folded into the final report's [`Metrics`].
     sheds: [[AtomicU64; N_SHED_REASONS]; N_MODELS],
+    /// Fast-path decisions priced under the predictive headroom mode,
+    /// and the cold/NaN snapshot fallbacks among them.
+    headroom_decisions: AtomicU64,
+    headroom_fallbacks: AtomicU64,
 }
 
 impl Ingress {
@@ -513,6 +611,8 @@ impl Ingress {
             sheds: std::array::from_fn(|_| {
                 std::array::from_fn(|_| AtomicU64::new(0))
             }),
+            headroom_decisions: AtomicU64::new(0),
+            headroom_fallbacks: AtomicU64::new(0),
         }
     }
 
@@ -539,7 +639,10 @@ impl Ingress {
             snap.backlog_ms[i] = self.gauges.backlog_ms(
                 m, self.isolated_ref_ms[i], ref_batch);
             snap.total_backlog_ms += snap.backlog_ms[i];
+            snap.predicted_inflation[i] = self.gauges.predicted_inflation(m);
+            snap.isolated_ms[i] = self.isolated_ref_ms[i];
         }
+        snap.p95_factor = self.gauges.p95_factor();
         snap
     }
 
@@ -562,12 +665,34 @@ impl Ingress {
             // accepts.
             let slack = slo_ms - transmission_ms;
             let replicas = self.ownership.replica_count(model);
-            if let Err(reason) = cfg.decide(
-                self.gauges.queue_len(model) / replicas,
-                self.gauges.batch_ms(model),
-                self.isolated_ref_ms[model as usize],
-                slack,
-            ) {
+            let queue = self.gauges.queue_len(model) / replicas;
+            let mean = self.gauges.batch_ms(model);
+            let isolated = self.isolated_ref_ms[model as usize];
+            let decision = match cfg.mode {
+                AdmissionMode::Snapshot => {
+                    cfg.decide(queue, mean, isolated, slack)
+                }
+                AdmissionMode::Predictive => {
+                    // The prediction lanes are NaN unless a warm
+                    // predictive-mode worker published them, so a cold
+                    // pool falls back to the snapshot formula verbatim.
+                    let (d, fell_back) = cfg.decide_predictive(
+                        queue,
+                        mean,
+                        isolated,
+                        slack,
+                        self.gauges.predicted_inflation(model),
+                        self.gauges.p95_factor(),
+                    );
+                    self.headroom_decisions.fetch_add(1, Ordering::Relaxed);
+                    if fell_back {
+                        self.headroom_fallbacks
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                    d
+                }
+            };
+            if let Err(reason) = decision {
                 self.count_shed(model, reason);
                 return Err(reason);
             }
@@ -659,6 +784,10 @@ impl Ingress {
                 }
             }
         }
+        m.record_headroom(
+            self.headroom_decisions.load(Ordering::Relaxed),
+            self.headroom_fallbacks.load(Ordering::Relaxed),
+        );
     }
 
     fn count_shed(&self, model: ModelId, reason: ShedReason) {
@@ -949,6 +1078,88 @@ mod tests {
         assert!((hot.backlog_ms[ModelId::Res as usize] - 48.0).abs() < 1e-9);
         assert!((hot.total_backlog_ms - 48.0).abs() < 1e-9);
         assert!((hot.service_est_ms(ModelId::Res) - 72.0).abs() < 1e-9);
+    }
+
+    /// Acceptance criterion (predictive tentpole): on a near-boundary
+    /// overload where the rolling snapshot mean is stale-high (a burst
+    /// just inflated it) but the predictor knows the true per-batch
+    /// cost, predictive admission produces STRICTLY FEWER false sheds
+    /// than snapshot at an equal-or-better accepted-violation rate.
+    ///
+    /// Every number is constructed, so ground truth is exact: isolated
+    /// cost 10 ms/batch, true inflation 1.2 → a request behind 8 queued
+    /// (2 batches at ref_batch 8) truly completes in 2 × 12 = 24 ms.
+    /// The published rolling mean is 95 ms (stale), so the snapshot
+    /// path prices the same request at 2 × 95 = 190 ms.
+    #[test]
+    fn predictive_admission_cuts_false_sheds_on_near_boundary_overload() {
+        let true_e2e_ms = 24.0;
+        let run = |admission: AdmissionConfig, warm: bool| -> (u64, u64, u64) {
+            let (ing, _rx) = test_ingress(64, Some(admission));
+            ing.gauges.publish(ModelId::Res, 0, 8, 95.0);
+            if warm {
+                ing.gauges.publish_prediction(ModelId::Res, 0, 1.2,
+                                              f64::NAN);
+            }
+            let mut false_sheds = 0u64;
+            let mut accepted_violations = 0u64;
+            let mut accepted = 0u64;
+            // 10 near-boundary (70 ms slack: truly feasible), 10 easy
+            // (400 ms), 10 hopeless (20 ms: truly infeasible) arrivals.
+            for slo in [70.0, 400.0, 20.0] {
+                for _ in 0..10 {
+                    let feasible = true_e2e_ms <= slo;
+                    match ing.submit(ModelId::Res, slo, 0.0, 0.0) {
+                        Ok(_) => {
+                            accepted += 1;
+                            if !feasible {
+                                accepted_violations += 1;
+                            }
+                        }
+                        Err(_) if feasible => false_sheds += 1,
+                        Err(_) => {}
+                    }
+                }
+            }
+            (false_sheds, accepted_violations, accepted)
+        };
+
+        let snap = run(AdmissionConfig::default(), false);
+        let pred = run(
+            AdmissionConfig {
+                mode: AdmissionMode::Predictive,
+                ..Default::default()
+            },
+            true,
+        );
+        // Snapshot's stale mean sheds all 20 feasible requests (190 >
+        // 70 and 190 > 400 is false — easy ones pass: 190 ≤ 400), so
+        // only the 10 boundary requests are falsely shed.
+        assert_eq!(snap, (10, 0, 10), "snapshot scenario drifted");
+        // The predictor prices 24 ms: admits all 20 feasible, sheds the
+        // 10 hopeless — zero false sheds, zero accepted violations.
+        assert_eq!(pred, (0, 0, 20), "predictive scenario drifted");
+        assert!(pred.0 < snap.0, "not strictly fewer false sheds");
+        assert!(pred.1 <= snap.1, "accepted-violation rate regressed");
+
+        // Fallback accounting: the warm run priced every decision from
+        // the predictor; a cold pool (no published lanes) falls back on
+        // every decision and reproduces snapshot behavior exactly.
+        let cold_cfg = AdmissionConfig {
+            mode: AdmissionMode::Predictive,
+            ..Default::default()
+        };
+        let cold = run(cold_cfg, false);
+        assert_eq!(cold, snap,
+                   "cold predictive diverged from the snapshot oracle");
+        let (ing, _rx) = test_ingress(64, Some(cold_cfg));
+        ing.gauges.publish(ModelId::Res, 0, 8, 95.0);
+        let _ = ing.submit(ModelId::Res, 70.0, 0.0, 0.0);
+        let _ = ing.submit(ModelId::Res, 400.0, 0.0, 0.0);
+        let mut m = Metrics::new();
+        ing.fold_sheds_into(&mut m);
+        assert_eq!((m.headroom_decisions(), m.headroom_fallbacks()), (2, 2),
+                   "cold predictive decisions must all count as fallbacks");
     }
 
     /// Request-id namespacing: an ingress started at a non-zero id base

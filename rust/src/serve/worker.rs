@@ -28,6 +28,7 @@
 //!   handoff slot, so the model's queue stays spread across the set.
 
 use super::admission::{AdmissionConfig, AdmissionGate};
+use crate::predictor::AdmissionMode;
 use super::ingress::{ModelIntake, OwnershipTable, SharedGauges, WakeEvent};
 use crate::coordinator::{Engine, Scheduler};
 use crate::metrics::Metrics;
@@ -232,6 +233,8 @@ impl LiveWorker {
             }
         }
         let telemetry = self.engine.take_telemetry();
+        let (decisions, fallbacks) = self.engine.gate_headroom_stats();
+        self.engine.metrics.record_headroom(decisions, fallbacks);
         WorkerResult {
             slots,
             leftover: self.engine.total_queued(),
@@ -466,6 +469,13 @@ impl LiveWorker {
     /// path under-price the model and feed the controller a falsely
     /// collapsed imbalance.
     fn publish_gauges(&self) {
+        // Prediction lanes exist only under predictive admission: a
+        // snapshot-mode pool never probes the predictor, so its hot
+        // path (and the virtual arm's event stream) is unchanged.
+        let warmup = self
+            .admission
+            .filter(|c| matches!(c.mode, AdmissionMode::Predictive))
+            .map(|c| c.predictor_warmup);
         for m in ModelId::all() {
             let idx = m as usize;
             let mut queue = self.engine.queue_len(m);
@@ -486,6 +496,22 @@ impl LiveWorker {
                 f64::NAN
             };
             self.gauges.publish(m, self.id, queue, latency);
+            if let Some(warmup) = warmup {
+                // Same involvement rule as the latency lane: an
+                // ex-drainer's prediction must go NaN with it.
+                let inflation = if involved {
+                    self.engine
+                        .predict_inflation(m, self.ref_batch, 1, warmup)
+                } else {
+                    f64::NAN
+                };
+                self.gauges.publish_prediction(
+                    m,
+                    self.id,
+                    inflation,
+                    self.engine.inflation_p95_factor(warmup),
+                );
+            }
         }
     }
 

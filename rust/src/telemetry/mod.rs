@@ -706,6 +706,8 @@ pub fn final_snapshot(horizon_ms: f64, attempts: u64, cache_served: u64,
         ("cache_served", num(cache_served as f64)),
         ("leftover", num(leftover as f64)),
         ("shed_rate", num(metrics.shed_rate())),
+        ("headroom_decisions", num(metrics.headroom_decisions() as f64)),
+        ("headroom_fallbacks", num(metrics.headroom_fallbacks() as f64)),
         ("latency", metrics.latency_hist().to_json()),
         ("slack", metrics.slack_hist().to_json()),
         ("per_model", per_model),

@@ -7,7 +7,9 @@ use bcedge::cluster::{CacheConfig, ClusterConfig, ClusterReport,
                       run_cluster};
 use bcedge::metrics::ShedReason;
 use bcedge::platform::PlatformSpec;
-use bcedge::serve::{ClockKind, LoadGenConfig, SchedulerSpec, ServeConfig};
+use bcedge::predictor::AdmissionMode;
+use bcedge::serve::{AdmissionConfig, ClockKind, LoadGenConfig,
+                    SchedulerSpec, ServeConfig};
 use std::collections::HashSet;
 
 /// Tentpole acceptance: on a heterogeneous 3-node cluster (Xavier NX +
@@ -212,29 +214,33 @@ fn virtual_fabric_tracks_wall_arm_within_tolerance() {
 #[test]
 fn full_dynamic_stack_is_bit_identical_per_seed_and_shards() {
     for (seed, shards) in [(7u64, 1usize), (7, 3), (41, 2)] {
-        let cfg = ClusterConfig::builder()
-            .nodes(trio())
-            .policy(RoutePolicy::PowerOfTwoChoices)
-            .serve(
-                ServeConfig::builder()
-                    .clock(ClockKind::Virtual)
-                    .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
-                    .queue_capacity(1024)
-                    .build()
-                    .unwrap(),
-            )
-            .drain(Some(DrainScenario {
-                node: 0,
-                at_ms: 3_000.0,
-                rejoin_at_ms: 6_000.0,
-            }))
-            .frontend(FrontEndConfig {
-                router_shards: shards,
-                gossip_ms: 5.0,
-                cache: Some(CacheConfig { ttl_ms: 500.0, capacity: 4096 }),
-            })
-            .build()
-            .unwrap();
+        let mk_cfg = |admission: AdmissionConfig| {
+            ClusterConfig::builder()
+                .nodes(trio())
+                .policy(RoutePolicy::PowerOfTwoChoices)
+                .serve(
+                    ServeConfig::builder()
+                        .clock(ClockKind::Virtual)
+                        .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
+                        .queue_capacity(1024)
+                        .admission(Some(admission))
+                        .build()
+                        .unwrap(),
+                )
+                .drain(Some(DrainScenario {
+                    node: 0,
+                    at_ms: 3_000.0,
+                    rejoin_at_ms: 6_000.0,
+                }))
+                .frontend(FrontEndConfig {
+                    router_shards: shards,
+                    gossip_ms: 5.0,
+                    cache: Some(CacheConfig { ttl_ms: 500.0, capacity: 4096 }),
+                })
+                .build()
+                .unwrap()
+        };
+        let cfg = mk_cfg(AdmissionConfig::default());
         let load = LoadGenConfig::builder()
             .rps(200.0)
             .seconds(10.0)
@@ -280,5 +286,113 @@ fn full_dynamic_stack_is_bit_identical_per_seed_and_shards() {
         assert_eq!((a.metrics.scale_ups(), a.metrics.scale_downs()),
                    (b.metrics.scale_ups(), b.metrics.scale_downs()),
                    "{tag}: replication actions diverged");
+
+        // Differential arm: `--admission predictive` with the predictor
+        // pinned COLD (warmup = usize::MAX, so no station ever probes
+        // it) must fall back to the snapshot formula on every decision
+        // — same outcome stream, slots, dispatch, routing, and
+        // control-plane actions as the snapshot arm, bit for bit.
+        let cold = run_cluster(
+            &mk_cfg(AdmissionConfig {
+                mode: AdmissionMode::Predictive,
+                predictor_warmup: usize::MAX,
+                ..Default::default()
+            }),
+            &load,
+        )
+        .unwrap();
+        assert_cluster_conserved(&cold, &format!("{tag} cold-predictive"));
+        assert_eq!(a.metrics.outcomes(), cold.metrics.outcomes(),
+                   "{tag}: cold predictive arm diverged from snapshot");
+        assert_eq!(a.slots, cold.slots, "{tag}: cold arm slots diverged");
+        assert_eq!(a.attempts, cold.attempts);
+        assert_eq!(a.leftover, cold.leftover,
+                   "{tag}: cold arm leftover diverged");
+        assert_eq!(dispatched(&a), dispatched(&cold),
+                   "{tag}: cold arm per-node dispatch diverged");
+        assert_eq!(a.frontend.decisions, cold.frontend.decisions,
+                   "{tag}: cold arm routing decisions diverged");
+        assert_eq!(a.frontend.misroutes, cold.frontend.misroutes,
+                   "{tag}: cold arm misroutes diverged");
+        assert_eq!(a.frontend.cache, cold.frontend.cache,
+                   "{tag}: cold arm cache stats diverged");
+        assert_eq!(a.metrics.migrations(), cold.metrics.migrations(),
+                   "{tag}: cold arm migrations diverged");
+        assert_eq!((a.metrics.scale_ups(), a.metrics.scale_downs()),
+                   (cold.metrics.scale_ups(), cold.metrics.scale_downs()),
+                   "{tag}: cold arm replication actions diverged");
+        // The two arms differ ONLY in the counters: the snapshot arm
+        // never priced headroom; the cold arm priced every engine-gate
+        // decision and fell back on every single one.
+        assert_eq!(a.metrics.headroom_decisions(), 0,
+                   "{tag}: snapshot arm counted headroom decisions");
+        assert!(cold.metrics.headroom_decisions() > 0,
+                "{tag}: cold predictive arm never hit the gate");
+        assert_eq!(cold.metrics.headroom_fallbacks(),
+                   cold.metrics.headroom_decisions(),
+                   "{tag}: a pinned-cold predictor must always fall back");
     }
+}
+
+/// Predictive SLO-aware routing (the warm arm): predictions flow
+/// engine → gauge lanes → gossip → router, and the whole run stays
+/// bit-deterministic per seed — the headroom counters included. Routing
+/// headroom decisions are counted once per routed arrival, exactly the
+/// front end's decision count.
+#[test]
+fn warm_predictive_slo_routing_is_deterministic_and_counted() {
+    let cfg = ClusterConfig::builder()
+        .nodes(trio())
+        .policy(RoutePolicy::SloAware)
+        .serve(
+            ServeConfig::builder()
+                .clock(ClockKind::Virtual)
+                .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
+                .queue_capacity(1024)
+                .admission(Some(AdmissionConfig {
+                    mode: AdmissionMode::Predictive,
+                    ..Default::default()
+                }))
+                .build()
+                .unwrap(),
+        )
+        .frontend(FrontEndConfig {
+            router_shards: 2,
+            gossip_ms: 5.0,
+            cache: None,
+        })
+        .build()
+        .unwrap();
+    let load = LoadGenConfig::builder()
+        .rps(150.0)
+        .seconds(6.0)
+        .seed(4243)
+        .slo_scale(3.0)
+        .build()
+        .unwrap();
+    let a = run_cluster(&cfg, &load).unwrap();
+    let b = run_cluster(&cfg, &load).unwrap();
+    assert_cluster_conserved(&a, "warm predictive");
+    assert!(a.metrics.completed() > 0);
+
+    // Every routed arrival was priced as one headroom decision.
+    assert_eq!(a.frontend.headroom_decisions, a.frontend.decisions,
+               "routing headroom decisions != front-end decisions");
+    assert!(a.frontend.headroom_fallbacks <= a.frontend.headroom_decisions);
+    // The gate priced its own decisions on top of the router's.
+    assert!(a.metrics.headroom_decisions() >= a.frontend.headroom_decisions);
+    assert!(a.metrics.headroom_fallbacks() <= a.metrics.headroom_decisions());
+
+    // Bit-determinism of the warm predictive arm, counters included.
+    assert_eq!(a.metrics.outcomes(), b.metrics.outcomes(),
+               "warm predictive outcome streams diverged");
+    assert_eq!(a.slots, b.slots);
+    assert_eq!(a.attempts, b.attempts);
+    assert_eq!(a.leftover, b.leftover);
+    assert_eq!(a.frontend.decisions, b.frontend.decisions);
+    assert_eq!((a.frontend.headroom_decisions, a.frontend.headroom_fallbacks),
+               (b.frontend.headroom_decisions, b.frontend.headroom_fallbacks),
+               "headroom counters diverged across identical runs");
+    assert_eq!((a.metrics.headroom_decisions(), a.metrics.headroom_fallbacks()),
+               (b.metrics.headroom_decisions(), b.metrics.headroom_fallbacks()));
 }

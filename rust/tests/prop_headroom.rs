@@ -1,0 +1,278 @@
+//! Property layer pinning the headroom algebra behind predictive
+//! admission & routing (`predictor::headroom`): monotonicity in queue
+//! depth and RTT, antitonicity in slack, quantile ordering
+//! (mean-infeasible ⇒ p95-infeasible), and the fallback contract —
+//! the snapshot formula engages iff the predictor is cold/NaN,
+//! including the all-NaN lane aggregation an ex-drainer pool publishes.
+//!
+//! Runs on the `util::prop` mini-framework; replay any failure with
+//! `BCEDGE_PROP_SEED=<seed>`.
+
+use bcedge::predictor::{batches_ahead, headroom_ms, predicted_batch_cost_ms,
+                        AdmissionMode, AdmissionQuantile};
+use bcedge::serve::ingress::MAX_POOL;
+use bcedge::serve::{AdmissionConfig, SharedGauges};
+use bcedge::util::prop::{check, check_with, Config};
+use bcedge::util::rng::Pcg32;
+use bcedge::workload::models::ModelId;
+
+/// A plausible decision point: queue depth, batching quantum, per-batch
+/// cost, network RTT, and remaining slack.
+fn decision_point(rng: &mut Pcg32) -> (usize, usize, f64, f64, f64) {
+    (
+        rng.range(0, 129),            // queue_len
+        rng.range(1, 17),             // ref_batch
+        1.0 + rng.f64() * 99.0,       // batch_cost_ms
+        rng.f64() * 40.0,             // rtt_ms
+        rng.f64() * 500.0 - 50.0,     // slack_ms (sometimes DOA)
+    )
+}
+
+/// An inflation estimate as a station might see it: mostly warm (finite
+/// positive), sometimes the cold/failed shapes (NaN, zero, negative,
+/// infinite) the fallback contract must catch.
+fn inflation_like(rng: &mut Pcg32) -> f64 {
+    match rng.below(8) {
+        0 => f64::NAN,
+        1 => 0.0,
+        2 => -(0.1 + rng.f64()),
+        3 => f64::INFINITY,
+        _ => 0.1 + rng.f64() * 7.9,
+    }
+}
+
+/// A dispersion factor: finite (possibly sub-1) or unknown (NaN).
+fn p95_factor_like(rng: &mut Pcg32) -> f64 {
+    if rng.below(4) == 0 { f64::NAN } else { 0.5 + rng.f64() * 2.5 }
+}
+
+#[test]
+fn headroom_monotone_in_queue_and_rtt_antitone_in_slack() {
+    check(&decision_point, |&(q, rb, cost, rtt, slack)| {
+        let h = headroom_ms(q, rb, cost, rtt, slack);
+        if !h.is_finite() {
+            return Err(format!("headroom not finite: {h}"));
+        }
+        // More queue ahead never shrinks headroom (nondecreasing in
+        // ref_batch quanta)...
+        for dq in [1usize, rb, 3 * rb + 1] {
+            let h2 = headroom_ms(q + dq, rb, cost, rtt, slack);
+            if h2 < h {
+                return Err(format!("queue {q}+{dq} shrank headroom: \
+                                    {h2} < {h}"));
+            }
+        }
+        // ...a full extra batch quantum strictly grows it...
+        let h_batch = headroom_ms(q + rb, rb, cost, rtt, slack);
+        if h_batch <= h {
+            return Err(format!("+1 batch quantum did not grow headroom: \
+                                {h_batch} <= {h}"));
+        }
+        // ...farther nodes are strictly worse...
+        let h_rtt = headroom_ms(q, rb, cost, rtt + 5.0, slack);
+        if h_rtt <= h {
+            return Err(format!("+5 ms rtt did not grow headroom: \
+                                {h_rtt} <= {h}"));
+        }
+        // ...and more slack strictly helps.
+        let h_slack = headroom_ms(q, rb, cost, rtt, slack + 5.0);
+        if h_slack >= h {
+            return Err(format!("+5 ms slack did not shrink headroom: \
+                                {h_slack} >= {h}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batches_ahead_matches_snapshot_quantization() {
+    check(
+        &|rng: &mut Pcg32| (rng.range(0, 4096), rng.range(0, 64)),
+        |&(q, rb)| {
+            let b = batches_ahead(q, rb);
+            // Counting its own batch, never zero, and exactly the
+            // snapshot formula's integer division (ref_batch 0 clamps).
+            let want = q / rb.max(1) + 1;
+            if b != want {
+                return Err(format!("batches_ahead({q}, {rb}) = {b}, \
+                                    want {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A configuration the mean quantile refuses is refused at p95 too: the
+/// dispersion factor is clamped to ≥ 1 (NaN degrades to exactly 1), so
+/// p95 pricing can only be stricter.
+#[test]
+fn mean_infeasible_implies_p95_infeasible() {
+    check_with(
+        Config { cases: 512, ..Default::default() },
+        &|rng: &mut Pcg32| {
+            let (q, rb, _, _, slack) = decision_point(rng);
+            (q, rb, 1.0 + rng.f64() * 99.0, inflation_like(rng),
+             p95_factor_like(rng), slack)
+        },
+        |&(q, rb, isolated, inflation, factor, slack)| {
+            let cfg_mean = AdmissionConfig {
+                mode: AdmissionMode::Predictive,
+                ref_batch: rb,
+                ..Default::default()
+            };
+            let cfg_p95 = AdmissionConfig {
+                quantile: AdmissionQuantile::P95,
+                ..cfg_mean
+            };
+            let (d_mean, fb_mean) = cfg_mean.decide_predictive(
+                q, 30.0, isolated, slack, inflation, factor);
+            let (d_p95, fb_p95) = cfg_p95.decide_predictive(
+                q, 30.0, isolated, slack, inflation, factor);
+            if fb_mean != fb_p95 {
+                return Err(format!(
+                    "quantiles disagree on fallback: {fb_mean} vs {fb_p95}"));
+            }
+            if d_mean.is_err() && d_p95.is_ok() {
+                return Err("mean shed but p95 admitted".into());
+            }
+            // And at the cost level directly: both quantiles agree on
+            // whether a prediction exists, and p95 never under-prices.
+            let mean = predicted_batch_cost_ms(isolated, inflation, factor,
+                                               AdmissionQuantile::Mean);
+            let p95 = predicted_batch_cost_ms(isolated, inflation, factor,
+                                              AdmissionQuantile::P95);
+            match (mean, p95) {
+                (Some(m), Some(p)) if p < m => {
+                    Err(format!("p95 cost {p} below mean {m}"))
+                }
+                (Some(_), None) | (None, Some(_)) => {
+                    Err("quantiles disagree on predictor coldness".into())
+                }
+                _ => Ok(()),
+            }
+        },
+    );
+}
+
+/// The fallback contract, exactly: `decide_predictive` reports a
+/// snapshot fallback iff the predictor's cost is `None` (cold/NaN/
+/// non-positive inflation or a non-finite product) — and a dead-on-
+/// arrival request sheds on both paths without counting as a fallback.
+#[test]
+fn fallback_engages_iff_predictor_is_cold() {
+    check_with(
+        Config { cases: 512, ..Default::default() },
+        &|rng: &mut Pcg32| {
+            let (q, rb, _, _, slack) = decision_point(rng);
+            (q, rb, 1.0 + rng.f64() * 99.0, inflation_like(rng),
+             p95_factor_like(rng), slack, 5.0 + rng.f64() * 95.0)
+        },
+        |&(q, rb, isolated, inflation, factor, slack, mean_batch)| {
+            let cfg = AdmissionConfig {
+                mode: AdmissionMode::Predictive,
+                ref_batch: rb,
+                ..Default::default()
+            };
+            let (d, fell_back) = cfg.decide_predictive(
+                q, mean_batch, isolated, slack, inflation, factor);
+            if slack <= 0.0 {
+                return if d.is_err() && !fell_back {
+                    Ok(())
+                } else {
+                    Err("DOA must shed without a fallback".into())
+                };
+            }
+            let cold = predicted_batch_cost_ms(isolated, inflation, factor,
+                                               cfg.quantile)
+                .is_none();
+            if fell_back != cold {
+                return Err(format!(
+                    "fallback {fell_back} but predictor cold = {cold}"));
+            }
+            if fell_back {
+                // The fallback IS the snapshot oracle, decision-for-
+                // decision.
+                let snap = cfg.decide(q, mean_batch, isolated, slack);
+                if d != snap {
+                    return Err(format!(
+                        "fallback decision {d:?} != snapshot {snap:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Gauge-lane aggregation feeding the ingress fast path: the pool-wide
+/// inflation is the finite-positive-lane mean (NaN iff every lane is
+/// cold — e.g. a pool of ex-drainers publishing NaN), the p95 factor the
+/// finite-lane max, and the aggregate triggers the fallback iff no lane
+/// is live.
+#[test]
+fn nan_lanes_aggregate_to_the_fallback_trigger() {
+    check_with(
+        Config { cases: 512, ..Default::default() },
+        &|rng: &mut Pcg32| {
+            let lanes: Vec<(f64, f64)> = (0..MAX_POOL)
+                .map(|_| (inflation_like(rng), p95_factor_like(rng)))
+                .collect();
+            lanes
+        },
+        |lanes: &Vec<(f64, f64)>| {
+            let g = SharedGauges::new();
+            let model = ModelId::Res;
+            for (w, &(inflation, factor)) in lanes.iter().enumerate() {
+                g.publish_prediction(model, w, inflation, factor);
+            }
+            let live: Vec<f64> = lanes
+                .iter()
+                .map(|&(i, _)| i)
+                .filter(|i| i.is_finite() && *i > 0.0)
+                .collect();
+            let agg = g.predicted_inflation(model);
+            if live.is_empty() {
+                if !agg.is_nan() {
+                    return Err(format!("all-cold lanes aggregated to {agg}"));
+                }
+                // ...and NaN is exactly what forces the snapshot fallback.
+                if predicted_batch_cost_ms(20.0, agg, g.p95_factor(),
+                                           AdmissionQuantile::P95)
+                    .is_some()
+                {
+                    return Err("cold aggregate did not trigger fallback"
+                        .into());
+                }
+            } else {
+                let mean = live.iter().sum::<f64>() / live.len() as f64;
+                if (agg - mean).abs() > 1e-9 * mean.abs().max(1.0) {
+                    return Err(format!(
+                        "aggregate {agg} != finite-lane mean {mean}"));
+                }
+                if predicted_batch_cost_ms(20.0, agg, g.p95_factor(),
+                                           AdmissionQuantile::P95)
+                    .is_none()
+                {
+                    return Err("live aggregate fell back anyway".into());
+                }
+            }
+            let finite_factors: Vec<f64> = lanes
+                .iter()
+                .map(|&(_, f)| f)
+                .filter(|f| f.is_finite())
+                .collect();
+            let p95 = g.p95_factor();
+            match finite_factors
+                .iter()
+                .copied()
+                .fold(None::<f64>, |m, f| Some(m.map_or(f, |m| m.max(f))))
+            {
+                None if p95.is_nan() => Ok(()),
+                None => Err(format!("no finite factor lane but p95 {p95}")),
+                Some(max) if (p95 - max).abs() < 1e-12 => Ok(()),
+                Some(max) => {
+                    Err(format!("p95 factor {p95} != lane max {max}"))
+                }
+            }
+        },
+    );
+}
