@@ -22,7 +22,10 @@
 //! 5. **telemetry overhead** — the section-1 serving run with request
 //!    tracing off / 1-in-64 sampled / tracing every request, so the
 //!    observability off-switch's zero-cost claim (and full tracing's
-//!    price) is a measured number, not an assertion.
+//!    price) is a measured number, not an assertion;
+//! 6. **llm session serving** — the autoregressive session tier on the
+//!    virtual cluster: session decode steps/sec plus TTFT and TPOT p95
+//!    at 2 and 8 decode steps, with link-contention pricing off and on.
 //!
 //! Writes `BENCH_hotpath.json` at the repo root (falling back to the
 //! crate root when run elsewhere). Compare across commits by re-running
@@ -157,6 +160,7 @@ fn router_run(view: &ClusterView, shards: usize, cache: Option<&ResultCache>,
                                 service_est_ms: p.gauges
                                     .service_est_ms(model),
                                 predicted_e2e_ms: f64::NAN,
+                                tx_est_ms: 0.0,
                             });
                         }
                         let pick = router.route(&views, 1e9);
@@ -603,6 +607,103 @@ fn main() {
         ]));
     }
     sections.push(("telemetry_overhead", arr(tele)));
+
+    // ---------------------------------------------------------------
+    // 6. LLM session serving (session-tier PR): the virtual cluster
+    //    running multi-round sessions with dual TTFT/TPOT SLOs, at 2
+    //    and 8 decode steps, with contention pricing off and on. Steps
+    //    are spawned inside the event loop, so steps/sec prices the
+    //    whole re-enqueue seam (outcome scan + spawn + link charge +
+    //    delivery), not just arithmetic.
+    // ---------------------------------------------------------------
+    banner("llm session serving (virtual cluster, dual TTFT/TPOT SLOs)");
+    use bcedge::cluster::{ClusterConfig, FrontEndConfig, NodeSpec,
+                          run_cluster};
+    use bcedge::platform::PlatformSpec;
+    use bcedge::serve::{ClockKind, LoadGenConfig, SchedulerSpec, ServeConfig};
+    use bcedge::workload::session::step_of;
+    use bcedge::workload::SessionSpec;
+    let p95 = |mut v: Vec<f64>| -> f64 {
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[(v.len() - 1) * 95 / 100]
+    };
+    let mut llm = Vec::new();
+    for decode_steps in [2u32, 8] {
+        for contention in [false, true] {
+            let mut nodes = vec![
+                NodeSpec::new(PlatformSpec::xavier_nx(), 2, 2.0),
+                NodeSpec::new(PlatformSpec::xavier_nx(), 2, 2.0),
+            ];
+            for node in &mut nodes {
+                node.net = node.net.with_bandwidth(8.0);
+            }
+            let cfg = ClusterConfig::builder()
+                .nodes(nodes)
+                .policy(RoutePolicy::SloAware)
+                .serve(
+                    ServeConfig::builder()
+                        .clock(ClockKind::Virtual)
+                        .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
+                        .admission(None)
+                        .queue_capacity(4096)
+                        .build()
+                        .unwrap(),
+                )
+                .frontend(FrontEndConfig {
+                    contention_pricing: contention,
+                    ..Default::default()
+                })
+                .build()
+                .unwrap();
+            let load = LoadGenConfig::builder()
+                .rps(80.0)
+                .seconds(10.0)
+                .seed(0xBCE)
+                .slo_scale(3.0)
+                .session(Some(SessionSpec {
+                    decode_steps,
+                    ttft_slo_scale: 2.0,
+                    tpot_ms: 300.0,
+                }))
+                .build()
+                .unwrap();
+            let t0 = std::time::Instant::now();
+            let report = run_cluster(&cfg, &load).expect("llm bench run");
+            let wall_s = t0.elapsed().as_secs_f64();
+            let steps = report.frontend.session_steps;
+            let steps_per_sec = steps as f64 / wall_s.max(1e-9);
+            let ttft_p95 = p95(report.metrics.outcomes().iter()
+                .filter(|o| step_of(o.id) == 0)
+                .map(|o| o.e2e_ms)
+                .collect());
+            let tpot_p95 = p95(report.metrics.outcomes().iter()
+                .filter(|o| step_of(o.id) > 0)
+                .map(|o| o.e2e_ms)
+                .collect());
+            println!(
+                "{decode_steps:>2} steps  pricing {}  {steps:>7} spawned  \
+                 {steps_per_sec:>10.0} steps/s  ttft p95 {ttft_p95:>8.2} ms  \
+                 tpot p95 {tpot_p95:>8.2} ms",
+                if contention { "on " } else { "off" }
+            );
+            llm.push(obj(vec![
+                ("decode_steps", num(decode_steps as f64)),
+                ("contention_pricing",
+                 s(if contention { "on" } else { "off" })),
+                ("sessions", num(report.metrics.sessions_started() as f64)),
+                ("steps_spawned", num(steps as f64)),
+                ("steps_per_sec", num(steps_per_sec)),
+                ("ttft_p95_ms", num(ttft_p95)),
+                ("tpot_p95_ms", num(tpot_p95)),
+                ("ttft_misses", num(report.metrics.ttft_misses() as f64)),
+                ("tpot_misses", num(report.metrics.tpot_misses() as f64)),
+            ]));
+        }
+    }
+    sections.push(("llm_serving", arr(llm)));
 
     // ---------------------------------------------------------------
     // Emit BENCH_hotpath.json at the repo root.

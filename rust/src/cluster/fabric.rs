@@ -38,13 +38,15 @@
 //! `dispatched + router_sheds + cache_served == attempts`.
 
 use super::cache::{digest_for, CacheLookup, ResultCache};
+use super::netmodel::{payload_bytes, token_payload_bytes, LinkLoad};
 use super::node::FinishedNode;
 use super::router::{NodeView, Router};
 use super::view::{ClusterView, StalenessStat, ViewReader};
 use super::{count_routing_fallback, merge_node, predicted_e2e,
             predictive_quantile, ClusterConfig, ClusterReport,
             FrontEndReport};
-use crate::metrics::Metrics;
+use crate::metrics::{Metrics, ShedReason};
+use crate::workload::session::step_of;
 use crate::serve::fabric::ServeFabric;
 use crate::serve::{ClockKind, GaugeSnapshot, LoadGenConfig, ServeConfig};
 use crate::sim::EventHeap;
@@ -100,8 +102,12 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
     let n = cfg.nodes.len();
     let k = cfg.frontend.router_shards;
     let gossip_ms = cfg.frontend.gossip_ms;
-    let trace = load.generator().generate_horizon(horizon_ms);
-    let attempts = trace.len() as u64;
+    let trace = load.head_trace(horizon_ms);
+    // Sessions grow the attempt count as they spawn decode steps: every
+    // spawned step is a genuine offered request, so conservation stays
+    // `outcomes + sheds + cache_served + leftover == attempts`.
+    let mut attempts = trace.len() as u64;
+    let session = load.session;
 
     // One serve fabric per node: the node's whole dynamic pool
     // (workers, rebalancer, replication) as logical processes.
@@ -143,6 +149,10 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
     let mut link_rngs: Vec<Pcg32> = (0..k)
         .map(|s| Pcg32::new(load.seed ^ 0x11_4E, s as u64))
         .collect();
+    // Per-node shared-link contention state. With the default infinite
+    // bandwidth every base transfer time is 0, so the trackers are never
+    // written and pre-existing runs stay bit-identical.
+    let mut links: Vec<LinkLoad> = (0..n).map(|_| LinkLoad::new()).collect();
     let cache = cfg.frontend.cache.map(ResultCache::new);
 
     let mut heap: EventHeap<Ev> = EventHeap::new();
@@ -185,6 +195,7 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
     let mut staleness = StalenessStat::default();
     let mut views: Vec<NodeView> = Vec::with_capacity(n);
     let mut wake: Vec<usize> = Vec::new();
+    let mut session_buf: Vec<Request> = Vec::new();
     let trace_sample = cfg.serve.telemetry.trace_sample;
     let mut fe_ring = TraceRing::new(TRACE_RING_CAP);
     let quantile = predictive_quantile(cfg);
@@ -260,6 +271,16 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                                 predicted_e2e_ms: predicted_e2e(
                                     quantile, &p.gauges, model,
                                     cfg.nodes[i].net.rtt_ms),
+                                tx_est_ms: if cfg.frontend.contention_pricing {
+                                    links[i].estimate_ms(
+                                        t,
+                                        cfg.nodes[i]
+                                            .net
+                                            .transfer_ms(payload_bytes(model)),
+                                    )
+                                } else {
+                                    0.0
+                                },
                             }
                         } else {
                             NodeView {
@@ -268,6 +289,7 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                                 backlog_ms: f64::INFINITY,
                                 service_est_ms: f64::INFINITY,
                                 predicted_e2e_ms: f64::NAN,
+                                tx_est_ms: 0.0,
                             }
                         });
                     }
@@ -290,10 +312,45 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                                 views[i].active = false;
                             }
                             Ok(i) => {
+                                // A session whose per-round estimate on
+                                // the chosen node cannot hold cadence is
+                                // aborted at admission: every decode step
+                                // would be born late, so the head's slots
+                                // are better spent elsewhere.
+                                if let Some(spec) = session {
+                                    if !spec.cadence_feasible(
+                                        views[i].service_est_ms,
+                                    ) {
+                                        router_metrics.record_shed(
+                                            model,
+                                            ShedReason::SessionAbort,
+                                        );
+                                        record_fe(
+                                            &mut fe_ring, trace_sample, idx,
+                                            shard, &r,
+                                            TraceVerdict::Shed(
+                                                ShedReason::SessionAbort,
+                                            ),
+                                        );
+                                        break;
+                                    }
+                                    router_metrics.record_session_start();
+                                }
                                 let mut routed = r.clone();
+                                // Physical charges: RTT (+jitter), then
+                                // the payload's contention-inflated link
+                                // time. Charged on BOTH pricing modes —
+                                // pricing changes what routing sees, not
+                                // what the wire costs.
                                 routed.transmission_ms += cfg.nodes[i]
                                     .net
-                                    .delay_ms(&mut link_rngs[shard]);
+                                    .delay_ms(&mut link_rngs[shard])
+                                    + links[i].charge_ms(
+                                        t,
+                                        cfg.nodes[i]
+                                            .net
+                                            .transfer_ms(payload_bytes(model)),
+                                    );
                                 if let (Some(c), Some(digest)) =
                                     (cache.as_ref(), lead_digest)
                                 {
@@ -351,10 +408,56 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                     heap.schedule_us(at_us, pid_base[node] + 1 + w as u32,
                                      Ev::Activate { node, w });
                 }
-                // Completion feed: resolve pending cache leaders at
-                // their ACTUAL completion times (the wall arm's
-                // collector, without the thread).
-                if let Some(c) = cache.as_ref() {
+                // Completion feed. Sessions and the result cache are
+                // mutually exclusive (`run_cluster` rejects the combo),
+                // so each consumes the outcome stream alone.
+                if let Some(spec) = session {
+                    // Completed rounds spawn their successors on the
+                    // SAME node (decode state lives where the head ran —
+                    // re-routing a step would re-ship it). The step pays
+                    // the token payload's contention-inflated link time.
+                    fabrics[node].for_new_outcomes(|o| {
+                        router_metrics.record_dual_slo(
+                            step_of(o.id), o.violated);
+                        if !o.dropped {
+                            if let Some(next) = spec.next_step(
+                                o.id, o.model, o.completed_ms, 0.0)
+                            {
+                                session_buf.push(next);
+                            }
+                        }
+                    });
+                    for mut s in session_buf.drain(..) {
+                        attempts += 1;
+                        router_metrics.record_session_step();
+                        if truth_active[node] {
+                            s.transmission_ms += links[node].charge_ms(
+                                s.arrival_ms,
+                                cfg.nodes[node]
+                                    .net
+                                    .transfer_ms(token_payload_bytes(s.model)),
+                            );
+                            dispatched[node] += 1;
+                            fabrics[node].deliver(s, &mut wake);
+                        } else {
+                            // The node drained mid-session: the step has
+                            // nowhere to go (state is node-local), so
+                            // the session ends as an edge shed.
+                            router_metrics.record_shed(
+                                s.model, ShedReason::SessionAbort);
+                        }
+                    }
+                    for w2 in wake.drain(..) {
+                        heap.schedule_us(
+                            firing.time_us,
+                            pid_base[node] + 1 + w2 as u32,
+                            Ev::Activate { node, w: w2 },
+                        );
+                    }
+                } else if let Some(c) = cache.as_ref() {
+                    // Resolve pending cache leaders at their ACTUAL
+                    // completion times (the wall arm's collector,
+                    // without the thread).
                     fabrics[node].for_new_outcomes(|o| {
                         c.on_completed(o.id, o.completed_ms);
                     });
@@ -385,6 +488,8 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
                        segments: vec![report],
                    });
     }
+    let session_steps = metrics.session_steps_spawned();
+    let session_aborts = metrics.shed_by_reason(ShedReason::SessionAbort);
     ClusterReport {
         metrics,
         horizon_ms,
@@ -403,6 +508,8 @@ pub(crate) fn run_virtual_open(cfg: &ClusterConfig, load: &LoadGenConfig,
             staleness_max_ms: staleness.max_ms,
             headroom_decisions,
             headroom_fallbacks,
+            session_steps,
+            session_aborts,
             cache: cache.map(|c| c.stats()),
         },
         per_node,

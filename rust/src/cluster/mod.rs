@@ -71,10 +71,12 @@ pub mod view;
 
 pub use cache::{CacheConfig, CacheLookup, CacheStats, ResultCache,
                 VirtualCache, digest_for};
-pub use netmodel::NetModel;
+pub use netmodel::{LinkLoad, NetModel};
 pub use node::{EdgeNode, FinishedNode, NodeSpec, NodeState};
 pub use router::{NodeView, RoutePolicy, Router};
 pub use view::{ClusterView, NodePublished, StalenessStat, ViewReader};
+
+use netmodel::{payload_bytes, token_payload_bytes};
 
 use crate::metrics::{Metrics, ShedReason};
 use crate::predictor::{AdmissionMode, AdmissionQuantile};
@@ -82,13 +84,15 @@ use crate::telemetry::{RequestTrace, TraceReport, TraceRing, TraceVerdict,
                        TRACE_RING_CAP};
 use crate::serve::worker::ServeEvent;
 use crate::serve::{ClockKind, GaugeSnapshot, LoadGenConfig, LoadMode,
-                   ServeConfig, INCARNATION_ID_STRIDE};
+                   ServeConfig, INCARNATION_ID_STRIDE, NODE_ID_STRIDE};
 use crate::util::rng::Pcg32;
 use crate::util::time::WallClock;
 use crate::workload::models::ModelId;
 use crate::workload::request::Request;
+use crate::workload::session::SessionSpec;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 /// Take one node out of the cluster mid-run and bring it back: routing
@@ -119,11 +123,25 @@ pub struct FrontEndConfig {
     pub gossip_ms: f64,
     /// Optional deduplicating result cache in front of routing.
     pub cache: Option<CacheConfig>,
+    /// Price each candidate node's link contention into routing
+    /// (`--net-pricing contention`, the default): SLO-aware and
+    /// predictive routing add the payload's contention-inflated
+    /// transfer time to the node's cost. `false` is static-RTT pricing:
+    /// the wire is still CHARGED per dispatch (physics doesn't change),
+    /// but routing only sees the base RTT — the baseline the acceptance
+    /// experiment compares against. No effect on infinite-bandwidth
+    /// links, where every transfer term is 0 either way.
+    pub contention_pricing: bool,
 }
 
 impl Default for FrontEndConfig {
     fn default() -> Self {
-        FrontEndConfig { router_shards: 1, gossip_ms: 5.0, cache: None }
+        FrontEndConfig {
+            router_shards: 1,
+            gossip_ms: 5.0,
+            cache: None,
+            contention_pricing: true,
+        }
     }
 }
 
@@ -337,6 +355,13 @@ pub struct FrontEndReport {
     /// Predictive decisions where ≥ 1 active candidate had no finite
     /// prediction and was priced by the snapshot oracle instead.
     pub headroom_fallbacks: u64,
+    /// Decode steps the session tier spawned back into the cluster
+    /// (0 for one-shot workloads). Every one is an extra attempt.
+    pub session_steps: u64,
+    /// Sessions ended by the tier itself: heads aborted at admission
+    /// (cadence infeasible on the chosen node) plus steps orphaned by a
+    /// mid-session drain.
+    pub session_aborts: u64,
     /// Cache dispositions (None when the cache was off).
     pub cache: Option<CacheStats>,
 }
@@ -435,6 +460,17 @@ impl ClusterReport {
                 self.frontend.headroom_fallbacks,
             );
         }
+        if m.sessions_started() > 0 {
+            println!(
+                "sessions: {} started | {} decode steps spawned | \
+                 {} aborted | TTFT misses {} | TPOT misses {}",
+                m.sessions_started(),
+                self.frontend.session_steps,
+                self.frontend.session_aborts,
+                m.ttft_misses(),
+                m.tpot_misses(),
+            );
+        }
         if let Some(c) = &self.frontend.cache {
             println!(
                 "cache: {:.1}% hit-rate | {} hits | {} coalesced | \
@@ -479,14 +515,38 @@ impl ClusterReport {
 pub fn run_cluster(cfg: &ClusterConfig, load: &LoadGenConfig)
                    -> Result<ClusterReport, String> {
     cfg.validate()?;
+    if load.session.is_some() && cfg.frontend.cache.is_some() {
+        return Err(
+            "--workload llm cannot run with the result cache — session \
+             rounds are stateful (each step extends its own context) and \
+             never dedupe"
+                .into(),
+        );
+    }
     let horizon_ms = load.seconds * 1e3;
     match (load.mode, cfg.serve.clock) {
         (LoadMode::Open, ClockKind::Virtual) => {
             Ok(fabric::run_virtual_open(cfg, load, horizon_ms))
         }
-        (LoadMode::Open, ClockKind::Wall) => {
-            Ok(run_wall_open(cfg, load, horizon_ms))
-        }
+        (LoadMode::Open, ClockKind::Wall) => match load.session {
+            Some(spec) => {
+                if cfg.frontend.router_shards != 1 {
+                    return Err(
+                        "--workload llm on the wall clock runs one router \
+                         shard (the completion loop is the only submitter \
+                         of decode steps) — drop --router-shards"
+                            .into(),
+                    );
+                }
+                Ok(run_wall_llm(cfg, load, horizon_ms, spec))
+            }
+            None => Ok(run_wall_open(cfg, load, horizon_ms)),
+        },
+        (LoadMode::Closed { .. }, _) if load.session.is_some() => Err(
+            "--workload llm needs the open loop (sessions are their own \
+             feedback loop)"
+                .into(),
+        ),
         (LoadMode::Closed { concurrency }, ClockKind::Wall) => Ok(
             run_wall_closed(cfg, load, horizon_ms, concurrency.max(1)),
         ),
@@ -550,14 +610,28 @@ struct FrontEndShard<'a> {
     /// (≥ 1 active candidate had no finite prediction).
     headroom_decisions: u64,
     headroom_fallbacks: u64,
+    /// Per-node link-contention trackers, shared across shards (`None`
+    /// when every link has infinite bandwidth — the lock is never taken
+    /// on pre-existing configurations).
+    links: Option<&'a [Mutex<LinkLoad>]>,
+    /// Price link contention into routing (vs static-RTT pricing). The
+    /// dispatch-side CHARGE happens either way.
+    contention_pricing: bool,
+    /// `Some` for LLM workloads: heads whose chosen node cannot hold
+    /// TPOT cadence are aborted at admission instead of dispatched.
+    session: Option<SessionSpec>,
 }
 
 impl<'a> FrontEndShard<'a> {
     fn new(shard: usize, cfg: &ClusterConfig, load: &LoadGenConfig,
            nodes: &'a [EdgeNode], cluster_view: &'a ClusterView,
-           cache: Option<&'a ResultCache>, clock: WallClock)
+           cache: Option<&'a ResultCache>, clock: WallClock,
+           links: Option<&'a [Mutex<LinkLoad>]>)
            -> FrontEndShard<'a> {
         FrontEndShard {
+            links,
+            contention_pricing: cfg.frontend.contention_pricing,
+            session: load.session,
             nodes,
             cluster_view,
             reader: ViewReader::new(cluster_view),
@@ -668,6 +742,16 @@ impl<'a> FrontEndShard<'a> {
                     predicted_e2e_ms: predicted_e2e(
                         self.predictive_quantile, &p.gauges, model,
                         node.spec.net.rtt_ms),
+                    tx_est_ms: match self.links {
+                        Some(links) if self.contention_pricing => links[i]
+                            .lock()
+                            .unwrap()
+                            .estimate_ms(
+                                now,
+                                node.spec.net.transfer_ms(payload_bytes(model)),
+                            ),
+                        _ => 0.0,
+                    },
                 }
             } else {
                 NodeView {
@@ -676,6 +760,7 @@ impl<'a> FrontEndShard<'a> {
                     backlog_ms: f64::INFINITY,
                     service_est_ms: f64::INFINITY,
                     predicted_e2e_ms: f64::NAN,
+                    tx_est_ms: 0.0,
                 }
             });
         }
@@ -691,10 +776,36 @@ impl<'a> FrontEndShard<'a> {
                 .route(&self.view_scratch, slo_ms - transmission_ms)
             {
                 Ok(i) => {
+                    // A session whose per-round estimate on the chosen
+                    // node cannot hold cadence is aborted at admission
+                    // (every decode step would be born late).
+                    if let Some(spec) = self.session {
+                        if !spec.cadence_feasible(
+                            self.view_scratch[i].service_est_ms,
+                        ) {
+                            self.router_metrics.record_shed(
+                                model, ShedReason::SessionAbort);
+                            return Err(ShedReason::SessionAbort);
+                        }
+                    }
                     let delay =
                         self.nodes[i].spec.net.delay_ms(&mut self.link_rng);
+                    // Charge the payload's contention-inflated transfer
+                    // time — on BOTH pricing modes, and before the node
+                    // answers: the bytes ship before a refusal (or a
+                    // stale-view misroute) can be learned.
+                    let transfer = match self.links {
+                        Some(links) => links[i].lock().unwrap().charge_ms(
+                            now,
+                            self.nodes[i]
+                                .spec
+                                .net
+                                .transfer_ms(payload_bytes(model)),
+                        ),
+                        None => 0.0,
+                    };
                     match self.nodes[i].try_dispatch(
-                        model, slo_ms, transmission_ms + delay)
+                        model, slo_ms, transmission_ms + delay + transfer)
                     {
                         Some(res) => return res,
                         None => {
@@ -802,6 +913,17 @@ fn publish_all(view: &ClusterView, nodes: &[EdgeNode], clock: &WallClock) {
     }
 }
 
+/// Per-node link-contention trackers for the wall drivers, or `None`
+/// when every link has infinite bandwidth — the common case, which then
+/// never takes a lock on the routing path.
+fn link_loads(cfg: &ClusterConfig) -> Option<Vec<Mutex<LinkLoad>>> {
+    if cfg.nodes.iter().any(|n| n.net.bw_mbps.is_finite()) {
+        Some(cfg.nodes.iter().map(|_| Mutex::new(LinkLoad::new())).collect())
+    } else {
+        None
+    }
+}
+
 /// Build and start the cluster's nodes.
 fn start_nodes(cfg: &ClusterConfig,
                events_tx: Option<mpsc::Sender<ServeEvent>>) -> Vec<EdgeNode> {
@@ -853,6 +975,8 @@ fn merge_shards(cfg: &ClusterConfig, shards: Vec<FrontEndShard<'_>>)
         staleness_max_ms: staleness.max_ms,
         headroom_decisions,
         headroom_fallbacks,
+        session_steps: metrics.session_steps_spawned(),
+        session_aborts: metrics.shed_by_reason(ShedReason::SessionAbort),
         cache: None, // filled by finish_wall once the collector drains
     };
     (metrics, attempts, frontend, telemetry)
@@ -940,6 +1064,7 @@ fn run_wall_open(cfg: &ClusterConfig, load: &LoadGenConfig,
     };
     let cluster_view = ClusterView::new(nodes.len());
     publish_all(&cluster_view, &nodes, &clock);
+    let links = link_loads(cfg);
 
     let stop_gossip = AtomicBool::new(false);
     let mut lifecycle = Lifecycle::new(cfg.drain);
@@ -958,7 +1083,7 @@ fn run_wall_open(cfg: &ClusterConfig, load: &LoadGenConfig,
             .map(|(shard, slice)| {
                 let mut fe = FrontEndShard::new(
                     shard, cfg, load, &nodes, &cluster_view,
-                    cache.as_deref(), clock);
+                    cache.as_deref(), clock, links.as_deref());
                 s.spawn(move || {
                     for (index, r) in slice {
                         let wait_ms = r.arrival_ms - fe.clock.now_ms();
@@ -1023,8 +1148,10 @@ fn run_wall_closed(cfg: &ClusterConfig, load: &LoadGenConfig,
     let clock = WallClock::new();
     let cluster_view = ClusterView::new(nodes.len());
     publish_all(&cluster_view, &nodes, &clock);
+    let links = link_loads(cfg);
     let mut fe = FrontEndShard::new(0, cfg, load, &nodes, &cluster_view,
-                                    cache.as_deref(), clock);
+                                    cache.as_deref(), clock,
+                                    links.as_deref());
     let mut lifecycle = Lifecycle::new(cfg.drain);
     let mut rng = Pcg32::seeded(load.seed);
     let mut rr = 0usize;
@@ -1107,6 +1234,123 @@ fn run_wall_closed(cfg: &ClusterConfig, load: &LoadGenConfig,
     let (metrics, attempts, frontend, telemetry) =
         merge_shards(cfg, vec![fe]);
     finish_wall(cfg, nodes, metrics, attempts, frontend, telemetry, cache,
+                None, lifecycle, horizon_actual)
+}
+
+/// Open loop, LLM-style sessions on the wall clock. Heads are paced from
+/// the arrival trace through the (single) front-end shard — routed,
+/// cadence-gated, link-charged like any other request — and the cluster
+/// completion stream drives the decode loops: each completed round
+/// re-submits the next step DIRECTLY to the node that served it (decode
+/// state is node-local; re-routing a step would re-ship it), paying the
+/// token payload's contention-inflated link time and the node's own
+/// admission gate. The serving node is recovered from the completion id
+/// itself — cluster ids are windowed per `(node, incarnation)`, so
+/// `id / NODE_ID_STRIDE - 1` names the node with no side table.
+///
+/// Single-threaded like [`run_wall_closed`] (one shard, in-loop gossip
+/// and lifecycle): the completion loop is the only submitter of steps,
+/// so shard fan-out has nothing to parallelize.
+fn run_wall_llm(cfg: &ClusterConfig, load: &LoadGenConfig, horizon_ms: f64,
+                spec: SessionSpec) -> ClusterReport {
+    let trace = load.head_trace(horizon_ms);
+    let (tx, rx) = mpsc::channel();
+    let nodes = start_nodes(cfg, Some(tx.clone()));
+    let clock = WallClock::new();
+    let cluster_view = ClusterView::new(nodes.len());
+    publish_all(&cluster_view, &nodes, &clock);
+    let links = link_loads(cfg);
+    let mut fe = FrontEndShard::new(0, cfg, load, &nodes, &cluster_view,
+                                    None, clock, links.as_deref());
+    let mut lifecycle = Lifecycle::new(cfg.drain);
+    // Live ingress id of every in-flight round → its step index.
+    let mut steps: HashMap<u64, u64> = HashMap::new();
+    let on_event = |ev: ServeEvent, fe: &mut FrontEndShard<'_>,
+                    steps: &mut HashMap<u64, u64>| {
+        let ServeEvent::Completed(c) = ev else { return };
+        let Some(k) = steps.remove(&c.id) else { return };
+        fe.router_metrics.record_dual_slo(k, c.violated);
+        if k >= spec.decode_steps as u64 {
+            return; // session complete
+        }
+        let node = (c.id / NODE_ID_STRIDE) as usize;
+        if node == 0 || node > nodes.len() {
+            return; // not a node-windowed id; nothing to re-dispatch to
+        }
+        let node = node - 1;
+        fe.attempts += 1;
+        fe.router_metrics.record_session_step();
+        let tx_ms = match &links {
+            Some(l) => l[node].lock().unwrap().charge_ms(
+                fe.clock.now_ms(),
+                cfg.nodes[node]
+                    .net
+                    .transfer_ms(token_payload_bytes(c.model)),
+            ),
+            None => 0.0,
+        };
+        match nodes[node].try_dispatch(c.model, spec.tpot_ms, tx_ms) {
+            Some(Ok(id)) => {
+                steps.insert(id, k + 1);
+            }
+            // The node's own admission gate accounted the shed.
+            Some(Err(_)) => {}
+            // Node draining/drained mid-session: the step has nowhere to
+            // go (decode state is node-local) — the session ends here.
+            None => {
+                fe.router_metrics
+                    .record_shed(c.model, ShedReason::SessionAbort);
+            }
+        }
+    };
+    let mut last_gossip = clock.now_ms();
+    for (index, r) in trace.into_iter().enumerate() {
+        loop {
+            lifecycle.tick(&nodes, clock.now_ms());
+            let now = clock.now_ms();
+            if now - last_gossip >= cfg.frontend.gossip_ms {
+                publish_all(&cluster_view, &nodes, &clock);
+                last_gossip = now;
+            }
+            let wait_ms = r.arrival_ms - clock.now_ms();
+            if wait_ms <= 0.0 {
+                break;
+            }
+            match rx.recv_timeout(Duration::from_secs_f64(
+                (wait_ms / 1e3).min(0.005),
+            )) {
+                Ok(ev) => on_event(ev, &mut fe, &mut steps),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if let FrontEndOutcome::Dispatched(id) =
+            fe.submit(index as u64, r.model, r.slo_ms, r.transmission_ms)
+        {
+            fe.router_metrics.record_session_start();
+            steps.insert(id, 0);
+        }
+    }
+    // Past the last head: keep the decode loops running to the horizon.
+    while clock.now_ms() < horizon_ms {
+        lifecycle.tick(&nodes, clock.now_ms());
+        let now = clock.now_ms();
+        if now - last_gossip >= cfg.frontend.gossip_ms {
+            publish_all(&cluster_view, &nodes, &clock);
+            last_gossip = now;
+        }
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(ev) => on_event(ev, &mut fe, &mut steps),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    let horizon_actual = clock.now_ms();
+    drop(tx);
+    drop(on_event);
+    let (metrics, attempts, frontend, telemetry) =
+        merge_shards(cfg, vec![fe]);
+    finish_wall(cfg, nodes, metrics, attempts, frontend, telemetry, None,
                 None, lifecycle, horizon_actual)
 }
 

@@ -7,12 +7,36 @@
 //! SLO-aware policy prices exactly that trade (a fast-but-far node can
 //! lose to a slower-but-near one).
 //!
-//! The model is deliberately small: a fixed base RTT per node plus an
-//! optional uniform jitter term. Base RTT is what routing feasibility is
-//! priced with (deterministic, so policy decisions are reproducible from
-//! a seed); jitter only perturbs what a dispatched request is charged.
+//! The model has two layers. The base layer is a fixed RTT per node plus
+//! an optional uniform jitter term: base RTT is what routing feasibility
+//! is priced with (deterministic, so policy decisions are reproducible
+//! from a seed); jitter only perturbs what a dispatched request is
+//! charged. The contention layer ([`NetModel::bw_mbps`] + [`LinkLoad`])
+//! models the link as a shared fair-share pipe: each transfer's base
+//! time is `payload / bandwidth`, and transfers overlapping in time
+//! inflate each other proportionally to how many share the link — so a
+//! heavy-payload dogpile on one node genuinely slows every transfer on
+//! that link, and contention-aware routing has something real to price.
+//! Bandwidth defaults to infinite, which keeps every pre-existing
+//! configuration (transfer time 0, no load tracking) bit-identical.
 
 use crate::util::rng::Pcg32;
+use crate::workload::models::{ModelId, ModelSpec};
+
+/// Bytes per input element (f32) — sizes a request's upload payload.
+const BYTES_PER_ELEM: f64 = 4.0;
+
+/// Per-request upload payload for one model, bytes (its input tensor).
+pub fn payload_bytes(model: ModelId) -> f64 {
+    ModelSpec::get(model).input_elems as f64 * BYTES_PER_ELEM
+}
+
+/// Per-step token payload for an autoregressive session, bytes (the
+/// decoded output streamed back each step — small next to the head's
+/// input upload, but it still shares the link).
+pub fn token_payload_bytes(model: ModelId) -> f64 {
+    ModelSpec::get(model).output_elems as f64 * BYTES_PER_ELEM
+}
 
 /// One node's link as seen from the cluster front-end.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -23,13 +47,25 @@ pub struct NetModel {
     /// `rtt_ms + U[0, jitter_ms)`. Zero (the default) keeps the link
     /// fully deterministic.
     pub jitter_ms: f64,
+    /// Shared link capacity, Mbit/s. Finite bandwidth makes every
+    /// dispatched payload pay `payload / bw`, inflated by concurrent
+    /// transfers on the same link (see [`LinkLoad`]). The default
+    /// (`f64::INFINITY`) zeroes the term entirely.
+    pub bw_mbps: f64,
 }
 
 impl NetModel {
     /// A jitter-free link with the given round-trip time.
     pub fn fixed(rtt_ms: f64) -> Self {
         assert!(rtt_ms >= 0.0);
-        NetModel { rtt_ms, jitter_ms: 0.0 }
+        NetModel { rtt_ms, jitter_ms: 0.0, bw_mbps: f64::INFINITY }
+    }
+
+    /// The same link with a finite shared capacity, Mbit/s.
+    pub fn with_bandwidth(mut self, bw_mbps: f64) -> Self {
+        assert!(bw_mbps > 0.0);
+        self.bw_mbps = bw_mbps;
+        self
     }
 
     /// Round-trip delay charged to one dispatched request, ms. Draws
@@ -43,12 +79,73 @@ impl NetModel {
             self.rtt_ms
         }
     }
+
+    /// Uncontended transmission time for `payload` bytes, ms. Zero on an
+    /// infinite-bandwidth link.
+    pub fn transfer_ms(&self, payload: f64) -> f64 {
+        if self.bw_mbps.is_finite() {
+            // bytes * 8 bits / (mbps * 1e6 bit/s) seconds -> ms.
+            payload * 8.0 / (self.bw_mbps * 1e3)
+        } else {
+            0.0
+        }
+    }
 }
 
 impl Default for NetModel {
-    /// A LAN-ish 5 ms round trip, no jitter.
+    /// A LAN-ish 5 ms round trip, no jitter, infinite bandwidth.
     fn default() -> Self {
         NetModel::fixed(5.0)
+    }
+}
+
+/// Fair-share contention tracker for one node's link.
+///
+/// Each in-flight transfer is remembered by its finish time. Charging a
+/// new transfer of base duration `b` at time `t` prunes finished
+/// transfers, counts the `k` still in flight, and charges
+/// `b × (k + 1)` — the fair-share approximation where `k + 1` streams
+/// each get `1/(k+1)` of the pipe. (In-flight transfers keep their
+/// original finish times: the model inflates newcomers, which is what
+/// routing needs to see, and stays strictly deterministic.) A zero base
+/// duration — infinite bandwidth — charges nothing and records nothing,
+/// so pre-contention configurations never touch the tracker state.
+#[derive(Clone, Debug, Default)]
+pub struct LinkLoad {
+    /// Finish times (ms) of transfers still considered in flight.
+    ends: Vec<f64>,
+}
+
+impl LinkLoad {
+    pub fn new() -> Self {
+        LinkLoad::default()
+    }
+
+    /// Transfers still in flight at `now_ms` (after pruning).
+    pub fn in_flight(&self, now_ms: f64) -> usize {
+        self.ends.iter().filter(|&&e| e > now_ms).count()
+    }
+
+    /// Price a prospective transfer WITHOUT admitting it: the inflated
+    /// duration a `base_ms` transfer starting at `now_ms` would see.
+    /// This is the term contention-aware routing adds to a node's cost.
+    pub fn estimate_ms(&self, now_ms: f64, base_ms: f64) -> f64 {
+        if base_ms <= 0.0 {
+            return 0.0;
+        }
+        base_ms * (self.in_flight(now_ms) + 1) as f64
+    }
+
+    /// Admit a transfer at `now_ms` and return the inflated duration
+    /// actually charged. Prunes finished transfers first.
+    pub fn charge_ms(&mut self, now_ms: f64, base_ms: f64) -> f64 {
+        if base_ms <= 0.0 {
+            return 0.0;
+        }
+        self.ends.retain(|&e| e > now_ms);
+        let d = base_ms * (self.ends.len() + 1) as f64;
+        self.ends.push(now_ms + d);
+        d
     }
 }
 
@@ -68,7 +165,7 @@ mod tests {
 
     #[test]
     fn jitter_stays_in_bounds_and_is_seed_deterministic() {
-        let link = NetModel { rtt_ms: 10.0, jitter_ms: 4.0 };
+        let link = NetModel { rtt_ms: 10.0, jitter_ms: 4.0, bw_mbps: f64::INFINITY };
         let mut rng = Pcg32::seeded(7);
         let mut rng2 = Pcg32::seeded(7);
         for _ in 0..100 {
@@ -76,5 +173,57 @@ mod tests {
             assert!((10.0..14.0).contains(&d), "delay {d} out of bounds");
             assert_eq!(d.to_bits(), link.delay_ms(&mut rng2).to_bits());
         }
+    }
+
+    #[test]
+    fn infinite_bandwidth_transfers_are_free_and_leave_no_load() {
+        let link = NetModel::fixed(5.0);
+        assert_eq!(link.transfer_ms(1_000_000.0), 0.0);
+        let mut load = LinkLoad::new();
+        assert_eq!(load.charge_ms(0.0, link.transfer_ms(1_000_000.0)), 0.0);
+        assert_eq!(load.in_flight(0.0), 0);
+        assert_eq!(load.estimate_ms(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn finite_bandwidth_prices_payload_bits() {
+        // 12_288 bytes at 2 Mbps: 98_304 bits / 2_000 bits-per-ms ≈ 49.15 ms.
+        let link = NetModel::fixed(5.0).with_bandwidth(2.0);
+        let t = link.transfer_ms(12_288.0);
+        assert!((t - 49.152).abs() < 1e-9, "got {t}");
+    }
+
+    #[test]
+    fn concurrent_transfers_inflate_each_other_fair_share() {
+        let mut load = LinkLoad::new();
+        // Three back-to-back 10 ms transfers at t=0: 1×, 2×, 3×.
+        assert_eq!(load.charge_ms(0.0, 10.0), 10.0);
+        assert_eq!(load.charge_ms(0.0, 10.0), 20.0);
+        assert_eq!(load.charge_ms(0.0, 10.0), 30.0);
+        assert_eq!(load.in_flight(0.0), 3);
+        // Past every finish time the link is idle again.
+        assert_eq!(load.charge_ms(31.0, 10.0), 10.0);
+        assert_eq!(load.in_flight(31.0), 1);
+    }
+
+    #[test]
+    fn estimate_matches_charge_without_admitting() {
+        let mut load = LinkLoad::new();
+        load.charge_ms(0.0, 10.0);
+        load.charge_ms(0.0, 10.0);
+        let est = load.estimate_ms(0.0, 10.0);
+        assert_eq!(est, 30.0);
+        // Estimating twice is idempotent; charging then matches.
+        assert_eq!(load.estimate_ms(0.0, 10.0), est);
+        assert_eq!(load.charge_ms(0.0, 10.0), est);
+    }
+
+    #[test]
+    fn payload_sizes_follow_model_tensors() {
+        // Yolo uploads its 3*32*32 input tensor: 3072 elems * 4 bytes.
+        assert_eq!(payload_bytes(ModelId::Yolo), 12_288.0);
+        // Token payloads stream back the output tensor.
+        assert_eq!(token_payload_bytes(ModelId::Yolo), 192.0 * 15.0 * 4.0);
+        assert!(payload_bytes(ModelId::Bert) < payload_bytes(ModelId::Yolo));
     }
 }

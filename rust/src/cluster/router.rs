@@ -92,18 +92,28 @@ pub struct NodeView {
     /// (snapshot mode, cold predictor, ex-drainer lanes), in which case
     /// the snapshot estimate above prices the node as before.
     pub predicted_e2e_ms: f64,
+    /// Estimated transmission time for THIS request's payload on this
+    /// node's shared link, ms — the contention-inflated
+    /// `LinkLoad::estimate_ms` under contention-aware pricing, 0 under
+    /// static-RTT pricing or infinite bandwidth. Additive on top of
+    /// either pricing branch (predictions cover compute, not the wire).
+    pub tx_est_ms: f64,
 }
 
 /// Estimated end-to-end cost of placing the request on `view`'s node, ms:
 /// the predictor's headroom estimate when the node published one, the
-/// snapshot estimate (RTT + gauge-priced service) otherwise. The
-/// per-decision fallback mirrors `AdmissionConfig::decide_predictive`.
+/// snapshot estimate (RTT + gauge-priced service) otherwise, plus the
+/// link's transmission estimate in both cases. The per-decision fallback
+/// mirrors `AdmissionConfig::decide_predictive`.
 pub fn estimated_e2e_ms(view: &NodeView) -> f64 {
-    if view.predicted_e2e_ms.is_finite() && view.predicted_e2e_ms > 0.0 {
+    let base = if view.predicted_e2e_ms.is_finite()
+        && view.predicted_e2e_ms > 0.0
+    {
         view.predicted_e2e_ms
     } else {
         view.rtt_ms + view.service_est_ms
-    }
+    };
+    base + view.tx_est_ms
 }
 
 /// Round-robin over active nodes: the first active node at or after the
@@ -241,7 +251,27 @@ mod tests {
 
     fn view(active: bool, rtt: f64, backlog: f64, service: f64) -> NodeView {
         NodeView { active, rtt_ms: rtt, backlog_ms: backlog,
-                   service_est_ms: service, predicted_e2e_ms: f64::NAN }
+                   service_est_ms: service, predicted_e2e_ms: f64::NAN,
+                   tx_est_ms: 0.0 }
+    }
+
+    #[test]
+    fn transmission_estimate_prices_the_wire_on_both_branches() {
+        // Snapshot branch: node 0 is cheaper on compute (2 + 20 = 22 vs
+        // 2 + 30 = 32), but a congested link adds 15 ms and flips the
+        // ordering.
+        let mut views = [view(true, 2.0, 0.0, 20.0),
+                         view(true, 2.0, 0.0, 30.0)];
+        views[0].tx_est_ms = 15.0;
+        assert_eq!(route_slo_aware(&views, 100.0), Some(1));
+        // The wire also gates feasibility: 34 ms slack fits node 1 only.
+        assert_eq!(route_slo_aware(&views, 34.0), Some(1));
+        // Predicted branch: the prediction covers compute, the wire is
+        // still additive on top of it.
+        views[1].predicted_e2e_ms = 30.0;
+        views[1].tx_est_ms = 40.0;
+        assert_eq!(estimated_e2e_ms(&views[1]), 70.0);
+        assert_eq!(route_slo_aware(&views, 100.0), Some(0));
     }
 
     #[test]

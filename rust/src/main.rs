@@ -42,6 +42,8 @@
 //!   bcedge bench-cluster --policy round-robin --drain-node 1
 //!   bcedge bench-cluster --router-shards 4 --gossip-ms 5 \
 //!          --cache-ttl-ms 500 --cache-capacity 4096 --repeat-fraction 0.5
+//!   bcedge bench-cluster --clock virtual --workload llm --decode-steps 8 \
+//!          --tpot-ms 40 --link-bw-mbps 2 --net-pricing contention
 //!   bcedge train --episodes 100 --out results/sac_policy.json
 //!   bcedge info
 
@@ -84,13 +86,16 @@ fn main() -> anyhow::Result<()> {
             eprintln!("        [--rebalance-epoch-ms N] [--no-rebalance] [--no-gauge-hints] \\");
             eprintln!("        [--max-replicas N] [--no-replication] [--slo-scale X] \\");
             eprintln!("        [--admission snapshot|predictive] [--admission-quantile mean|p95] \\");
-            eprintln!("        [--predictor-warmup N]");
+            eprintln!("        [--predictor-warmup N] \\");
+            eprintln!("        [--workload oneshot|llm] [--decode-steps N] [--ttft-slo-scale X] \\");
+            eprintln!("        [--tpot-ms T]");
             eprintln!("  bench-cluster --nodes PLAT[:WORKERS[:RTT_MS]],... --policy round-robin|\\");
             eprintln!("        join-shortest-backlog|power-of-two|slo-aware --rps N --seconds N \\");
             eprintln!("        [--clock wall|virtual] [--mode open|closed] [--slo-scale X] \\");
             eprintln!("        [--router-shards K] [--gossip-ms T] [--cache-ttl-ms T] \\");
             eprintln!("        [--cache-capacity N] [--repeat-fraction F] \\");
-            eprintln!("        [--drain-node I] [--drain-at-s T] [--rejoin-at-s T] + bench-serve knobs");
+            eprintln!("        [--drain-node I] [--drain-at-s T] [--rejoin-at-s T] \\");
+            eprintln!("        [--link-bw-mbps B] [--net-pricing contention|static-rtt] + bench-serve knobs");
             eprintln!("  (bench-serve/bench-cluster observability) [--trace-out F] [--trace-sample N] \\");
             eprintln!("        [--metrics-out F] [--metrics-interval-ms T]");
             eprintln!("  train --episodes N --rps N --platform xavier-nx|tx2|nano --out F");
@@ -348,11 +353,15 @@ fn admission_of(args: &Args)
 }
 
 /// Shared load-generation knobs (rate, horizon, envelope, client model,
-/// SLO scale).
+/// SLO scale). `--workload llm` turns every admitted request into an
+/// autoregressive SESSION: the head carries a TTFT deadline
+/// (`slo_ms × --ttft-slo-scale`) and each completion spawns the next of
+/// `--decode-steps` decode rounds under a flat `--tpot-ms` cadence
+/// budget.
 fn loadgen_of(args: &Args, rps_default: f64, seconds_default: f64)
               -> anyhow::Result<bcedge::serve::LoadGenConfig> {
     use bcedge::serve::{LoadGenConfig, LoadMode};
-    use bcedge::workload::RateEnvelope;
+    use bcedge::workload::{RateEnvelope, SessionSpec};
     let mode = match args.get_or("mode", "open") {
         "open" => LoadMode::Open,
         "closed" => LoadMode::Closed {
@@ -367,6 +376,23 @@ fn loadgen_of(args: &Args, rps_default: f64, seconds_default: f64)
         "bursty" => RateEnvelope::bursty(),
         "diurnal" => RateEnvelope::diurnal(),
         other => anyhow::bail!("unknown envelope {other}"),
+    };
+    // Struct literal, not SessionSpec::new: the builder reports bad
+    // knob values as Err instead of a panic.
+    let session = match args.get_or("workload", "oneshot") {
+        "oneshot" => None,
+        "llm" => Some(SessionSpec {
+            decode_steps: args
+                .get_parse("decode-steps", 4u32)
+                .map_err(anyhow::Error::msg)?,
+            ttft_slo_scale: args
+                .get_parse("ttft-slo-scale", 1.0)
+                .map_err(anyhow::Error::msg)?,
+            tpot_ms: args
+                .get_parse("tpot-ms", 40.0)
+                .map_err(anyhow::Error::msg)?,
+        }),
+        other => anyhow::bail!("unknown workload {other} (oneshot|llm)"),
     };
     LoadGenConfig::builder()
         .rps(args
@@ -386,6 +412,7 @@ fn loadgen_of(args: &Args, rps_default: f64, seconds_default: f64)
             args.get_parse("repeat-fraction", 0.0)
                 .map_err(anyhow::Error::msg)?,
         )
+        .session(session)
         .build()
         .map_err(anyhow::Error::msg)
 }
@@ -457,7 +484,7 @@ fn bench_cluster(args: &Args) -> anyhow::Result<()> {
             )
         })?;
     // Node spec grammar: PLATFORM[:WORKERS[:RTT_MS]], comma-separated.
-    let nodes: Vec<NodeSpec> = args
+    let mut nodes: Vec<NodeSpec> = args
         .get_or("nodes", "xavier-nx:2:2,tx2:2:6,nano:1:12")
         .split(',')
         .map(|spec| -> anyhow::Result<NodeSpec> {
@@ -496,6 +523,31 @@ fn bench_cluster(args: &Args) -> anyhow::Result<()> {
             Ok(NodeSpec::new(platform, workers, rtt_ms))
         })
         .collect::<anyhow::Result<_>>()?;
+    // Shared uplinks: `--link-bw-mbps B` puts every node behind a
+    // B-Mbps fair-share link so payload transmission (and queueing
+    // behind in-flight transfers) shows up in end-to-end latency.
+    // 0 (default) keeps the seed-era infinite-bandwidth wire.
+    let link_bw_mbps: f64 = args
+        .get_parse("link-bw-mbps", 0.0)
+        .map_err(anyhow::Error::msg)?;
+    if link_bw_mbps < 0.0 || !link_bw_mbps.is_finite() {
+        anyhow::bail!("--link-bw-mbps needs a non-negative finite value");
+    }
+    if link_bw_mbps > 0.0 {
+        for n in &mut nodes {
+            n.net = n.net.with_bandwidth(link_bw_mbps);
+        }
+    }
+    // `--net-pricing static-rtt` blinds ROUTING to link contention
+    // (the wire is still charged physically) — the ablation baseline.
+    let contention_pricing = match args.get_or("net-pricing", "contention")
+    {
+        "contention" => true,
+        "static-rtt" => false,
+        other => anyhow::bail!(
+            "unknown --net-pricing {other} (contention|static-rtt)"
+        ),
+    };
     let drain = match args.get("drain-node") {
         None => None,
         Some(n) => {
@@ -537,6 +589,7 @@ fn bench_cluster(args: &Args) -> anyhow::Result<()> {
         } else {
             None
         },
+        contention_pricing,
     };
     // Per-node template: the node specs override platform/workers, so
     // --workers and --platform are ignored here in favour of --nodes.
@@ -639,6 +692,23 @@ fn validate_telemetry(args: &Args) -> anyhow::Result<()> {
             anyhow::bail!(
                 "{path}: headroom counters broken: {headroom_fallbacks} \
                  fallbacks > {headroom_decisions} decisions");
+        }
+        // Dual-SLO session counters: a session has exactly one head and
+        // each spawned decode step completes at most once, so the miss
+        // counters are bounded by the session counters.
+        let sessions_started = field("sessions_started")?;
+        let session_steps = field("session_steps")?;
+        let ttft_misses = field("ttft_misses")?;
+        let tpot_misses = field("tpot_misses")?;
+        if ttft_misses > sessions_started {
+            anyhow::bail!(
+                "{path}: dual-SLO counters broken: {ttft_misses} TTFT \
+                 misses > {sessions_started} sessions started");
+        }
+        if tpot_misses > session_steps {
+            anyhow::bail!(
+                "{path}: dual-SLO counters broken: {tpot_misses} TPOT \
+                 misses > {session_steps} decode steps spawned");
         }
         println!(
             "{path}: OK — {snapshots} snapshot(s) + final; conservation \

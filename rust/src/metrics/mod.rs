@@ -24,10 +24,17 @@ pub enum ShedReason {
     /// exceeded the remaining slack on every candidate), so the request
     /// was shed at the edge before ever crossing a node boundary.
     NoFeasibleNode = 3,
+    /// An autoregressive session was cut short: either its whole-session
+    /// cadence was priced infeasible at admission (no node can sustain
+    /// the per-step TPOT budget) or a decode step could not be
+    /// re-enqueued (its pinned node left the cluster between steps). The
+    /// shed counts the step that failed; unspawned later steps were
+    /// never attempts.
+    SessionAbort = 4,
 }
 
 /// Number of [`ShedReason`] variants (sizes the per-reason counters).
-pub const N_SHED_REASONS: usize = 4;
+pub const N_SHED_REASONS: usize = 5;
 
 impl ShedReason {
     pub fn all() -> [ShedReason; N_SHED_REASONS] {
@@ -36,6 +43,7 @@ impl ShedReason {
             ShedReason::DeadlineUnmeetable,
             ShedReason::Shutdown,
             ShedReason::NoFeasibleNode,
+            ShedReason::SessionAbort,
         ]
     }
 
@@ -45,6 +53,7 @@ impl ShedReason {
             ShedReason::DeadlineUnmeetable => "deadline-unmeetable",
             ShedReason::Shutdown => "shutdown",
             ShedReason::NoFeasibleNode => "no-feasible-node",
+            ShedReason::SessionAbort => "session-abort",
         }
     }
 }
@@ -106,6 +115,19 @@ pub struct Metrics {
     /// Among `headroom_decisions`, those where a cold/NaN predictor made
     /// the station fall back to the snapshot formula.
     headroom_fallbacks: u64,
+    /// Autoregressive sessions admitted (one per accepted head request
+    /// in an llm workload; 0 for one-shot workloads).
+    sessions_started: u64,
+    /// Decode steps the session manager re-enqueued after a completed
+    /// step (the head itself is not counted — it arrives via the trace).
+    /// Every spawned step is a fresh attempt, so conservation extends to
+    /// `outcomes + sheds + cache_served + leftover == heads + spawned`.
+    session_steps_spawned: u64,
+    /// Session head requests that completed past their TTFT deadline
+    /// (first-step completion vs the head SLO).
+    ttft_misses: u64,
+    /// Decode steps that completed past their per-step TPOT budget.
+    tpot_misses: u64,
     /// Streaming counters maintained alongside `outcomes` so every rate
     /// the reports print is recomputable in O(1) without walking (or
     /// even keeping) the outcome vec. The vec itself survives as the
@@ -251,6 +273,58 @@ impl Metrics {
         self.headroom_fallbacks
     }
 
+    /// Account one admitted autoregressive session (its head request).
+    pub fn record_session_start(&mut self) {
+        self.sessions_started += 1;
+    }
+
+    /// Account one decode step re-enqueued by the session manager.
+    pub fn record_session_step(&mut self) {
+        self.session_steps_spawned += 1;
+    }
+
+    /// Account one terminal session-step outcome against the dual SLOs:
+    /// the head (`step == 0`) misses TTFT, later steps miss TPOT.
+    pub fn record_dual_slo(&mut self, step: u64, violated: bool) {
+        if !violated {
+            return;
+        }
+        if step == 0 {
+            self.ttft_misses += 1;
+        } else {
+            self.tpot_misses += 1;
+        }
+    }
+
+    /// Sessions admitted (heads accepted under an llm workload).
+    pub fn sessions_started(&self) -> u64 {
+        self.sessions_started
+    }
+
+    /// Decode steps re-enqueued by the session manager.
+    pub fn session_steps_spawned(&self) -> u64 {
+        self.session_steps_spawned
+    }
+
+    /// Session heads that blew their TTFT deadline.
+    pub fn ttft_misses(&self) -> u64 {
+        self.ttft_misses
+    }
+
+    /// Decode steps that blew their TPOT cadence budget.
+    pub fn tpot_misses(&self) -> u64 {
+        self.tpot_misses
+    }
+
+    /// Dual-SLO violation rate over recorded outcomes: TTFT + TPOT
+    /// misses per completed-or-dropped request (0 when nothing ran).
+    pub fn dual_slo_violation_rate(&self) -> f64 {
+        if self.recorded == 0 {
+            return 0.0;
+        }
+        (self.ttft_misses + self.tpot_misses) as f64 / self.recorded as f64
+    }
+
     /// Fold another run's (or worker's) metrics into this one by
     /// reference (clones the outcome/utility vecs). Prefer
     /// [`Metrics::absorb`] when the other side is owned — report folding
@@ -280,6 +354,10 @@ impl Metrics {
         self.peak_replicas = self.peak_replicas.max(other.peak_replicas);
         self.headroom_decisions += other.headroom_decisions;
         self.headroom_fallbacks += other.headroom_fallbacks;
+        self.sessions_started += other.sessions_started;
+        self.session_steps_spawned += other.session_steps_spawned;
+        self.ttft_misses += other.ttft_misses;
+        self.tpot_misses += other.tpot_misses;
         self.recorded += other.recorded;
         self.dropped += other.dropped;
         self.violated_total += other.violated_total;
@@ -677,6 +755,32 @@ mod tests {
             assert!(exact >= lo / g - 1e-9 && exact <= hi * g + 1e-9,
                     "q={q}: exact {exact} outside [{lo}, {hi}] ± one bucket");
         }
+    }
+
+    #[test]
+    fn session_counters_split_ttft_from_tpot_and_absorb() {
+        let mut a = Metrics::new();
+        a.record(outcome(ModelId::Bert, 100.0, 30.0, 114.0));
+        a.record_session_start();
+        a.record_dual_slo(0, true); // head late -> TTFT
+        a.record_dual_slo(0, false); // on-time head counts nothing
+        let mut b = Metrics::new();
+        b.record(outcome(ModelId::Bert, 200.0, 90.0, 40.0));
+        b.record_session_step();
+        b.record_session_step();
+        b.record_dual_slo(1, true); // decode step late -> TPOT
+        b.record_dual_slo(3, true);
+        b.record_shed(ModelId::Bert, ShedReason::SessionAbort);
+        a.absorb(b);
+        assert_eq!(a.sessions_started(), 1);
+        assert_eq!(a.session_steps_spawned(), 2);
+        assert_eq!(a.ttft_misses(), 1);
+        assert_eq!(a.tpot_misses(), 2);
+        assert_eq!(a.shed_by_reason(ShedReason::SessionAbort), 1);
+        assert!((a.dual_slo_violation_rate() - 3.0 / 2.0).abs() < 1e-12);
+        // The new reason is part of the typed enumeration contract.
+        assert_eq!(ShedReason::all().len(), N_SHED_REASONS);
+        assert_eq!(ShedReason::SessionAbort.label(), "session-abort");
     }
 
     #[test]

@@ -53,7 +53,8 @@ use super::server::{merge_results, RebalanceStats, Rebalancer, ServeConfig,
                     ServeReport};
 use super::worker::WorkerResult;
 use crate::coordinator::{Engine, Scheduler, SlotOutcome};
-use crate::metrics::RequestOutcome;
+use crate::metrics::{Metrics, RequestOutcome, ShedReason};
+use crate::workload::session::{step_of, SessionSpec};
 use crate::runtime::executor::SimDispatcher;
 use crate::sim::EventHeap;
 use crate::util::time::{ClockSource, VirtualClock};
@@ -564,4 +565,94 @@ pub(crate) fn run_trace_fabric(cfg: &ServeConfig, requests: Vec<Request>,
         }
     }
     fabric.finish(horizon_ms)
+}
+
+/// The virtual session arm: serve a trace of session HEADS, spawning
+/// each completed round's successor back into the fabric until every
+/// session runs out of decode steps or the run drains. Deterministic
+/// for the same reason [`run_trace_fabric`] is — spawns happen inside
+/// the event loop at the completing activation's timestamp, in worker
+/// order, consuming no RNG.
+///
+/// Accounting: each delivered head opens a session
+/// (`sessions_started`); each spawn is counted (`session_steps_spawned`)
+/// so the trace-side identity becomes
+/// `outcomes + sheds + leftover == heads + steps_spawned`. Heads whose
+/// per-round service estimate cannot hold TPOT cadence are shed at
+/// admission as [`ShedReason::SessionAbort`] (no session opens — every
+/// step would be born late). A dropped round ends its session silently:
+/// the drop is already accounted as an outcome, and spawning from it
+/// would chase a deadline the session has lost.
+pub(crate) fn run_trace_sessions(cfg: &ServeConfig, heads: Vec<Request>,
+                                 horizon_ms: f64, spec: SessionSpec)
+                                 -> ServeReport {
+    let mut fabric = ServeFabric::new(cfg, horizon_ms);
+    let mut driver = Metrics::new();
+    let mut heap: EventHeap<Ev> = EventHeap::new();
+    let mut trace = heads.into_iter();
+    if let Some(first) = trace.next() {
+        heap.schedule_ms(first.arrival_ms, PID_DELIVER, Ev::Deliver(first));
+    }
+    let epoch_ms = cfg
+        .rebalance
+        .map(|r| r.epoch_ms.max(1))
+        .unwrap_or(u64::MAX);
+    if fabric.has_rebalancer() && (epoch_ms as f64) < horizon_ms {
+        heap.schedule_ms(epoch_ms as f64, PID_REBALANCE, Ev::Rebalance { k: 1 });
+    }
+    let mut wake: Vec<usize> = Vec::new();
+    let mut spawned: Vec<Request> = Vec::new();
+    while let Some(firing) = heap.pop() {
+        match firing.event {
+            Ev::Deliver(r) => {
+                let est = fabric.gauge_snapshot().service_est_ms(r.model);
+                if spec.cadence_feasible(est) {
+                    driver.record_session_start();
+                    fabric.deliver(r, &mut wake);
+                } else {
+                    driver.record_shed(r.model, ShedReason::SessionAbort);
+                }
+                if let Some(next) = trace.next() {
+                    heap.schedule_ms(next.arrival_ms, PID_DELIVER,
+                                     Ev::Deliver(next));
+                }
+            }
+            Ev::Rebalance { k } => {
+                fabric.rebalance_tick(&mut wake);
+                let next = (k + 1).saturating_mul(epoch_ms);
+                if (next as f64) < horizon_ms {
+                    heap.schedule_ms(next as f64, PID_REBALANCE,
+                                     Ev::Rebalance { k: k + 1 });
+                }
+            }
+            Ev::Activate(w) => {
+                if let Some(at_us) = fabric.activate(w) {
+                    heap.schedule_us(at_us, pid_of_worker(w), Ev::Activate(w));
+                }
+                // Completed rounds spawn their successors NOW, at this
+                // activation's timestamp (the collect-then-deliver split
+                // only satisfies the borrow checker).
+                fabric.for_new_outcomes(|o| {
+                    driver.record_dual_slo(step_of(o.id), o.violated);
+                    if !o.dropped {
+                        if let Some(next) =
+                            spec.next_step(o.id, o.model, o.completed_ms, 0.0)
+                        {
+                            spawned.push(next);
+                        }
+                    }
+                });
+                for s in spawned.drain(..) {
+                    driver.record_session_step();
+                    fabric.deliver(s, &mut wake);
+                }
+            }
+        }
+        for w in wake.drain(..) {
+            heap.schedule_us(firing.time_us, pid_of_worker(w), Ev::Activate(w));
+        }
+    }
+    let mut report = fabric.finish(horizon_ms);
+    report.metrics.absorb(driver);
+    report
 }

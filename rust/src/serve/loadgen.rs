@@ -16,10 +16,13 @@
 //!   feedback loop needs real completions).
 
 use super::server::{ClockKind, ServeConfig, ServeReport, Server, run_trace};
-use crate::metrics::ShedReason;
+use crate::metrics::{Metrics, ShedReason};
 use crate::util::rng::Pcg32;
 use crate::workload::envelope::{RateEnvelope, ShapedGenerator};
 use crate::workload::models::{ModelId, ModelSpec, N_MODELS};
+use crate::workload::request::Request;
+use crate::workload::session::SessionSpec;
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::Duration;
 
@@ -49,6 +52,12 @@ pub struct LoadGenConfig {
     /// Digests are deterministic in `(seed, trace index)` — see
     /// [`crate::cluster::digest_for`].
     pub repeat_fraction: f64,
+    /// `Some(spec)` turns every generated request into an autoregressive
+    /// session head (`--workload llm`): the head carries a TTFT
+    /// deadline, and each completed round re-enters the queue as the
+    /// next decode step under the TPOT budget. `None` (the default) is
+    /// the one-shot workload, untouched bit-for-bit.
+    pub session: Option<SessionSpec>,
 }
 
 impl Default for LoadGenConfig {
@@ -61,6 +70,7 @@ impl Default for LoadGenConfig {
             mode: LoadMode::Open,
             slo_scale: 1.0,
             repeat_fraction: 0.0,
+            session: None,
         }
     }
 }
@@ -79,6 +89,20 @@ impl LoadGenConfig {
     pub fn generator(&self) -> ShapedGenerator {
         ShapedGenerator::new(self.rps, self.envelope, self.seed)
             .with_slo_scale(self.slo_scale)
+    }
+
+    /// Generate the arrival trace, re-stamped as session heads when the
+    /// workload is LLM-style. The TTFT scale is applied AFTER generation
+    /// (pure arithmetic, no RNG), so the underlying arrival stream is
+    /// bit-identical to the one-shot workload's for the same seed.
+    pub fn head_trace(&self, horizon_ms: f64) -> Vec<Request> {
+        let mut trace = self.generator().generate_horizon(horizon_ms);
+        if let Some(spec) = self.session {
+            for r in &mut trace {
+                spec.stamp_head(r);
+            }
+        }
+        trace
     }
 }
 
@@ -133,6 +157,13 @@ impl LoadGenConfigBuilder {
         self
     }
 
+    /// LLM-style session workload: every request becomes a session head
+    /// with [`SessionSpec`]'s decode steps and dual TTFT/TPOT SLOs.
+    pub fn session(mut self, session: Option<SessionSpec>) -> Self {
+        self.cfg.session = session;
+        self
+    }
+
     /// Validate and return the configuration.
     pub fn build(self) -> Result<LoadGenConfig, String> {
         let cfg = self.cfg;
@@ -153,6 +184,36 @@ impl LoadGenConfigBuilder {
         if let LoadMode::Closed { concurrency } = cfg.mode {
             if concurrency == 0 {
                 return Err("--concurrency must be >= 1".into());
+            }
+            if cfg.session.is_some() {
+                return Err(
+                    "--workload llm needs the open loop — a session is \
+                     itself a feedback loop (each step launches the next), \
+                     so closed-loop concurrency slots have no meaning"
+                        .into(),
+                );
+            }
+        }
+        if let Some(s) = cfg.session {
+            if !s.tpot_ms.is_finite() || s.tpot_ms <= 0.0 {
+                return Err("--tpot-ms must be a positive finite number"
+                    .into());
+            }
+            if !s.ttft_slo_scale.is_finite() || s.ttft_slo_scale <= 0.0 {
+                return Err(
+                    "--ttft-slo-scale must be a positive finite number"
+                        .into(),
+                );
+            }
+            if s.decode_steps == 0
+                || s.decode_steps
+                    > crate::workload::session::MAX_DECODE_STEPS
+            {
+                return Err(format!(
+                    "--decode-steps must be in 1..={} (the step index \
+                     lives in the id's top byte)",
+                    crate::workload::session::MAX_DECODE_STEPS
+                ));
             }
         }
         Ok(cfg)
@@ -186,12 +247,25 @@ pub fn run(serve: &ServeConfig, load: &LoadGenConfig)
     let horizon_ms = load.seconds * 1e3;
     match (load.mode, serve.clock) {
         (LoadMode::Open, ClockKind::Virtual) => {
-            let trace = load.generator().generate_horizon(horizon_ms);
-            Ok(run_trace(serve, trace, horizon_ms))
+            let trace = load.head_trace(horizon_ms);
+            match load.session {
+                Some(spec) => Ok(super::fabric::run_trace_sessions(
+                    serve, trace, horizon_ms, spec,
+                )),
+                None => Ok(run_trace(serve, trace, horizon_ms)),
+            }
         }
-        (LoadMode::Open, ClockKind::Wall) => Ok(open_loop_wall(
-            serve, load, horizon_ms,
-        )),
+        (LoadMode::Open, ClockKind::Wall) => match load.session {
+            Some(spec) => {
+                Ok(open_loop_wall_llm(serve, load, horizon_ms, spec))
+            }
+            None => Ok(open_loop_wall(serve, load, horizon_ms)),
+        },
+        (LoadMode::Closed { .. }, _) if load.session.is_some() => Err(
+            "--workload llm needs the open loop (sessions are their own \
+             feedback loop)"
+                .into(),
+        ),
         (LoadMode::Closed { concurrency }, ClockKind::Wall) => {
             Ok(closed_loop_wall(serve, load, horizon_ms, concurrency.max(1)))
         }
@@ -220,6 +294,76 @@ fn open_loop_wall(serve: &ServeConfig, load: &LoadGenConfig,
         let _ = server.submit(r.model, r.slo_ms, r.transmission_ms);
     }
     server.shutdown()
+}
+
+/// Open loop, LLM-style sessions on the wall clock: heads are paced
+/// like [`open_loop_wall`], and the completion stream drives the decode
+/// loop — each completed round immediately re-submits the next step
+/// through the SAME ingress path every other request takes (so steps
+/// contend with heads for admission and batching, and a tighter-slack
+/// request can jump ahead between a session's steps).
+///
+/// The live ingress assigns its own request ids, so the driver keeps an
+/// id → step-index map instead of encoding the step in the id (the
+/// virtual arms do the latter; the map is the wall arm's equivalent).
+/// A step the ingress refuses is accounted by the ingress like any
+/// other shed — the session simply ends there. Completions that arrive
+/// after the horizon no longer spawn (the run is over), so every spawn
+/// recorded in `session_steps_spawned` was genuinely offered:
+/// `outcomes + sheds + leftover == heads + steps_spawned`.
+fn open_loop_wall_llm(serve: &ServeConfig, load: &LoadGenConfig,
+                      horizon_ms: f64, spec: SessionSpec) -> ServeReport {
+    let trace = load.head_trace(horizon_ms);
+    let (tx, rx) = mpsc::channel();
+    let server = Server::start(serve, Some(tx));
+    let mut driver = Metrics::new();
+    // Ingress id of every in-flight round → its step index.
+    let mut steps: HashMap<u64, u64> = HashMap::new();
+    let on_event = |ev: super::worker::ServeEvent,
+                    steps: &mut HashMap<u64, u64>,
+                    driver: &mut Metrics| {
+        let super::worker::ServeEvent::Completed(c) = ev else { return };
+        let Some(k) = steps.remove(&c.id) else { return };
+        driver.record_dual_slo(k, c.violated);
+        if k < spec.decode_steps as u64 {
+            // Spawn the next step: flat TPOT budget, no network charge
+            // (decode output stays on-node in the single-node tier).
+            driver.record_session_step();
+            if let Ok(id) = server.submit(c.model, spec.tpot_ms, 0.0) {
+                steps.insert(id, k + 1);
+            }
+        }
+    };
+    for r in trace {
+        loop {
+            let wait_ms = r.arrival_ms - server.now_ms();
+            if wait_ms <= 0.0 {
+                break;
+            }
+            match rx.recv_timeout(Duration::from_secs_f64(
+                (wait_ms / 1e3).min(0.005),
+            )) {
+                Ok(ev) => on_event(ev, &mut steps, &mut driver),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if let Ok(id) = server.submit(r.model, r.slo_ms, r.transmission_ms) {
+            driver.record_session_start();
+            steps.insert(id, 0);
+        }
+    }
+    // Past the last head: keep the decode loops running to the horizon.
+    while server.now_ms() < horizon_ms {
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(ev) => on_event(ev, &mut steps, &mut driver),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    let mut report = server.shutdown();
+    report.metrics.absorb(driver);
+    report
 }
 
 /// Closed loop: keep `concurrency` requests in flight, launching the

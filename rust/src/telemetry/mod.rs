@@ -708,6 +708,10 @@ pub fn final_snapshot(horizon_ms: f64, attempts: u64, cache_served: u64,
         ("shed_rate", num(metrics.shed_rate())),
         ("headroom_decisions", num(metrics.headroom_decisions() as f64)),
         ("headroom_fallbacks", num(metrics.headroom_fallbacks() as f64)),
+        ("sessions_started", num(metrics.sessions_started() as f64)),
+        ("session_steps", num(metrics.session_steps_spawned() as f64)),
+        ("ttft_misses", num(metrics.ttft_misses() as f64)),
+        ("tpot_misses", num(metrics.tpot_misses() as f64)),
         ("latency", metrics.latency_hist().to_json()),
         ("slack", metrics.slack_hist().to_json()),
         ("per_model", per_model),

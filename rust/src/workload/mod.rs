@@ -5,10 +5,12 @@ pub mod envelope;
 pub mod generator;
 pub mod models;
 pub mod request;
+pub mod session;
 pub mod trace;
 
 pub use envelope::{RateEnvelope, ShapedGenerator};
 pub use generator::PoissonGenerator;
 pub use models::{ModelId, ModelSpec, N_MODELS};
 pub use request::Request;
+pub use session::SessionSpec;
 pub use trace::Trace;

@@ -1,0 +1,226 @@
+//! Autoregressive sessions: multi-round requests with dual SLOs.
+//!
+//! A one-shot request finishes when its batch drains. An LLM-style
+//! request does not: one admission opens a *session* of `1 + N` rounds —
+//! a prefill head followed by N decode steps — and each completed round
+//! re-enters the queue as the next one. The two halves carry different
+//! deadlines, following the TTFT/TPOT split used by SLO-driven LLM
+//! serving on edge devices (SLICE, arxiv 2510.18544; EdgeServing,
+//! arxiv 2605.05527):
+//!
+//! - **TTFT** (time-to-first-token): the head's completion deadline —
+//!   the model's e2e SLO scaled by [`SessionSpec::ttft_slo_scale`].
+//! - **TPOT** (time-per-output-token): every decode step's cadence
+//!   budget, a flat [`SessionSpec::tpot_ms`] from the *previous* step's
+//!   completion.
+//!
+//! Sessions are driven from outside the engine: the serving tier
+//! re-submits step `k + 1` when step `k` completes, so between steps a
+//! session holds no engine resources at all — any tighter-slack request
+//! (one-shot or another session's step) may jump ahead, and nothing can
+//! preempt a step mid-batch. That contract is what makes sessions
+//! composable with EDF batching, migration, drain, and the result cache
+//! seams without new locking.
+//!
+//! ## Step identity
+//!
+//! Every round is an ordinary [`crate::workload::Request`] with an id
+//! derived from the head's: the step index lives in the top byte,
+//! `step_id = head_id | (k << 56)`. Node-scoped id windows use at most
+//! 47 bits (node stride `2^40` + incarnation stride `2^32` + sequence),
+//! and trace ids are dense small integers, so the top byte is free in
+//! every driver. This keeps step ids unique cluster-wide (head ids
+//! already are), makes the step index recoverable from any completion
+//! event without a side table, and leaves the low bits intact so the
+//! node that served the head is recoverable from any step's id.
+
+use crate::workload::models::{ModelId, ModelSpec};
+use crate::workload::request::Request;
+
+/// Bit position of the step index inside a step id.
+pub const STEP_SHIFT: u32 = 56;
+
+/// Mask selecting the head id (everything below the step byte).
+pub const HEAD_MASK: u64 = (1u64 << STEP_SHIFT) - 1;
+
+/// Maximum decode steps a session may be configured with (the step
+/// index must fit the top byte).
+pub const MAX_DECODE_STEPS: u32 = 255;
+
+/// Step index of a request id: 0 for heads (and for every one-shot
+/// request), `k ≥ 1` for the k-th decode step.
+pub fn step_of(id: u64) -> u64 {
+    id >> STEP_SHIFT
+}
+
+/// The head id a step id was derived from (identity on heads).
+pub fn head_of(id: u64) -> u64 {
+    id & HEAD_MASK
+}
+
+/// Id of decode step `k` (1-based) of the session whose head is `id`.
+pub fn step_id(head_id: u64, k: u64) -> u64 {
+    debug_assert_eq!(step_of(head_id), 0, "head id has a step byte set");
+    debug_assert!(k >= 1 && k <= MAX_DECODE_STEPS as u64);
+    head_id | (k << STEP_SHIFT)
+}
+
+/// Shape of every session in an LLM-style workload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SessionSpec {
+    /// Decode steps after the head (so a session is `1 + decode_steps`
+    /// rounds total). At least 1 — a zero-step "session" is a one-shot.
+    pub decode_steps: u32,
+    /// TTFT deadline as a multiple of the model's e2e SLO. Applied to
+    /// the head after stamping (no RNG draw), so the non-LLM arrival
+    /// stream is untouched bit-for-bit.
+    pub ttft_slo_scale: f64,
+    /// TPOT budget, ms: each decode step's SLO, measured from the
+    /// previous round's completion.
+    pub tpot_ms: f64,
+}
+
+impl SessionSpec {
+    pub fn new(decode_steps: u32, ttft_slo_scale: f64, tpot_ms: f64) -> Self {
+        assert!(
+            (1..=MAX_DECODE_STEPS).contains(&decode_steps),
+            "decode steps must be in 1..={MAX_DECODE_STEPS}, got {decode_steps}"
+        );
+        assert!(ttft_slo_scale > 0.0, "ttft slo scale must be positive");
+        assert!(tpot_ms > 0.0, "tpot budget must be positive");
+        SessionSpec { decode_steps, ttft_slo_scale, tpot_ms }
+    }
+
+    /// Total rounds per session, head included.
+    pub fn rounds(&self) -> u64 {
+        1 + self.decode_steps as u64
+    }
+
+    /// Re-stamp a freshly generated request as a session head: its SLO
+    /// becomes the TTFT deadline. Pure arithmetic — the generator's RNG
+    /// call order is a reproducibility contract and must not change.
+    pub fn stamp_head(&self, r: &mut Request) {
+        r.slo_ms *= self.ttft_slo_scale;
+    }
+
+    /// Build decode step `k + 1` from round `k`'s completion (taken
+    /// straight off a completion stream: the finished round's id, model,
+    /// and completion time). The step arrives the instant its
+    /// predecessor finished, carries the flat TPOT budget as its SLO,
+    /// and is charged `transmission_ms` (the token payload's
+    /// contention-inflated link time; 0 on infinite-bandwidth links).
+    /// `None` once the session is over. No RNG is consumed.
+    pub fn next_step(
+        &self,
+        prev_id: u64,
+        model: ModelId,
+        completed_ms: f64,
+        transmission_ms: f64,
+    ) -> Option<Request> {
+        let k = step_of(prev_id) + 1;
+        if k > self.decode_steps as u64 {
+            return None;
+        }
+        Some(Request {
+            id: step_id(head_of(prev_id), k),
+            model,
+            arrival_ms: completed_ms,
+            slo_ms: self.tpot_ms,
+            transmission_ms,
+        })
+    }
+
+    /// Whole-session cadence feasibility at admission: a session is
+    /// only worth opening if the serving estimate for one round fits
+    /// the TPOT budget — otherwise every decode step is born late and
+    /// the session would burn `decode_steps` slots to miss every
+    /// deadline. Heads of infeasible sessions are shed as
+    /// [`crate::metrics::ShedReason::SessionAbort`].
+    pub fn cadence_feasible(&self, service_est_ms: f64) -> bool {
+        service_est_ms <= self.tpot_ms
+    }
+
+    /// A conservative per-step service floor for feasibility checks
+    /// when no live gauge is available: the model's profiled batch-1
+    /// latency.
+    pub fn service_floor_ms(spec: &ModelSpec) -> f64 {
+        // compute_demand is the profiled batch-1 latency in ms on the
+        // reference platform; real gauges refine this, the floor only
+        // rejects sessions that cannot possibly hold cadence.
+        spec.compute_demand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::ModelId;
+
+    fn head(id: u64) -> Request {
+        Request {
+            id,
+            model: ModelId::Yolo,
+            arrival_ms: 10.0,
+            slo_ms: 138.0,
+            transmission_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn step_ids_round_trip_and_stay_unique() {
+        // Worst-case head id: max node window bits all set.
+        let head_id = (1u64 << 47) - 1;
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(head_id);
+        for k in 1..=MAX_DECODE_STEPS as u64 {
+            let sid = step_id(head_id, k);
+            assert_eq!(step_of(sid), k);
+            assert_eq!(head_of(sid), head_id);
+            assert!(seen.insert(sid), "collision at step {k}");
+        }
+    }
+
+    #[test]
+    fn next_step_chains_cadence_and_stops_at_n() {
+        let spec = SessionSpec::new(2, 1.5, 40.0);
+        let h = head(7);
+        let s1 = spec
+            .next_step(h.id, h.model, 55.0, 0.25)
+            .expect("step 1");
+        assert_eq!(step_of(s1.id), 1);
+        assert_eq!(s1.arrival_ms, 55.0);
+        assert_eq!(s1.slo_ms, 40.0);
+        assert_eq!(s1.transmission_ms, 0.25);
+        let s2 = spec
+            .next_step(s1.id, s1.model, 90.0, 0.0)
+            .expect("step 2");
+        assert_eq!(step_of(s2.id), 2);
+        assert_eq!(head_of(s2.id), 7);
+        assert!(spec.next_step(s2.id, s2.model, 120.0, 0.0).is_none(),
+                "session is over");
+    }
+
+    #[test]
+    fn stamp_head_scales_ttft_only() {
+        let spec = SessionSpec::new(4, 2.0, 40.0);
+        let mut h = head(3);
+        spec.stamp_head(&mut h);
+        assert_eq!(h.slo_ms, 276.0);
+        assert_eq!(h.arrival_ms, 10.0);
+        assert_eq!(h.transmission_ms, 1.0);
+    }
+
+    #[test]
+    fn cadence_feasibility_gates_on_tpot() {
+        let spec = SessionSpec::new(4, 1.0, 40.0);
+        assert!(spec.cadence_feasible(39.9));
+        assert!(spec.cadence_feasible(40.0));
+        assert!(!spec.cadence_feasible(40.1));
+    }
+
+    #[test]
+    #[should_panic(expected = "decode steps")]
+    fn zero_step_sessions_are_rejected() {
+        SessionSpec::new(0, 1.0, 40.0);
+    }
+}

@@ -10,6 +10,7 @@ use bcedge::platform::PlatformSpec;
 use bcedge::predictor::AdmissionMode;
 use bcedge::serve::{AdmissionConfig, ClockKind, LoadGenConfig,
                     SchedulerSpec, ServeConfig};
+use bcedge::workload::SessionSpec;
 use std::collections::HashSet;
 
 /// Tentpole acceptance: on a heterogeneous 3-node cluster (Xavier NX +
@@ -156,6 +157,31 @@ fn assert_cluster_conserved(report: &ClusterReport, label: &str) {
     }
 }
 
+/// Session-tier conservation: attempts grow with spawned decode steps,
+/// and the dispatch split gains the session-abort disposition (heads
+/// aborted at admission, steps orphaned by a drain — neither reaches a
+/// node's ingress).
+fn assert_llm_conserved(report: &ClusterReport, label: &str) {
+    assert_eq!(report.metrics.outcomes().len() as u64
+                   + report.metrics.shed_total()
+                   + report.leftover as u64,
+               report.attempts,
+               "{label}: session rounds lost or double-counted");
+    let dispatched: u64 = report.per_node.iter().map(|n| n.dispatched).sum();
+    assert_eq!(dispatched + report.router_sheds()
+                   + report.metrics.shed_by_reason(ShedReason::SessionAbort),
+               report.attempts, "{label}: session dispatch split broken");
+    let mut seen = HashSet::new();
+    for o in report.metrics.outcomes() {
+        assert!(seen.insert(o.id), "{label}: round {} served twice", o.id);
+    }
+    // Dual-SLO misses are bounded by the rounds that could miss them.
+    assert!(report.metrics.ttft_misses() <= report.metrics.sessions_started(),
+            "{label}: more TTFT misses than sessions");
+    assert!(report.metrics.tpot_misses() <= report.frontend.session_steps,
+            "{label}: more TPOT misses than decode steps");
+}
+
 /// Fabric acceptance (differential): the SAME scenario — nodes, policy,
 /// scheduler, seed — run once on each clock arm. Both arms conserve
 /// every request, and the virtual fabric's violation rate lands within
@@ -236,6 +262,7 @@ fn full_dynamic_stack_is_bit_identical_per_seed_and_shards() {
                     router_shards: shards,
                     gossip_ms: 5.0,
                     cache: Some(CacheConfig { ttl_ms: 500.0, capacity: 4096 }),
+                    ..Default::default()
                 })
                 .build()
                 .unwrap()
@@ -331,6 +358,51 @@ fn full_dynamic_stack_is_bit_identical_per_seed_and_shards() {
         assert_eq!(cold.metrics.headroom_fallbacks(),
                    cold.metrics.headroom_decisions(),
                    "{tag}: a pinned-cold predictor must always fall back");
+
+        // Fourth arm: the LLM session workload on the same (seed,
+        // shards) grid — cache off (session rounds are stateful and
+        // never dedupe), finite links so the contention trackers are
+        // genuinely inside the replay loop. The whole session tier
+        // (head admission gate, step spawning, link charging, dual-SLO
+        // counters) must replay bit-identically.
+        let mut llm_cfg = mk_cfg(AdmissionConfig::default());
+        llm_cfg.frontend.cache = None;
+        for node in &mut llm_cfg.nodes {
+            node.net = node.net.with_bandwidth(8.0);
+        }
+        let llm_load = LoadGenConfig {
+            repeat_fraction: 0.0,
+            session: Some(SessionSpec {
+                decode_steps: 3,
+                ttft_slo_scale: 2.0,
+                tpot_ms: 120.0,
+            }),
+            ..load
+        };
+        let la = run_cluster(&llm_cfg, &llm_load).unwrap();
+        let lb = run_cluster(&llm_cfg, &llm_load).unwrap();
+        assert_llm_conserved(&la, &format!("{tag} llm"));
+        assert!(la.frontend.session_steps > 0,
+                "{tag}: llm arm never spawned a decode step");
+        assert!(la.attempts > la.metrics.sessions_started(),
+                "{tag}: attempts did not grow with spawned steps");
+        assert_eq!(la.metrics.outcomes(), lb.metrics.outcomes(),
+                   "{tag}: llm outcome streams diverged");
+        assert_eq!(la.slots, lb.slots, "{tag}: llm slots diverged");
+        assert_eq!(la.attempts, lb.attempts,
+                   "{tag}: llm attempts diverged");
+        assert_eq!(dispatched(&la), dispatched(&lb),
+                   "{tag}: llm per-node dispatch diverged");
+        assert_eq!(
+            (la.metrics.sessions_started(), la.frontend.session_steps,
+             la.frontend.session_aborts),
+            (lb.metrics.sessions_started(), lb.frontend.session_steps,
+             lb.frontend.session_aborts),
+            "{tag}: session counters diverged");
+        assert_eq!(
+            (la.metrics.ttft_misses(), la.metrics.tpot_misses()),
+            (lb.metrics.ttft_misses(), lb.metrics.tpot_misses()),
+            "{tag}: dual-SLO counters diverged");
     }
 }
 
@@ -360,6 +432,7 @@ fn warm_predictive_slo_routing_is_deterministic_and_counted() {
             router_shards: 2,
             gossip_ms: 5.0,
             cache: None,
+            ..Default::default()
         })
         .build()
         .unwrap();
@@ -395,4 +468,155 @@ fn warm_predictive_slo_routing_is_deterministic_and_counted() {
                "headroom counters diverged across identical runs");
     assert_eq!((a.metrics.headroom_decisions(), a.metrics.headroom_fallbacks()),
                (b.metrics.headroom_decisions(), b.metrics.headroom_fallbacks()));
+}
+
+/// Sessions survive (and are correctly accounted through) a mid-run
+/// drain/rejoin: decode steps spawned while their node is out of the
+/// cluster have nowhere to go — decode state is node-local — so those
+/// sessions end as typed `session-abort` sheds, extended conservation
+/// holds round-for-round, and the node serves a second segment after
+/// rejoining.
+#[test]
+fn virtual_drain_rejoin_with_live_sessions_conserves() {
+    let cfg = ClusterConfig::builder()
+        .nodes(vec![
+            NodeSpec::new(PlatformSpec::xavier_nx(), 2, 2.0),
+            NodeSpec::new(PlatformSpec::xavier_nx(), 2, 4.0),
+        ])
+        .policy(RoutePolicy::JoinShortestBacklog)
+        .serve(
+            ServeConfig::builder()
+                .clock(ClockKind::Virtual)
+                .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
+                .admission(None)
+                .queue_capacity(4096)
+                .build()
+                .unwrap(),
+        )
+        .drain(Some(DrainScenario {
+            node: 0,
+            at_ms: 3_000.0,
+            rejoin_at_ms: 6_000.0,
+        }))
+        .build()
+        .unwrap();
+    let load = LoadGenConfig::builder()
+        .rps(120.0)
+        .seconds(10.0)
+        .seed(31)
+        .slo_scale(3.0)
+        .session(Some(SessionSpec {
+            decode_steps: 4,
+            ttft_slo_scale: 2.0,
+            tpot_ms: 150.0,
+        }))
+        .build()
+        .unwrap();
+    let report = run_cluster(&cfg, &load).unwrap();
+    assert_llm_conserved(&report, "drain/rejoin llm");
+    assert_eq!(report.drains, 1, "node never drained");
+    assert_eq!(report.rejoins, 1, "node never rejoined");
+    assert!(report.metrics.completed() > 0);
+    assert!(report.metrics.sessions_started() > 0,
+            "no sessions admitted");
+    assert!(report.frontend.session_steps > 0,
+            "no decode steps spawned");
+    // Sessions in flight when the drain hit lost their node mid-decode:
+    // at 120 rps with half the load on node 0, some step MUST have
+    // spawned inside the 3s window.
+    assert!(report.frontend.session_aborts > 0,
+            "a 3s drain orphaned no in-flight session");
+}
+
+/// Acceptance experiment (ISSUE 10 tentpole): under heavy-payload
+/// overload of the links — every node behind a 2 Mbit/s fair-share pipe
+/// that the offered vision payloads oversubscribe ~2.5× — SLO-aware
+/// routing that PRICES link contention (`--net-pricing contention`)
+/// yields a strictly lower dual-SLO (TTFT + TPOT) miss rate than the
+/// same router blinded to it (`--net-pricing static-rtt`). Both arms
+/// charge the wire identically; only what routing SEES differs.
+///
+/// Why the separation is structural, not tuned: compute is deliberately
+/// overprovisioned (two Xavier NX pools for a load one could serve), so
+/// the compute-side gauges the static arm prices — backlog, service
+/// estimates — look healthy all run. The link queue is the ONLY signal
+/// of distress, and the static arm cannot see it: it keeps dispatching,
+/// every transfer queues behind an unboundedly growing backlog of
+/// in-flight payloads, and end-to-end latency blows past the TTFT
+/// deadline for nearly every session admitted late in the run. The
+/// contention arm prices `transfer × (in-flight + 1)` into the same
+/// feasibility check, so once a link saturates it sheds heads at the
+/// edge (`no-feasible-node`) instead of dispatching them to violate —
+/// bounding the link queue near the deadline budget and keeping the
+/// rounds it DOES serve inside their SLOs.
+#[test]
+fn contention_pricing_beats_static_rtt_on_dual_slo_misses() {
+    let run = |contention_pricing: bool| -> ClusterReport {
+        let mut nodes = vec![
+            NodeSpec::new(PlatformSpec::xavier_nx(), 2, 2.0),
+            NodeSpec::new(PlatformSpec::xavier_nx(), 2, 2.0),
+        ];
+        for node in &mut nodes {
+            node.net = node.net.with_bandwidth(2.0);
+        }
+        let cfg = ClusterConfig::builder()
+            .nodes(nodes)
+            .policy(RoutePolicy::SloAware)
+            .serve(
+                ServeConfig::builder()
+                    .clock(ClockKind::Virtual)
+                    .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
+                    .admission(None)
+                    .queue_capacity(4096)
+                    .build()
+                    .unwrap(),
+            )
+            .frontend(FrontEndConfig {
+                contention_pricing,
+                ..Default::default()
+            })
+            .build()
+            .unwrap();
+        let load = LoadGenConfig::builder()
+            .rps(120.0)
+            .seconds(8.0)
+            .seed(77)
+            .slo_scale(3.0)
+            .session(Some(SessionSpec {
+                decode_steps: 2,
+                ttft_slo_scale: 2.0,
+                tpot_ms: 400.0,
+            }))
+            .build()
+            .unwrap();
+        let report = run_cluster(&cfg, &load).unwrap();
+        assert_llm_conserved(
+            &report,
+            if contention_pricing { "contention" } else { "static-rtt" },
+        );
+        assert!(report.metrics.completed() > 0);
+        report
+    };
+    let miss_rate = |r: &ClusterReport| -> f64 {
+        (r.metrics.ttft_misses() + r.metrics.tpot_misses()) as f64
+            / r.metrics.recorded_outcomes().max(1) as f64
+    };
+
+    let blind = run(false);
+    let priced = run(true);
+
+    // The scenario genuinely hurts the blind arm: the invisible link
+    // queue pushes a large share of its rounds past their deadlines.
+    assert!(miss_rate(&blind) > 0.3,
+            "static-rtt arm not suffering — links not oversubscribed? \
+             miss rate {:.3}", miss_rate(&blind));
+    // The contention arm's defense is the edge: saturated links price
+    // the head out, and the router sheds it with the typed reason
+    // instead of dispatching it to violate.
+    assert!(priced.router_sheds() > 0,
+            "contention pricing never shed at the edge under overload");
+    // The headline: strictly lower dual-SLO miss rate.
+    assert!(miss_rate(&priced) < miss_rate(&blind),
+            "contention pricing did not help: {:.3} vs static-rtt {:.3}",
+            miss_rate(&priced), miss_rate(&blind));
 }

@@ -425,3 +425,109 @@ fn replication_beats_single_owner_under_hot_overload() {
             replicated.metrics.violation_rate(),
             single.metrics.violation_rate());
 }
+
+/// Session-tier conservation on the virtual arm, and bit-identical
+/// replay: every admitted head opens a session whose decode steps are
+/// re-enqueued by the fabric itself, so the one-shot identity extends to
+/// `outcomes + sheds + leftover == (sessions started + heads shed at
+/// admission) + decode steps spawned` — attempts GROW with spawned
+/// steps, and nothing is lost or double-counted across rounds.
+#[test]
+fn virtual_sessions_conserve_and_replay_bit_identically() {
+    use bcedge::serve::{loadgen, ClockKind, SchedulerSpec, ServeConfig};
+    use bcedge::workload::SessionSpec;
+
+    let serve = ServeConfig::builder()
+        .clock(ClockKind::Virtual)
+        .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
+        .admission(None)
+        .queue_capacity(4096)
+        .build()
+        .unwrap();
+    let load = bcedge::serve::LoadGenConfig::builder()
+        .rps(80.0)
+        .seconds(10.0)
+        .seed(9)
+        .slo_scale(3.0)
+        .session(Some(SessionSpec {
+            decode_steps: 3,
+            ttft_slo_scale: 2.0,
+            tpot_ms: 250.0,
+        }))
+        .build()
+        .unwrap();
+    let run = || loadgen::run(&serve, &load).unwrap();
+    let a = run();
+
+    let m = &a.metrics;
+    assert!(m.sessions_started() > 0, "no sessions opened");
+    assert!(m.session_steps_spawned() > 0, "no decode steps spawned");
+    let heads = m.sessions_started()
+        + m.shed_by_reason(bcedge::metrics::ShedReason::SessionAbort);
+    assert_eq!(m.outcomes().len() as u64 + m.shed_total()
+                   + a.leftover as u64,
+               heads + m.session_steps_spawned(),
+               "session conservation broken");
+    // Step ids never collide with head ids or each other.
+    let mut seen = std::collections::HashSet::new();
+    for o in m.outcomes() {
+        assert!(seen.insert(o.id), "outcome id {} duplicated", o.id);
+    }
+    // Dual-SLO counters stay within their denominators.
+    assert!(m.ttft_misses() <= m.sessions_started());
+    assert!(m.tpot_misses() <= m.session_steps_spawned());
+
+    // Same seed, same fabric → bit-identical replay, spawns included.
+    let b = run();
+    assert_eq!(a.metrics.outcomes().len(), b.metrics.outcomes().len());
+    for (x, y) in a.metrics.outcomes().iter().zip(b.metrics.outcomes()) {
+        assert_eq!((x.id, x.violated), (y.id, y.violated));
+        assert_eq!(x.completed_ms.to_bits(), y.completed_ms.to_bits());
+    }
+    assert_eq!(
+        (a.metrics.sessions_started(), a.metrics.session_steps_spawned(),
+         a.metrics.ttft_misses(), a.metrics.tpot_misses()),
+        (b.metrics.sessions_started(), b.metrics.session_steps_spawned(),
+         b.metrics.ttft_misses(), b.metrics.tpot_misses()),
+    );
+}
+
+/// Feasible sessions are never starved past their TPOT cadence: at a
+/// light offered load with a generous per-step budget, every decode
+/// step completes inside its flat TPOT deadline — scheduling, batching,
+/// and step re-enqueue overhead never push a feasible session's rounds
+/// late, and no head is turned away at the cadence gate.
+#[test]
+fn feasible_sessions_never_miss_tpot() {
+    use bcedge::serve::{loadgen, ClockKind, SchedulerSpec, ServeConfig};
+    use bcedge::workload::SessionSpec;
+
+    let serve = ServeConfig::builder()
+        .clock(ClockKind::Virtual)
+        .scheduler(SchedulerSpec::Fixed { batch: 4, m_c: 2 })
+        .admission(None)
+        .queue_capacity(4096)
+        .build()
+        .unwrap();
+    let load = bcedge::serve::LoadGenConfig::builder()
+        .rps(40.0)
+        .seconds(10.0)
+        .seed(5)
+        .slo_scale(3.0)
+        .session(Some(SessionSpec {
+            decode_steps: 4,
+            ttft_slo_scale: 2.0,
+            tpot_ms: 800.0,
+        }))
+        .build()
+        .unwrap();
+    let report = loadgen::run(&serve, &load).unwrap();
+    let m = &report.metrics;
+    assert!(m.sessions_started() > 0);
+    assert!(m.session_steps_spawned() > 0);
+    assert_eq!(m.shed_by_reason(bcedge::metrics::ShedReason::SessionAbort),
+               0,
+               "cadence gate rejected a feasible head");
+    assert_eq!(m.tpot_misses(), 0,
+               "a feasible session was starved past its TPOT cadence");
+}
